@@ -1,0 +1,57 @@
+//! Design-space walk (§7.4's conclusion): with LTRF making slow register
+//! files tolerable, sweep the Table-2 technologies and report the
+//! performance / power / area landscape an architect would navigate.
+//!
+//! Run: `cargo run --release --example design_space [--quick]`
+
+use ltrf::coordinator::experiments::{baseline_ipc, DesignUnderTest, ExperimentContext};
+use ltrf::coordinator::sweep::{gmean, parallel_map};
+use ltrf::report::Table;
+use ltrf::sim::HierarchyKind;
+use ltrf::timing::table2;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = if quick { ExperimentContext::quick() } else { ExperimentContext::default() };
+
+    let mut t = Table::new(
+        "Design space: Table-2 configs under BL vs LTRF_conf (suite gmean, normalized IPC)",
+        &["cfg", "tech", "capacity", "latency", "power", "area", "BL", "LTRF_conf", "perf/power (LTRF)"],
+    );
+    for d in table2() {
+        let factor = d.latency();
+        let cap = d.warp_registers();
+        let rows = parallel_map(ctx.workloads(), |spec| {
+            let base = baseline_ipc(spec);
+            let bl = DesignUnderTest::new(HierarchyKind::Baseline, false)
+                .with_capacity(cap)
+                .run(spec, factor)
+                .ipc()
+                / base;
+            let lt = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
+                .with_capacity(cap)
+                .run(spec, factor)
+                .ipc()
+                / base;
+            (bl, lt)
+        });
+        let bl = gmean(&rows.iter().map(|r| r.0).collect::<Vec<_>>());
+        let lt = gmean(&rows.iter().map(|r| r.1).collect::<Vec<_>>());
+        t.row(vec![
+            format!("#{}", d.id),
+            d.tech.name().into(),
+            format!("{:.0}KB", d.capacity_bytes() as f64 / 1024.0),
+            format!("{:.2}x", factor),
+            format!("{:.2}x", d.power()),
+            format!("{:.2}x", d.area()),
+            format!("{bl:.2}"),
+            format!("{lt:.2}"),
+            format!("{:.2}", lt / d.power()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Reading: LTRF keeps high-latency/high-density designs (#6, #7) competitive,\n\
+         opening the power/area optimization space the paper argues for (§7.4)."
+    );
+}

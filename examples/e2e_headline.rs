@@ -1,0 +1,43 @@
+//! END-TO-END driver: the full system on the whole benchmark suite,
+//! reproducing the paper's headline claim (abstract / §7.1):
+//!
+//!   "LTRF [with register renumbering], when implemented with an 8× larger
+//!    yet 6.3× slower main register file [config #7, DWM], improves overall
+//!    GPU performance by 34% on average."
+//!
+//! Every layer composes here: the workload generator builds the 14
+//! kernels, the compiler forms register-intervals + renumbers registers
+//! (prefetch vectors validated by the PJRT-compiled Pallas artifact when
+//! present), and the cycle-level simulator produces the IPC numbers.
+//!
+//! Run: `cargo run --release --example e2e_headline` (add `--quick` for
+//! the 5-workload subset). Results are recorded in EXPERIMENTS.md.
+
+use ltrf::coordinator::experiments::{headline, ExperimentContext};
+use ltrf::runtime::PrefetchEvaluator;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = if quick { ExperimentContext::quick() } else { ExperimentContext::default() };
+
+    // Surface which backend validates the prefetch vectors.
+    let ev = PrefetchEvaluator::load_or_reference(std::path::Path::new("artifacts"));
+    println!(
+        "prefetch evaluator backend: {}",
+        if ev.is_pjrt() {
+            "PJRT (AOT JAX/Pallas artifact)"
+        } else {
+            "rust reference (run `make artifacts`)"
+        }
+    );
+
+    let t0 = std::time::Instant::now();
+    let (improvement, table) = headline(&ctx);
+    println!("{}", table.render());
+    println!(
+        "LTRF_conf on config #7 (DWM, 2MB, 6.3x): mean IPC improvement +{:.1}% (paper: +34%)",
+        improvement * 100.0
+    );
+    println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
+    assert!(improvement > 0.0, "end-to-end run must show an improvement");
+}

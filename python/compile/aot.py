@@ -1,0 +1,55 @@
+"""AOT lowering: JAX/Pallas model → HLO *text* → artifacts/.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and the repo README.
+
+Run once per build: ``make artifacts`` (no-op when inputs are unchanged).
+Python never runs on the simulator's request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, prefetch_eval_model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str) -> dict:
+    """Lower every artifact; returns {name: path}."""
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+
+    lowered = jax.jit(prefetch_eval_model).lower(*example_args())
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "prefetch_eval.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["prefetch_eval"] = path
+    return artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    for name, path in build_artifacts(args.out_dir).items():
+        size = os.path.getsize(path)
+        print(f"wrote {name}: {path} ({size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

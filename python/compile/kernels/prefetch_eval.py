@@ -1,0 +1,87 @@
+"""L1 — Pallas kernel: batched prefetch bank-occupancy evaluation.
+
+The hot analysis of the LTRF stack: given a batch of register-interval
+working-set bit-vectors (one 256-bit vector per prefetch operation) and a
+register→bank assignment, compute each interval's per-bank register counts.
+The compiler's renumbering search, the Fig. 6/16 histograms, and the
+simulator's prefetch-latency precomputation all run this over thousands of
+intervals × configurations, which is why it is the AOT-compiled artifact
+the rust coordinator executes via PJRT.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the per-interval
+histogram is expressed as a dense matmul — `bits[N,256] @ onehot[256,B]` —
+so it maps onto the TPU MXU; working-set tiles stream through VMEM in
+`(TILE_N, LANES)` blocks while the small one-hot bank matrix is pinned in
+VMEM, and the occupancy-max / popcount reductions fuse into the same
+kernel so the counts tile never round-trips to HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU behaviour is estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed geometry of the AOT artifact (rust pads batches to N_BATCH).
+N_BATCH = 1024
+MAX_REGS = 256
+LANES = MAX_REGS // 32  # 8 × u32 per working set
+TILE_N = 128
+
+
+def _unpack_bits(ws_u32):
+    """[n, LANES] u32 → [n, 256] f32 of 0/1 bits (little-endian lanes)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (ws_u32[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(ws_u32.shape[0], MAX_REGS).astype(jnp.float32)
+
+
+def _kernel(ws_ref, onehot_ref, counts_ref, maxocc_ref, total_ref):
+    """One TILE_N tile: unpack → MXU matmul → fused row reductions."""
+    bits = _unpack_bits(ws_ref[...])  # [TILE_N, 256] in VMEM
+    # MXU: per-bank occupancy counts.
+    counts = jnp.dot(bits, onehot_ref[...], preferred_element_type=jnp.float32)
+    counts_ref[...] = counts
+    # Fused reductions: max occupancy and popcount per interval.
+    maxocc_ref[...] = jnp.max(counts, axis=1)
+    total_ref[...] = jnp.sum(counts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_banks",))
+def prefetch_eval_pallas(ws_u32, bank_onehot, num_banks=16):
+    """Batched bank-occupancy evaluation via the Pallas kernel.
+
+    Args:
+      ws_u32: uint32[N, 8] working-set bit-vectors (N multiple of TILE_N).
+      bank_onehot: float32[256, num_banks] one-hot bank assignment.
+      num_banks: static bank count.
+
+    Returns:
+      (counts f32[N, num_banks], max_occ f32[N], total f32[N]).
+    """
+    n = ws_u32.shape[0]
+    assert n % TILE_N == 0, f"batch {n} must be a multiple of {TILE_N}"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, LANES), lambda i: (i, 0)),
+            # The one-hot matrix is small (256×B ≤ 16KB): pinned per tile.
+            pl.BlockSpec((MAX_REGS, num_banks), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, num_banks), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, num_banks), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(ws_u32, bank_onehot)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the prefetch-evaluation kernel.
+
+The correctness contract: `prefetch_eval_pallas(ws, onehot)` must agree
+bit-exactly (values are small integers in f32) with this reference for all
+inputs. pytest + hypothesis sweep shapes and contents against it.
+"""
+
+import jax.numpy as jnp
+
+MAX_REGS = 256
+
+
+def unpack_bits_ref(ws_u32):
+    """[n, 8] u32 → [n, 256] f32 bits, little-endian lanes."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (ws_u32[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(ws_u32.shape[0], MAX_REGS).astype(jnp.float32)
+
+
+def prefetch_eval_ref(ws_u32, bank_onehot):
+    """Reference: counts, max occupancy, popcount."""
+    bits = unpack_bits_ref(ws_u32)
+    counts = bits @ bank_onehot
+    return counts, jnp.max(counts, axis=1), jnp.sum(counts, axis=1)
+
+
+def prefetch_latency_ref(max_occ, total, mrf_cycles, xbar_rate, xbar_latency):
+    """Serialized prefetch latency model (mirrors model.py, used in tests):
+    worst-bank serialization + narrow-crossbar transfer + traversal, zero
+    for empty working sets."""
+    busy = max_occ * mrf_cycles
+    transfer = jnp.ceil(total / xbar_rate)
+    lat = busy + transfer + xbar_latency
+    return jnp.where(total > 0, lat, 0.0)

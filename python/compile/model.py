@@ -1,0 +1,48 @@
+"""L2 — JAX model: the prefetch evaluation graph lowered to the artifact.
+
+Wraps the L1 Pallas kernel with the latency model the coordinator needs:
+for every interval in the batch, the serialized MRF bank time (worst-bank
+occupancy × access cycles), the narrow-crossbar transfer time, and the
+conflict count (max occupancy − 1, the paper's §4 definition).
+
+One jitted function → one HLO module → one PJRT executable; all shape
+parameters are static so the rust side pads to `N_BATCH` and reuses the
+compiled artifact for every workload × configuration sweep point.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.prefetch_eval import N_BATCH, prefetch_eval_pallas
+
+
+def prefetch_eval_model(ws_u32, bank_onehot, mrf_cycles, xbar_rate, xbar_latency):
+    """Full evaluation for a batch of prefetch bit-vectors.
+
+    Args:
+      ws_u32: uint32[N_BATCH, 8] working-set bit-vectors (zero-padded).
+      bank_onehot: float32[256, 16] register→bank one-hot map.
+      mrf_cycles: f32 scalar — MRF bank access occupancy (non-pipelined).
+      xbar_rate: f32 scalar — refill-crossbar registers per cycle.
+      xbar_latency: f32 scalar — crossbar traversal cycles.
+
+    Returns a tuple:
+      counts   f32[N_BATCH, 16] — per-bank register counts,
+      conflicts f32[N_BATCH]    — max-occupancy − 1 (≥ 0; the §4 metric),
+      latency  f32[N_BATCH]     — serialized prefetch cycles (0 if empty),
+      total    f32[N_BATCH]     — working-set popcount.
+    """
+    counts, max_occ, total = prefetch_eval_pallas(ws_u32, bank_onehot, num_banks=16)
+    conflicts = jnp.maximum(max_occ - 1.0, 0.0) * (total > 0)
+    busy = max_occ * mrf_cycles
+    transfer = jnp.ceil(total / xbar_rate)
+    latency = jnp.where(total > 0, busy + transfer + xbar_latency, 0.0)
+    return counts, conflicts, latency, total
+
+
+def example_args():
+    """Static example arguments for AOT lowering."""
+    ws = jnp.zeros((N_BATCH, 8), dtype=jnp.uint32)
+    onehot = jnp.zeros((256, 16), dtype=jnp.float32)
+    scalar = jnp.float32(0.0)
+    return ws, onehot, scalar, scalar, scalar

@@ -1,0 +1,119 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+The Pallas kernel (interpret mode) must agree exactly with the pure-jnp
+reference for arbitrary working sets and bank assignments; hypothesis
+sweeps contents, densities, and bank maps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prefetch_eval import (
+    LANES,
+    MAX_REGS,
+    N_BATCH,
+    TILE_N,
+    prefetch_eval_pallas,
+)
+from compile.kernels.ref import prefetch_eval_ref, prefetch_latency_ref
+
+
+def onehot_from_assignment(assign, num_banks=16):
+    oh = np.zeros((MAX_REGS, num_banks), dtype=np.float32)
+    oh[np.arange(MAX_REGS), assign % num_banks] = 1.0
+    return oh
+
+
+def pack_sets(sets, n):
+    """List of register-id lists → uint32[n, LANES] bit-vectors."""
+    ws = np.zeros((n, LANES), dtype=np.uint32)
+    for i, regs in enumerate(sets):
+        for r in regs:
+            ws[i, r // 32] |= np.uint32(1) << np.uint32(r % 32)
+    return ws
+
+
+def test_empty_batch_is_zero():
+    ws = np.zeros((TILE_N, LANES), dtype=np.uint32)
+    oh = onehot_from_assignment(np.arange(MAX_REGS))
+    counts, maxocc, total = prefetch_eval_pallas(ws, oh)
+    assert counts.shape == (TILE_N, 16)
+    np.testing.assert_array_equal(np.asarray(counts), 0.0)
+    np.testing.assert_array_equal(np.asarray(maxocc), 0.0)
+    np.testing.assert_array_equal(np.asarray(total), 0.0)
+
+
+def test_known_conflicts():
+    # r0, r16, r32 share bank 0 under interleave: occupancy 3.
+    ws = pack_sets([[0, 16, 32], [0, 1, 2, 3]], TILE_N)
+    oh = onehot_from_assignment(np.arange(MAX_REGS))
+    counts, maxocc, total = prefetch_eval_pallas(ws, oh)
+    assert counts[0, 0] == 3.0
+    assert maxocc[0] == 3.0
+    assert total[0] == 3.0
+    assert maxocc[1] == 1.0  # four distinct banks
+    assert total[1] == 4.0
+
+
+def test_full_working_set():
+    ws = np.full((TILE_N, LANES), 0xFFFFFFFF, dtype=np.uint32)
+    oh = onehot_from_assignment(np.arange(MAX_REGS))
+    counts, maxocc, total = prefetch_eval_pallas(ws, oh)
+    # 256 registers over 16 banks: 16 per bank.
+    np.testing.assert_array_equal(np.asarray(counts), 16.0)
+    assert maxocc[0] == 16.0
+    assert total[0] == 256.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_pallas_matches_ref_random(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    density = data.draw(st.floats(0.0, 1.0))
+    ws = (rng.random((TILE_N, LANES)) < density).astype(np.uint32)
+    # Pack random 32-bit lanes directly.
+    ws = rng.integers(0, 2**32, size=(TILE_N, LANES), dtype=np.uint64).astype(
+        np.uint32
+    ) * ws
+    assign = rng.integers(0, 16, size=MAX_REGS)
+    oh = onehot_from_assignment(assign)
+    pc, pm, pt = prefetch_eval_pallas(ws, oh)
+    rc, rm, rt = prefetch_eval_ref(ws, oh)
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(pm), np.asarray(rm))
+    np.testing.assert_array_equal(np.asarray(pt), np.asarray(rt))
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch_tiles=st.integers(1, 8))
+def test_batch_shapes(batch_tiles):
+    n = batch_tiles * TILE_N
+    ws = np.zeros((n, LANES), dtype=np.uint32)
+    ws[:, 0] = 0b1011
+    oh = onehot_from_assignment(np.arange(MAX_REGS))
+    counts, maxocc, total = prefetch_eval_pallas(ws, oh)
+    assert counts.shape == (n, 16)
+    np.testing.assert_array_equal(np.asarray(total), 3.0)
+
+
+def test_non_tile_multiple_rejected():
+    ws = np.zeros((TILE_N + 1, LANES), dtype=np.uint32)
+    oh = onehot_from_assignment(np.arange(MAX_REGS))
+    with pytest.raises(AssertionError):
+        prefetch_eval_pallas(ws, oh)
+
+
+def test_latency_model_reference():
+    # occupancy 3 at 13 cycles + ceil(5/2) transfer + 4 = 46.
+    lat = prefetch_latency_ref(
+        np.float32(3.0), np.float32(5.0), 13.0, 2.0, 4.0
+    )
+    assert float(lat) == 3 * 13 + 3 + 4
+    # Empty set costs nothing.
+    assert float(prefetch_latency_ref(np.float32(0), np.float32(0), 13.0, 2.0, 4.0)) == 0.0
+
+
+def test_n_batch_geometry():
+    assert N_BATCH % TILE_N == 0
+    assert LANES * 32 == MAX_REGS

@@ -1,0 +1,102 @@
+"""L2 model + AOT lowering tests: shapes, latency semantics, HLO export."""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.aot import build_artifacts, to_hlo_text
+from compile.kernels.prefetch_eval import LANES, MAX_REGS, N_BATCH
+from compile.model import example_args, prefetch_eval_model
+from compile.kernels.ref import prefetch_eval_ref, prefetch_latency_ref
+
+
+def onehot(assign, num_banks=16):
+    oh = np.zeros((MAX_REGS, num_banks), dtype=np.float32)
+    oh[np.arange(MAX_REGS), assign % num_banks] = 1.0
+    return oh
+
+
+def batch_with(sets):
+    ws = np.zeros((N_BATCH, LANES), dtype=np.uint32)
+    for i, regs in enumerate(sets):
+        for r in regs:
+            ws[i, r // 32] |= np.uint32(1) << np.uint32(r % 32)
+    return ws
+
+
+def test_model_shapes_and_padding():
+    ws = batch_with([[0, 1, 2], [0, 16]])
+    oh = onehot(np.arange(MAX_REGS))
+    counts, conflicts, latency, total = prefetch_eval_model(
+        ws, oh, np.float32(13.0), np.float32(2.0), np.float32(4.0)
+    )
+    assert counts.shape == (N_BATCH, 16)
+    assert conflicts.shape == (N_BATCH,)
+    # Padded (empty) rows contribute nothing.
+    assert float(latency[2]) == 0.0
+    assert float(conflicts[2]) == 0.0
+    # Row 1: r0 and r16 share bank 0 → one conflict.
+    assert float(conflicts[1]) == 1.0
+    assert float(total[0]) == 3.0
+
+
+def test_model_latency_matches_reference():
+    ws = batch_with([[0, 16, 32, 1, 2]])
+    oh = onehot(np.arange(MAX_REGS))
+    mrf, rate, lat = np.float32(13.0), np.float32(2.0), np.float32(4.0)
+    _, _, latency, total = prefetch_eval_model(ws, oh, mrf, rate, lat)
+    _, maxocc, t = prefetch_eval_ref(ws, oh)
+    expect = prefetch_latency_ref(maxocc, t, mrf, rate, lat)
+    np.testing.assert_array_equal(np.asarray(latency), np.asarray(expect))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_model_conflicts_property(seed):
+    rng = np.random.default_rng(seed)
+    ws = rng.integers(0, 2**32, size=(N_BATCH, LANES), dtype=np.uint64).astype(np.uint32)
+    # Sparsify: most rows small.
+    ws[rng.random(N_BATCH) < 0.5] = 0
+    assign = rng.integers(0, 16, size=MAX_REGS)
+    oh = onehot(assign)
+    counts, conflicts, latency, total = prefetch_eval_model(
+        ws, oh, np.float32(2.0), np.float32(2.0), np.float32(4.0)
+    )
+    counts = np.asarray(counts)
+    conflicts = np.asarray(conflicts)
+    total = np.asarray(total)
+    # Conflicts = max occupancy − 1 for non-empty rows.
+    nonempty = total > 0
+    np.testing.assert_array_equal(
+        conflicts[nonempty], counts[nonempty].max(axis=1) - 1.0
+    )
+    np.testing.assert_array_equal(conflicts[~nonempty], 0.0)
+    # Popcount conservation.
+    np.testing.assert_array_equal(counts.sum(axis=1), total)
+    # Latency positive iff non-empty.
+    lat = np.asarray(latency)
+    assert (lat[nonempty] > 0).all()
+    np.testing.assert_array_equal(lat[~nonempty], 0.0)
+
+
+def test_hlo_text_export():
+    import jax
+
+    lowered = jax.jit(prefetch_eval_model).lower(*example_args())
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # Interchange constraint: text, parseable, with the model entry.
+    assert "ENTRY" in text
+
+
+def test_build_artifacts_writes_files():
+    with tempfile.TemporaryDirectory() as d:
+        arts = build_artifacts(d)
+        assert "prefetch_eval" in arts
+        path = arts["prefetch_eval"]
+        assert os.path.exists(path)
+        assert os.path.getsize(path) > 1000
+        with open(path) as f:
+            assert "HloModule" in f.read(200)

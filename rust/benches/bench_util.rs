@@ -1,0 +1,23 @@
+//! Shared micro-bench harness (criterion is unavailable offline; this is
+//! a deliberate minimal stand-in: warmup + timed iterations + ns/op and
+//! throughput reporting, stable enough for before/after comparisons in
+//! EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// Time `f` and report. Returns mean seconds/iteration.
+pub fn bench<F: FnMut() -> u64>(name: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    let mut units = 0u64;
+    for _ in 0..2 {
+        units = f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        units = f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let rate = units as f64 / dt;
+    println!("{name:<48} {:>10.3} ms/iter   {:>12.0} units/s", dt * 1e3, rate);
+    dt
+}

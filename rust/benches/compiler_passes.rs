@@ -1,0 +1,71 @@
+//! Bench: compiler pass throughput over the benchmark suite.
+//!
+//! Run: `cargo bench --bench compiler_passes`
+
+mod bench_util;
+use bench_util::bench;
+use ltrf::compiler::{coloring, icg, intervals, merge, renumber, BankMap, CompileOptions};
+use ltrf::workloads::{gen, suite};
+
+fn main() {
+    let kernels: Vec<_> = suite::suite().iter().map(|s| gen::build(s)).collect();
+    let insts: u64 = kernels.iter().map(|k| k.num_insts() as u64).sum();
+    println!("suite: {} kernels, {} instructions\n", kernels.len(), insts);
+
+    bench("interval formation (Alg 1), suite", 20, || {
+        let mut n = 0u64;
+        for k in &kernels {
+            let mut k = k.clone();
+            let ia = intervals::form_intervals(&mut k, 16);
+            n += ia.intervals.len() as u64;
+        }
+        n
+    });
+
+    bench("interval reduction (Alg 2), suite", 20, || {
+        let mut n = 0u64;
+        for k in &kernels {
+            let mut kc = k.clone();
+            let p1 = intervals::form_intervals(&mut kc, 16);
+            let ia = merge::reduce(&kc, p1);
+            n += ia.intervals.len() as u64;
+        }
+        n
+    });
+
+    bench("ICG build + Chaitin coloring, suite", 20, || {
+        let mut n = 0u64;
+        for k in &kernels {
+            let mut kc = k.clone();
+            let p1 = intervals::form_intervals(&mut kc, 16);
+            let ia = merge::reduce(&kc, p1);
+            let g = icg::build(&ia);
+            let col = coloring::chaitin(&g, 16);
+            n += col.color.iter().flatten().count() as u64;
+        }
+        n
+    });
+
+    bench("full pipeline incl. renumbering, suite", 10, || {
+        let mut n = 0u64;
+        for k in &kernels {
+            let ck = ltrf::compiler::compile(k, CompileOptions::ltrf_conf(16));
+            n += ck.intervals.intervals.len() as u64;
+        }
+        n
+    });
+
+    bench("bank-conflict histogram, suite", 50, || {
+        let mut n = 0u64;
+        for k in &kernels {
+            let ck = ltrf::compiler::compile(k, CompileOptions::ltrf(16));
+            let h = renumber::conflict_histogram(
+                ck.intervals.intervals.iter().map(|i| &i.working_set),
+                16,
+                BankMap::Interleave,
+            );
+            n += h.iter().sum::<usize>() as u64;
+        }
+        n
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench: end-to-end regeneration time of each paper table/figure driver
+//! (quick context). This is the harness a user runs to reproduce the
+//! evaluation, so its wall-clock is itself a deliverable.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+mod bench_util;
+use bench_util::bench;
+use ltrf::coordinator::experiments as exp;
+
+fn main() {
+    let ctx = exp::ExperimentContext::quick();
+
+    bench("table1 (TLP capacity demand)", 3, || exp::table1(&ctx).rows.len() as u64);
+    bench("table2 (design points)", 10, || exp::table2_table(&ctx).rows.len() as u64);
+    bench("fig3 (ideal vs TFET 8x)", 1, || exp::fig3(&ctx).rows.len() as u64);
+    bench("fig4 (register cache hit rates)", 1, || exp::fig4(&ctx).rows.len() as u64);
+    bench("fig6 (conflict distribution)", 1, || exp::fig6(&ctx).rows.len() as u64);
+    bench("fig14 (overall IPC, cfgs #6/#7)", 1, || {
+        exp::fig14(&ctx).iter().map(|t| t.rows.len() as u64).sum()
+    });
+    bench("fig15 (max tolerable latency)", 1, || exp::fig15(&ctx).rows.len() as u64);
+    bench("fig16 (conflicts x N)", 1, || {
+        exp::fig16(&ctx).iter().map(|t| t.rows.len() as u64).sum()
+    });
+    bench("table4 (interval lengths)", 1, || exp::table4(&ctx).rows.len() as u64);
+    bench("fig19 (vs strand-based designs)", 1, || exp::fig19(&ctx).rows.len() as u64);
+    bench("headline (config #7 improvement)", 1, || {
+        exp::headline(&ctx).1.rows.len() as u64
+    });
+}

@@ -1,0 +1,43 @@
+//! Bench: batched prefetch evaluation — PJRT artifact (L1 Pallas kernel
+//! via the L2 model) vs the pure-rust reference.
+//!
+//! Run: `make artifacts && cargo bench --bench prefetch_eval`
+
+mod bench_util;
+use bench_util::bench;
+use ltrf::runtime::prefetch_eval::{evaluate_reference, LatencyParams, N_BATCH};
+use ltrf::runtime::PrefetchEvaluator;
+use ltrf::util::{RegSet, Xoshiro256};
+
+fn main() {
+    let mut rng = Xoshiro256::seeded(0xBE7C);
+    let sets: Vec<RegSet> = (0..N_BATCH)
+        .map(|_| {
+            let n = rng.range(4, 16);
+            RegSet::from_iter((0..n).map(|_| rng.below(256) as u16))
+        })
+        .collect();
+    let mut assign = [0usize; 256];
+    for a in assign.iter_mut() {
+        *a = rng.below(16) as usize;
+    }
+    let params = LatencyParams::default();
+
+    bench(&format!("rust reference, {N_BATCH} intervals (rows/s)"), 200, || {
+        evaluate_reference(&sets, &assign, params).len() as u64
+    });
+
+    match PrefetchEvaluator::load(std::path::Path::new("artifacts")) {
+        Ok(ev) => {
+            bench(&format!("PJRT artifact, {N_BATCH} intervals (rows/s)"), 20, || {
+                ev.evaluate(&sets, &assign, params).unwrap().len() as u64
+            });
+            // Larger batch across multiple artifact invocations.
+            let big: Vec<RegSet> = (0..8 * N_BATCH).map(|i| sets[i % N_BATCH]).collect();
+            bench("PJRT artifact, 8x batches (rows/s)", 5, || {
+                ev.evaluate(&big, &assign, params).unwrap().len() as u64
+            });
+        }
+        Err(e) => println!("PJRT bench skipped (run `make artifacts`): {e:#}"),
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: cycle-level simulator throughput (warp-instructions/second) per
+//! register-file hierarchy — the L3 hot path whose §Perf target is
+//! ≥ 10M warp-instructions/s.
+//!
+//! Run: `cargo bench --bench sim_throughput`
+
+mod bench_util;
+use bench_util::bench;
+use ltrf::compiler::compile;
+use ltrf::sim::{gpu, HierarchyKind, SimConfig};
+use ltrf::workloads::{gen, suite};
+
+fn main() {
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    for kind in [
+        HierarchyKind::Baseline,
+        HierarchyKind::Rfc,
+        HierarchyKind::Shrf,
+        HierarchyKind::Ltrf { plus: false },
+        HierarchyKind::Ltrf { plus: true },
+    ] {
+        let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
+        let kernel = gen::build(spec);
+        let ck = compile(&kernel, gpu::compile_options(&cfg, true));
+        bench(&format!("simulate gaussian on {} @6.3x (winst/s)", kind.name()), 5, || {
+            gpu::run(&ck, &cfg).instructions
+        });
+    }
+
+    // End-to-end including build+compile (the sweep-path unit of work).
+    let cfg = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: true })
+        .with_latency_factor(6.3)
+        .normalize_capacity();
+    bench("build+compile+simulate gaussian (winst/s)", 5, || {
+        gpu::run_workload(spec, &cfg, true).instructions
+    });
+}

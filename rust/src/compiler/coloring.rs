@@ -1,0 +1,212 @@
+//! Graph coloring for register bank assignment — §4.2 phase 3.
+//!
+//! Chaitin-style simplify/select with Briggs' optimistic push for stuck
+//! nodes. The paper requires *balanced* color use ("colors are almost
+//! equally used") so that banks receive roughly equal register
+//! populations; the select phase therefore prefers the globally
+//! least-used color among the legal ones.
+//!
+//! No spill code is ever generated (§4.2). When a node has no legal color
+//! (e.g. a 32-register interval over 16 banks — a 32-clique with 16
+//! colors), the node is *forced* onto the color that conflicts with the
+//! fewest already-colored neighbors, breaking ties toward balance. This is
+//! exactly why the paper's Fig. 16(f) bottoms out at one residual conflict
+//! for 32-register intervals instead of growing unboundedly.
+
+use super::icg::Icg;
+
+#[derive(Clone, Debug)]
+pub struct Coloring {
+    /// Color per register id (`None` only for ids that are not ICG nodes,
+    /// i.e. registers appearing in no working set).
+    pub color: Vec<Option<u8>>,
+    pub num_colors: usize,
+    /// Nodes that had no conflict-free color and were forced (each forced
+    /// node implies at least one residual same-bank pair).
+    pub forced: usize,
+}
+
+impl Coloring {
+    /// How many nodes ended up with each color (balance diagnostics).
+    pub fn usage(&self) -> Vec<usize> {
+        let mut use_count = vec![0usize; self.num_colors];
+        for c in self.color.iter().flatten() {
+            use_count[*c as usize] += 1;
+        }
+        use_count
+    }
+
+    /// True if no two adjacent nodes share a color (equivalently,
+    /// `forced == 0`).
+    pub fn is_proper(&self, icg: &Icg) -> bool {
+        for r in icg.nodes.iter() {
+            if let Some(c) = self.color[r as usize] {
+                for nb in icg.adj[r as usize].iter() {
+                    if nb > r && self.color[nb as usize] == Some(c) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Color `icg` with `k` colors (k = number of register banks).
+pub fn chaitin(icg: &Icg, k: usize) -> Coloring {
+    assert!(k > 0 && k <= 256);
+    let n = icg.adj.len();
+    let mut degree: Vec<usize> = (0..n).map(|r| icg.adj[r].len()).collect();
+    let mut removed = vec![false; n];
+    let mut stack: Vec<u16> = Vec::with_capacity(n);
+    let node_list: Vec<u16> = icg.nodes.iter().collect();
+    let mut remaining = node_list.len();
+
+    // Simplify: repeatedly remove a node with degree < k (lowest degree
+    // first, deterministic); if none exists, push the max-degree node
+    // optimistically (Briggs).
+    while remaining > 0 {
+        let mut best_low: Option<u16> = None;
+        let mut best_high: Option<u16> = None;
+        for &r in &node_list {
+            if removed[r as usize] {
+                continue;
+            }
+            if degree[r as usize] < k {
+                if best_low.map_or(true, |b| degree[r as usize] < degree[b as usize]) {
+                    best_low = Some(r);
+                }
+            } else if best_high.map_or(true, |b| degree[r as usize] > degree[b as usize]) {
+                best_high = Some(r);
+            }
+        }
+        let chosen = best_low.or(best_high).expect("remaining>0 but no node found");
+        removed[chosen as usize] = true;
+        remaining -= 1;
+        stack.push(chosen);
+        for nb in icg.adj[chosen as usize].iter() {
+            degree[nb as usize] = degree[nb as usize].saturating_sub(1);
+        }
+    }
+
+    // Select: pop and assign the least-used legal color; force the
+    // least-conflicting color when no legal one exists.
+    let mut color: Vec<Option<u8>> = vec![None; n];
+    let mut usage = vec![0usize; k];
+    let mut forced = 0;
+    while let Some(r) = stack.pop() {
+        let mut neighbor_count = vec![0usize; k];
+        for nb in icg.adj[r as usize].iter() {
+            if let Some(c) = color[nb as usize] {
+                neighbor_count[c as usize] += 1;
+            }
+        }
+        let best = (0..k)
+            .min_by_key(|&c| (neighbor_count[c], usage[c], c))
+            .expect("k > 0");
+        if neighbor_count[best] > 0 {
+            forced += 1;
+        }
+        color[r as usize] = Some(best as u8);
+        usage[best] += 1;
+    }
+    Coloring { color, num_colors: k, forced }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::icg::Icg;
+    use crate::util::{prop, RegSet};
+
+    fn graph(edges: &[(u16, u16)], n: usize) -> Icg {
+        let mut adj = vec![RegSet::new(); n];
+        let mut nodes = RegSet::new();
+        for &(a, b) in edges {
+            adj[a as usize].insert(b);
+            adj[b as usize].insert(a);
+            nodes.insert(a);
+            nodes.insert(b);
+        }
+        Icg { adj, nodes }
+    }
+
+    #[test]
+    fn triangle_needs_three_colors() {
+        let g = graph(&[(0, 1), (1, 2), (0, 2)], 3);
+        let c3 = chaitin(&g, 3);
+        assert_eq!(c3.forced, 0);
+        assert!(c3.is_proper(&g));
+        let c2 = chaitin(&g, 2);
+        assert_eq!(c2.forced, 1, "triangle is not 2-colorable");
+        assert!(!c2.is_proper(&g));
+    }
+
+    #[test]
+    fn path_two_colorable() {
+        let g = graph(&[(0, 1), (1, 2), (2, 3)], 4);
+        let c = chaitin(&g, 2);
+        assert_eq!(c.forced, 0);
+        assert!(c.is_proper(&g));
+    }
+
+    #[test]
+    fn colors_are_balanced_on_independent_nodes() {
+        // 8 isolated nodes, 4 colors → 2 nodes per color.
+        let mut nodes = RegSet::new();
+        for r in 0..8 {
+            nodes.insert(r);
+        }
+        let g = Icg { adj: vec![RegSet::new(); 8], nodes };
+        let c = chaitin(&g, 4);
+        assert_eq!(c.usage(), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn overfull_clique_balances_forced_colors() {
+        // A 32-clique over 16 colors: best possible is 2 per color
+        // (one residual conflict per bank — the Fig. 16(f) situation).
+        let mut edges = Vec::new();
+        for a in 0..32u16 {
+            for b in (a + 1)..32 {
+                edges.push((a, b));
+            }
+        }
+        let g = graph(&edges, 32);
+        let c = chaitin(&g, 16);
+        let usage = c.usage();
+        assert_eq!(usage.iter().sum::<usize>(), 32);
+        assert_eq!(*usage.iter().max().unwrap(), 2, "balanced: max 2 per color");
+        assert_eq!(c.forced, 16);
+    }
+
+    #[test]
+    fn every_node_gets_a_color() {
+        let g = graph(&[(0, 1), (2, 3), (1, 3)], 4);
+        let c = chaitin(&g, 4);
+        for r in g.nodes.iter() {
+            assert!(c.color[r as usize].is_some());
+        }
+    }
+
+    #[test]
+    fn prop_random_graphs_forced_iff_improper() {
+        prop::check(prop::DEFAULT_CASES, 0xC010E, |rng| {
+            let n = rng.range(2, 40);
+            let mut edges = Vec::new();
+            for a in 0..n as u16 {
+                for b in (a + 1)..n as u16 {
+                    if rng.chance(0.2) {
+                        edges.push((a, b));
+                    }
+                }
+            }
+            let g = graph(&edges, n);
+            let k = rng.range(1, 16);
+            let c = chaitin(&g, k);
+            assert_eq!(c.is_proper(&g), c.forced == 0, "n={n} k={k}");
+            let colored = c.color.iter().flatten().count();
+            assert_eq!(colored, g.nodes.len());
+        });
+    }
+}

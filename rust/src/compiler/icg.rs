@@ -1,0 +1,120 @@
+//! Interval Conflict Graph (ICG) construction — §4.2 phase 1–2.
+//!
+//! Nodes are register-live-ranges; two nodes conflict (are adjacent) when
+//! they are live in at least one common register-interval, i.e. both appear
+//! in that interval's working set. Following the paper's walk-through
+//! (§4.3, where each architectural register maps to exactly one renumbered
+//! register), we use one live-range per architectural register — the chain
+//! of all its defs and uses.
+
+use super::intervals::IntervalAnalysis;
+use crate::util::RegSet;
+
+/// The conflict graph over architectural registers.
+#[derive(Clone, Debug)]
+pub struct Icg {
+    /// Adjacency set per register id.
+    pub adj: Vec<RegSet>,
+    /// Registers that participate in at least one working set.
+    pub nodes: RegSet,
+}
+
+impl Icg {
+    pub fn degree(&self, r: u16) -> usize {
+        self.adj[r as usize].len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Maximum working-set clique lower bound: the largest interval working
+    /// set forms a clique in the ICG.
+    pub fn max_clique_lower_bound(&self, ia: &IntervalAnalysis) -> usize {
+        ia.intervals.iter().map(|i| i.working_set.len()).max().unwrap_or(0)
+    }
+}
+
+/// Build the ICG from the final interval analysis.
+pub fn build(ia: &IntervalAnalysis) -> Icg {
+    let max_reg = ia
+        .intervals
+        .iter()
+        .flat_map(|i| i.working_set.iter())
+        .max()
+        .map(|r| r as usize + 1)
+        .unwrap_or(0);
+    let mut adj = vec![RegSet::new(); max_reg];
+    let mut nodes = RegSet::new();
+    for iv in &ia.intervals {
+        let ws = iv.working_set;
+        for r in ws.iter() {
+            nodes.insert(r);
+            // All other registers of this interval conflict with r.
+            let mut others = ws;
+            others.remove(r);
+            adj[r as usize].union_in_place(&others);
+        }
+    }
+    Icg { adj, nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::intervals::{IntervalAnalysis, RegisterInterval};
+
+    fn fake_ia(sets: &[&[u16]]) -> IntervalAnalysis {
+        IntervalAnalysis {
+            intervals: sets
+                .iter()
+                .enumerate()
+                .map(|(id, s)| RegisterInterval {
+                    id,
+                    header: id,
+                    blocks: vec![id],
+                    working_set: RegSet::from_iter(s.iter().copied()),
+                })
+                .collect(),
+            block_interval: (0..sets.len()).collect(),
+            max_regs: 16,
+        }
+    }
+
+    #[test]
+    fn working_sets_form_cliques() {
+        let ia = fake_ia(&[&[0, 1, 2]]);
+        let g = build(&ia);
+        assert!(g.adj[0].contains(1) && g.adj[0].contains(2));
+        assert!(g.adj[1].contains(0) && g.adj[1].contains(2));
+        assert!(g.adj[2].contains(0) && g.adj[2].contains(1));
+        assert!(!g.adj[0].contains(0), "no self edges");
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn disjoint_intervals_no_cross_edges() {
+        let ia = fake_ia(&[&[0, 1], &[2, 3]]);
+        let g = build(&ia);
+        assert!(!g.adj[0].contains(2));
+        assert!(!g.adj[1].contains(3));
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn shared_register_links_intervals() {
+        // r1 live in both intervals → conflicts with r0, r2.
+        let ia = fake_ia(&[&[0, 1], &[1, 2]]);
+        let g = build(&ia);
+        assert_eq!(g.degree(1), 2);
+        assert!(!g.adj[0].contains(2), "r0 and r2 never co-resident");
+        assert_eq!(g.nodes.len(), 3);
+    }
+
+    #[test]
+    fn clique_bound_matches_biggest_interval() {
+        let ia = fake_ia(&[&[0, 1], &[2, 3, 4, 5], &[6]]);
+        let g = build(&ia);
+        assert_eq!(g.max_clique_lower_bound(&ia), 4);
+    }
+}

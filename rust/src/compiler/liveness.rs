@@ -1,0 +1,222 @@
+//! Register liveness analysis.
+//!
+//! Classic backward may-dataflow over the CFG, plus the per-instruction
+//! *dead operand bits* LTRF+ embeds in the ISA (§3.2): a source operand is
+//! marked dead when its register is not live-out of that instruction.
+
+use crate::ir::{Inst, Kernel};
+use crate::util::RegSet;
+
+/// Per-block liveness facts.
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    /// Registers live at block entry.
+    pub live_in: Vec<RegSet>,
+    /// Registers live at block exit.
+    pub live_out: Vec<RegSet>,
+    /// Upward-exposed uses per block.
+    pub uses: Vec<RegSet>,
+    /// Registers defined per block.
+    pub defs: Vec<RegSet>,
+}
+
+/// `gen`/`kill` for one block: `uses` = upward-exposed reads,
+/// `defs` = all writes.
+fn block_use_def(insts: &[Inst]) -> (RegSet, RegSet) {
+    let mut uses = RegSet::new();
+    let mut defs = RegSet::new();
+    for i in insts {
+        for r in i.uses() {
+            if !defs.contains(r) {
+                uses.insert(r);
+            }
+        }
+        if let Some(d) = i.def() {
+            // A predicated-off instruction does not write its destination,
+            // so a guarded def does NOT kill (conservative: the old value
+            // may flow through). Workloads only guard branches, but the
+            // analysis must stay sound for arbitrary input.
+            if i.guard.is_none() {
+                defs.insert(d);
+            } else {
+                uses.insert(d); // value may survive: treat as live-through
+            }
+        }
+    }
+    (uses, defs)
+}
+
+/// Run the backward fixpoint.
+pub fn analyze(kernel: &Kernel) -> Liveness {
+    let n = kernel.num_blocks();
+    let mut uses = Vec::with_capacity(n);
+    let mut defs = Vec::with_capacity(n);
+    for b in &kernel.blocks {
+        let (u, d) = block_use_def(&b.insts);
+        uses.push(u);
+        defs.push(d);
+    }
+
+    let mut live_in = vec![RegSet::new(); n];
+    let mut live_out = vec![RegSet::new(); n];
+    // Iterate in post-order (reverse RPO) for fast convergence.
+    let mut order = kernel.rpo();
+    order.reverse();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in &order {
+            let mut out = RegSet::new();
+            for &s in &kernel.blocks[b].succs {
+                out.union_in_place(&live_in[s]);
+            }
+            let inn = uses[b].union(&out.difference(&defs[b]));
+            if out != live_out[b] || inn != live_in[b] {
+                changed = true;
+                live_out[b] = out;
+                live_in[b] = inn;
+            }
+        }
+    }
+    Liveness { live_in, live_out, uses, defs }
+}
+
+impl Liveness {
+    /// Registers live anywhere in block `b` (entry ∪ touched): the set that
+    /// must be preserved if the warp deactivates inside `b`.
+    pub fn live_through(&self, kernel: &Kernel, b: usize) -> RegSet {
+        self.live_in[b].union(&kernel.blocks[b].touched_regs())
+    }
+}
+
+/// Per-instruction dead-operand bits: `dead[b][k]` is the set of source
+/// registers of instruction `k` in block `b` whose value is dead after the
+/// instruction executes. Conservative static liveness (§3.2).
+pub fn dead_operand_bits(kernel: &Kernel, lv: &Liveness) -> Vec<Vec<RegSet>> {
+    let mut out = Vec::with_capacity(kernel.num_blocks());
+    for (bid, b) in kernel.blocks.iter().enumerate() {
+        let mut live = lv.live_out[bid];
+        let mut rows = vec![RegSet::new(); b.insts.len()];
+        for (k, inst) in b.insts.iter().enumerate().rev() {
+            // After-inst liveness is `live`; compute dead sources.
+            let mut dead = RegSet::new();
+            for r in inst.uses() {
+                if !live.contains(r) {
+                    dead.insert(r);
+                }
+            }
+            // Transfer backwards: live = (live \ def) ∪ uses.
+            if let Some(d) = inst.def() {
+                if inst.guard.is_none() {
+                    live.remove(d);
+                }
+            }
+            for r in inst.uses() {
+                live.insert(r);
+            }
+            // A dst that is also a src is not dead at this inst.
+            if let Some(d) = inst.def() {
+                dead.remove(d);
+            }
+            rows[k] = dead;
+        }
+        out.push(rows);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Cmp, KernelBuilder};
+
+    fn loop_kernel() -> Kernel {
+        // r0: counter, r1: bound, r2: accumulator, r3: dead temp
+        let mut b = KernelBuilder::new("lk");
+        let top = b.fresh_label("top");
+        b.mov_imm(0, 0);
+        b.mov_imm(1, 8);
+        b.mov_imm(2, 0);
+        b.bind(top);
+        b.iadd_imm(3, 0, 7); // r3 = temp, dead after next inst
+        b.iadd(2, 2, 3);
+        b.iadd_imm(0, 0, 1);
+        b.setp(Cmp::Lt, 0, 0, 1);
+        b.bra_if(0, true, top);
+        b.st_global(2, 0, 2);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn loop_carried_registers_live_at_header() {
+        let k = loop_kernel();
+        let lv = analyze(&k);
+        // Block 1 is the loop body; r0, r1, r2 are live-in (loop-carried),
+        // r3 is not (defined before use within the block).
+        assert!(lv.live_in[1].contains(0));
+        assert!(lv.live_in[1].contains(1));
+        assert!(lv.live_in[1].contains(2));
+        assert!(!lv.live_in[1].contains(3));
+    }
+
+    #[test]
+    fn exit_block_kills_everything() {
+        let k = loop_kernel();
+        let lv = analyze(&k);
+        let last = k.num_blocks() - 1;
+        assert!(lv.live_out[last].is_empty());
+    }
+
+    #[test]
+    fn dead_operand_bits_mark_temps() {
+        let k = loop_kernel();
+        let lv = analyze(&k);
+        let dead = dead_operand_bits(&k, &lv);
+        // In the loop body, `add r2, r2, r3` is the last use of r3.
+        let body = &k.blocks[1];
+        let idx = body
+            .insts
+            .iter()
+            .position(|i| i.def() == Some(2) && i.uses().any(|r| r == 3))
+            .expect("accumulate inst");
+        assert!(dead[1][idx].contains(3), "r3 should be dead after its use");
+        assert!(!dead[1][idx].contains(2), "r2 is loop-carried, stays live");
+    }
+
+    #[test]
+    fn straightline_liveness_chains() {
+        let mut b = KernelBuilder::new("s");
+        b.mov_imm(0, 1);
+        b.iadd_imm(1, 0, 1);
+        b.iadd_imm(2, 1, 1);
+        b.st_global(2, 0, 2);
+        b.exit();
+        let k = b.finish();
+        let lv = analyze(&k);
+        assert!(lv.live_in[0].is_empty(), "nothing live-in at entry");
+        let dead = dead_operand_bits(&k, &lv);
+        // r0 dies at the first add, r1 at the second.
+        assert!(dead[0][1].contains(0));
+        assert!(dead[0][2].contains(1));
+    }
+
+    #[test]
+    fn guarded_def_does_not_kill() {
+        use crate::ir::{Inst, Op};
+        let mut b = KernelBuilder::new("g");
+        b.mov_imm(0, 1);
+        b.setp_imm(Cmp::Lt, 0, 0, 10);
+        let mut gi = Inst::new(Op::Mov);
+        gi.dst = Some(1);
+        gi.imm = Some(5);
+        gi.guard = Some((0, true));
+        b.push(gi);
+        b.st_global(0, 0, 1); // uses r1
+        b.exit();
+        let k = b.finish();
+        let lv = analyze(&k);
+        // r1 must be live-in at entry: the guarded mov may not execute.
+        assert!(lv.live_in[0].contains(1));
+    }
+}

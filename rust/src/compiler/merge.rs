@@ -1,0 +1,203 @@
+//! Register-interval reduction — Algorithm 2 of the paper (pass 2).
+//!
+//! Pass 1 over-fragments loops: a back edge always forces a fresh interval,
+//! so an inner loop ends up in a different interval from its enclosing
+//! code even when the combined working set would fit (Fig. 5). Pass 2 runs
+//! the same single-entry absorption on the *register-interval CFG*, merging
+//! interval `h` into interval `ii` when `ii` is `h`'s only predecessor
+//! interval and the union of their working sets still fits. Each
+//! application reduces the depth of a nested loop by one, so the pass is
+//! repeated until the graph stops shrinking.
+
+use super::intervals::{IntervalAnalysis, RegisterInterval};
+use crate::ir::Kernel;
+use crate::util::RegSet;
+use std::collections::VecDeque;
+
+/// One reduction pass over the interval graph. Returns the (possibly
+/// identical) coarser analysis.
+pub fn reduce_once(kernel: &Kernel, ia: &IntervalAnalysis) -> IntervalAnalysis {
+    let n_old = ia.intervals.len();
+    // Interval-graph predecessor lists.
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n_old];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n_old];
+    for (from, to) in ia.interval_edges(kernel) {
+        preds[to].push(from);
+        succs[from].push(to);
+    }
+
+    let entry_interval = ia.interval_of(kernel.entry());
+    let mut group_of: Vec<Option<usize>> = vec![None; n_old];
+    let mut group_ws: Vec<RegSet> = Vec::new();
+    let mut group_members: Vec<Vec<usize>> = Vec::new();
+    let mut group_seed: Vec<usize> = Vec::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+
+    let new_group = |seed: usize,
+                         group_of: &mut Vec<Option<usize>>,
+                         group_ws: &mut Vec<RegSet>,
+                         group_members: &mut Vec<Vec<usize>>,
+                         group_seed: &mut Vec<usize>| {
+        let g = group_ws.len();
+        group_of[seed] = Some(g);
+        group_ws.push(ia.intervals[seed].working_set);
+        group_members.push(vec![seed]);
+        group_seed.push(seed);
+        g
+    };
+
+    new_group(entry_interval, &mut group_of, &mut group_ws, &mut group_members, &mut group_seed);
+    queue.push_back(entry_interval);
+
+    while let Some(seed) = queue.pop_front() {
+        let g = group_of[seed].unwrap();
+        // Absorption loop (Algorithm 2 lines 12–15).
+        loop {
+            let mut candidate = None;
+            'scan: for h in 0..n_old {
+                if group_of[h].is_some() || preds[h].is_empty() {
+                    continue;
+                }
+                for &p in &preds[h] {
+                    if group_of[p] != Some(g) {
+                        continue 'scan;
+                    }
+                }
+                if group_ws[g].union(&ia.intervals[h].working_set).len() <= ia.max_regs {
+                    candidate = Some(h);
+                    break;
+                }
+            }
+            let Some(h) = candidate else { break };
+            group_of[h] = Some(g);
+            group_ws[g] = group_ws[g].union(&ia.intervals[h].working_set);
+            group_members[g].push(h);
+        }
+        // New groups for unabsorbed successors (lines 16–21).
+        let outs: Vec<usize> =
+            group_members[g].iter().flat_map(|&m| succs[m].iter().copied()).collect();
+        for s in outs {
+            if group_of[s].is_none() {
+                new_group(s, &mut group_of, &mut group_ws, &mut group_members, &mut group_seed);
+                queue.push_back(s);
+            }
+        }
+    }
+
+    debug_assert!(group_of.iter().all(|x| x.is_some()));
+
+    // Flatten back to a block-level analysis.
+    let mut intervals: Vec<RegisterInterval> = group_seed
+        .iter()
+        .enumerate()
+        .map(|(g, &seed)| RegisterInterval {
+            id: g,
+            header: ia.intervals[seed].header,
+            blocks: Vec::new(),
+            working_set: group_ws[g],
+        })
+        .collect();
+    let mut block_interval = vec![0usize; kernel.num_blocks()];
+    for (g, members) in group_members.iter().enumerate() {
+        for &old in members {
+            for &b in &ia.intervals[old].blocks {
+                block_interval[b] = g;
+                intervals[g].blocks.push(b);
+            }
+        }
+    }
+    IntervalAnalysis { intervals, block_interval, max_regs: ia.max_regs }
+}
+
+/// Run pass 2 to fixpoint ("repeated until the CFG cannot be reduced").
+pub fn reduce(kernel: &Kernel, mut ia: IntervalAnalysis) -> IntervalAnalysis {
+    loop {
+        let next = reduce_once(kernel, &ia);
+        if next.intervals.len() >= ia.intervals.len() {
+            return ia;
+        }
+        ia = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::intervals::form_intervals;
+    use crate::ir::{Cmp, Kernel, KernelBuilder};
+    use crate::util::prop;
+
+    /// The Fig. 5 shape: two nested loops whose combined working set fits.
+    fn nested(regs: u16) -> Kernel {
+        let mut b = KernelBuilder::new("fig5");
+        let outer = b.fresh_label("outer");
+        let inner = b.fresh_label("inner");
+        b.mov_imm(0, 0);
+        b.bind(outer);
+        b.mov_imm(1, 0);
+        b.bind(inner);
+        for r in 0..regs {
+            b.iadd_imm(4 + r, 1, 1);
+        }
+        b.iadd_imm(1, 1, 1);
+        b.setp_imm(Cmp::Lt, 0, 1, 4);
+        b.bra_if(0, true, inner);
+        b.iadd_imm(0, 0, 1);
+        b.setp_imm(Cmp::Lt, 1, 0, 4);
+        b.bra_if(1, true, outer);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn fig5_nested_loop_merges_to_fewer_intervals() {
+        let mut k = nested(4);
+        let ia1 = form_intervals(&mut k, 16);
+        let before = ia1.intervals.len();
+        let ia2 = reduce(&k, ia1);
+        assert_eq!(ia2.validate(&k), Ok(()));
+        assert!(
+            ia2.intervals.len() < before,
+            "pass 2 should reduce {before} intervals, got {}",
+            ia2.intervals.len()
+        );
+        // Whole kernel fits in 16 registers → ideally few intervals remain.
+        assert!(ia2.intervals.len() <= 2, "got {}", ia2.intervals.len());
+    }
+
+    #[test]
+    fn oversized_loops_do_not_merge() {
+        // Inner loop alone uses ~12 regs; outer adds more. With N=8 the
+        // merge must refuse (working set would exceed the partition).
+        let mut k = nested(10);
+        let ia1 = form_intervals(&mut k, 8);
+        let ia2 = reduce(&k, ia1);
+        assert_eq!(ia2.validate(&k), Ok(()));
+        for iv in &ia2.intervals {
+            assert!(iv.working_set.len() <= 8);
+        }
+        assert!(ia2.intervals.len() >= 2);
+    }
+
+    #[test]
+    fn reduce_is_idempotent_at_fixpoint() {
+        let mut k = nested(4);
+        let pass1 = form_intervals(&mut k, 16);
+        let ia = reduce(&k, pass1);
+        let again = reduce_once(&k, &ia);
+        assert_eq!(again.intervals.len(), ia.intervals.len());
+    }
+
+    #[test]
+    fn prop_reduce_preserves_invariants() {
+        prop::check(prop::DEFAULT_CASES, 0xB0B, |rng| {
+            let mut k = crate::workloads::gen::random_kernel(rng, 24);
+            let n = *rng.choose(&[8usize, 16, 32]);
+            let ia1 = form_intervals(&mut k, n);
+            let before = ia1.intervals.len();
+            let ia2 = reduce(&k, ia1);
+            assert_eq!(ia2.validate(&k), Ok(()), "N={n}");
+            assert!(ia2.intervals.len() <= before);
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! The LTRF compiler stack (§3.3 and §4 of the paper).
+//!
+//! Passes, in pipeline order:
+//! 1. [`liveness`] — classic backward dataflow + dead-operand bits (§3.2,
+//!    LTRF+).
+//! 2. [`intervals`] — register-interval formation, Algorithm 1 (pass 1).
+//! 3. [`merge`] — register-interval reduction, Algorithm 2 (pass 2, run to
+//!    fixpoint).
+//! 4. [`icg`] + [`coloring`] + [`renumber`] — the LTRF_conf register
+//!    renumbering optimization (§4): Interval Conflict Graph, Chaitin
+//!    coloring with balanced color use, register renumbering.
+//! 5. [`strands`] — SHRF-style strand formation (the §7.6 baseline).
+//!
+//! [`pipeline`] wires these into `compile()`, producing the
+//! [`pipeline::CompiledKernel`] the simulator consumes.
+
+pub mod coloring;
+pub mod icg;
+pub mod intervals;
+pub mod liveness;
+pub mod merge;
+pub mod pipeline;
+pub mod renumber;
+pub mod strands;
+
+pub use intervals::{IntervalAnalysis, RegisterInterval};
+pub use liveness::Liveness;
+pub use pipeline::{compile, BankMap, CompileOptions, CompiledKernel, SubgraphMode};

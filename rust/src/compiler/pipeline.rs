@@ -1,0 +1,235 @@
+//! End-to-end compile driver: the pass pipeline of Fig. 7.
+//!
+//! `register allocation → register-interval formation (pass 1 + pass 2) →
+//! [register renumbering] → prefetch bit-vector emission`, with strand
+//! formation as the SHRF-baseline alternative to interval formation.
+
+use super::coloring::{self, Coloring};
+use super::icg;
+use super::intervals::{self, IntervalAnalysis};
+use super::liveness::{self, Liveness};
+use super::merge;
+use super::renumber::{self, Renumbering};
+use super::strands;
+use crate::ir::Kernel;
+use crate::util::RegSet;
+
+pub use super::renumber::BankMap;
+
+/// Which prefetch-subgraph formation to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubgraphMode {
+    /// Register-intervals (LTRF; Algorithms 1+2).
+    RegisterIntervals,
+    /// Strands (the SHRF baseline / "LTRF (strand)" in Fig. 19).
+    Strands,
+}
+
+/// Compiler knobs. Defaults match the paper's Table 3 configuration
+/// (16 registers per register-interval, 16 main-register-file banks).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// N — the register-file-cache partition size in registers.
+    pub max_regs_per_interval: usize,
+    /// Main-register-file bank count (= ICG colors).
+    pub num_banks: usize,
+    /// Run the §4 register renumbering pass (LTRF_conf).
+    pub renumber: bool,
+    pub mode: SubgraphMode,
+    pub bank_map: BankMap,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            max_regs_per_interval: 16,
+            num_banks: 16,
+            renumber: false,
+            mode: SubgraphMode::RegisterIntervals,
+            bank_map: BankMap::Interleave,
+        }
+    }
+}
+
+impl CompileOptions {
+    pub fn ltrf(n: usize) -> Self {
+        CompileOptions { max_regs_per_interval: n, ..Default::default() }
+    }
+
+    pub fn ltrf_conf(n: usize) -> Self {
+        CompileOptions { max_regs_per_interval: n, renumber: true, ..Default::default() }
+    }
+
+    pub fn strands(n: usize) -> Self {
+        CompileOptions { max_regs_per_interval: n, mode: SubgraphMode::Strands, ..Default::default() }
+    }
+}
+
+/// Everything the simulator needs to run a kernel under LTRF.
+#[derive(Clone, Debug)]
+pub struct CompiledKernel {
+    /// The (possibly split and renumbered) kernel.
+    pub kernel: Kernel,
+    /// Prefetch subgraphs over `kernel`'s final block structure.
+    pub intervals: IntervalAnalysis,
+    pub liveness: Liveness,
+    /// Dead-operand bits per (block, inst) — drives LTRF+ (§3.2).
+    pub dead_bits: Vec<Vec<RegSet>>,
+    /// Renumbering outcome (when `options.renumber`).
+    pub renumbering: Option<Renumbering>,
+    /// Coloring diagnostics (when `options.renumber`).
+    pub coloring: Option<Coloring>,
+    pub options: CompileOptions,
+}
+
+impl CompiledKernel {
+    /// Where architectural register `r` of the *input* kernel lives after
+    /// renumbering (identity when the pass did not run). Entry-ABI
+    /// registers (e.g. the workload base pointer the simulator preloads)
+    /// must be resolved through this.
+    pub fn map_reg(&self, r: crate::ir::Reg) -> crate::ir::Reg {
+        match &self.renumbering {
+            Some(rn) => rn.remap[r as usize],
+            None => r,
+        }
+    }
+
+    /// The prefetch bit-vector of an interval (its working set).
+    pub fn prefetch_vector(&self, interval: usize) -> &RegSet {
+        &self.intervals.intervals[interval].working_set
+    }
+
+    /// Histogram of main-register-file bank conflicts across prefetch
+    /// bit-vectors (Fig. 6 / Fig. 16).
+    pub fn conflict_histogram(&self) -> Vec<usize> {
+        renumber::conflict_histogram(
+            self.intervals.intervals.iter().map(|i| &i.working_set),
+            self.options.num_banks,
+            self.options.bank_map,
+        )
+    }
+
+    /// Fraction of prefetch operations with zero bank conflicts.
+    pub fn conflict_free_fraction(&self) -> f64 {
+        let h = self.conflict_histogram();
+        let total: usize = h.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        h[0] as f64 / total as f64
+    }
+
+    /// §5.3 code-size overhead: one 256-bit prefetch bit-vector per
+    /// interval (plus one instruction slot each when the ISA carries an
+    /// explicit prefetch opcode instead of a piggybacked marker bit).
+    pub fn code_size_overhead(&self, explicit_inst: bool) -> f64 {
+        const INST_BYTES: f64 = 8.0;
+        const BITVEC_BYTES: f64 = 32.0; // 256-bit
+        let base = self.kernel.num_insts() as f64 * INST_BYTES;
+        let per_interval = BITVEC_BYTES + if explicit_inst { INST_BYTES } else { 0.0 };
+        self.intervals.intervals.len() as f64 * per_interval / base
+    }
+}
+
+/// Run the full pipeline on (a clone of) `kernel`.
+pub fn compile(kernel: &Kernel, options: CompileOptions) -> CompiledKernel {
+    let mut k = kernel.clone();
+
+    // Prefetch-subgraph formation (splits blocks).
+    let mut ia: IntervalAnalysis = match options.mode {
+        SubgraphMode::RegisterIntervals => {
+            let pass1 = intervals::form_intervals(&mut k, options.max_regs_per_interval);
+            merge::reduce(&k, pass1)
+        }
+        SubgraphMode::Strands => strands::form_strands(&mut k, options.max_regs_per_interval),
+    };
+
+    // LTRF_conf: renumber registers so each interval's working set spreads
+    // across banks.
+    let (renumbering, coloring) = if options.renumber {
+        let g = icg::build(&ia);
+        let col = coloring::chaitin(&g, options.num_banks);
+        let rn = renumber::renumber(&mut k, &col, options.num_banks, options.bank_map);
+        for iv in &mut ia.intervals {
+            iv.working_set = renumber::remap_set(&iv.working_set, &rn.remap);
+        }
+        (Some(rn), Some(col))
+    } else {
+        (None, None)
+    };
+
+    let lv = liveness::analyze(&k);
+    let dead_bits = liveness::dead_operand_bits(&k, &lv);
+    debug_assert_eq!(ia.validate(&k), Ok(()));
+
+    CompiledKernel {
+        kernel: k,
+        intervals: ia,
+        liveness: lv,
+        dead_bits,
+        renumbering,
+        coloring,
+        options,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{execute, parser};
+
+    const KSRC: &str = r#"
+.kernel t
+  mov r0, #0x1000
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  ld.global r4, [r0+64]
+  add r3, r3, r4
+  add r0, r0, #4
+  add r1, r1, #1
+  setp.lt p0, r1, #16
+  @p0 bra L1
+  st.global [r0], r3
+  exit
+"#;
+
+    #[test]
+    fn ltrf_pipeline_produces_valid_intervals() {
+        let k = parser::parse(KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf(16));
+        assert!(ck.intervals.validate(&ck.kernel).is_ok());
+        assert!(ck.renumbering.is_none());
+        assert!(ck.code_size_overhead(false) > 0.0);
+        assert!(ck.code_size_overhead(true) > ck.code_size_overhead(false));
+    }
+
+    #[test]
+    fn ltrf_conf_reduces_or_keeps_conflicts() {
+        let k = parser::parse(KSRC).unwrap();
+        let plain = compile(&k, CompileOptions::ltrf(16));
+        let conf = compile(&k, CompileOptions::ltrf_conf(16));
+        assert!(conf.conflict_free_fraction() >= plain.conflict_free_fraction());
+        assert!(conf.renumbering.is_some());
+        // Semantics preserved end-to-end through the full pipeline.
+        let a = execute(&plain.kernel, 5, &[], 100_000, false);
+        let b = execute(&conf.kernel, 5, &[], 100_000, false);
+        assert_eq!(a.stores, b.stores);
+    }
+
+    #[test]
+    fn strand_mode_yields_more_subgraphs() {
+        let k = parser::parse(KSRC).unwrap();
+        let iv = compile(&k, CompileOptions::ltrf(16));
+        let st = compile(&k, CompileOptions::strands(16));
+        assert!(st.intervals.intervals.len() > iv.intervals.intervals.len());
+    }
+
+    #[test]
+    fn default_options_match_table3() {
+        let o = CompileOptions::default();
+        assert_eq!(o.max_regs_per_interval, 16);
+        assert_eq!(o.num_banks, 16);
+    }
+}

@@ -1,0 +1,148 @@
+//! Strand formation — the SHRF baseline's prefetch subgraphs (§7.6).
+//!
+//! Strands [Gebhart et al., MICRO'11] are much more constrained than
+//! register-intervals: long/variable-latency operations (global loads,
+//! SFU ops) and backward branches are disallowed *inside* a strand, so a
+//! strand never spans a block boundary and terminates right after any
+//! long-latency instruction. The paper's §7.6 shows this is precisely why
+//! strand-based prefetching tolerates only ~3× register-file latency vs
+//! LTRF's 5.3×: strands are short, so prefetch operations are frequent and
+//! their working sets underuse the register-file-cache partition.
+
+use super::intervals::{IntervalAnalysis, RegisterInterval};
+use crate::ir::{BlockId, Kernel, Op};
+use crate::util::RegSet;
+
+/// True if `op` terminates a strand (long/variable latency).
+fn ends_strand(op: Op) -> bool {
+    op.is_load() || matches!(op, Op::Sfu | Op::Bar)
+}
+
+/// Split every block so that (1) long-latency ops are strand-final and
+/// (2) no strand touches more than `n` registers; then make each block its
+/// own prefetch subgraph.
+pub fn form_strands(kernel: &mut Kernel, n: usize) -> IntervalAnalysis {
+    assert!(n >= 4);
+    // Index-based scan: split_block appends tails, which we visit later.
+    let mut bid: BlockId = 0;
+    while bid < kernel.num_blocks() {
+        let mut ws = RegSet::new();
+        let mut split_at = None;
+        for (k, inst) in kernel.blocks[bid].insts.iter().enumerate() {
+            // Working-set bound (same TRAVERSE rule as Algorithm 1).
+            let mut grown = ws;
+            for r in inst.touched() {
+                grown.insert(r);
+            }
+            if grown.len() > n {
+                assert!(k > 0, "single instruction exceeds the partition (N={n})");
+                split_at = Some(k);
+                break;
+            }
+            ws = grown;
+            // Long-latency op: strand ends after it.
+            if ends_strand(inst.op) && k + 1 < kernel.blocks[bid].insts.len() {
+                split_at = Some(k + 1);
+                break;
+            }
+        }
+        if let Some(k) = split_at {
+            let _tail = kernel.split_block(bid, k);
+        }
+        bid += 1;
+    }
+
+    // Every block is its own strand.
+    let intervals = (0..kernel.num_blocks())
+        .map(|b| RegisterInterval {
+            id: b,
+            header: b,
+            blocks: vec![b],
+            working_set: kernel.blocks[b].touched_regs(),
+        })
+        .collect::<Vec<_>>();
+    let block_interval = (0..kernel.num_blocks()).collect();
+    IntervalAnalysis { intervals, block_interval, max_regs: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::intervals::form_intervals;
+    use crate::compiler::merge;
+    use crate::ir::{execute, Cmp, KernelBuilder};
+    use crate::util::prop;
+
+    fn mem_loop() -> crate::ir::Kernel {
+        let mut b = KernelBuilder::new("memloop");
+        let top = b.fresh_label("top");
+        b.mov_imm(0, 0x1000);
+        b.mov_imm(1, 0);
+        b.bind(top);
+        b.ld_global(2, 0, 0);
+        b.iadd(3, 2, 1);
+        b.ld_global(4, 0, 64);
+        b.iadd(3, 3, 4);
+        b.iadd_imm(0, 0, 4);
+        b.iadd_imm(1, 1, 1);
+        b.setp_imm(Cmp::Lt, 0, 1, 16);
+        b.bra_if(0, true, top);
+        b.st_global(0, 0, 3);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn strands_end_after_loads() {
+        let mut k = mem_loop();
+        let ia = form_strands(&mut k, 16);
+        assert_eq!(ia.validate(&k), Ok(()));
+        // Every load must be the last instruction of its strand (unless a
+        // terminator follows it in the original block tail).
+        for iv in &ia.intervals {
+            let blk = &k.blocks[iv.blocks[0]];
+            for (i, inst) in blk.insts.iter().enumerate() {
+                if inst.op.is_load() {
+                    assert_eq!(i, blk.insts.len() - 1, "load mid-strand in {}", blk.label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strands_finer_than_intervals() {
+        let mut k1 = mem_loop();
+        let strands = form_strands(&mut k1, 16);
+        let mut k2 = mem_loop();
+        let pass1 = form_intervals(&mut k2, 16);
+        let intervals = merge::reduce(&k2, pass1);
+        assert!(
+            strands.intervals.len() > intervals.intervals.len(),
+            "strands {} should outnumber register-intervals {}",
+            strands.intervals.len(),
+            intervals.intervals.len()
+        );
+    }
+
+    #[test]
+    fn strand_split_preserves_semantics() {
+        let k0 = mem_loop();
+        let mut k = k0.clone();
+        let _ = form_strands(&mut k, 16);
+        let a = execute(&k0, 42, &[], 100_000, false);
+        let b = execute(&k, 42, &[], 100_000, false);
+        assert_eq!(a.stores, b.stores);
+        assert_eq!(a.dyn_insts, b.dyn_insts);
+    }
+
+    #[test]
+    fn prop_strand_invariants() {
+        prop::check(prop::DEFAULT_CASES, 0x57AD, |rng| {
+            let mut k = crate::workloads::gen::random_kernel(rng, 24);
+            let n = *rng.choose(&[8usize, 16, 32]);
+            let ia = form_strands(&mut k, n);
+            assert_eq!(ia.validate(&k), Ok(()), "N={n}");
+            assert!(k.validate().is_ok());
+        });
+    }
+}

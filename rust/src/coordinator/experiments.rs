@@ -1,0 +1,1135 @@
+//! Per-table/figure experiment drivers (§7 + §2 motivation data).
+//!
+//! Every table and figure in the paper's evaluation maps to one function
+//! here; the `ltrf` CLI exposes each as a subcommand and EXPERIMENTS.md
+//! records paper-vs-measured values. Figures that plot IPC normalize to
+//! the §6 baseline: configuration #1 (256KB HP SRAM) plus the 16KB RF$
+//! capacity folded into the MRF, no register caching.
+
+use super::sweep::{gmean, parallel_map};
+use super::tolerable;
+use crate::compiler::{compile, SubgraphMode};
+use crate::ir::execute;
+use crate::report::table::{f2, pct};
+use crate::report::Table;
+use crate::runtime::prefetch_eval::LatencyParams;
+use crate::runtime::PrefetchEvaluator;
+use crate::sim::{gpu, HierarchyKind, SimConfig, Stats};
+use crate::timing::{design_points, table2, Tech};
+use crate::workloads::{gen, suite, RegClass, WorkloadSpec};
+use std::path::PathBuf;
+
+/// Knobs shared by all drivers.
+#[derive(Clone, Debug)]
+pub struct ExperimentContext {
+    /// Trim workload count + sweep grids (CI / bench mode).
+    pub quick: bool,
+    /// When set, every table is also written as CSV here.
+    pub csv_dir: Option<PathBuf>,
+    /// Simulated SMs (1 reproduces per-SM IPC; the paper uses 24
+    /// homogeneous SMs).
+    pub num_sms: usize,
+}
+
+impl Default for ExperimentContext {
+    fn default() -> Self {
+        ExperimentContext { quick: false, csv_dir: None, num_sms: 1 }
+    }
+}
+
+impl ExperimentContext {
+    pub fn quick() -> Self {
+        ExperimentContext { quick: true, ..Default::default() }
+    }
+
+    /// Workloads under evaluation (quick mode: 2 insensitive + 3
+    /// sensitive).
+    pub fn workloads(&self) -> Vec<&'static WorkloadSpec> {
+        if self.quick {
+            ["kmeans", "bfs", "gaussian", "pathfinder", "cfd"]
+                .iter()
+                .map(|n| suite::workload_by_name(n).unwrap())
+                .collect()
+        } else {
+            suite::suite()
+        }
+    }
+
+    fn emit(&self, table: &Table, name: &str) {
+        if let Some(dir) = &self.csv_dir {
+            if let Err(e) = table.write_csv(dir, name) {
+                eprintln!("warning: csv write failed for {name}: {e}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Design-under-test plumbing
+// ---------------------------------------------------------------------
+
+/// A register-file design to simulate: hierarchy + compile flags +
+/// structural overrides.
+#[derive(Clone, Debug)]
+pub struct DesignUnderTest {
+    pub hierarchy: HierarchyKind,
+    pub renumber: bool,
+    /// MRF capacity in warp-registers (2048 = 256KB).
+    pub capacity: usize,
+    /// MRF bank count (16 baseline; the 8× Table-2 designs use 128).
+    pub mrf_banks: usize,
+    pub regs_per_interval: usize,
+    pub active_warps: usize,
+    pub warps_per_sm: usize,
+    pub num_sms: usize,
+    /// Override the compile subgraph mode (Fig. 19's "LTRF (strand)").
+    pub mode_override: Option<SubgraphMode>,
+}
+
+impl DesignUnderTest {
+    pub fn new(hierarchy: HierarchyKind, renumber: bool) -> Self {
+        DesignUnderTest {
+            hierarchy,
+            renumber,
+            capacity: 2048,
+            mrf_banks: 16,
+            regs_per_interval: 16,
+            active_warps: 8,
+            warps_per_sm: 64,
+            num_sms: 1,
+            mode_override: None,
+        }
+    }
+
+    /// Set the capacity; Table-2 designs scale banks with capacity, so an
+    /// 8× file also gets 8× banks (flattened-butterfly interconnect).
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.capacity = cap;
+        self.mrf_banks = (16 * cap / 2048).clamp(16, 128);
+        self
+    }
+
+    /// Public view of the simulator configuration (ablation drivers).
+    pub fn cfg_public(&self, latency_factor: f64) -> SimConfig {
+        self.cfg(latency_factor)
+    }
+
+    fn cfg(&self, latency_factor: f64) -> SimConfig {
+        SimConfig {
+            warp_regs_capacity: self.capacity,
+            mrf_banks: self.mrf_banks,
+            regs_per_interval: self.regs_per_interval,
+            active_warps: self.active_warps,
+            warps_per_sm: self.warps_per_sm,
+            num_sms: self.num_sms,
+            ..SimConfig::with_hierarchy(self.hierarchy)
+        }
+        .with_latency_factor(latency_factor)
+        .normalize_capacity()
+    }
+
+    /// Simulate one workload at a latency factor.
+    pub fn run(&self, spec: &WorkloadSpec, latency_factor: f64) -> Stats {
+        let cfg = self.cfg(latency_factor);
+        let kernel = gen::build(spec);
+        let mut opts = gpu::compile_options(&cfg, self.renumber);
+        if let Some(m) = self.mode_override {
+            opts.mode = m;
+        }
+        let ck = compile(&kernel, opts);
+        gpu::run(&ck, &cfg)
+    }
+}
+
+/// The §6 comparison points, in figure order. The paper's "LTRF" is the
+/// full basic design (WCB liveness bit-vector included — Fig. 12);
+/// LTRF_conf adds the §4 renumbering pass.
+pub fn comparison_points(capacity: usize) -> Vec<(&'static str, DesignUnderTest)> {
+    vec![
+        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(capacity)),
+        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false).with_capacity(capacity)),
+        (
+            "LTRF",
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)
+                .with_capacity(capacity),
+        ),
+        (
+            "LTRF_conf",
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
+                .with_capacity(capacity),
+        ),
+    ]
+}
+
+/// Baseline IPC for normalization: BL @ 1× latency, 256KB (+16KB).
+pub fn baseline_ipc(spec: &WorkloadSpec) -> f64 {
+    DesignUnderTest::new(HierarchyKind::Baseline, false).run(spec, 1.0).ipc()
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — required register file capacity for maximum TLP
+// ---------------------------------------------------------------------
+
+pub fn table1(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Table 1 — register file capacity required for max TLP",
+        &["workload", "class", "Fermi regs/thr", "Fermi req KB", "Maxwell regs/thr", "Maxwell req KB"],
+    );
+    // Fermi: 48 warps/SM (1536 threads); Maxwell: 64 warps/SM.
+    let (fermi_warps, maxwell_warps) = (48, 64);
+    let mut fermi_req = Vec::new();
+    let mut maxwell_req = Vec::new();
+    // Table 1 spans the full 35-benchmark pool (§2.1), not just the 14
+    // selected for the timing figures.
+    for w in crate::workloads::all35() {
+        let f_kb = w.required_rf_bytes(w.regs_fermi, fermi_warps) / 1024;
+        let m_kb = w.required_rf_bytes(w.regs_maxwell, maxwell_warps) / 1024;
+        fermi_req.push(f_kb as f64);
+        maxwell_req.push(m_kb as f64);
+        t.row(vec![
+            w.name.into(),
+            format!("{:?}", w.class),
+            w.regs_fermi.to_string(),
+            f_kb.to_string(),
+            w.regs_maxwell.to_string(),
+            m_kb.to_string(),
+        ]);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(0.0, f64::max);
+    t.row(vec![
+        "AVERAGE".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.0} ({:.1}x of 128KB)", avg(&fermi_req), avg(&fermi_req) / 128.0),
+        "-".into(),
+        format!("{:.0} ({:.1}x of 256KB)", avg(&maxwell_req), avg(&maxwell_req) / 256.0),
+    ]);
+    t.row(vec![
+        "MAX".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.0} ({:.1}x)", max(&fermi_req), max(&fermi_req) / 128.0),
+        "-".into(),
+        format!("{:.0} ({:.1}x)", max(&maxwell_req), max(&maxwell_req) / 256.0),
+    ]);
+    ctx.emit(&t, "table1");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — register file design points
+// ---------------------------------------------------------------------
+
+pub fn table2_table(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Table 2 — register file designs (normalized to config #1)",
+        &["cfg", "tech", "#banks", "bank size", "network", "cap", "area", "power", "cap/area", "cap/power", "latency"],
+    );
+    for d in table2() {
+        t.row(vec![
+            format!("#{}", d.id),
+            d.tech.name().into(),
+            format!("{}x", d.banks_ratio),
+            format!("{}x", d.bank_size_ratio),
+            d.network.name().into(),
+            f2(d.capacity()),
+            f2(d.area()),
+            f2(d.power()),
+            f2(d.capacity_per_area()),
+            f2(d.capacity_per_power()),
+            f2(d.latency()),
+        ]);
+    }
+    ctx.emit(&t, "table2");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 2 — on-chip storage across GPU generations (product data)
+// ---------------------------------------------------------------------
+
+pub fn fig2(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 2 — on-chip memory capacity across NVIDIA generations",
+        &["GPU", "year", "RF (MB)", "L1+shared (MB)", "L2 (MB)", "RF share"],
+    );
+    // Public product data (whitepapers), as plotted in the paper.
+    let rows: [(&str, u32, f64, f64, f64); 4] = [
+        ("Fermi GF100", 2010, 2.0, 1.0, 0.75),
+        ("Kepler GK110", 2012, 3.75, 1.0, 1.5),
+        ("Maxwell GM200", 2014, 6.0, 2.25, 3.0),
+        ("Pascal GP100", 2016, 14.3, 3.5, 4.0),
+    ];
+    for (name, year, rf, l1, l2) in rows {
+        let share = rf / (rf + l1 + l2);
+        t.row(vec![
+            name.into(),
+            year.to_string(),
+            f2(rf),
+            f2(l1),
+            f2(l2),
+            pct(share),
+        ]);
+    }
+    ctx.emit(&t, "fig2");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 3 — ideal vs TFET 8× register file
+// ---------------------------------------------------------------------
+
+pub fn fig3(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 3 — IPC with an 8x register file, normalized to 256KB baseline",
+        &["workload", "class", "(a) ideal 8x", "(b) TFET 8x @5.3x"],
+    );
+    let rows = parallel_map(ctx.workloads(), |spec| {
+        let base = baseline_ipc(spec);
+        let ideal =
+            DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(16384).run(spec, 1.0);
+        let tfet =
+            DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(16384).run(spec, 5.3);
+        (spec.name, spec.class, ideal.ipc() / base, tfet.ipc() / base)
+    });
+    let mut ideals = Vec::new();
+    let mut tfets = Vec::new();
+    for (name, class, i, f) in rows {
+        if class == RegClass::Sensitive {
+            ideals.push(i);
+        }
+        tfets.push(f);
+        t.row(vec![name.into(), format!("{class:?}"), f2(i), f2(f)]);
+    }
+    t.row(vec![
+        "MEAN(sensitive)".into(),
+        "-".into(),
+        f2(gmean(&ideals)),
+        "-".into(),
+    ]);
+    t.row(vec!["MEAN(all)".into(), "-".into(), "-".into(), f2(gmean(&tfets))]);
+    ctx.emit(&t, "fig3");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 4 — register cache hit rates (HW RFC and SW SHRF)
+// ---------------------------------------------------------------------
+
+pub fn fig4(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 4 — register cache hit rate (16KB)",
+        &["workload", "HW cache [49]", "SW cache [50]"],
+    );
+    let rows = parallel_map(ctx.workloads(), |spec| {
+        let hw = DesignUnderTest::new(HierarchyKind::Rfc, false).run(spec, 1.0);
+        let sw = DesignUnderTest::new(HierarchyKind::Shrf, false).run(spec, 1.0);
+        (spec.name, hw.rfc_hit_rate(), sw.rfc_hit_rate())
+    });
+    let mut hws = Vec::new();
+    let mut sws = Vec::new();
+    for (name, hw, sw) in rows {
+        hws.push(hw);
+        sws.push(sw);
+        t.row(vec![name.into(), pct(hw), pct(sw)]);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    t.row(vec!["MEAN".into(), pct(avg(&hws)), pct(avg(&sws))]);
+    ctx.emit(&t, "fig4");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 6 / Fig 16 — bank conflict distributions in register-intervals
+// ---------------------------------------------------------------------
+
+fn conflict_distribution(
+    ev: &PrefetchEvaluator,
+    spec: &WorkloadSpec,
+    n: usize,
+    renumber: bool,
+) -> Vec<f64> {
+    let kernel = gen::build(spec);
+    let mut opts = crate::compiler::CompileOptions::ltrf(n);
+    opts.renumber = renumber;
+    let ck = compile(&kernel, opts);
+    let sets: Vec<_> = ck.intervals.intervals.iter().map(|i| i.working_set).collect();
+    let mut assign = [0usize; 256];
+    for (r, a) in assign.iter_mut().enumerate() {
+        *a = opts.bank_map.bank_of(r as u16, opts.num_banks);
+    }
+    let rows = ev.evaluate(&sets, &assign, LatencyParams::default()).expect("prefetch eval");
+    let mut hist = vec![0usize; 4];
+    for r in &rows {
+        let c = (r.conflicts as usize).min(3);
+        hist[c] += 1;
+    }
+    let total = rows.len().max(1) as f64;
+    hist.into_iter().map(|h| h as f64 / total).collect()
+}
+
+pub fn fig6(ctx: &ExperimentContext) -> Table {
+    let ev = PrefetchEvaluator::load_or_reference(std::path::Path::new("artifacts"));
+    let mut t = Table::new(
+        format!(
+            "Fig 6 — register bank conflicts per register-interval (N=16, 16 banks; evaluator: {})",
+            if ev.is_pjrt() { "PJRT artifact" } else { "rust reference" }
+        ),
+        &["workload", "0 conflicts", "1", "2", "3+"],
+    );
+    for spec in ctx.workloads() {
+        let d = conflict_distribution(&ev, spec, 16, false);
+        t.row(vec![spec.name.into(), pct(d[0]), pct(d[1]), pct(d[2]), pct(d[3])]);
+    }
+    ctx.emit(&t, "fig6");
+    t
+}
+
+pub fn fig16(ctx: &ExperimentContext) -> Vec<Table> {
+    let ev = PrefetchEvaluator::load_or_reference(std::path::Path::new("artifacts"));
+    let mut out = Vec::new();
+    for n in [8usize, 16, 32] {
+        for renumber in [false, true] {
+            let label = if renumber { "LTRF_conf" } else { "LTRF" };
+            let mut t = Table::new(
+                format!("Fig 16 — conflicts, {label}, {n} regs/interval"),
+                &["workload", "0 conflicts", "1", "2", "3+"],
+            );
+            let mut mean = vec![0.0; 4];
+            let wl = ctx.workloads();
+            for spec in &wl {
+                let d = conflict_distribution(&ev, spec, n, renumber);
+                for (m, v) in mean.iter_mut().zip(&d) {
+                    *m += v / wl.len() as f64;
+                }
+                t.row(vec![spec.name.into(), pct(d[0]), pct(d[1]), pct(d[2]), pct(d[3])]);
+            }
+            t.row(vec![
+                "MEAN".into(),
+                pct(mean[0]),
+                pct(mean[1]),
+                pct(mean[2]),
+                pct(mean[3]),
+            ]);
+            ctx.emit(&t, &format!("fig16_{label}_{n}"));
+            out.push(t);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fig 14 — overall IPC on configs #6 and #7
+// ---------------------------------------------------------------------
+
+pub fn fig14(ctx: &ExperimentContext) -> Vec<Table> {
+    let mut out = Vec::new();
+    for (cfg_name, design, _override) in design_points() {
+        if design.tech == Tech::HpSram {
+            continue; // the Ideal point is a column, not a panel
+        }
+        let factor = design.latency();
+        let cap = design.warp_registers();
+        let mut t = Table::new(
+            format!("Fig 14 — IPC on config {cfg_name} ({factor:.1}x latency, 8x capacity), normalized to baseline"),
+            &["workload", "BL", "RFC", "LTRF", "LTRF_conf", "Ideal"],
+        );
+        let points = comparison_points(cap);
+        let rows = parallel_map(ctx.workloads(), |spec| {
+            let base = baseline_ipc(spec);
+            let mut vals = Vec::new();
+            for (_, dut) in &points {
+                vals.push(dut.run(spec, factor).ipc() / base);
+            }
+            // Ideal: 8× capacity, no latency increase, conventional RF.
+            let ideal = DesignUnderTest::new(HierarchyKind::Baseline, false)
+                .with_capacity(cap)
+                .run(spec, 1.0)
+                .ipc()
+                / base;
+            vals.push(ideal);
+            (spec.name, vals)
+        });
+        let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 5];
+        for (name, vals) in rows {
+            for (c, v) in cols.iter_mut().zip(&vals) {
+                c.push(*v);
+            }
+            t.row(vec![
+                name.into(),
+                f2(vals[0]),
+                f2(vals[1]),
+                f2(vals[2]),
+                f2(vals[3]),
+                f2(vals[4]),
+            ]);
+        }
+        t.row(vec![
+            "GMEAN".into(),
+            f2(gmean(&cols[0])),
+            f2(gmean(&cols[1])),
+            f2(gmean(&cols[2])),
+            f2(gmean(&cols[3])),
+            f2(gmean(&cols[4])),
+        ]);
+        ctx.emit(&t, &format!("fig14_cfg{}", design.id));
+        out.push(t);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fig 15 — maximum tolerable register file access latency
+// ---------------------------------------------------------------------
+
+pub fn fig15(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 15 — maximum tolerable MRF access latency (<=5% IPC loss)",
+        &["workload", "BL", "RFC", "LTRF", "LTRF_conf"],
+    );
+    let points = comparison_points(2048);
+    let rows = parallel_map(ctx.workloads(), |spec| {
+        let vals: Vec<f64> =
+            points.iter().map(|(_, d)| tolerable::max_tolerable(d, spec, 0.95)).collect();
+        (spec.name, vals)
+    });
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    for (name, vals) in rows {
+        for (c, v) in cols.iter_mut().zip(&vals) {
+            c.push(*v);
+        }
+        t.row(vec![name.into(), f2(vals[0]), f2(vals[1]), f2(vals[2]), f2(vals[3])]);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    t.row(vec![
+        "MEAN".into(),
+        f2(avg(&cols[0])),
+        f2(avg(&cols[1])),
+        f2(avg(&cols[2])),
+        f2(avg(&cols[3])),
+    ]);
+    ctx.emit(&t, "fig15");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 17 — sensitivity to registers per register-interval
+// ---------------------------------------------------------------------
+
+pub fn fig17(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 17 — mean IPC vs MRF latency x regs/interval (normalized to baseline)",
+        &["design", "regs/interval", "1x", "2x", "4x", "6.3x", "8x"],
+    );
+    let factors = [1.0, 2.0, 4.0, 6.3, 8.0];
+    for renumber in [false, true] {
+        for n in [8usize, 16, 32] {
+            let jobs: Vec<(&WorkloadSpec, f64)> = ctx
+                .workloads()
+                .into_iter()
+                .flat_map(|w| factors.iter().map(move |&f| (w, f)))
+                .collect();
+            let results = parallel_map(jobs, |(spec, f)| {
+                let mut dut =
+                    DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+                dut.regs_per_interval = n;
+                dut.run(spec, *f).ipc() / baseline_ipc(spec)
+            });
+            let nw = ctx.workloads().len();
+            let mut cells = vec![
+                if renumber { "LTRF_conf" } else { "LTRF" }.to_string(),
+                n.to_string(),
+            ];
+            for (i, _) in factors.iter().enumerate() {
+                let vals: Vec<f64> =
+                    (0..nw).map(|w| results[w * factors.len() + i]).collect();
+                cells.push(f2(gmean(&vals)));
+            }
+            t.row(cells);
+        }
+    }
+    ctx.emit(&t, "fig17");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 18 — sensitivity to the number of active warps
+// ---------------------------------------------------------------------
+
+pub fn fig18(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 18 — mean IPC vs active warps x MRF latency (LTRF/LTRF_conf, normalized)",
+        &["design", "active warps", "2x", "4x", "6.3x"],
+    );
+    let factors = [2.0, 4.0, 6.3];
+    for renumber in [false, true] {
+        for warps in [4usize, 6, 8, 12, 16] {
+            let jobs: Vec<(&WorkloadSpec, f64)> = ctx
+                .workloads()
+                .into_iter()
+                .flat_map(|w| factors.iter().map(move |&f| (w, f)))
+                .collect();
+            let results = parallel_map(jobs, |(spec, f)| {
+                let mut dut =
+                    DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+                dut.active_warps = warps;
+                dut.run(spec, *f).ipc() / baseline_ipc(spec)
+            });
+            let nw = ctx.workloads().len();
+            let mut cells = vec![
+                if renumber { "LTRF_conf" } else { "LTRF" }.to_string(),
+                warps.to_string(),
+            ];
+            for (i, _) in factors.iter().enumerate() {
+                let vals: Vec<f64> =
+                    (0..nw).map(|w| results[w * factors.len() + i]).collect();
+                cells.push(f2(gmean(&vals)));
+            }
+            t.row(cells);
+        }
+    }
+    ctx.emit(&t, "fig18");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 4 — real vs optimal register-interval length
+// ---------------------------------------------------------------------
+
+/// Dynamic interval lengths from a functional trace: `real` counts runs
+/// between interval transitions; `optimal` greedily re-segments the same
+/// trace only by the working-set bound (no control-flow constraint).
+fn interval_lengths(spec: &WorkloadSpec, n: usize) -> (Vec<usize>, Vec<usize>) {
+    let kernel = gen::build(spec);
+    let ck = compile(&kernel, crate::compiler::CompileOptions::ltrf(n));
+    let out = execute(&ck.kernel, 1, &[(gen::REG_BASE, 0x1_0000)], 400_000, true);
+
+    let mut real = Vec::new();
+    let mut cur_interval = usize::MAX;
+    let mut run = 0usize;
+    for e in &out.trace {
+        let iv = ck.intervals.block_interval[e.block];
+        if iv != cur_interval {
+            if run > 0 {
+                real.push(run);
+            }
+            cur_interval = iv;
+            run = 0;
+        }
+        run += 1;
+    }
+    if run > 0 {
+        real.push(run);
+    }
+
+    let mut optimal = Vec::new();
+    let mut ws = crate::util::RegSet::new();
+    let mut run = 0usize;
+    for e in &out.trace {
+        let inst = &ck.kernel.blocks[e.block].insts[e.idx];
+        let mut grown = ws;
+        for r in inst.touched() {
+            grown.insert(r);
+        }
+        if grown.len() > n && run > 0 {
+            optimal.push(run);
+            ws = crate::util::RegSet::from_iter(inst.touched());
+            run = 1;
+        } else {
+            ws = grown;
+            run += 1;
+        }
+    }
+    if run > 0 {
+        optimal.push(run);
+    }
+    (real, optimal)
+}
+
+pub fn table4(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Table 4 — real vs optimal register-interval dynamic length (N=16)",
+        &["metric", "average", "minimum", "maximum", "real/optimal"],
+    );
+    let all = parallel_map(ctx.workloads(), |spec| interval_lengths(spec, 16));
+    let stats = |per_workload: Vec<Vec<usize>>| -> (f64, f64, f64) {
+        // Paper reports the average/min/max of per-workload mean lengths.
+        let means: Vec<f64> = per_workload
+            .iter()
+            .filter(|v| !v.is_empty())
+            .map(|v| v.iter().sum::<usize>() as f64 / v.len() as f64)
+            .collect();
+        let avg = means.iter().sum::<f64>() / means.len().max(1) as f64;
+        let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        (avg, min, max)
+    };
+    let (ra, rmin, rmax) = stats(all.iter().map(|(r, _)| r.clone()).collect());
+    let (oa, omin, omax) = stats(all.iter().map(|(_, o)| o.clone()).collect());
+    t.row(vec!["Real".into(), f2(ra), f2(rmin), f2(rmax), pct(ra / oa)]);
+    t.row(vec!["Optimal".into(), f2(oa), f2(omin), f2(omax), "-".into()]);
+    ctx.emit(&t, "table4");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 19 — LTRF vs software-managed hierarchical register files
+// ---------------------------------------------------------------------
+
+pub fn fig19(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 19 — mean IPC vs MRF latency: BL/RFC/SHRF/LTRF(strand)/LTRF(interval)",
+        &["design", "1x", "2x", "3x", "4x", "5x", "6x", "8x"],
+    );
+    let factors = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0];
+    let mut ltrf_strand =
+        DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    ltrf_strand.mode_override = Some(SubgraphMode::Strands);
+    let designs: Vec<(&str, DesignUnderTest)> = vec![
+        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false)),
+        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false)),
+        ("SHRF", DesignUnderTest::new(HierarchyKind::Shrf, false)),
+        ("LTRF (strand)", ltrf_strand),
+        ("LTRF (register-interval)", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)),
+    ];
+    for (name, dut) in designs {
+        let jobs: Vec<(&WorkloadSpec, f64)> = ctx
+            .workloads()
+            .into_iter()
+            .flat_map(|w| factors.iter().map(move |&f| (w, f)))
+            .collect();
+        let results =
+            parallel_map(jobs, |(spec, f)| dut.run(spec, *f).ipc() / baseline_ipc(spec));
+        let nw = ctx.workloads().len();
+        let mut cells = vec![name.to_string()];
+        for (i, _) in factors.iter().enumerate() {
+            let vals: Vec<f64> = (0..nw).map(|w| results[w * factors.len() + i]).collect();
+            cells.push(f2(gmean(&vals)));
+        }
+        t.row(cells);
+    }
+    ctx.emit(&t, "fig19");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 20 — tolerable latency vs warps per SM
+// ---------------------------------------------------------------------
+
+pub fn fig20(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "Fig 20 — maximum tolerable MRF latency vs warps/SM (mean)",
+        &["warps/SM", "BL", "LTRF"],
+    );
+    for warps in [16usize, 32, 64, 128] {
+        let mut bl = DesignUnderTest::new(HierarchyKind::Baseline, false);
+        bl.warps_per_sm = warps;
+        // Keep occupancy feasible: capacity scales with the warp count so
+        // the context count (not the RF size) is the variable under test.
+        bl.capacity = 2048 * warps / 64;
+        let mut ltrf = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        ltrf.warps_per_sm = warps;
+        ltrf.capacity = 2048 * warps / 64;
+        let vals = parallel_map(ctx.workloads(), |spec| {
+            (
+                tolerable::max_tolerable(&bl, spec, 0.95),
+                tolerable::max_tolerable(&ltrf, spec, 0.95),
+            )
+        });
+        let avg_bl = vals.iter().map(|v| v.0).sum::<f64>() / vals.len() as f64;
+        let avg_lt = vals.iter().map(|v| v.1).sum::<f64>() / vals.len() as f64;
+        t.row(vec![warps.to_string(), f2(avg_bl), f2(avg_lt)]);
+    }
+    ctx.emit(&t, "fig20");
+    t
+}
+
+// ---------------------------------------------------------------------
+// §5.3 — overheads
+// ---------------------------------------------------------------------
+
+pub fn overheads(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new("§5.3 — LTRF overheads", &["quantity", "value", "paper"]);
+    // Code size (mean over the suite, both encodings).
+    let sizes = parallel_map(ctx.workloads(), |spec| {
+        let kernel = gen::build(spec);
+        let ck = compile(&kernel, crate::compiler::CompileOptions::ltrf(16));
+        (ck.code_size_overhead(false), ck.code_size_overhead(true))
+    });
+    let avg = |f: fn(&(f64, f64)) -> f64, v: &[(f64, f64)]| {
+        v.iter().map(f).sum::<f64>() / v.len() as f64
+    };
+    t.row(vec![
+        "code size (bit-vectors only)".into(),
+        pct(avg(|x| x.0, &sizes)),
+        "7%".into(),
+    ]);
+    t.row(vec![
+        "code size (+prefetch insts)".into(),
+        pct(avg(|x| x.1, &sizes)),
+        "9%".into(),
+    ]);
+    // WCB storage (§5.3 arithmetic).
+    let wcb_bits: u64 = 64 * (256 * 5 + 3 + 256 + 256);
+    t.row(vec!["WCB storage / SM (bits)".into(), wcb_bits.to_string(), "114880".into()]);
+    let rf_bits: u64 = 256 * 1024 * 8;
+    t.row(vec![
+        "WCB area vs 256KB RF".into(),
+        pct(wcb_bits as f64 / rf_bits as f64 * (8.0 / 6.0)), // table cells vs SRAM cells
+        "~5%".into(),
+    ]);
+    // Area: RF$ (16KB) + WCB + interconnect/collector additions.
+    let area = 16.0 / 256.0 + 0.05 + 0.05;
+    t.row(vec!["LTRF area overhead".into(), pct(area), "16%".into()]);
+    // Power: activity-weighted model (timing::power) on a representative
+    // run at the baseline MRF size/technology (the §5.3 comparison).
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    let st = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true).run(spec, 1.0);
+    let power = crate::timing::power::ltrf_power(&st, 1.0, Tech::HpSram).total();
+    t.row(vec![
+        "LTRF power vs baseline RF".into(),
+        pct(power - 1.0),
+        "-23%".into(),
+    ]);
+    // And the headline design point: DWM at 8x capacity.
+    let st7 = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
+        .with_capacity(16384)
+        .run(spec, 6.3);
+    let p7 = crate::timing::power::ltrf_power(&st7, 8.0, Tech::Dwm).total();
+    t.row(vec![
+        "LTRF power on config #7 (DWM 2MB)".into(),
+        pct(p7 - 1.0),
+        "-46% (abstract)".into(),
+    ]);
+    t.row(vec![
+        "MRF access reduction".into(),
+        format!("{:.1}x", st.mrf_access_reduction()),
+        "4-6x".into(),
+    ]);
+    ctx.emit(&t, "overheads");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Headline (abstract / §7.1): LTRF_conf on config #7
+// ---------------------------------------------------------------------
+
+/// Returns (mean improvement of LTRF_conf on config #7, per-workload rows).
+pub fn headline(ctx: &ExperimentContext) -> (f64, Table) {
+    let design = crate::timing::DESIGN_7_DWM;
+    let factor = design.latency();
+    let cap = design.warp_registers();
+    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true).with_capacity(cap);
+    let mut t = Table::new(
+        format!("Headline — LTRF_conf on config #7 (DWM, 8x capacity, {factor:.1}x latency)"),
+        &["workload", "baseline IPC", "LTRF_conf IPC", "speedup"],
+    );
+    let rows = parallel_map(ctx.workloads(), |spec| {
+        let base = baseline_ipc(spec);
+        let ipc = dut.run(spec, factor).ipc();
+        (spec.name, base, ipc)
+    });
+    let mut speedups = Vec::new();
+    for (name, base, ipc) in rows {
+        speedups.push(ipc / base);
+        t.row(vec![name.into(), f2(base), f2(ipc), f2(ipc / base)]);
+    }
+    let mean = gmean(&speedups);
+    t.row(vec!["GMEAN".into(), "-".into(), "-".into(), f2(mean)]);
+    (mean - 1.0, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qctx() -> ExperimentContext {
+        ExperimentContext::quick()
+    }
+
+    #[test]
+    fn table1_has_ratio_footers() {
+        let t = table1(&qctx());
+        assert_eq!(t.rows.len(), 35 + 2);
+        let avg_row = &t.rows[35];
+        assert!(avg_row[3].contains("x of 128KB"));
+    }
+
+    #[test]
+    fn table2_matches_timing_model() {
+        let t = table2_table(&qctx());
+        assert_eq!(t.rows.len(), 7);
+        assert_eq!(t.rows[6][6], "0.25"); // DWM area
+    }
+
+    #[test]
+    fn fig2_pascal_rf_share_over_60pct() {
+        let t = fig2(&qctx());
+        let pascal = t.rows.last().unwrap();
+        let share: f64 = pascal[5].trim_end_matches('%').parse().unwrap();
+        assert!(share > 60.0, "Pascal RF share {share}%");
+    }
+
+    #[test]
+    fn fig6_most_intervals_conflict() {
+        let t = fig6(&qctx());
+        // Paper: 60–80% of intervals have ≥1 conflict. Check the suite
+        // trend: average conflict-free fraction below 55%.
+        let free: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[1].trim_end_matches('%').parse::<f64>().unwrap())
+            .collect();
+        let avg = free.iter().sum::<f64>() / free.len() as f64;
+        assert!(avg < 55.0, "conflict-free average {avg}%");
+    }
+
+    #[test]
+    fn fig16_renumbering_increases_conflict_free() {
+        let tables = fig16(&qctx());
+        // Tables alternate LTRF / LTRF_conf per N; compare the means at
+        // N=16 (indices 2 and 3).
+        let mean_free = |t: &Table| -> f64 {
+            t.rows.last().unwrap()[1].trim_end_matches('%').parse().unwrap()
+        };
+        let plain = mean_free(&tables[2]);
+        let conf = mean_free(&tables[3]);
+        assert!(
+            conf > plain + 10.0,
+            "renumbering must lift conflict-free rate: {plain}% -> {conf}%"
+        );
+    }
+
+    #[test]
+    fn headline_positive_improvement() {
+        let (imp, t) = headline(&qctx());
+        assert!(imp > 0.0, "headline improvement {imp}");
+        assert!(!t.rows.is_empty());
+    }
+
+    #[test]
+    fn ltrf_plus_saves_traffic() {
+        let t = ltrf_plus(&qctx());
+        let mean_saved: f64 =
+            t.rows.last().unwrap()[3].trim_end_matches('%').parse().unwrap();
+        assert!(mean_saved > 0.0, "liveness filtering must cut traffic ({mean_saved}%)");
+    }
+
+    #[test]
+    fn overheads_in_band() {
+        let t = overheads(&qctx());
+        let code: f64 = t.rows[0][1].trim_end_matches('%').parse().unwrap();
+        // Paper: 7%. Our generated kernels are ~10× smaller than real CUDA
+        // kernels while carrying similar interval counts, so the fixed
+        // 32-byte bit-vector weighs more (documented in EXPERIMENTS.md).
+        assert!(code > 1.0 && code < 30.0, "code size overhead {code}%");
+        assert_eq!(t.rows[2][1], "114880");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ablations — design choices DESIGN.md calls out
+// ---------------------------------------------------------------------
+
+/// Ablate the design decisions that are not directly varied by the
+/// paper's own figures: early refetch (§3.2 overlap), refill-crossbar
+/// width (§5.2), bank mapping, and renumbering × bank count.
+pub fn ablations(ctx: &ExperimentContext) -> Vec<Table> {
+    let mut out = Vec::new();
+    let factor = 6.3;
+    let cap = 16384;
+
+    // 1. Early refetch on/off (LTRF, config #7).
+    {
+        let mut t = Table::new(
+            "Ablation A1 — reactivation refetch overlap (LTRF, cfg #7)",
+            &["variant", "gmean IPC vs baseline"],
+        );
+        for early in [true, false] {
+            let vals = parallel_map(ctx.workloads(), |spec| {
+                let dut =
+                    DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
+                let mut cfg = dut.cfg_public(factor);
+                cfg.early_refetch = early;
+                let kernel = gen::build(spec);
+                let ck = compile(&kernel, gpu::compile_options(&cfg, false));
+                gpu::run(&ck, &cfg).ipc() / baseline_ipc(spec)
+            });
+            t.row(vec![
+                if early { "prefetch before activation (§3.2)" } else { "refetch inside the slot" }
+                    .into(),
+                f2(gmean(&vals)),
+            ]);
+        }
+        ctx.emit(&t, "ablation_early_refetch");
+        out.push(t);
+    }
+
+    // 2. Refill-crossbar width (registers/cycle), LTRF on cfg #7.
+    {
+        let mut t = Table::new(
+            "Ablation A2 — MRF→RF$ crossbar width (LTRF, cfg #7)",
+            &["regs/cycle", "gmean IPC vs baseline"],
+        );
+        for width in [1u32, 2, 4, 8] {
+            let vals = parallel_map(ctx.workloads(), |spec| {
+                let dut =
+                    DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
+                let mut cfg = dut.cfg_public(factor);
+                cfg.xbar_regs_per_cycle = width;
+                let kernel = gen::build(spec);
+                let ck = compile(&kernel, gpu::compile_options(&cfg, false));
+                gpu::run(&ck, &cfg).ipc() / baseline_ipc(spec)
+            });
+            t.row(vec![width.to_string(), f2(gmean(&vals))]);
+        }
+        ctx.emit(&t, "ablation_xbar_width");
+        out.push(t);
+    }
+
+    // 3. Bank mapping: interleaved vs blocked (16 banks, LTRF/LTRF_conf).
+    {
+        let mut t = Table::new(
+            "Ablation A3 — MRF bank mapping at 16 banks, 4x latency",
+            &["mapping", "LTRF", "LTRF_conf"],
+        );
+        for map in [crate::compiler::BankMap::Interleave, crate::compiler::BankMap::Block] {
+            let mut cells = vec![format!("{map:?}")];
+            for renumber in [false, true] {
+                let vals = parallel_map(ctx.workloads(), |spec| {
+                    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+                    let mut cfg = dut.cfg_public(4.0);
+                    cfg.bank_map = map;
+                    let kernel = gen::build(spec);
+                    let ck = compile(&kernel, gpu::compile_options(&cfg, renumber));
+                    gpu::run(&ck, &cfg).ipc() / baseline_ipc(spec)
+                });
+                cells.push(f2(gmean(&vals)));
+            }
+            t.row(cells);
+        }
+        ctx.emit(&t, "ablation_bank_map");
+        out.push(t);
+    }
+
+    // 4. Renumbering benefit vs bank count (capacity fixed at 8x).
+    {
+        let mut t = Table::new(
+            "Ablation A4 — renumbering benefit vs MRF bank count (cfg-#7 capacity/latency)",
+            &["banks", "LTRF", "LTRF_conf", "conf gain"],
+        );
+        for banks in [16usize, 32, 128] {
+            let mut means = Vec::new();
+            for renumber in [false, true] {
+                let vals = parallel_map(ctx.workloads(), |spec| {
+                    let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber)
+                        .with_capacity(cap);
+                    dut.mrf_banks = banks;
+                    dut.run(spec, factor).ipc() / baseline_ipc(spec)
+                });
+                means.push(gmean(&vals));
+            }
+            t.row(vec![
+                banks.to_string(),
+                f2(means[0]),
+                f2(means[1]),
+                pct(means[1] / means[0] - 1.0),
+            ]);
+        }
+        ctx.emit(&t, "ablation_renumber_banks");
+        out.push(t);
+    }
+
+    // 5. Coloring quality: balanced Chaitin vs naive round-robin
+    //    renumbering (compiler-level conflict metric, 16 banks, N=16).
+    {
+        let mut t = Table::new(
+            "Ablation A5 — bank assignment policy (conflict-free prefetch fraction, N=16)",
+            &["workload", "original allocation", "round-robin renumber", "Chaitin (LTRF_conf)"],
+        );
+        for spec in ctx.workloads() {
+            let kernel = gen::build(spec);
+            let plain = compile(&kernel, crate::compiler::CompileOptions::ltrf(16));
+            let conf = compile(&kernel, crate::compiler::CompileOptions::ltrf_conf(16));
+            // Round-robin: renumber registers by first-appearance order —
+            // ignores interval structure entirely.
+            let mut rr = kernel.clone();
+            let mut remap: Vec<u16> = (0..256).collect();
+            let mut next = 0u16;
+            let mut seen = [false; 256];
+            for b in &rr.blocks {
+                for i in &b.insts {
+                    for r in i.touched() {
+                        if !seen[r as usize] {
+                            seen[r as usize] = true;
+                            remap[r as usize] = next;
+                            next += 1;
+                        }
+                    }
+                }
+            }
+            crate::compiler::renumber::rewrite(&mut rr, &remap);
+            let rr_ck = compile(&rr, crate::compiler::CompileOptions::ltrf(16));
+            t.row(vec![
+                spec.name.into(),
+                pct(plain.conflict_free_fraction()),
+                pct(rr_ck.conflict_free_fraction()),
+                pct(conf.conflict_free_fraction()),
+            ]);
+        }
+        ctx.emit(&t, "ablation_coloring_policy");
+        out.push(t);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// LTRF vs LTRF+ — liveness filtering (§3.2)
+// ---------------------------------------------------------------------
+
+/// Quantify LTRF+'s dead-register filtering: registers moved by
+/// prefetch/refetch/write-back traffic with and without the liveness
+/// bit-vector, and the IPC effect on the headline design point.
+pub fn ltrf_plus(ctx: &ExperimentContext) -> Table {
+    let mut t = Table::new(
+        "§3.2 — LTRF vs LTRF+ (liveness filtering) on config #7",
+        &["workload", "regs moved (LTRF)", "regs moved (LTRF+)", "traffic saved", "IPC LTRF", "IPC LTRF+"],
+    );
+    let cap = 16384;
+    let factor = 6.3;
+    let rows = parallel_map(ctx.workloads(), |spec| {
+        let base = baseline_ipc(spec);
+        let plain = DesignUnderTest::new(HierarchyKind::Ltrf { plus: false }, false)
+            .with_capacity(cap)
+            .run(spec, factor);
+        let plus = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)
+            .with_capacity(cap)
+            .run(spec, factor);
+        let moved = |s: &Stats| s.prefetch_regs + s.writeback_regs;
+        (spec.name, moved(&plain), moved(&plus), plain.ipc() / base, plus.ipc() / base)
+    });
+    let mut saved_total = 0.0;
+    for (name, m0, m1, i0, i1) in &rows {
+        let saved = 1.0 - *m1 as f64 / (*m0).max(1) as f64;
+        saved_total += saved / rows.len() as f64;
+        t.row(vec![
+            (*name).into(),
+            m0.to_string(),
+            m1.to_string(),
+            pct(saved),
+            f2(*i0),
+            f2(*i1),
+        ]);
+    }
+    t.row(vec![
+        "MEAN".into(),
+        "-".into(),
+        "-".into(),
+        pct(saved_total),
+        f2(gmean(&rows.iter().map(|r| r.3).collect::<Vec<_>>())),
+        f2(gmean(&rows.iter().map(|r| r.4).collect::<Vec<_>>())),
+    ]);
+    ctx.emit(&t, "ltrf_plus");
+    t
+}

@@ -1,0 +1,9 @@
+//! Experiment coordination: parallel sweeps and the per-table/figure
+//! drivers that regenerate the paper's evaluation (§7).
+
+pub mod experiments;
+pub mod sweep;
+pub mod tolerable;
+
+pub use experiments::ExperimentContext;
+pub use sweep::parallel_map;

@@ -1,0 +1,67 @@
+//! Parallel configuration sweeps over std::thread (no external runtime on
+//! the hot path; simulations are CPU-bound and embarrassingly parallel).
+
+/// Map `f` over `items` on up to `available_parallelism` threads,
+/// preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let n = items.len();
+    if n <= 1 || threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results_mx = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                results_mx.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
+/// Geometric mean (the paper reports IPC means across workloads).
+pub fn gmean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = parallel_map(xs.clone(), |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert_eq!(parallel_map(Vec::<u32>::new(), |x| *x), Vec::<u32>::new());
+        assert_eq!(parallel_map(vec![7u32], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn gmean_basics() {
+        assert!((gmean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((gmean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(gmean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! "Maximum tolerable register file access latency" (§7.2): the largest
+//! MRF latency factor at which a design loses at most 5% IPC relative to
+//! its own 1× performance.
+
+use super::experiments::DesignUnderTest;
+use crate::workloads::WorkloadSpec;
+
+/// Latency factors probed, in ascending order (half-steps up to 16×; the
+/// paper's Fig. 15 tops out around 7×).
+pub fn factor_grid() -> Vec<f64> {
+    let mut v = vec![1.0];
+    let mut f = 1.5;
+    while f <= 16.0 {
+        v.push(f);
+        f += 0.5;
+    }
+    v
+}
+
+/// Find the maximum tolerable factor for one design on one workload.
+/// IPC is monotonically non-increasing in latency up to simulation noise,
+/// so we scan the grid and return the last factor within 95%.
+pub fn max_tolerable(dut: &DesignUnderTest, spec: &WorkloadSpec, threshold: f64) -> f64 {
+    let base = dut.run(spec, 1.0).ipc();
+    if base <= 0.0 {
+        return 1.0;
+    }
+    let mut best = 1.0;
+    let mut strikes = 0;
+    for f in factor_grid().into_iter().skip(1) {
+        let ipc = dut.run(spec, f).ipc();
+        if ipc >= threshold * base {
+            best = f;
+            strikes = 0;
+        } else {
+            // Two consecutive failures end the scan (noise tolerance).
+            strikes += 1;
+            if strikes >= 2 {
+                break;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HierarchyKind;
+    use crate::workloads::suite;
+
+    #[test]
+    fn grid_ascending_and_bounded() {
+        let g = factor_grid();
+        assert_eq!(g[0], 1.0);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(*g.last().unwrap() <= 16.0);
+    }
+
+    #[test]
+    fn ltrf_tolerates_more_than_baseline() {
+        let spec = suite::workload_by_name("gaussian").unwrap();
+        let bl = DesignUnderTest::new(HierarchyKind::Baseline, false);
+        let ltrf = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        let t_bl = max_tolerable(&bl, spec, 0.95);
+        let t_ltrf = max_tolerable(&ltrf, spec, 0.95);
+        assert!(
+            t_ltrf > t_bl,
+            "LTRF must tolerate more latency than BL ({t_ltrf} vs {t_bl})"
+        );
+    }
+}

@@ -1,0 +1,236 @@
+//! CFG structural analysis: dominators, natural loops, reducibility.
+//!
+//! Interval analysis (§3.3) is defined for reducible CFGs with natural
+//! loops ("standard languages can usually only represent natural loops and
+//! compiler infrastructures only produce reducible CFGs" — paper fn. 5).
+//! These analyses let tests and tools *check* that precondition and let
+//! `compiler_inspect` explain interval shapes in terms of loops.
+
+use super::cfg::{BlockId, Kernel};
+
+/// Immediate-dominator tree (Cooper–Harvey–Kennedy iterative algorithm).
+#[derive(Clone, Debug)]
+pub struct Dominators {
+    /// `idom[b]` — immediate dominator of `b` (`idom[entry] == entry`).
+    pub idom: Vec<BlockId>,
+    rpo_index: Vec<usize>,
+}
+
+impl Dominators {
+    pub fn compute(kernel: &Kernel) -> Self {
+        let rpo = kernel.rpo();
+        let n = kernel.num_blocks();
+        let mut rpo_index = vec![usize::MAX; n];
+        for (i, &b) in rpo.iter().enumerate() {
+            rpo_index[b] = i;
+        }
+        let undef = usize::MAX;
+        let mut idom = vec![undef; n];
+        idom[kernel.entry()] = kernel.entry();
+
+        let intersect = |idom: &[usize], rpo_index: &[usize], mut a: usize, mut b: usize| {
+            while a != b {
+                while rpo_index[a] > rpo_index[b] {
+                    a = idom[a];
+                }
+                while rpo_index[b] > rpo_index[a] {
+                    b = idom[b];
+                }
+            }
+            a
+        };
+
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in rpo.iter().skip(1) {
+                let mut new_idom = undef;
+                for &p in &kernel.blocks[b].preds {
+                    if idom[p] == undef {
+                        continue;
+                    }
+                    new_idom = if new_idom == undef {
+                        p
+                    } else {
+                        intersect(&idom, &rpo_index, new_idom, p)
+                    };
+                }
+                if new_idom != undef && idom[b] != new_idom {
+                    idom[b] = new_idom;
+                    changed = true;
+                }
+            }
+        }
+        Dominators { idom, rpo_index }
+    }
+
+    /// Does `a` dominate `b`?
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        let mut x = b;
+        loop {
+            if x == a {
+                return true;
+            }
+            let up = self.idom[x];
+            if up == x || up == usize::MAX {
+                return x == a;
+            }
+            x = up;
+        }
+    }
+
+    /// RPO position of a block (useful to order loop headers).
+    pub fn rpo_index(&self, b: BlockId) -> usize {
+        self.rpo_index[b]
+    }
+}
+
+/// A natural loop: back edge `latch → header` where `header` dominates
+/// `latch`; the body is every block that reaches the latch without
+/// passing through the header.
+#[derive(Clone, Debug)]
+pub struct NaturalLoop {
+    pub header: BlockId,
+    pub latch: BlockId,
+    pub body: Vec<BlockId>,
+}
+
+/// Find all natural loops. Returns `None` for irreducible graphs (a back
+/// edge whose target does not dominate its source).
+pub fn natural_loops(kernel: &Kernel) -> Option<Vec<NaturalLoop>> {
+    let dom = Dominators::compute(kernel);
+    let mut loops = Vec::new();
+    for (from, b) in kernel.blocks.iter().enumerate() {
+        for &to in &b.succs {
+            // Back edge by dominance (the reducible definition).
+            let is_back = dom.dominates(to, from);
+            let is_retreating = dom.rpo_index(to) <= dom.rpo_index(from);
+            if is_retreating && !is_back {
+                return None; // irreducible: retreating edge, no dominance
+            }
+            if is_back {
+                // Collect the body by backwards reachability from the latch.
+                let mut body = vec![to];
+                let mut stack = vec![from];
+                let mut seen = vec![false; kernel.num_blocks()];
+                seen[to] = true;
+                while let Some(x) = stack.pop() {
+                    if seen[x] {
+                        continue;
+                    }
+                    seen[x] = true;
+                    body.push(x);
+                    for &p in &kernel.blocks[x].preds {
+                        stack.push(p);
+                    }
+                }
+                body.sort_unstable();
+                loops.push(NaturalLoop { header: to, latch: from, body });
+            }
+        }
+    }
+    Some(loops)
+}
+
+/// Is the CFG reducible (all retreating edges are dominance back edges)?
+pub fn is_reducible(kernel: &Kernel) -> bool {
+    natural_loops(kernel).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Cmp, KernelBuilder};
+    use crate::util::prop;
+
+    fn nested() -> Kernel {
+        let mut b = KernelBuilder::new("nest");
+        let outer = b.fresh_label("outer");
+        let inner = b.fresh_label("inner");
+        b.mov_imm(0, 0);
+        b.bind(outer);
+        b.mov_imm(1, 0);
+        b.bind(inner);
+        b.iadd_imm(1, 1, 1);
+        b.setp_imm(Cmp::Lt, 0, 1, 3);
+        b.bra_if(0, true, inner);
+        b.iadd_imm(0, 0, 1);
+        b.setp_imm(Cmp::Lt, 1, 0, 3);
+        b.bra_if(1, true, outer);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn entry_dominates_everything() {
+        let k = nested();
+        let dom = Dominators::compute(&k);
+        for b in 0..k.num_blocks() {
+            assert!(dom.dominates(k.entry(), b), "entry must dominate block {b}");
+        }
+    }
+
+    #[test]
+    fn nested_loops_found() {
+        let k = nested();
+        let loops = natural_loops(&k).expect("reducible");
+        assert_eq!(loops.len(), 2);
+        // The inner loop body is contained in the outer loop body.
+        let (small, big) = if loops[0].body.len() < loops[1].body.len() {
+            (&loops[0], &loops[1])
+        } else {
+            (&loops[1], &loops[0])
+        };
+        assert!(small.body.iter().all(|b| big.body.contains(b)));
+        // Headers dominate their latches.
+        let dom = Dominators::compute(&k);
+        for l in &loops {
+            assert!(dom.dominates(l.header, l.latch));
+        }
+    }
+
+    #[test]
+    fn straightline_has_no_loops() {
+        let mut b = KernelBuilder::new("s");
+        b.mov_imm(0, 1);
+        b.exit();
+        let k = b.finish();
+        assert!(natural_loops(&k).unwrap().is_empty());
+        assert!(is_reducible(&k));
+    }
+
+    #[test]
+    fn prop_generated_kernels_are_reducible() {
+        // The paper's footnote 5: interval analysis assumes reducible
+        // CFGs. Our generators must only produce those.
+        prop::check(prop::DEFAULT_CASES, 0xD0D0, |rng| {
+            let k = crate::workloads::gen::random_kernel(rng, 24);
+            assert!(is_reducible(&k), "generator produced an irreducible CFG");
+        });
+    }
+
+    #[test]
+    fn suite_kernels_reducible_with_loops() {
+        for spec in crate::workloads::suite::suite() {
+            let k = crate::workloads::gen::build(spec);
+            let loops = natural_loops(&k).expect("reducible");
+            assert!(!loops.is_empty(), "{} should contain its outer loop", spec.name);
+        }
+    }
+
+    #[test]
+    fn interval_headers_align_with_loop_headers() {
+        // Pass-1 intervals start new intervals at loop headers (§3.3).
+        let mut k = nested();
+        let loops = natural_loops(&k).unwrap();
+        let ia = crate::compiler::intervals::form_intervals(&mut k, 16);
+        for l in &loops {
+            let iv = ia.interval_of(l.header);
+            assert_eq!(
+                ia.intervals[iv].header, l.header,
+                "loop header {} must head its interval",
+                l.header
+            );
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Programmatic kernel construction (used by the workload generators, the
+//! parser, and tests).
+//!
+//! The builder accepts a flat stream of instructions and label bindings,
+//! then cuts it into basic blocks: every bound label and every
+//! post-terminator position starts a block.
+
+use super::cfg::{Block, BlockId, Kernel};
+use super::inst::{Cmp, Inst, Op, Pred, Reg, Space};
+
+/// Forward-referenceable label handle.
+pub type Label = usize;
+
+enum Item {
+    Bind(Label),
+    /// Instruction; `Bra` targets are label ids until `finish`.
+    Inst(Inst),
+}
+
+pub struct KernelBuilder {
+    name: String,
+    items: Vec<Item>,
+    label_names: Vec<String>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        KernelBuilder { name: name.into(), items: Vec::new(), label_names: Vec::new() }
+    }
+
+    /// Create a new label with a readable name (uniquified by id).
+    pub fn fresh_label(&mut self, name: &str) -> Label {
+        let id = self.label_names.len();
+        self.label_names.push(format!("{name}_{id}"));
+        id
+    }
+
+    /// Create a label with this exact name (parser path).
+    pub fn named_label(&mut self, name: &str) -> Label {
+        if let Some(id) = self.label_names.iter().position(|n| n == name) {
+            return id;
+        }
+        let id = self.label_names.len();
+        self.label_names.push(name.to_string());
+        id
+    }
+
+    /// Bind `label` at the current position.
+    pub fn bind(&mut self, label: Label) {
+        self.items.push(Item::Bind(label));
+    }
+
+    /// Low-level push of a fully-formed instruction.
+    pub fn push(&mut self, inst: Inst) {
+        self.items.push(Item::Inst(inst));
+    }
+
+    // ----- convenience encoders ---------------------------------------
+
+    pub fn mov_imm(&mut self, dst: Reg, imm: i64) {
+        let mut i = Inst::new(Op::Mov);
+        i.dst = Some(dst);
+        i.imm = Some(imm);
+        self.push(i);
+    }
+
+    pub fn mov(&mut self, dst: Reg, src: Reg) {
+        let mut i = Inst::new(Op::Mov);
+        i.dst = Some(dst);
+        i.srcs[0] = Some(src);
+        self.push(i);
+    }
+
+    /// Three-operand ALU op: `dst = a <op> b`.
+    pub fn alu(&mut self, op: Op, dst: Reg, a: Reg, b: Reg) {
+        let mut i = Inst::new(op);
+        i.dst = Some(dst);
+        i.srcs[0] = Some(a);
+        i.srcs[1] = Some(b);
+        self.push(i);
+    }
+
+    /// ALU with immediate: `dst = a <op> #imm`.
+    pub fn alu_imm(&mut self, op: Op, dst: Reg, a: Reg, imm: i64) {
+        let mut i = Inst::new(op);
+        i.dst = Some(dst);
+        i.srcs[0] = Some(a);
+        i.imm = Some(imm);
+        self.push(i);
+    }
+
+    pub fn iadd(&mut self, dst: Reg, a: Reg, b: Reg) {
+        self.alu(Op::IAdd, dst, a, b);
+    }
+
+    pub fn iadd_imm(&mut self, dst: Reg, a: Reg, imm: i64) {
+        self.alu_imm(Op::IAdd, dst, a, imm);
+    }
+
+    /// `dst = a * b + c`
+    pub fn mad(&mut self, op: Op, dst: Reg, a: Reg, b: Reg, c: Reg) {
+        debug_assert!(matches!(op, Op::IMad | Op::FFma));
+        let mut i = Inst::new(op);
+        i.dst = Some(dst);
+        i.srcs = [Some(a), Some(b), Some(c)];
+        self.push(i);
+    }
+
+    pub fn sfu(&mut self, dst: Reg, a: Reg) {
+        let mut i = Inst::new(Op::Sfu);
+        i.dst = Some(dst);
+        i.srcs[0] = Some(a);
+        self.push(i);
+    }
+
+    pub fn setp(&mut self, cmp: Cmp, p: Pred, a: Reg, b: Reg) {
+        let mut i = Inst::new(Op::Setp(cmp));
+        i.dpred = Some(p);
+        i.srcs[0] = Some(a);
+        i.srcs[1] = Some(b);
+        self.push(i);
+    }
+
+    pub fn setp_imm(&mut self, cmp: Cmp, p: Pred, a: Reg, imm: i64) {
+        let mut i = Inst::new(Op::Setp(cmp));
+        i.dpred = Some(p);
+        i.srcs[0] = Some(a);
+        i.imm = Some(imm);
+        self.push(i);
+    }
+
+    pub fn ld(&mut self, space: Space, dst: Reg, base: Reg, off: i64) {
+        let mut i = Inst::new(Op::Ld(space));
+        i.dst = Some(dst);
+        i.srcs[0] = Some(base);
+        i.imm = Some(off);
+        self.push(i);
+    }
+
+    pub fn ld_global(&mut self, dst: Reg, base: Reg, off: i64) {
+        self.ld(Space::Global, dst, base, off);
+    }
+
+    pub fn ld_shared(&mut self, dst: Reg, base: Reg, off: i64) {
+        self.ld(Space::Shared, dst, base, off);
+    }
+
+    pub fn st(&mut self, space: Space, base: Reg, off: i64, src: Reg) {
+        let mut i = Inst::new(Op::St(space));
+        i.srcs[0] = Some(base);
+        i.srcs[1] = Some(src);
+        i.imm = Some(off);
+        self.push(i);
+    }
+
+    pub fn st_global(&mut self, base: Reg, off: i64, src: Reg) {
+        self.st(Space::Global, base, off, src);
+    }
+
+    /// Unconditional branch.
+    pub fn bra(&mut self, label: Label) {
+        let mut i = Inst::new(Op::Bra);
+        i.target = Some(label);
+        self.push(i);
+    }
+
+    /// Guarded branch: `@pN bra` (`positive=true`) or `@!pN bra`.
+    pub fn bra_if(&mut self, p: Pred, positive: bool, label: Label) {
+        let mut i = Inst::new(Op::Bra);
+        i.target = Some(label);
+        i.guard = Some((p, positive));
+        self.push(i);
+    }
+
+    pub fn bar(&mut self) {
+        self.push(Inst::new(Op::Bar));
+    }
+
+    pub fn exit(&mut self) {
+        self.push(Inst::new(Op::Exit));
+    }
+
+    // ----- finalization ------------------------------------------------
+
+    /// Cut the instruction stream into basic blocks and resolve labels.
+    pub fn finish(self) -> Kernel {
+        let KernelBuilder { name, items, label_names } = self;
+
+        // 1. Lay out instructions; record each label's instruction index.
+        let mut insts: Vec<Inst> = Vec::new();
+        let mut label_pos: Vec<Option<usize>> = vec![None; label_names.len()];
+        for item in items {
+            match item {
+                Item::Bind(l) => {
+                    assert!(label_pos[l].is_none(), "label {} bound twice", label_names[l]);
+                    label_pos[l] = Some(insts.len());
+                }
+                Item::Inst(i) => insts.push(i),
+            }
+        }
+        assert!(!insts.is_empty(), "empty kernel");
+
+        // 2. Leaders: entry, every bound label position, every position
+        //    after a terminator.
+        let mut is_leader = vec![false; insts.len() + 1];
+        is_leader[0] = true;
+        for pos in label_pos.iter().flatten() {
+            assert!(*pos < insts.len(), "label bound past the last instruction");
+            is_leader[*pos] = true;
+        }
+        for (i, inst) in insts.iter().enumerate() {
+            if inst.op.is_terminator() {
+                is_leader[i + 1] = true;
+            }
+        }
+
+        // 3. Build blocks; map instruction index -> block id.
+        let mut kernel = Kernel::new(name);
+        let mut inst_block = vec![0usize; insts.len()];
+        for (i, inst) in insts.iter().enumerate() {
+            if is_leader[i] {
+                let label = label_pos
+                    .iter()
+                    .position(|p| *p == Some(i))
+                    .map(|l| label_names[l].clone())
+                    .unwrap_or_else(|| format!("bb{}", kernel.blocks.len()));
+                kernel.blocks.push(Block::new(label));
+            }
+            inst_block[i] = kernel.blocks.len() - 1;
+            kernel.blocks.last_mut().unwrap().insts.push(inst.clone());
+        }
+
+        // 4. Resolve branch targets (label id -> block id) and successors.
+        let label_block: Vec<Option<BlockId>> =
+            label_pos.iter().map(|p| p.map(|pos| inst_block[pos])).collect();
+        let nblocks = kernel.blocks.len();
+        // First pass: rewrite targets, keeping an immutable view of fallthroughs.
+        let mut fallthrough: Vec<Option<BlockId>> = Vec::with_capacity(nblocks);
+        for bid in 0..nblocks {
+            fallthrough.push(if bid + 1 < nblocks { Some(bid + 1) } else { None });
+        }
+        for bid in 0..nblocks {
+            let last_op = kernel.blocks[bid].insts.last().map(|i| i.op);
+            match last_op {
+                Some(Op::Exit) => {}
+                Some(Op::Bra) => {
+                    let last = kernel.blocks[bid].insts.last_mut().unwrap();
+                    let l = last.target.expect("bra without label");
+                    let t = label_block[l]
+                        .unwrap_or_else(|| panic!("unbound branch label {}", label_names[l]));
+                    last.target = Some(t);
+                    let guarded = last.guard.is_some();
+                    kernel.blocks[bid].succs = if guarded {
+                        let ft = fallthrough[bid].expect("guarded branch at end of kernel");
+                        vec![t, ft]
+                    } else {
+                        vec![t]
+                    };
+                }
+                _ => {
+                    let ft = fallthrough[bid]
+                        .unwrap_or_else(|| panic!("kernel does not end with exit/bra"));
+                    kernel.blocks[bid].succs = vec![ft];
+                }
+            }
+        }
+
+        kernel.recompute_preds();
+        kernel.recount_regs();
+        debug_assert_eq!(kernel.validate(), Ok(()));
+        kernel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straightline_kernel_single_block() {
+        let mut b = KernelBuilder::new("s");
+        b.mov_imm(0, 1);
+        b.iadd_imm(1, 0, 2);
+        b.exit();
+        let k = b.finish();
+        assert_eq!(k.num_blocks(), 1);
+        assert_eq!(k.num_insts(), 3);
+        assert_eq!(k.num_regs, 2);
+    }
+
+    #[test]
+    fn diamond_cfg() {
+        // entry: setp; @p bra t;  f: ...; bra join;  t: ...;  join: exit
+        let mut b = KernelBuilder::new("diamond");
+        let t = b.fresh_label("t");
+        let join = b.fresh_label("join");
+        b.mov_imm(0, 5);
+        b.setp_imm(Cmp::Lt, 0, 0, 10);
+        b.bra_if(0, true, t);
+        b.iadd_imm(1, 0, 1); // false side
+        b.bra(join);
+        b.bind(t);
+        b.iadd_imm(1, 0, 2); // true side
+        b.bind(join);
+        b.exit();
+        let k = b.finish();
+        assert!(k.validate().is_ok(), "{:?}", k.validate());
+        assert_eq!(k.num_blocks(), 4);
+        // entry has two successors: target then fallthrough.
+        assert_eq!(k.blocks[0].succs.len(), 2);
+        // join has two predecessors.
+        let join_id = k.num_blocks() - 1;
+        assert_eq!(k.blocks[join_id].preds.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound branch label")]
+    fn unbound_label_panics() {
+        let mut b = KernelBuilder::new("bad");
+        let l = b.fresh_label("nowhere");
+        b.bra(l);
+        b.finish();
+    }
+
+    #[test]
+    fn label_at_inst_creates_block_boundary() {
+        let mut b = KernelBuilder::new("lbl");
+        let mid = b.fresh_label("mid");
+        b.mov_imm(0, 1);
+        b.bind(mid);
+        b.iadd_imm(0, 0, 1);
+        b.exit();
+        let k = b.finish();
+        assert_eq!(k.num_blocks(), 2);
+        assert_eq!(k.blocks[1].label, "mid_0");
+    }
+}

@@ -1,0 +1,319 @@
+//! Kernels, basic blocks, and control-flow-graph analysis.
+
+use super::inst::{Inst, Op};
+use crate::util::RegSet;
+
+/// Index of a basic block within a kernel.
+pub type BlockId = usize;
+
+/// A basic block: straight-line instructions with the terminator (if any)
+/// as the final instruction.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Human-readable label (parser labels or generated `bbN`).
+    pub label: String,
+    pub insts: Vec<Inst>,
+    /// Successor blocks. For a conditional branch, `[target, fallthrough]`;
+    /// for an unconditional branch, `[target]`; otherwise the fallthrough.
+    pub succs: Vec<BlockId>,
+    /// Predecessor blocks (recomputed by `Kernel::recompute_preds`).
+    pub preds: Vec<BlockId>,
+}
+
+impl Block {
+    pub fn new(label: String) -> Self {
+        Block { label, insts: Vec::new(), succs: Vec::new(), preds: Vec::new() }
+    }
+
+    /// Registers referenced anywhere in the block.
+    pub fn touched_regs(&self) -> RegSet {
+        let mut s = RegSet::new();
+        for i in &self.insts {
+            for r in i.touched() {
+                s.insert(r);
+            }
+        }
+        s
+    }
+}
+
+/// A compiled kernel: the unit the compiler passes and the simulator run on.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    /// Block 0 is the unique entry.
+    pub blocks: Vec<Block>,
+    /// Number of architectural registers used (max id + 1).
+    pub num_regs: u16,
+    /// Number of predicate registers used.
+    pub num_preds: u8,
+}
+
+impl Kernel {
+    pub fn new(name: impl Into<String>) -> Self {
+        Kernel { name: name.into(), blocks: Vec::new(), num_regs: 0, num_preds: 0 }
+    }
+
+    pub fn entry(&self) -> BlockId {
+        0
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total static instruction count.
+    pub fn num_insts(&self) -> usize {
+        self.blocks.iter().map(|b| b.insts.len()).sum()
+    }
+
+    /// Recompute `num_regs`/`num_preds` from the instruction stream.
+    pub fn recount_regs(&mut self) {
+        let mut max_reg: i32 = -1;
+        let mut max_pred: i32 = -1;
+        for b in &self.blocks {
+            for i in &b.insts {
+                if let Some(r) = i.max_reg() {
+                    max_reg = max_reg.max(r as i32);
+                }
+                if let Some(p) = i.dpred {
+                    max_pred = max_pred.max(p as i32);
+                }
+                if let Some((p, _)) = i.guard {
+                    max_pred = max_pred.max(p as i32);
+                }
+            }
+        }
+        self.num_regs = (max_reg + 1) as u16;
+        self.num_preds = (max_pred + 1) as u8;
+    }
+
+    /// Rebuild predecessor lists from successor lists.
+    pub fn recompute_preds(&mut self) {
+        for b in &mut self.blocks {
+            b.preds.clear();
+        }
+        let edges: Vec<(BlockId, BlockId)> = self
+            .blocks
+            .iter()
+            .enumerate()
+            .flat_map(|(i, b)| b.succs.iter().map(move |&s| (i, s)))
+            .collect();
+        for (from, to) in edges {
+            if !self.blocks[to].preds.contains(&from) {
+                self.blocks[to].preds.push(from);
+            }
+        }
+    }
+
+    /// Blocks in reverse post-order from the entry (forward dataflow order).
+    pub fn rpo(&self) -> Vec<BlockId> {
+        let mut visited = vec![false; self.blocks.len()];
+        let mut post = Vec::with_capacity(self.blocks.len());
+        // Iterative DFS with explicit stack of (block, next-succ-index).
+        let mut stack: Vec<(BlockId, usize)> = vec![(self.entry(), 0)];
+        visited[self.entry()] = true;
+        while let Some(&mut (b, ref mut idx)) = stack.last_mut() {
+            if *idx < self.blocks[b].succs.len() {
+                let s = self.blocks[b].succs[*idx];
+                *idx += 1;
+                if !visited[s] {
+                    visited[s] = true;
+                    stack.push((s, 0));
+                }
+            } else {
+                post.push(b);
+                stack.pop();
+            }
+        }
+        post.reverse();
+        post
+    }
+
+    /// Blocks unreachable from the entry (should be empty for generated code).
+    pub fn unreachable_blocks(&self) -> Vec<BlockId> {
+        let reached: std::collections::HashSet<BlockId> = self.rpo().into_iter().collect();
+        (0..self.blocks.len()).filter(|b| !reached.contains(b)).collect()
+    }
+
+    /// An edge `from → to` is a back edge iff `to` appears at or before
+    /// `from` in RPO (sufficient for the reducible graphs we generate).
+    pub fn back_edges(&self) -> Vec<(BlockId, BlockId)> {
+        let rpo = self.rpo();
+        let mut order = vec![usize::MAX; self.blocks.len()];
+        for (i, b) in rpo.iter().enumerate() {
+            order[*b] = i;
+        }
+        let mut edges = Vec::new();
+        for (from, b) in self.blocks.iter().enumerate() {
+            for &to in &b.succs {
+                if order[to] != usize::MAX && order[to] <= order[from] {
+                    edges.push((from, to));
+                }
+            }
+        }
+        edges
+    }
+
+    /// Split block `bid` before instruction `idx`, returning the id of the
+    /// new block holding `insts[idx..]`.
+    ///
+    /// Incoming edges still reach `bid` (which keeps `insts[..idx]`), so all
+    /// branch targets remain valid; the tail block inherits the successors.
+    /// Used by register-interval formation (Algorithm 1 lines 30–37: a basic
+    /// block whose working set exceeds the cache partition is split) and by
+    /// SHRF strand formation.
+    pub fn split_block(&mut self, bid: BlockId, idx: usize) -> BlockId {
+        assert!(idx > 0 && idx < self.blocks[bid].insts.len(), "split index out of range");
+        let tail_insts = self.blocks[bid].insts.split_off(idx);
+        let tail_succs = std::mem::take(&mut self.blocks[bid].succs);
+        let new_id = self.blocks.len();
+        let label = format!("{}.s{}", self.blocks[bid].label, new_id);
+        let mut tail = Block::new(label);
+        tail.insts = tail_insts;
+        tail.succs = tail_succs;
+        self.blocks[bid].succs = vec![new_id];
+        self.blocks.push(tail);
+        self.recompute_preds();
+        new_id
+    }
+
+    /// Structural invariants; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.blocks.is_empty() {
+            return Err("kernel has no blocks".into());
+        }
+        for (bid, b) in self.blocks.iter().enumerate() {
+            for &s in &b.succs {
+                if s >= self.blocks.len() {
+                    return Err(format!("block {bid} has out-of-range successor {s}"));
+                }
+            }
+            for (k, i) in b.insts.iter().enumerate() {
+                let last = k + 1 == b.insts.len();
+                if i.op.is_terminator() && !last {
+                    return Err(format!("block {bid} has terminator mid-block at {k}"));
+                }
+                if let Op::Bra = i.op {
+                    let t = i.target.ok_or(format!("block {bid}: bra without target"))?;
+                    if !b.succs.contains(&t) {
+                        return Err(format!("block {bid}: bra target {t} not in succs"));
+                    }
+                }
+            }
+            match b.insts.last().map(|i| i.op) {
+                Some(Op::Exit) => {
+                    if !b.succs.is_empty() {
+                        return Err(format!("block {bid}: exit block has successors"));
+                    }
+                }
+                Some(Op::Bra) => {
+                    let guarded = b.insts.last().unwrap().guard.is_some();
+                    let want = if guarded { 2 } else { 1 };
+                    if b.succs.len() != want {
+                        return Err(format!(
+                            "block {bid}: branch block has {} successors, expected {want}",
+                            b.succs.len()
+                        ));
+                    }
+                }
+                _ => {
+                    if b.succs.len() != 1 {
+                        return Err(format!(
+                            "block {bid}: fallthrough block has {} successors",
+                            b.succs.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// All labels (indexed by block id), for display.
+    pub fn labels(&self) -> Vec<String> {
+        self.blocks.iter().map(|b| b.label.clone()).collect()
+    }
+
+    /// Render the whole kernel in parseable text form.
+    pub fn display(&self) -> String {
+        let labels = self.labels();
+        let mut out = format!(".kernel {}\n", self.name);
+        for b in &self.blocks {
+            out.push_str(&format!("{}:\n", b.label));
+            for i in &b.insts {
+                out.push_str("  ");
+                out.push_str(&i.display(&labels));
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::KernelBuilder;
+    use crate::ir::inst::Cmp;
+
+    /// Simple counted loop used across CFG tests.
+    fn loop_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("loop");
+        let top = b.fresh_label("top");
+        let done = b.fresh_label("done");
+        b.mov_imm(0, 0); // r0 = 0
+        b.mov_imm(1, 10); // r1 = 10
+        b.bind(top);
+        b.iadd_imm(0, 0, 1);
+        b.setp_imm(Cmp::Lt, 0, 0, 10);
+        b.bra_if(0, true, top);
+        b.bind(done);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn loop_structure() {
+        let k = loop_kernel();
+        assert!(k.validate().is_ok());
+        assert_eq!(k.num_blocks(), 3);
+        // entry -> loop; loop -> {loop, done}
+        assert_eq!(k.blocks[0].succs, vec![1]);
+        assert_eq!(k.blocks[1].succs.len(), 2);
+        assert!(k.blocks[1].succs.contains(&1));
+        assert_eq!(k.back_edges(), vec![(1, 1)]);
+    }
+
+    #[test]
+    fn rpo_starts_at_entry_and_covers_graph() {
+        let k = loop_kernel();
+        let rpo = k.rpo();
+        assert_eq!(rpo[0], 0);
+        assert_eq!(rpo.len(), 3);
+        assert!(k.unreachable_blocks().is_empty());
+    }
+
+    #[test]
+    fn split_block_preserves_validity_and_semantics_shape() {
+        let mut k = loop_kernel();
+        let n_before = k.num_insts();
+        let new_id = k.split_block(1, 1);
+        assert!(k.validate().is_ok(), "{:?}", k.validate());
+        assert_eq!(k.num_insts(), n_before);
+        assert_eq!(k.blocks[1].succs, vec![new_id]);
+        // The back edge now targets block 1, which still owns the loop header.
+        assert!(k.blocks[new_id].succs.contains(&1));
+    }
+
+    #[test]
+    fn preds_are_consistent() {
+        let mut k = loop_kernel();
+        k.recompute_preds();
+        for (bid, b) in k.blocks.iter().enumerate() {
+            for &s in &b.succs {
+                assert!(k.blocks[s].preds.contains(&bid));
+            }
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Functional (architectural) execution of kernels.
+//!
+//! The simulator steps warps through this executor to obtain their dynamic
+//! instruction streams (branch outcomes, memory addresses); the compiler
+//! tests use it to prove renumbering preserves program semantics.
+//!
+//! Modeling notes (see DESIGN.md substitutions):
+//! * warps execute in lockstep without divergence — one architectural
+//!   stream per warp, which is also the granularity at which LTRF manages
+//!   registers (1024-bit warp registers);
+//! * load values are a deterministic hash of (address, data-salt), so runs
+//!   are reproducible and renumbering equivalence is checkable;
+//! * `bar` is a pipeline op only (no inter-warp synchronization).
+
+use super::cfg::{BlockId, Kernel};
+use super::inst::{Op, Reg};
+
+/// splitmix64 — deterministic "memory contents".
+#[inline]
+fn hash64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One architecturally-executed instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub block: BlockId,
+    pub idx: usize,
+}
+
+pub type Trace = Vec<TraceEntry>;
+
+/// Side information the simulator needs about the step just executed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepInfo {
+    pub block: BlockId,
+    pub idx: usize,
+    /// Effective memory address for loads/stores.
+    pub mem_addr: Option<u64>,
+    /// The guard predicate evaluated false (instruction was a no-op).
+    pub predicated_off: bool,
+}
+
+/// Architectural warp state, steppable one instruction at a time.
+#[derive(Clone, Debug)]
+pub struct ExecState {
+    pub block: BlockId,
+    pub idx: usize,
+    pub regs: Vec<u32>,
+    pub preds: Vec<bool>,
+    pub dyn_insts: u64,
+    pub finished: bool,
+    /// Per-warp data salt: distinct warps see distinct memory contents.
+    salt: u64,
+    /// Observable output log: (address, value) of every executed store.
+    pub stores: Vec<(u64, u32)>,
+    /// When false, `stores` is not recorded (saves memory in long sims).
+    pub record_stores: bool,
+}
+
+impl ExecState {
+    /// `inputs` preloads registers (the driver uses it for thread-base
+    /// addresses, warp ids, etc.).
+    pub fn new(salt: u64, inputs: &[(Reg, u32)]) -> Self {
+        let mut regs = vec![0u32; crate::util::bitset::MAX_REGS];
+        for &(r, v) in inputs {
+            regs[r as usize] = v;
+        }
+        ExecState {
+            block: 0,
+            idx: 0,
+            regs,
+            preds: vec![false; 8],
+            dyn_insts: 0,
+            finished: false,
+            salt,
+            stores: Vec::new(),
+            record_stores: false,
+        }
+    }
+
+    /// The instruction `step` will execute next, if any.
+    pub fn peek<'k>(&self, kernel: &'k Kernel) -> Option<&'k super::inst::Inst> {
+        if self.finished {
+            return None;
+        }
+        kernel.blocks[self.block].insts.get(self.idx)
+    }
+
+    #[inline]
+    fn src(&self, r: Option<Reg>) -> u32 {
+        self.regs[r.expect("missing source operand") as usize]
+    }
+
+    /// Second ALU operand: register if present, else immediate.
+    #[inline]
+    fn src_or_imm(&self, i: &super::inst::Inst, slot: usize) -> u32 {
+        match i.srcs[slot] {
+            Some(r) => self.regs[r as usize],
+            None => i.imm.unwrap_or(0) as u32,
+        }
+    }
+
+    /// Execute the current instruction; advance block/idx. Returns `None`
+    /// once the warp has exited.
+    pub fn step(&mut self, kernel: &Kernel) -> Option<StepInfo> {
+        if self.finished {
+            return None;
+        }
+        let blk = &kernel.blocks[self.block];
+        let inst = &blk.insts[self.idx];
+        let mut info =
+            StepInfo { block: self.block, idx: self.idx, mem_addr: None, predicated_off: false };
+        self.dyn_insts += 1;
+
+        // Guard evaluation (applies to any instruction; workloads only guard
+        // branches, like the paper's Listing 1).
+        let guard_ok = match inst.guard {
+            Some((p, pos)) => self.preds[p as usize] == pos,
+            None => true,
+        };
+
+        let mut next_block: Option<BlockId> = None;
+        if guard_ok {
+            match inst.op {
+                Op::Mov => {
+                    let v = match inst.srcs[0] {
+                        Some(r) => self.regs[r as usize],
+                        None => inst.imm.unwrap_or(0) as u32,
+                    };
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::IAdd => {
+                    let v = self.src(inst.srcs[0]).wrapping_add(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::ISub => {
+                    let v = self.src(inst.srcs[0]).wrapping_sub(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::IMul => {
+                    let v = self.src(inst.srcs[0]).wrapping_mul(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::IMad => {
+                    let v = self
+                        .src(inst.srcs[0])
+                        .wrapping_mul(self.src(inst.srcs[1]))
+                        .wrapping_add(self.src(inst.srcs[2]));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::IMin => {
+                    let v = self.src(inst.srcs[0]).min(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::IMax => {
+                    let v = self.src(inst.srcs[0]).max(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::And => {
+                    let v = self.src(inst.srcs[0]) & self.src_or_imm(inst, 1);
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::Or => {
+                    let v = self.src(inst.srcs[0]) | self.src_or_imm(inst, 1);
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::Xor => {
+                    let v = self.src(inst.srcs[0]) ^ self.src_or_imm(inst, 1);
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::Shl => {
+                    let v = self.src(inst.srcs[0]) << (self.src_or_imm(inst, 1) & 31);
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::Shr => {
+                    let v = self.src(inst.srcs[0]) >> (self.src_or_imm(inst, 1) & 31);
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::FAdd => {
+                    let v = f32::from_bits(self.src(inst.srcs[0]))
+                        + f32::from_bits(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v.to_bits();
+                }
+                Op::FMul => {
+                    let v = f32::from_bits(self.src(inst.srcs[0]))
+                        * f32::from_bits(self.src_or_imm(inst, 1));
+                    self.regs[inst.dst.unwrap() as usize] = v.to_bits();
+                }
+                Op::FFma => {
+                    let v = f32::from_bits(self.src(inst.srcs[0]))
+                        .mul_add(f32::from_bits(self.src(inst.srcs[1])), f32::from_bits(self.src(inst.srcs[2])));
+                    self.regs[inst.dst.unwrap() as usize] = v.to_bits();
+                }
+                Op::Sfu => {
+                    // Long-latency transcendental; architecturally a hash so
+                    // results stay integer-deterministic.
+                    let v = hash64(self.src(inst.srcs[0]) as u64 ^ 0x5F3759DF) as u32;
+                    self.regs[inst.dst.unwrap() as usize] = v;
+                }
+                Op::Setp(cmp) => {
+                    let a = self.src(inst.srcs[0]) as i32 as i64;
+                    let b = match inst.srcs[1] {
+                        Some(r) => self.regs[r as usize] as i32 as i64,
+                        None => inst.imm.unwrap_or(0),
+                    };
+                    self.preds[inst.dpred.unwrap() as usize] = cmp.eval(a, b);
+                }
+                Op::Ld(_) => {
+                    let addr =
+                        (self.src(inst.srcs[0]) as u64).wrapping_add(inst.imm.unwrap_or(0) as u64);
+                    info.mem_addr = Some(addr);
+                    self.regs[inst.dst.unwrap() as usize] = hash64(addr ^ self.salt) as u32;
+                }
+                Op::St(_) => {
+                    let addr =
+                        (self.src(inst.srcs[0]) as u64).wrapping_add(inst.imm.unwrap_or(0) as u64);
+                    info.mem_addr = Some(addr);
+                    if self.record_stores {
+                        self.stores.push((addr, self.src(inst.srcs[1])));
+                    }
+                }
+                Op::Bra => {
+                    next_block = Some(inst.target.unwrap());
+                }
+                Op::Bar => {}
+                Op::Exit => {
+                    self.finished = true;
+                    return Some(info);
+                }
+            }
+        } else {
+            info.predicated_off = true;
+        }
+
+        // Advance.
+        self.idx += 1;
+        if self.idx >= blk.insts.len() {
+            let nb = match next_block {
+                Some(t) => t,
+                None => {
+                    // Fallthrough: a guarded branch that fell through takes
+                    // succs[1]; plain fallthrough takes succs[0].
+                    if inst.op.is_branch() {
+                        blk.succs[1]
+                    } else {
+                        blk.succs[0]
+                    }
+                }
+            };
+            self.block = nb;
+            self.idx = 0;
+        } else {
+            debug_assert!(next_block.is_none(), "terminator mid-block");
+        }
+        Some(info)
+    }
+}
+
+/// Full architectural run (bounded), collecting observables.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    /// Executed (block, idx) pairs. Only populated when `trace` is requested.
+    pub trace: Trace,
+    /// (address, value) of every store, in order — the kernel's observable
+    /// output, invariant under register renumbering.
+    pub stores: Vec<(u64, u32)>,
+    pub dyn_insts: u64,
+    pub finished: bool,
+}
+
+/// Run `kernel` to completion (or `max_insts`), recording stores and
+/// optionally the full trace.
+pub fn execute(
+    kernel: &Kernel,
+    salt: u64,
+    inputs: &[(Reg, u32)],
+    max_insts: u64,
+    want_trace: bool,
+) -> ExecOutcome {
+    let mut st = ExecState::new(salt, inputs);
+    st.record_stores = true;
+    let mut trace = Vec::new();
+    while st.dyn_insts < max_insts {
+        match st.step(kernel) {
+            Some(info) => {
+                if want_trace {
+                    trace.push(TraceEntry { block: info.block, idx: info.idx });
+                }
+                if st.finished {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+    ExecOutcome { trace, stores: st.stores.clone(), dyn_insts: st.dyn_insts, finished: st.finished }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::KernelBuilder;
+    use crate::ir::inst::Cmp;
+
+    /// The paper's Listing 1: compare two 100-element arrays.
+    fn listing1() -> Kernel {
+        let mut b = KernelBuilder::new("listing1");
+        let l1 = b.fresh_label("L1");
+        let l2 = b.fresh_label("L2");
+        let l3 = b.fresh_label("L3");
+        b.mov_imm(0, 0x1000); // r0 = A
+        b.mov_imm(1, 0x2000); // r1 = B
+        b.mov_imm(2, 0); // r2 = i
+        b.mov_imm(3, 100); // r3 = n
+        b.bind(l1);
+        b.ld_global(4, 0, 0); // r4 = [r0]
+        b.ld_global(5, 1, 0); // r5 = [r1]
+        b.setp(Cmp::Eq, 0, 4, 5); // p = r4 == r5
+        b.bra_if(0, false, l2); // @!p bra L2
+        b.iadd_imm(0, 0, 4);
+        b.iadd_imm(1, 1, 4);
+        b.iadd_imm(2, 2, 1);
+        b.setp(Cmp::Lt, 1, 2, 3); // q = i < n
+        b.bra_if(1, true, l1); // @q bra L1
+        b.mov_imm(6, 1);
+        b.bra(l3);
+        b.bind(l2);
+        b.mov_imm(6, 0);
+        b.bind(l3);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn listing1_terminates() {
+        let k = listing1();
+        assert!(k.validate().is_ok());
+        let out = execute(&k, 7, &[], 100_000, false);
+        assert!(out.finished);
+        // Either the loop ran all 100 iterations or broke at a mismatch;
+        // both paths execute at least the entry + one iteration.
+        assert!(out.dyn_insts >= 10);
+    }
+
+    #[test]
+    fn loop_runs_expected_iterations() {
+        // r0 counts to 10: 2 setup + 10*(add,setp,bra) + exit = 33.
+        let mut b = KernelBuilder::new("count");
+        let top = b.fresh_label("top");
+        b.mov_imm(0, 0);
+        b.mov_imm(1, 10);
+        b.bind(top);
+        b.iadd_imm(0, 0, 1);
+        b.setp(Cmp::Lt, 0, 0, 1);
+        b.bra_if(0, true, top);
+        b.exit();
+        let k = b.finish();
+        let out = execute(&k, 0, &[], 10_000, true);
+        assert!(out.finished);
+        assert_eq!(out.dyn_insts, 2 + 10 * 3 + 1);
+    }
+
+    #[test]
+    fn stores_deterministic_across_runs_and_salts() {
+        let mut b = KernelBuilder::new("st");
+        b.mov_imm(0, 0x100);
+        b.ld_global(1, 0, 0);
+        b.st_global(0, 8, 1);
+        b.exit();
+        let k = b.finish();
+        let a1 = execute(&k, 1, &[], 100, false);
+        let a2 = execute(&k, 1, &[], 100, false);
+        let b1 = execute(&k, 2, &[], 100, false);
+        assert_eq!(a1.stores, a2.stores);
+        assert_ne!(a1.stores, b1.stores, "salt must change load values");
+        assert_eq!(a1.stores.len(), 1);
+        assert_eq!(a1.stores[0].0, 0x108);
+    }
+
+    #[test]
+    fn predicated_off_inst_is_noop() {
+        let mut b = KernelBuilder::new("guard");
+        let skip = b.fresh_label("skip");
+        b.mov_imm(0, 5);
+        b.setp_imm(Cmp::Gt, 0, 0, 100); // false
+        b.bra_if(0, true, skip); // not taken
+        b.iadd_imm(0, 0, 1); // executes
+        b.bind(skip);
+        b.st_global(0, 0, 0);
+        b.exit();
+        let k = b.finish();
+        let out = execute(&k, 0, &[], 100, false);
+        assert_eq!(out.stores[0].0, 6, "fallthrough side must have executed");
+    }
+
+    #[test]
+    fn inputs_preload_registers() {
+        let mut b = KernelBuilder::new("in");
+        b.st_global(0, 0, 1);
+        b.exit();
+        let k = b.finish();
+        let out = execute(&k, 0, &[(0, 0x40), (1, 99)], 10, false);
+        assert_eq!(out.stores, vec![(0x40, 99)]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Instruction encoding: opcodes, operands, and latency classes.
+
+/// Architectural (virtual) register id. The CUDA compiler allocates at most
+/// 256 registers per thread, which bounds this to `0..256`.
+pub type Reg = u16;
+
+/// Predicate register id. Predicates live in a separate small file (as on
+/// real NVIDIA hardware) and do not occupy main-register-file banks.
+pub type Pred = u8;
+
+/// Comparison operator for `setp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl Cmp {
+    pub fn eval(self, a: i64, b: i64) -> bool {
+        match self {
+            Cmp::Eq => a == b,
+            Cmp::Ne => a != b,
+            Cmp::Lt => a < b,
+            Cmp::Le => a <= b,
+            Cmp::Gt => a > b,
+            Cmp::Ge => a >= b,
+        }
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Cmp::Eq => "eq",
+            Cmp::Ne => "ne",
+            Cmp::Lt => "lt",
+            Cmp::Le => "le",
+            Cmp::Gt => "gt",
+            Cmp::Ge => "ge",
+        }
+    }
+}
+
+/// Memory space of a load/store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Space {
+    Global,
+    Shared,
+}
+
+/// Opcodes. A deliberately small but representative subset of PTX: enough
+/// to express the loop nests, reductions, and pointer chases of the
+/// synthetic workload suite, and everything in the paper's Listing 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `mov dst, src|imm`
+    Mov,
+    /// Integer ALU: `dst = a ⊕ b|imm`
+    IAdd,
+    ISub,
+    IMul,
+    /// `dst = a * b + c`
+    IMad,
+    IMin,
+    IMax,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    /// Float ALU (f32 bit-pattern over u32 registers).
+    FAdd,
+    FMul,
+    /// `dst = a * b + c`
+    FFma,
+    /// Special-function unit op (rcp/rsqrt/sin…): long-latency ALU.
+    Sfu,
+    /// `setp.<cmp> pN, a, b|imm`
+    Setp(Cmp),
+    /// `ld.<space> dst, [addr+imm]`
+    Ld(Space),
+    /// `st.<space> [addr+imm], src`
+    St(Space),
+    /// `@p bra label` / `bra label`
+    Bra,
+    /// Barrier: fixed-latency pipeline op (CTA-sync is not modeled; see
+    /// DESIGN.md substitutions).
+    Bar,
+    Exit,
+}
+
+/// Which execution resource an instruction occupies in the SM pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecUnit {
+    Alu,
+    Sfu,
+    MemGlobal,
+    MemShared,
+    Ctrl,
+}
+
+impl Op {
+    pub fn unit(self) -> ExecUnit {
+        match self {
+            Op::Ld(Space::Global) | Op::St(Space::Global) => ExecUnit::MemGlobal,
+            Op::Ld(Space::Shared) | Op::St(Space::Shared) => ExecUnit::MemShared,
+            Op::Sfu => ExecUnit::Sfu,
+            Op::Bra | Op::Bar | Op::Exit => ExecUnit::Ctrl,
+            _ => ExecUnit::Alu,
+        }
+    }
+
+    pub fn is_branch(self) -> bool {
+        matches!(self, Op::Bra)
+    }
+
+    pub fn is_terminator(self) -> bool {
+        matches!(self, Op::Bra | Op::Exit)
+    }
+
+    pub fn is_load(self) -> bool {
+        matches!(self, Op::Ld(_))
+    }
+
+    pub fn is_store(self) -> bool {
+        matches!(self, Op::St(_))
+    }
+
+    pub fn mnemonic(self) -> String {
+        match self {
+            Op::Mov => "mov".into(),
+            Op::IAdd => "add".into(),
+            Op::ISub => "sub".into(),
+            Op::IMul => "mul".into(),
+            Op::IMad => "mad".into(),
+            Op::IMin => "min".into(),
+            Op::IMax => "max".into(),
+            Op::And => "and".into(),
+            Op::Or => "or".into(),
+            Op::Xor => "xor".into(),
+            Op::Shl => "shl".into(),
+            Op::Shr => "shr".into(),
+            Op::FAdd => "fadd".into(),
+            Op::FMul => "fmul".into(),
+            Op::FFma => "ffma".into(),
+            Op::Sfu => "sfu".into(),
+            Op::Setp(c) => format!("setp.{}", c.mnemonic()),
+            Op::Ld(Space::Global) => "ld.global".into(),
+            Op::Ld(Space::Shared) => "ld.shared".into(),
+            Op::St(Space::Global) => "st.global".into(),
+            Op::St(Space::Shared) => "st.shared".into(),
+            Op::Bra => "bra".into(),
+            Op::Bar => "bar".into(),
+            Op::Exit => "exit".into(),
+        }
+    }
+}
+
+/// One instruction. Register operands are fixed-arity (`srcs`); a `None`
+/// slot is unused. `imm` doubles as the address offset for memory ops.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Inst {
+    pub op: Op,
+    /// Destination general register (writes).
+    pub dst: Option<Reg>,
+    /// Destination predicate (for `setp`).
+    pub dpred: Option<Pred>,
+    /// Source general registers.
+    pub srcs: [Option<Reg>; 3],
+    /// Immediate operand / memory offset.
+    pub imm: Option<i64>,
+    /// Guard predicate: `@pN` (`true`) or `@!pN` (`false`).
+    pub guard: Option<(Pred, bool)>,
+    /// Branch target (block id, resolved after block construction).
+    pub target: Option<usize>,
+}
+
+impl Inst {
+    pub fn new(op: Op) -> Self {
+        Inst { op, dst: None, dpred: None, srcs: [None; 3], imm: None, guard: None, target: None }
+    }
+
+    /// General registers read by this instruction.
+    pub fn uses(&self) -> impl Iterator<Item = Reg> + '_ {
+        self.srcs.iter().flatten().copied()
+    }
+
+    /// General register written by this instruction.
+    pub fn def(&self) -> Option<Reg> {
+        self.dst
+    }
+
+    /// All general registers referenced (the unit of working-set accounting:
+    /// a register touched in a register-interval must be cache-resident,
+    /// whether read or written — §3.1).
+    pub fn touched(&self) -> impl Iterator<Item = Reg> + '_ {
+        self.srcs.iter().flatten().copied().chain(self.dst)
+    }
+
+    /// Highest register id referenced, if any.
+    pub fn max_reg(&self) -> Option<Reg> {
+        self.touched().max()
+    }
+
+    /// Render in the repo's PTX-flavored text syntax (parseable back).
+    pub fn display(&self, labels: &[String]) -> String {
+        let mut s = String::new();
+        if let Some((p, pos)) = self.guard {
+            s.push_str(&format!("@{}p{} ", if pos { "" } else { "!" }, p));
+        }
+        s.push_str(&self.op.mnemonic());
+        let mut ops: Vec<String> = Vec::new();
+        if let Some(p) = self.dpred {
+            ops.push(format!("p{p}"));
+        }
+        match self.op {
+            Op::Ld(_) => {
+                ops.push(format!("r{}", self.dst.unwrap()));
+                ops.push(addr_operand(self.srcs[0], self.imm));
+            }
+            Op::St(_) => {
+                ops.push(addr_operand(self.srcs[0], self.imm));
+                ops.push(format!("r{}", self.srcs[1].unwrap()));
+            }
+            Op::Bra => {
+                ops.push(labels.get(self.target.unwrap()).cloned().unwrap_or_default());
+            }
+            _ => {
+                if let Some(d) = self.dst {
+                    ops.push(format!("r{d}"));
+                }
+                for r in self.srcs.iter().flatten() {
+                    ops.push(format!("r{r}"));
+                }
+                if let Some(i) = self.imm {
+                    ops.push(format!("#{i}"));
+                }
+            }
+        }
+        if !ops.is_empty() {
+            s.push(' ');
+            s.push_str(&ops.join(", "));
+        }
+        s
+    }
+}
+
+fn addr_operand(base: Option<Reg>, off: Option<i64>) -> String {
+    match (base, off) {
+        (Some(r), Some(o)) if o != 0 => format!("[r{r}+{o}]"),
+        (Some(r), _) => format!("[r{r}]"),
+        (None, Some(o)) => format!("[{o}]"),
+        (None, None) => "[0]".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uses_and_defs() {
+        let mut i = Inst::new(Op::IMad);
+        i.dst = Some(4);
+        i.srcs = [Some(1), Some(2), Some(3)];
+        assert_eq!(i.uses().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(i.def(), Some(4));
+        assert_eq!(i.touched().collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert_eq!(i.max_reg(), Some(4));
+    }
+
+    #[test]
+    fn unit_classes() {
+        assert_eq!(Op::IAdd.unit(), ExecUnit::Alu);
+        assert_eq!(Op::Sfu.unit(), ExecUnit::Sfu);
+        assert_eq!(Op::Ld(Space::Global).unit(), ExecUnit::MemGlobal);
+        assert_eq!(Op::St(Space::Shared).unit(), ExecUnit::MemShared);
+        assert_eq!(Op::Bra.unit(), ExecUnit::Ctrl);
+        assert!(Op::Bra.is_terminator() && Op::Exit.is_terminator());
+        assert!(!Op::IAdd.is_terminator());
+    }
+
+    #[test]
+    fn display_formats() {
+        let labels = vec!["entry".to_string(), "loop".to_string()];
+        let mut ld = Inst::new(Op::Ld(Space::Global));
+        ld.dst = Some(4);
+        ld.srcs[0] = Some(0);
+        ld.imm = Some(8);
+        assert_eq!(ld.display(&labels), "ld.global r4, [r0+8]");
+
+        let mut bra = Inst::new(Op::Bra);
+        bra.target = Some(1);
+        bra.guard = Some((0, false));
+        assert_eq!(bra.display(&labels), "@!p0 bra loop");
+    }
+}

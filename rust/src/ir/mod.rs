@@ -1,0 +1,19 @@
+//! PTX-like kernel IR — the nvcc/PTX stand-in substrate.
+//!
+//! The LTRF compiler passes (liveness, register-interval formation,
+//! renumbering) and the cycle-level simulator both consume this IR. It
+//! mirrors the fragment of PTX the paper's walk-through (Listing 1) uses:
+//! virtual registers `rN`, predicate registers `pN`, guarded branches,
+//! loads/stores with `[reg+imm]` addressing, and an `exit` terminator.
+
+pub mod analysis;
+pub mod builder;
+pub mod cfg;
+pub mod exec;
+pub mod inst;
+pub mod parser;
+
+pub use builder::KernelBuilder;
+pub use cfg::{Block, BlockId, Kernel};
+pub use exec::{execute, ExecOutcome, Trace, TraceEntry};
+pub use inst::{Cmp, ExecUnit, Inst, Op, Pred, Reg};

@@ -1,0 +1,325 @@
+//! Text parser for the PTX-flavored `.ltrf` kernel format.
+//!
+//! Grammar (one statement per line; `//` comments):
+//!
+//! ```text
+//! .kernel <name>
+//! <label>:
+//!   [@[!]pN] <mnemonic> <operands...>
+//! ```
+//!
+//! Operands: `rN` (register), `pN` (predicate), `#imm` or bare integer,
+//! `[rN]` / `[rN+off]` (address), `<label>` (branch target).
+//! Mnemonics match `Op::mnemonic()`: `mov add sub mul mad min max and or
+//! xor shl shr fadd fmul ffma sfu setp.{eq,ne,lt,le,gt,ge}
+//! ld.{global,shared} st.{global,shared} bra bar exit`.
+
+use super::builder::KernelBuilder;
+use super::cfg::Kernel;
+use super::inst::{Cmp, Inst, Op, Space};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parse one kernel from text.
+pub fn parse(text: &str) -> Result<Kernel> {
+    let mut name = None;
+    let mut builder: Option<KernelBuilder> = None;
+    let mut bound: std::collections::HashSet<String> = Default::default();
+    let mut targets: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split("//").next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("line {}: `{}`", lineno + 1, raw.trim());
+
+        if let Some(rest) = line.strip_prefix(".kernel") {
+            let n = rest.trim();
+            if n.is_empty() {
+                bail!("{}: .kernel requires a name", ctx());
+            }
+            name = Some(n.to_string());
+            builder = Some(KernelBuilder::new(n));
+            continue;
+        }
+        let b = builder.as_mut().ok_or_else(|| anyhow!("{}: statement before .kernel", ctx()))?;
+
+        if let Some(label) = line.strip_suffix(':') {
+            let label = label.trim();
+            if !is_ident(label) {
+                bail!("{}: bad label `{label}`", ctx());
+            }
+            let l = b.named_label(label);
+            b.bind(l);
+            bound.insert(label.to_string());
+            continue;
+        }
+
+        if let Some(tgt) = line.split_whitespace().skip_while(|t| *t != "bra").nth(1) {
+            targets.push(tgt.to_string());
+        }
+        let inst = parse_inst(line, b).with_context(ctx)?;
+        b.push(inst);
+    }
+
+    let _ = name.ok_or_else(|| anyhow!("no .kernel directive found"))?;
+    for t in &targets {
+        if !bound.contains(t) {
+            bail!("branch to unbound label `{t}`");
+        }
+    }
+    let b = builder.unwrap();
+    let kernel = b.finish();
+    kernel.validate().map_err(|e| anyhow!("invalid kernel: {e}"))?;
+    Ok(kernel)
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().unwrap().is_ascii_alphabetic()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+}
+
+fn parse_inst(line: &str, b: &mut KernelBuilder) -> Result<Inst> {
+    let mut rest = line;
+
+    // Optional guard.
+    let mut guard = None;
+    if let Some(g) = rest.strip_prefix('@') {
+        let (gtok, tail) =
+            g.split_once(char::is_whitespace).ok_or_else(|| anyhow!("guard without opcode"))?;
+        let (neg, ptok) =
+            if let Some(p) = gtok.strip_prefix('!') { (true, p) } else { (false, gtok) };
+        let p = parse_pred(ptok)?;
+        guard = Some((p, !neg));
+        rest = tail.trim_start();
+    }
+
+    let (mn, ops_str) = match rest.split_once(char::is_whitespace) {
+        Some((m, o)) => (m, o.trim()),
+        None => (rest, ""),
+    };
+    let ops: Vec<&str> =
+        if ops_str.is_empty() { vec![] } else { ops_str.split(',').map(|s| s.trim()).collect() };
+
+    let op = parse_op(mn)?;
+    let mut inst = Inst::new(op);
+    inst.guard = guard;
+
+    let narg = |want: usize| -> Result<()> {
+        if ops.len() != want {
+            bail!("{mn} expects {want} operands, got {}", ops.len());
+        }
+        Ok(())
+    };
+
+    match op {
+        Op::Mov => {
+            narg(2)?;
+            inst.dst = Some(parse_reg(ops[0])?);
+            match parse_reg(ops[1]) {
+                Ok(r) => inst.srcs[0] = Some(r),
+                Err(_) => inst.imm = Some(parse_imm(ops[1])?),
+            }
+        }
+        Op::IAdd | Op::ISub | Op::IMul | Op::IMin | Op::IMax | Op::And | Op::Or | Op::Xor
+        | Op::Shl | Op::Shr | Op::FAdd | Op::FMul => {
+            narg(3)?;
+            inst.dst = Some(parse_reg(ops[0])?);
+            inst.srcs[0] = Some(parse_reg(ops[1])?);
+            match parse_reg(ops[2]) {
+                Ok(r) => inst.srcs[1] = Some(r),
+                Err(_) => inst.imm = Some(parse_imm(ops[2])?),
+            }
+        }
+        Op::IMad | Op::FFma => {
+            narg(4)?;
+            inst.dst = Some(parse_reg(ops[0])?);
+            inst.srcs[0] = Some(parse_reg(ops[1])?);
+            inst.srcs[1] = Some(parse_reg(ops[2])?);
+            inst.srcs[2] = Some(parse_reg(ops[3])?);
+        }
+        Op::Sfu => {
+            narg(2)?;
+            inst.dst = Some(parse_reg(ops[0])?);
+            inst.srcs[0] = Some(parse_reg(ops[1])?);
+        }
+        Op::Setp(_) => {
+            narg(3)?;
+            inst.dpred = Some(parse_pred(ops[0])?);
+            inst.srcs[0] = Some(parse_reg(ops[1])?);
+            match parse_reg(ops[2]) {
+                Ok(r) => inst.srcs[1] = Some(r),
+                Err(_) => inst.imm = Some(parse_imm(ops[2])?),
+            }
+        }
+        Op::Ld(_) => {
+            narg(2)?;
+            inst.dst = Some(parse_reg(ops[0])?);
+            let (base, off) = parse_addr(ops[1])?;
+            inst.srcs[0] = Some(base);
+            inst.imm = Some(off);
+        }
+        Op::St(_) => {
+            narg(2)?;
+            let (base, off) = parse_addr(ops[0])?;
+            inst.srcs[0] = Some(base);
+            inst.srcs[1] = Some(parse_reg(ops[1])?);
+            inst.imm = Some(off);
+        }
+        Op::Bra => {
+            narg(1)?;
+            if !is_ident(ops[0]) {
+                bail!("bad branch label `{}`", ops[0]);
+            }
+            inst.target = Some(b.named_label(ops[0]));
+        }
+        Op::Bar | Op::Exit => narg(0)?,
+    }
+    Ok(inst)
+}
+
+fn parse_op(mn: &str) -> Result<Op> {
+    Ok(match mn {
+        "mov" => Op::Mov,
+        "add" => Op::IAdd,
+        "sub" => Op::ISub,
+        "mul" => Op::IMul,
+        "mad" => Op::IMad,
+        "min" => Op::IMin,
+        "max" => Op::IMax,
+        "and" => Op::And,
+        "or" => Op::Or,
+        "xor" => Op::Xor,
+        "shl" => Op::Shl,
+        "shr" => Op::Shr,
+        "fadd" => Op::FAdd,
+        "fmul" => Op::FMul,
+        "ffma" => Op::FFma,
+        "sfu" => Op::Sfu,
+        "setp.eq" => Op::Setp(Cmp::Eq),
+        "setp.ne" => Op::Setp(Cmp::Ne),
+        "setp.lt" => Op::Setp(Cmp::Lt),
+        "setp.le" => Op::Setp(Cmp::Le),
+        "setp.gt" => Op::Setp(Cmp::Gt),
+        "setp.ge" => Op::Setp(Cmp::Ge),
+        "ld.global" => Op::Ld(Space::Global),
+        "ld.shared" => Op::Ld(Space::Shared),
+        "st.global" => Op::St(Space::Global),
+        "st.shared" => Op::St(Space::Shared),
+        "bra" => Op::Bra,
+        "bar" => Op::Bar,
+        "exit" => Op::Exit,
+        _ => bail!("unknown mnemonic `{mn}`"),
+    })
+}
+
+fn parse_reg(tok: &str) -> Result<u16> {
+    let n = tok.strip_prefix('r').ok_or_else(|| anyhow!("expected register, got `{tok}`"))?;
+    let id: u16 = n.parse().map_err(|_| anyhow!("bad register `{tok}`"))?;
+    if id as usize >= crate::util::bitset::MAX_REGS {
+        bail!("register id {id} out of range");
+    }
+    Ok(id)
+}
+
+fn parse_pred(tok: &str) -> Result<u8> {
+    let n = tok.strip_prefix('p').ok_or_else(|| anyhow!("expected predicate, got `{tok}`"))?;
+    n.parse().map_err(|_| anyhow!("bad predicate `{tok}`"))
+}
+
+fn parse_imm(tok: &str) -> Result<i64> {
+    let t = tok.strip_prefix('#').unwrap_or(tok);
+    let (neg, t) = if let Some(x) = t.strip_prefix('-') { (true, x) } else { (false, t) };
+    let v: i64 = if let Some(hex) = t.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad immediate `{tok}`"))?
+    } else {
+        t.parse().map_err(|_| anyhow!("bad immediate `{tok}`"))?
+    };
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_addr(tok: &str) -> Result<(u16, i64)> {
+    let inner = tok
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("expected [addr], got `{tok}`"))?;
+    match inner.split_once('+') {
+        Some((r, off)) => Ok((parse_reg(r.trim())?, parse_imm(off.trim())?)),
+        None => Ok((parse_reg(inner.trim())?, 0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::exec::execute;
+
+    /// The paper's Listing 1, in our text syntax.
+    pub const LISTING1: &str = r#"
+.kernel listing1
+  mov r0, #0x1000      // A
+  mov r1, #0x2000      // B
+  mov r2, #0
+  mov r3, #100
+L1:
+  ld.global r4, [r0]
+  ld.global r5, [r1]
+  setp.eq p0, r4, r5
+  @!p0 bra L2
+  add r0, r0, #4
+  add r1, r1, #4
+  add r2, r2, #1
+  setp.lt p1, r2, r3
+  @p1 bra L1
+  mov r6, #1
+  bra L3
+L2:
+  mov r6, #0
+L3:
+  exit
+"#;
+
+    #[test]
+    fn parses_listing1() {
+        let k = parse(LISTING1).unwrap();
+        assert_eq!(k.name, "listing1");
+        assert_eq!(k.num_regs, 7);
+        assert_eq!(k.num_preds, 2);
+        assert!(k.validate().is_ok());
+        // Blocks: entry, L1, post-branch body, tail (mov r6,1; bra), L2, L3.
+        assert_eq!(k.num_blocks(), 6);
+        let out = execute(&k, 3, &[], 100_000, false);
+        assert!(out.finished);
+    }
+
+    #[test]
+    fn roundtrip_display_parse() {
+        let k = parse(LISTING1).unwrap();
+        let text = k.display();
+        let k2 = parse(&text).unwrap();
+        assert_eq!(k.num_blocks(), k2.num_blocks());
+        assert_eq!(k.num_insts(), k2.num_insts());
+        // Same observable behaviour.
+        let o1 = execute(&k, 5, &[], 100_000, false);
+        let o2 = execute(&k2, 5, &[], 100_000, false);
+        assert_eq!(o1.stores, o2.stores);
+        assert_eq!(o1.dyn_insts, o2.dyn_insts);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("bogus").is_err());
+        assert!(parse(".kernel k\n  frob r1, r2\n  exit").is_err());
+        assert!(parse(".kernel k\n  add r1\n  exit").is_err());
+        assert!(parse(".kernel k\n  bra nowhere").is_err());
+        assert!(parse(".kernel k\n  mov r999, #0\n  exit").is_err());
+    }
+
+    #[test]
+    fn hex_and_negative_immediates() {
+        let k = parse(".kernel k\n  mov r0, #0x10\n  add r1, r0, #-2\n  exit").unwrap();
+        let out = execute(&k, 0, &[], 10, false);
+        assert!(out.finished);
+    }
+}

@@ -1,0 +1,33 @@
+//! # LTRF — Latency-Tolerant GPU Register Files
+//!
+//! Full-system reproduction of *"Enabling High-Capacity, Latency-Tolerant,
+//! and Highly-Concurrent GPU Register Files via Software/Hardware
+//! Cooperation"* (Sadrosadati et al., 2020).
+//!
+//! The crate contains the entire evaluation stack the paper builds on:
+//!
+//! * [`ir`] — a PTX-like kernel IR (the nvcc/PTX stand-in);
+//! * [`compiler`] — liveness, register-interval formation (Algorithms 1/2),
+//!   the Interval Conflict Graph + Chaitin coloring, register renumbering
+//!   (LTRF_conf), and SHRF strands;
+//! * [`timing`] — the CACTI/NVSim stand-in: analytical register-file bank
+//!   and interconnect models, and the paper's Table-2 design points;
+//! * [`sim`] — a cycle-level GPU SM simulator (two-level warp scheduler,
+//!   operand collectors, banked register files, the LTRF/RFC/SHRF register
+//!   file hierarchies, and a latency/bandwidth memory system);
+//! * [`workloads`] — the 14-kernel synthetic benchmark suite;
+//! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   prefetch-evaluation artifact and runs it from the sweep path;
+//! * [`coordinator`] — experiment drivers regenerating every table and
+//!   figure in the paper's evaluation;
+//! * [`report`] — ascii/CSV table rendering.
+
+pub mod compiler;
+pub mod coordinator;
+pub mod ir;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod timing;
+pub mod util;
+pub mod workloads;

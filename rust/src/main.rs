@@ -1,0 +1,290 @@
+//! `ltrf` — CLI for the LTRF reproduction.
+//!
+//! Every table/figure in the paper's evaluation is a subcommand; `all`
+//! regenerates the full set (EXPERIMENTS.md records the outputs).
+
+use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
+use ltrf::report::Table;
+use ltrf::sim::HierarchyKind;
+use ltrf::workloads::suite;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+ltrf — Latency-Tolerant Register File reproduction
+
+USAGE: ltrf <command> [flags]
+
+Experiment commands (regenerate paper tables/figures):
+  table1      Required RF capacity for max TLP
+  table2      RF design points (tech/banks/network)
+  fig2        On-chip storage across GPU generations
+  fig3        IPC with ideal / TFET 8x register files
+  fig4        Register cache hit rates (RFC / SHRF)
+  fig6        Bank-conflict distribution in register-intervals
+  fig14       Overall IPC on configs #6 and #7
+  fig15       Maximum tolerable MRF latency per design
+  fig16       Conflicts: LTRF vs LTRF_conf x {8,16,32} regs
+  fig17       IPC vs latency x regs-per-interval
+  fig18       IPC vs latency x active warps
+  table4      Real vs optimal register-interval length
+  fig19       LTRF vs strand-based SW caching (SHRF)
+  fig20       Tolerable latency vs warps/SM
+  overheads   §5.3 code-size/storage/area/power overheads
+  ablations   Design-choice ablations (refetch overlap, xbar, banking)
+  ltrfplus    LTRF vs LTRF+ liveness-filtering traffic (§3.2)
+  headline    Abstract claim: LTRF_conf on config #7
+  all         Everything above
+
+Tool commands:
+  compile <file.ltrf> [--regs N] [--renumber]   Compile + dump intervals
+  run <workload> [--hierarchy BL|RFC|SHRF|LTRF|LTRF+] [--latency F]
+                 [--capacity WARP_REGS] [--renumber]  Simulate one workload
+  workloads   List the benchmark suite
+  trace <workload> [--cycles N] [--hierarchy H] [--latency F]
+              Per-cycle warp-state timeline (debugging)
+
+Flags:
+  --quick       5-workload subset, smaller grids
+  --csv DIR     also write each table as CSV
+  --sms N       simulated SM count (default 1)
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str| -> Option<String> {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+    };
+
+    let ctx = ExperimentContext {
+        quick: flag("--quick"),
+        csv_dir: opt("--csv").map(PathBuf::from),
+        num_sms: opt("--sms").and_then(|s| s.parse().ok()).unwrap_or(1),
+    };
+
+    let print = |t: &Table| println!("{}", t.render());
+    let print_all = |ts: &[Table]| ts.iter().for_each(|t| println!("{}", t.render()));
+
+    match cmd {
+        "table1" => print(&exp::table1(&ctx)),
+        "table2" => print(&exp::table2_table(&ctx)),
+        "fig2" => print(&exp::fig2(&ctx)),
+        "fig3" => print(&exp::fig3(&ctx)),
+        "fig4" => print(&exp::fig4(&ctx)),
+        "fig6" => print(&exp::fig6(&ctx)),
+        "fig14" => print_all(&exp::fig14(&ctx)),
+        "fig15" => print(&exp::fig15(&ctx)),
+        "fig16" => print_all(&exp::fig16(&ctx)),
+        "fig17" => print(&exp::fig17(&ctx)),
+        "fig18" => print(&exp::fig18(&ctx)),
+        "table4" => print(&exp::table4(&ctx)),
+        "fig19" => print(&exp::fig19(&ctx)),
+        "fig20" => print(&exp::fig20(&ctx)),
+        "overheads" => print(&exp::overheads(&ctx)),
+        "ablations" => print_all(&exp::ablations(&ctx)),
+        "ltrfplus" => print(&exp::ltrf_plus(&ctx)),
+        "headline" => {
+            let (imp, t) = exp::headline(&ctx);
+            print(&t);
+            println!(
+                "LTRF_conf on config #7 improves mean IPC by {:.1}% (paper: 34%)",
+                imp * 100.0
+            );
+        }
+        "all" => {
+            print(&exp::table1(&ctx));
+            print(&exp::table2_table(&ctx));
+            print(&exp::fig2(&ctx));
+            print(&exp::fig3(&ctx));
+            print(&exp::fig4(&ctx));
+            print(&exp::fig6(&ctx));
+            print_all(&exp::fig14(&ctx));
+            print(&exp::fig15(&ctx));
+            print_all(&exp::fig16(&ctx));
+            print(&exp::fig17(&ctx));
+            print(&exp::fig18(&ctx));
+            print(&exp::table4(&ctx));
+            print(&exp::fig19(&ctx));
+            print(&exp::fig20(&ctx));
+            print(&exp::overheads(&ctx));
+            print_all(&exp::ablations(&ctx));
+            print(&exp::ltrf_plus(&ctx));
+            let (imp, t) = exp::headline(&ctx);
+            print(&t);
+            println!("Headline: +{:.1}% mean IPC (paper: +34%)", imp * 100.0);
+        }
+        "workloads" => {
+            let mut t = Table::new(
+                "Benchmark suite",
+                &["name", "class", "regs/thread (Maxwell)", "regs/thread (Fermi)"],
+            );
+            for w in suite::suite() {
+                t.row(vec![
+                    w.name.into(),
+                    format!("{:?}", w.class),
+                    w.regs_maxwell.to_string(),
+                    w.regs_fermi.to_string(),
+                ]);
+            }
+            print(&t);
+        }
+        "compile" => {
+            let Some(path) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("usage: ltrf compile <file.ltrf> [--regs N] [--renumber]");
+                std::process::exit(2);
+            };
+            let n: usize = opt("--regs").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("cannot read {path}: {e}");
+                std::process::exit(1);
+            });
+            let kernel = ltrf::ir::parser::parse(&src).unwrap_or_else(|e| {
+                eprintln!("parse error: {e:#}");
+                std::process::exit(1);
+            });
+            let mut opts = ltrf::compiler::CompileOptions::ltrf(n);
+            opts.renumber = flag("--renumber");
+            let ck = ltrf::compiler::compile(&kernel, opts);
+            println!("{}", ck.kernel.display());
+            let mut t = Table::new(
+                format!("register-intervals (N={n})"),
+                &["interval", "header", "blocks", "working set", "bank conflicts"],
+            );
+            for iv in &ck.intervals.intervals {
+                t.row(vec![
+                    iv.id.to_string(),
+                    ck.kernel.blocks[iv.header].label.clone(),
+                    iv.blocks.len().to_string(),
+                    format!("{:?}", iv.working_set),
+                    ltrf::compiler::renumber::bank_conflicts(
+                        &iv.working_set,
+                        opts.num_banks,
+                        opts.bank_map,
+                    )
+                    .to_string(),
+                ]);
+            }
+            print(&t);
+            println!(
+                "code-size overhead: {:.1}% (bit-vectors), conflict-free prefetches: {:.0}%",
+                ck.code_size_overhead(false) * 100.0,
+                ck.conflict_free_fraction() * 100.0
+            );
+        }
+        "run" => {
+            let Some(name) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("usage: ltrf run <workload> [flags]");
+                std::process::exit(2);
+            };
+            let Some(spec) = suite::workload_by_name(name) else {
+                eprintln!("unknown workload `{name}` (see `ltrf workloads`)");
+                std::process::exit(1);
+            };
+            let hierarchy = match opt("--hierarchy").as_deref().unwrap_or("LTRF") {
+                "BL" => HierarchyKind::Baseline,
+                "RFC" => HierarchyKind::Rfc,
+                "SHRF" => HierarchyKind::Shrf,
+                "LTRF" | "LTRF+" => HierarchyKind::Ltrf { plus: true },
+                other => {
+                    eprintln!("unknown hierarchy `{other}`");
+                    std::process::exit(1);
+                }
+            };
+            let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            let mut dut = DesignUnderTest::new(hierarchy, flag("--renumber"));
+            if let Some(cap) = opt("--capacity").and_then(|s| s.parse().ok()) {
+                dut = dut.with_capacity(cap);
+            }
+            dut.num_sms = ctx.num_sms;
+            let st = dut.run(spec, factor);
+            println!(
+                "{name} on {} @ {factor}x: IPC {:.3} ({} insts / {} cycles)",
+                hierarchy.name(),
+                st.ipc(),
+                st.instructions,
+                st.cycles
+            );
+            println!(
+                "  L1 hit {:.1}%  RFC hit {:.1}%  prefetches {} ({} regs)  activations {}  MRF acc reduction {:.1}x",
+                st.l1_hit_rate() * 100.0,
+                st.rfc_hit_rate() * 100.0,
+                st.prefetch_ops,
+                st.prefetch_regs,
+                st.activations,
+                st.mrf_access_reduction()
+            );
+        }
+        "trace" => {
+            let Some(name) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("usage: ltrf trace <workload> [--cycles N]");
+                std::process::exit(2);
+            };
+            let Some(spec) = suite::workload_by_name(name) else {
+                eprintln!("unknown workload `{name}`");
+                std::process::exit(1);
+            };
+            let hierarchy = match opt("--hierarchy").as_deref().unwrap_or("LTRF") {
+                "BL" => HierarchyKind::Baseline,
+                "RFC" => HierarchyKind::Rfc,
+                "SHRF" => HierarchyKind::Shrf,
+                _ => HierarchyKind::Ltrf { plus: true },
+            };
+            let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(6.3);
+            let max: u64 = opt("--cycles").and_then(|s| s.parse().ok()).unwrap_or(200);
+            let cfg = ltrf::sim::SimConfig::with_hierarchy(hierarchy)
+                .with_latency_factor(factor)
+                .normalize_capacity();
+            let kernel = ltrf::workloads::gen::build(spec);
+            let ck = ltrf::compiler::compile(
+                &kernel,
+                ltrf::sim::gpu::compile_options(&cfg, true),
+            );
+            let resident = cfg.resident_warps(ck.kernel.num_regs);
+            let mut shared = ltrf::sim::memsys::SharedMem::new(cfg.mem);
+            let mut sm = ltrf::sim::sm::SmSim::new(&cfg, &ck, resident, 0);
+            println!(
+                "trace: {name} on {} @{factor}x, {resident} resident warps (A=active P=prefetch M=mem W=wait .=not started F=finished)",
+                hierarchy.name()
+            );
+            let mut now = 0u64;
+            while now < max && !sm.done() {
+                let hint = sm.step(now, &mut shared);
+                let line: String = sm
+                    .warps
+                    .iter()
+                    .take(32)
+                    .map(|w| match w.state {
+                        ltrf::sim::warp::WarpState::Active => 'A',
+                        ltrf::sim::warp::WarpState::Prefetching { .. } => 'P',
+                        ltrf::sim::warp::WarpState::Refetching { .. } => 'p',
+                        ltrf::sim::warp::WarpState::PendingMem { .. } => 'M',
+                        ltrf::sim::warp::WarpState::WaitActivate => 'W',
+                        ltrf::sim::warp::WarpState::NotStarted => '.',
+                        ltrf::sim::warp::WarpState::Finished => 'F',
+                    })
+                    .collect();
+                println!(
+                    "{now:>6} [{line}] issued={} prefetches={}",
+                    sm.stats.instructions, sm.stats.prefetch_ops
+                );
+                now = hint.max(now + 1);
+            }
+            println!(
+                "\n{} instructions in {now} cycles (IPC {:.3})",
+                sm.stats.instructions,
+                sm.stats.instructions as f64 / now.max(1) as f64
+            );
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Result rendering: ascii tables (terminal) and CSV (plotting).
+
+pub mod table;
+
+pub use table::Table;

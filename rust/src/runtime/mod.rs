@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build path (`make artifacts`) runs Python once to lower the L2
+//! model (which embeds the L1 Pallas kernel) to HLO text; this module
+//! loads that text with `HloModuleProto::from_text_file`, compiles it on
+//! the PJRT CPU client, and executes it from the L3 sweep path. Python is
+//! never on the request path.
+
+pub mod pjrt;
+pub mod prefetch_eval;
+
+pub use pjrt::PjrtRuntime;
+pub use prefetch_eval::{EvalRow, PrefetchEvaluator};

@@ -1,0 +1,92 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids, which xla_extension 0.5.1 rejects
+//! (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+//! round-trips cleanly (see python/compile/aot.py).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; returns the first device's output.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let result = exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result literal")?;
+        Ok(lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The artifact path used across runtime tests (built by
+    /// `make artifacts`; tests that need it are skipped when absent so
+    /// `cargo test` works before the first build).
+    pub fn artifact_path() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/prefetch_eval.hlo.txt")
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_execute_artifact_smoke() {
+        let path = artifact_path();
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first ({})", path.display());
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).expect("compile artifact");
+        // Zero batch: all outputs zero.
+        let ws = xla::Literal::vec1(&vec![0u32; 1024 * 8]).reshape(&[1024, 8]).unwrap();
+        let onehot = xla::Literal::vec1(&vec![0f32; 256 * 16]).reshape(&[256, 16]).unwrap();
+        let s = xla::Literal::from(1.0f32);
+        let out = rt
+            .execute(&exe, &[ws, onehot, s.clone(), s.clone(), s])
+            .expect("execute");
+        let (counts, conflicts, latency, total) = out.to_tuple4().expect("4-tuple output");
+        assert_eq!(counts.to_vec::<f32>().unwrap().len(), 1024 * 16);
+        assert!(conflicts.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+        assert!(latency.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+        assert!(total.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,292 @@
+//! Batched prefetch evaluation: PJRT-backed with a pure-rust reference.
+//!
+//! `PrefetchEvaluator` answers, for a batch of prefetch bit-vectors under
+//! a register→bank assignment: per-bank occupancy, the §4 conflict count,
+//! and the serialized prefetch latency. The PJRT backend runs the AOT
+//! artifact (L1 Pallas kernel inside the L2 model); `Reference` is the
+//! bit-identical rust implementation used for cross-checking and as a
+//! fallback when `artifacts/` has not been built.
+
+use super::pjrt::PjrtRuntime;
+use crate::compiler::BankMap;
+use crate::util::bitset::MAX_REGS;
+use crate::util::RegSet;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Artifact batch geometry (must match python/compile/kernels).
+pub const N_BATCH: usize = 1024;
+const NUM_BANKS: usize = 16;
+
+/// Per-interval evaluation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalRow {
+    /// Registers per bank.
+    pub counts: [u32; NUM_BANKS],
+    /// Extra serialized bank accesses: `max(counts) - 1` (0 if empty).
+    pub conflicts: u32,
+    /// Serialized prefetch cycles (0 if empty).
+    pub latency: u32,
+    /// Working-set size.
+    pub total: u32,
+}
+
+/// Latency-model parameters (mirrors python/compile/model.py).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyParams {
+    pub mrf_cycles: f32,
+    pub xbar_rate: f32,
+    pub xbar_latency: f32,
+}
+
+impl Default for LatencyParams {
+    fn default() -> Self {
+        LatencyParams { mrf_cycles: 13.0, xbar_rate: 2.0, xbar_latency: 4.0 }
+    }
+}
+
+enum Backend {
+    Pjrt { rt: PjrtRuntime, exe: xla::PjRtLoadedExecutable },
+    Reference,
+}
+
+/// Batched evaluator.
+pub struct PrefetchEvaluator {
+    backend: Backend,
+}
+
+impl PrefetchEvaluator {
+    /// Load the PJRT artifact from `artifacts/prefetch_eval.hlo.txt`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("prefetch_eval.hlo.txt");
+        let rt = PjrtRuntime::cpu()?;
+        let exe = rt
+            .load_hlo_text(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        Ok(PrefetchEvaluator { backend: Backend::Pjrt { rt, exe } })
+    }
+
+    /// PJRT if the artifact exists, else the rust reference.
+    pub fn load_or_reference(artifact_dir: &Path) -> Self {
+        Self::load(artifact_dir).unwrap_or_else(|_| Self::reference())
+    }
+
+    /// Pure-rust reference backend.
+    pub fn reference() -> Self {
+        PrefetchEvaluator { backend: Backend::Reference }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt { .. })
+    }
+
+    /// Evaluate a batch of working sets under a bank assignment
+    /// (`assign[r]` = bank of register `r`).
+    pub fn evaluate(
+        &self,
+        sets: &[RegSet],
+        assign: &[usize; MAX_REGS],
+        params: LatencyParams,
+    ) -> Result<Vec<EvalRow>> {
+        match &self.backend {
+            Backend::Reference => Ok(evaluate_reference(sets, assign, params)),
+            Backend::Pjrt { rt, exe } => {
+                let mut out = Vec::with_capacity(sets.len());
+                for chunk in sets.chunks(N_BATCH) {
+                    out.extend(run_pjrt_batch(rt, exe, chunk, assign, params)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Convenience: evaluate under a structural bank map.
+    pub fn evaluate_mapped(
+        &self,
+        sets: &[RegSet],
+        map: BankMap,
+        num_banks: usize,
+        params: LatencyParams,
+    ) -> Result<Vec<EvalRow>> {
+        assert_eq!(num_banks, NUM_BANKS, "the AOT artifact is built for 16 banks");
+        let mut assign = [0usize; MAX_REGS];
+        for (r, a) in assign.iter_mut().enumerate() {
+            *a = map.bank_of(r as u16, num_banks);
+        }
+        self.evaluate(sets, &assign, params)
+    }
+}
+
+/// The rust reference implementation (bit-identical to the artifact:
+/// all quantities are small integers, exact in f32).
+pub fn evaluate_reference(
+    sets: &[RegSet],
+    assign: &[usize; MAX_REGS],
+    params: LatencyParams,
+) -> Vec<EvalRow> {
+    sets.iter()
+        .map(|ws| {
+            let mut counts = [0u32; NUM_BANKS];
+            for r in ws.iter() {
+                counts[assign[r as usize] % NUM_BANKS] += 1;
+            }
+            let max_occ = counts.iter().copied().max().unwrap_or(0);
+            let total: u32 = counts.iter().sum();
+            let conflicts = max_occ.saturating_sub(1);
+            let latency = if total > 0 {
+                let busy = max_occ as f32 * params.mrf_cycles;
+                let transfer = (total as f32 / params.xbar_rate).ceil();
+                (busy + transfer + params.xbar_latency) as u32
+            } else {
+                0
+            };
+            EvalRow { counts, conflicts, latency, total }
+        })
+        .collect()
+}
+
+fn run_pjrt_batch(
+    rt: &PjrtRuntime,
+    exe: &xla::PjRtLoadedExecutable,
+    sets: &[RegSet],
+    assign: &[usize; MAX_REGS],
+    params: LatencyParams,
+) -> Result<Vec<EvalRow>> {
+    // Pack working sets into u32 lanes, zero-padded to N_BATCH.
+    let mut ws = vec![0u32; N_BATCH * 8];
+    for (i, s) in sets.iter().enumerate() {
+        let lanes = s.to_u32_lanes();
+        ws[i * 8..i * 8 + 8].copy_from_slice(&lanes);
+    }
+    // One-hot bank matrix.
+    let mut onehot = vec![0f32; MAX_REGS * NUM_BANKS];
+    for (r, &b) in assign.iter().enumerate() {
+        onehot[r * NUM_BANKS + (b % NUM_BANKS)] = 1.0;
+    }
+
+    let ws_lit = xla::Literal::vec1(&ws).reshape(&[N_BATCH as i64, 8])?;
+    let oh_lit = xla::Literal::vec1(&onehot).reshape(&[MAX_REGS as i64, NUM_BANKS as i64])?;
+    let out = rt.execute(
+        exe,
+        &[
+            ws_lit,
+            oh_lit,
+            xla::Literal::from(params.mrf_cycles),
+            xla::Literal::from(params.xbar_rate),
+            xla::Literal::from(params.xbar_latency),
+        ],
+    )?;
+    let (counts, conflicts, latency, total) = out.to_tuple4().context("artifact 4-tuple")?;
+    let counts = counts.to_vec::<f32>()?;
+    let conflicts = conflicts.to_vec::<f32>()?;
+    let latency = latency.to_vec::<f32>()?;
+    let total = total.to_vec::<f32>()?;
+
+    Ok((0..sets.len())
+        .map(|i| {
+            let mut c = [0u32; NUM_BANKS];
+            for (b, slot) in c.iter_mut().enumerate() {
+                *slot = counts[i * NUM_BANKS + b] as u32;
+            }
+            EvalRow {
+                counts: c,
+                conflicts: conflicts[i] as u32,
+                latency: latency[i] as u32,
+                total: total[i] as u32,
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn interleave_assign() -> [usize; MAX_REGS] {
+        let mut a = [0usize; MAX_REGS];
+        for (r, slot) in a.iter_mut().enumerate() {
+            *slot = r % NUM_BANKS;
+        }
+        a
+    }
+
+    fn artifact_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn reference_known_values() {
+        let sets = vec![
+            RegSet::from_iter([0u16, 16, 32]), // 3 in bank 0
+            RegSet::from_iter([0u16, 1, 2, 3]),
+            RegSet::new(),
+        ];
+        let rows = evaluate_reference(&sets, &interleave_assign(), LatencyParams::default());
+        assert_eq!(rows[0].conflicts, 2);
+        assert_eq!(rows[0].counts[0], 3);
+        // 3×13 + ceil(3/2) + 4 = 45.
+        assert_eq!(rows[0].latency, 45);
+        assert_eq!(rows[1].conflicts, 0);
+        assert_eq!(rows[2].latency, 0);
+        assert_eq!(rows[2].total, 0);
+    }
+
+    #[test]
+    fn pjrt_matches_reference_exactly() {
+        let ev = match PrefetchEvaluator::load(&artifact_dir()) {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!("skipping (run `make artifacts`): {e:#}");
+                return;
+            }
+        };
+        let mut rng = crate::util::Xoshiro256::seeded(0xE7A1);
+        let sets: Vec<RegSet> = (0..300)
+            .map(|_| {
+                let n = rng.range(0, 24);
+                RegSet::from_iter((0..n).map(|_| rng.below(MAX_REGS as u64) as u16))
+            })
+            .collect();
+        let mut assign = [0usize; MAX_REGS];
+        for a in assign.iter_mut() {
+            *a = rng.below(NUM_BANKS as u64) as usize;
+        }
+        let params = LatencyParams { mrf_cycles: 13.0, xbar_rate: 2.0, xbar_latency: 4.0 };
+        let got = ev.evaluate(&sets, &assign, params).unwrap();
+        let want = evaluate_reference(&sets, &assign, params);
+        assert_eq!(got, want, "PJRT artifact must be bit-identical to the rust reference");
+    }
+
+    #[test]
+    fn pjrt_handles_multi_batch() {
+        let ev = match PrefetchEvaluator::load(&artifact_dir()) {
+            Ok(ev) => ev,
+            Err(_) => return,
+        };
+        let sets: Vec<RegSet> = (0..N_BATCH + 7).map(|i| RegSet::singleton((i % 256) as u16)).collect();
+        let rows = ev
+            .evaluate(&sets, &interleave_assign(), LatencyParams::default())
+            .unwrap();
+        assert_eq!(rows.len(), N_BATCH + 7);
+        assert!(rows.iter().all(|r| r.total == 1));
+    }
+
+    #[test]
+    fn evaluate_mapped_matches_compiler_conflicts() {
+        use crate::compiler::renumber::bank_conflicts;
+        let ev = PrefetchEvaluator::reference();
+        let mut rng = crate::util::Xoshiro256::seeded(77);
+        let sets: Vec<RegSet> = (0..64)
+            .map(|_| {
+                let n = rng.range(1, 16);
+                RegSet::from_iter((0..n).map(|_| rng.below(MAX_REGS as u64) as u16))
+            })
+            .collect();
+        let rows = ev
+            .evaluate_mapped(&sets, BankMap::Interleave, 16, LatencyParams::default())
+            .unwrap();
+        for (ws, row) in sets.iter().zip(&rows) {
+            assert_eq!(row.conflicts as usize, bank_conflicts(ws, 16, BankMap::Interleave));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Address Allocation Unit (§5.2, Fig. 13).
+//!
+//! Allocates register-file-cache banks to cached registers: an *unused*
+//! queue of free banks and an *occupied* list. One AAU instance per warp
+//! allocates within the warp's RF$ partition (registers of one warp are
+//! interleaved one-per-bank, so allocating a register = allocating a
+//! bank); a global instance allocates warp-offset slots to active warps.
+
+use std::collections::VecDeque;
+
+/// FIFO allocator over `capacity` slots (bank indices / warp offsets).
+#[derive(Clone, Debug)]
+pub struct AddressAllocationUnit {
+    unused: VecDeque<u8>,
+    occupied_count: usize,
+    capacity: usize,
+}
+
+impl AddressAllocationUnit {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity <= 256);
+        AddressAllocationUnit {
+            unused: (0..capacity as u8).collect(),
+            occupied_count: 0,
+            capacity,
+        }
+    }
+
+    /// Allocate the head of the unused queue.
+    pub fn alloc(&mut self) -> Option<u8> {
+        let slot = self.unused.pop_front()?;
+        self.occupied_count += 1;
+        Some(slot)
+    }
+
+    /// Return a slot to the unused queue.
+    pub fn free(&mut self, slot: u8) {
+        debug_assert!(
+            !self.unused.contains(&slot),
+            "double free of slot {slot} (AAU queue conservation)"
+        );
+        self.occupied_count -= 1;
+        self.unused.push_back(slot);
+    }
+
+    pub fn available(&self) -> usize {
+        self.unused.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.occupied_count
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut aau = AddressAllocationUnit::new(4);
+        assert_eq!(aau.available(), 4);
+        let a = aau.alloc().unwrap();
+        let b = aau.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(aau.in_use(), 2);
+        aau.free(a);
+        assert_eq!(aau.available(), 3);
+        assert_eq!(aau.in_use(), 1);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut aau = AddressAllocationUnit::new(2);
+        assert!(aau.alloc().is_some());
+        assert!(aau.alloc().is_some());
+        assert!(aau.alloc().is_none());
+    }
+
+    #[test]
+    fn fifo_reuse_order() {
+        let mut aau = AddressAllocationUnit::new(3);
+        let a = aau.alloc().unwrap();
+        let _b = aau.alloc().unwrap();
+        let c = aau.alloc().unwrap();
+        aau.free(c);
+        aau.free(a);
+        // Freed slots come back in free order, after the initially-unused.
+        assert_eq!(aau.alloc(), Some(c));
+        assert_eq!(aau.alloc(), Some(a));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // the guard is a debug_assert on the hot path
+    #[should_panic(expected = "double free")]
+    fn double_free_detected() {
+        let mut aau = AddressAllocationUnit::new(2);
+        let a = aau.alloc().unwrap();
+        aau.free(a);
+        aau.free(a);
+    }
+
+    #[test]
+    fn conservation_invariant() {
+        let mut aau = AddressAllocationUnit::new(8);
+        let mut held = Vec::new();
+        for i in 0..100 {
+            if i % 3 == 0 && !held.is_empty() {
+                aau.free(held.pop().unwrap());
+            } else if let Some(s) = aau.alloc() {
+                held.push(s);
+            }
+            assert_eq!(aau.in_use() + aau.available(), aau.capacity());
+        }
+    }
+}

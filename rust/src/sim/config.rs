@@ -1,0 +1,258 @@
+//! Simulated system configuration (the paper's Table 3).
+
+use crate::compiler::{BankMap, SubgraphMode};
+use crate::timing::RfDesign;
+
+/// Which register-file hierarchy the SM runs (§6 comparison points).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HierarchyKind {
+    /// Conventional non-cached register file (BL). For fairness the RF$
+    /// capacity is added to the MRF (§6).
+    Baseline,
+    /// Hardware register-file cache, Gebhart ISCA'11 (RFC): per-active-warp
+    /// FIFO cache, allocate on access, write-back on eviction.
+    Rfc,
+    /// Software-managed hierarchical RF, Gebhart MICRO'11 (SHRF):
+    /// strand-scoped compiler-managed partitions, on-demand fill.
+    Shrf,
+    /// This paper: software register-interval prefetching. `plus` enables
+    /// LTRF+ liveness filtering (§3.2). (LTRF_conf is LTRF compiled with
+    /// `CompileOptions::renumber = true`.)
+    Ltrf { plus: bool },
+}
+
+impl HierarchyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            HierarchyKind::Baseline => "BL",
+            HierarchyKind::Rfc => "RFC",
+            HierarchyKind::Shrf => "SHRF",
+            HierarchyKind::Ltrf { plus: false } => "LTRF",
+            HierarchyKind::Ltrf { plus: true } => "LTRF+",
+        }
+    }
+
+    /// Does this hierarchy consume compiled prefetch subgraphs?
+    pub fn uses_subgraphs(self) -> bool {
+        matches!(self, HierarchyKind::Shrf | HierarchyKind::Ltrf { .. })
+    }
+
+    /// The compile mode this hierarchy expects.
+    pub fn subgraph_mode(self) -> SubgraphMode {
+        match self {
+            HierarchyKind::Shrf => SubgraphMode::Strands,
+            _ => SubgraphMode::RegisterIntervals,
+        }
+    }
+}
+
+/// Memory system parameters (Table 3 + GDDR5 timing abstracted to
+/// latency/bandwidth).
+#[derive(Clone, Copy, Debug)]
+pub struct MemConfig {
+    /// L1D: 16KB, 4-way, 128B lines per SM.
+    pub l1_lines: usize,
+    pub l1_assoc: usize,
+    pub l1_hit_cycles: u32,
+    /// Shared LLC: 2MB, 8-way, 128B lines.
+    pub llc_lines: usize,
+    pub llc_assoc: usize,
+    pub llc_hit_cycles: u32,
+    /// DRAM: 8 channels, fixed access latency + per-channel service rate.
+    pub dram_channels: usize,
+    pub dram_latency: u32,
+    /// Cycles a channel is occupied per 128B line (bandwidth limit).
+    pub dram_service_cycles: u32,
+    /// MSHRs per SM (max outstanding L1 misses).
+    pub mshrs: usize,
+    /// Shared-memory access latency.
+    pub shared_cycles: u32,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        MemConfig {
+            l1_lines: 128, // 16KB / 128B
+            l1_assoc: 4,
+            l1_hit_cycles: 24,
+            llc_lines: 16384, // 2MB / 128B
+            llc_assoc: 8,
+            llc_hit_cycles: 120,
+            dram_channels: 8,
+            dram_latency: 220,
+            dram_service_cycles: 2,
+            mshrs: 32,
+            shared_cycles: 24,
+        }
+    }
+}
+
+/// Full simulated-system configuration. Defaults reproduce Table 3 with
+/// one simulated SM (the paper's 24 SMs are homogeneous; IPC/SM is the
+/// reported metric — see DESIGN.md).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub num_sms: usize,
+    /// Hardware warp contexts per SM (Table 3: 64).
+    pub warps_per_sm: usize,
+    /// Two-level scheduler active pool (Table 3: 8).
+    pub active_warps: usize,
+    /// MRF capacity in 1024-bit warp-registers (Table 3: 2048 = 256KB).
+    pub warp_regs_capacity: usize,
+    /// MRF banks (Table 3: 16).
+    pub mrf_banks: usize,
+    /// MRF bank access latency in cycles (data-ready time).
+    pub mrf_access_cycles: u32,
+    /// MRF bank busy time per access. 1 (pipelined) for baseline HP SRAM;
+    /// = access latency for the slow non-pipelined technologies.
+    pub mrf_occupancy_cycles: u32,
+    /// RF$ bank access cycles (the fast level).
+    pub cache_access_cycles: u32,
+    /// RF$ partition size in registers (= max regs per register-interval;
+    /// Table 3: 16).
+    pub regs_per_interval: usize,
+    /// Operand collectors per SM (bounds in-flight collecting insts).
+    pub operand_collectors: usize,
+    /// Issue slots per cycle per SM.
+    pub issue_width: usize,
+    /// ALU pipeline latency.
+    pub alu_cycles: u32,
+    /// SFU latency.
+    pub sfu_cycles: u32,
+    /// MRF→RF$ crossbar: registers transferred per cycle (narrowed 4×
+    /// from the baseline 4-reg-wide crossbar — §5.2).
+    pub xbar_regs_per_cycle: u32,
+    /// MRF→RF$ crossbar traversal latency in cycles (§5.2: 4).
+    pub xbar_latency: u32,
+    /// RFC capacity per active warp, in registers (16KB total / 8 warps /
+    /// 128B = 16).
+    pub rfc_regs_per_warp: usize,
+    pub mem: MemConfig,
+    pub hierarchy: HierarchyKind,
+    /// Register→bank mapping for the MRF.
+    pub bank_map: BankMap,
+    /// Start the reactivation working-set refetch when the blocking miss
+    /// returns, before the warp re-enters the active pool (§3.2). Ablation
+    /// knob; disabling it serializes refetch with pool occupancy.
+    pub early_refetch: bool,
+    /// Safety valve for runaway simulations.
+    pub max_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            num_sms: 1,
+            warps_per_sm: 64,
+            active_warps: 8,
+            warp_regs_capacity: 2048,
+            mrf_banks: 16,
+            mrf_access_cycles: 2,
+            mrf_occupancy_cycles: 1,
+            cache_access_cycles: 1,
+            regs_per_interval: 16,
+            operand_collectors: 16,
+            issue_width: 2,
+            alu_cycles: 4,
+            sfu_cycles: 16,
+            xbar_regs_per_cycle: 4,
+            xbar_latency: 4,
+            rfc_regs_per_warp: 6,
+            mem: MemConfig::default(),
+            hierarchy: HierarchyKind::Baseline,
+            bank_map: BankMap::Interleave,
+            early_refetch: true,
+            max_cycles: 30_000_000,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Table-3 baseline with a given hierarchy.
+    pub fn with_hierarchy(h: HierarchyKind) -> Self {
+        SimConfig { hierarchy: h, ..Default::default() }
+    }
+
+    /// Apply a Table-2 register-file design: capacity and access latency
+    /// scale; `latency_override` replaces the design's latency factor
+    /// (used for the Ideal point and for tolerable-latency sweeps).
+    pub fn apply_design(mut self, d: &RfDesign, latency_override: Option<f64>) -> Self {
+        let factor = latency_override.unwrap_or_else(|| d.latency());
+        self.warp_regs_capacity = d.warp_registers();
+        self = self.with_latency_factor(factor);
+        self.mrf_banks = d.num_banks().min(128);
+        self
+    }
+
+    /// Scale only the MRF latency by `factor` (×1 = Table-3 baseline).
+    /// Factors ≤ 1.25 model pipelined SRAM banks (occupancy 1); slower
+    /// cells use the non-pipelined CACTI bank model (occupancy = latency).
+    pub fn with_latency_factor(mut self, factor: f64) -> Self {
+        self.mrf_access_cycles = crate::timing::bank::cycles(factor, 2);
+        self.mrf_occupancy_cycles =
+            if factor <= 1.25 { 1 } else { self.mrf_access_cycles };
+        self
+    }
+
+    /// BL fairness adjustment (§6): fold the 16KB RF$ capacity into the
+    /// MRF when no cache level exists.
+    pub fn normalize_capacity(mut self) -> Self {
+        if matches!(self.hierarchy, HierarchyKind::Baseline) {
+            self.warp_regs_capacity += self.regs_per_interval * self.active_warps;
+        }
+        self
+    }
+
+    /// Resident warps for a workload needing `regs_per_thread` registers.
+    pub fn resident_warps(&self, regs_per_thread: u16) -> usize {
+        (self.warp_regs_capacity / regs_per_thread.max(1) as usize).clamp(1, self.warps_per_sm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::DESIGN_7_DWM;
+
+    #[test]
+    fn defaults_match_table3() {
+        let c = SimConfig::default();
+        assert_eq!(c.warps_per_sm, 64);
+        assert_eq!(c.active_warps, 8);
+        assert_eq!(c.warp_regs_capacity, 2048); // 256KB
+        assert_eq!(c.mrf_banks, 16);
+        assert_eq!(c.regs_per_interval, 16);
+        // RF$ = 16 regs × 8 warps × 128B = 16KB (Table 3).
+        assert_eq!(c.regs_per_interval * c.active_warps * 128, 16 * 1024);
+    }
+
+    #[test]
+    fn design_application_scales_latency_and_capacity() {
+        let c = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: false })
+            .apply_design(&DESIGN_7_DWM, None);
+        assert_eq!(c.warp_regs_capacity, 16384); // 2MB
+        assert_eq!(c.mrf_access_cycles, 13); // 6.3 × 2 rounded
+        assert_eq!(c.mrf_occupancy_cycles, 13); // non-pipelined DWM
+        assert_eq!(c.mrf_banks, 128);
+    }
+
+    #[test]
+    fn baseline_gets_rfc_capacity_back() {
+        let c = SimConfig::with_hierarchy(HierarchyKind::Baseline).normalize_capacity();
+        assert_eq!(c.warp_regs_capacity, 2048 + 128);
+        let l = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: false }).normalize_capacity();
+        assert_eq!(l.warp_regs_capacity, 2048);
+    }
+
+    #[test]
+    fn hierarchy_names_and_modes() {
+        assert_eq!(HierarchyKind::Baseline.name(), "BL");
+        assert_eq!(HierarchyKind::Ltrf { plus: true }.name(), "LTRF+");
+        assert_eq!(
+            HierarchyKind::Shrf.subgraph_mode(),
+            crate::compiler::SubgraphMode::Strands
+        );
+        assert!(!HierarchyKind::Rfc.uses_subgraphs());
+        assert!(HierarchyKind::Ltrf { plus: false }.uses_subgraphs());
+    }
+}

@@ -1,0 +1,141 @@
+//! Multi-SM driver: lockstep SM simulation over a shared memory system,
+//! with global skip-ahead when no SM can make progress this cycle.
+
+use super::config::SimConfig;
+use super::memsys::SharedMem;
+use super::sm::SmSim;
+use super::stats::Stats;
+use crate::compiler::{compile, CompileOptions, CompiledKernel};
+use crate::workloads::gen;
+use crate::workloads::WorkloadSpec;
+
+/// Run a compiled kernel under `cfg`. Resident warp count follows the MRF
+/// capacity (TLP — §2.1); all SMs run the same kernel on staggered data.
+pub fn run(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
+    let resident = cfg.resident_warps(ck.kernel.num_regs);
+    let mut shared = SharedMem::new(cfg.mem);
+    let mut sms: Vec<SmSim> =
+        (0..cfg.num_sms).map(|s| SmSim::new(cfg, ck, resident, s)).collect();
+
+    let mut now: u64 = 0;
+    loop {
+        let mut next = u64::MAX;
+        let mut all_done = true;
+        for sm in &mut sms {
+            let hint = sm.step(now, &mut shared);
+            next = next.min(hint);
+            all_done &= sm.done();
+        }
+        if all_done || now >= cfg.max_cycles {
+            break;
+        }
+        now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
+    }
+
+    let mut total = Stats::default();
+    for sm in &sms {
+        total.merge(&sm.stats);
+        total.l1_hits += sm.mem.l1_hits;
+        total.l1_misses += sm.mem.l1_misses;
+    }
+    total.cycles = now;
+    total.llc_hits = shared.llc_hits;
+    total.llc_misses = shared.llc_misses;
+    total
+}
+
+/// Compile options matching a simulator configuration.
+pub fn compile_options(cfg: &SimConfig, renumber: bool) -> CompileOptions {
+    CompileOptions {
+        max_regs_per_interval: cfg.regs_per_interval,
+        num_banks: cfg.mrf_banks,
+        renumber,
+        mode: cfg.hierarchy.subgraph_mode(),
+        bank_map: cfg.bank_map,
+    }
+}
+
+/// Build + compile + simulate one workload. `renumber` selects LTRF_conf
+/// when the hierarchy is LTRF.
+pub fn run_workload(spec: &WorkloadSpec, cfg: &SimConfig, renumber: bool) -> Stats {
+    let kernel = gen::build(spec);
+    let ck = compile(&kernel, compile_options(cfg, renumber));
+    run(&ck, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::HierarchyKind;
+    use crate::workloads::suite;
+
+    fn quick_cfg(kind: HierarchyKind) -> SimConfig {
+        SimConfig { max_cycles: 5_000_000, ..SimConfig::with_hierarchy(kind) }.normalize_capacity()
+    }
+
+    #[test]
+    fn workload_runs_to_completion_bl_and_ltrf() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        for kind in [HierarchyKind::Baseline, HierarchyKind::Ltrf { plus: false }] {
+            let st = run_workload(spec, &quick_cfg(kind), false);
+            assert!(st.warps_finished > 0, "{}", kind.name());
+            assert!(st.cycles < 5_000_000, "{} hit the cycle cap", kind.name());
+        }
+    }
+
+    #[test]
+    fn register_sensitive_workload_gains_tlp_from_bigger_rf() {
+        let spec = suite::workload_by_name("cfd").unwrap();
+        let small = quick_cfg(HierarchyKind::Ltrf { plus: false });
+        let big = SimConfig { warp_regs_capacity: 16384, ..small };
+        assert!(big.resident_warps(spec.regs_per_thread()) > small.resident_warps(spec.regs_per_thread()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let spec = suite::workload_by_name("hotspot").unwrap();
+        let cfg = quick_cfg(HierarchyKind::Ltrf { plus: false });
+        let a = run_workload(spec, &cfg, false);
+        let b = run_workload(spec, &cfg, false);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.instructions, b.instructions);
+    }
+
+    #[test]
+    fn multi_sm_scales_instruction_count() {
+        let spec = suite::workload_by_name("lud").unwrap();
+        let one = quick_cfg(HierarchyKind::Baseline);
+        let two = SimConfig { num_sms: 2, ..one };
+        let s1 = run_workload(spec, &one, false);
+        let s2 = run_workload(spec, &two, false);
+        assert!(
+            (s2.instructions as f64 / s1.instructions as f64 - 2.0).abs() < 0.05,
+            "2 SMs ≈ 2× instructions"
+        );
+    }
+
+    #[test]
+    fn ltrf_conf_not_slower_than_ltrf_at_high_latency() {
+        let spec = suite::workload_by_name("gaussian").unwrap();
+        let cfg = quick_cfg(HierarchyKind::Ltrf { plus: false }).with_latency_factor(6.3);
+        let plain = run_workload(spec, &cfg, false);
+        let conf = run_workload(spec, &cfg, true);
+        // Renumbering's mechanism claim: fewer serialized bank accesses
+        // during prefetch operations (§7.3).
+        assert!(
+            conf.prefetch_bank_conflicts <= plain.prefetch_bank_conflicts,
+            "LTRF_conf conflicts {} vs LTRF {}",
+            conf.prefetch_bank_conflicts,
+            plain.prefetch_bank_conflicts
+        );
+        // And end-to-end it must stay in the same performance envelope
+        // (per-workload IPC deltas of a few percent are expected noise;
+        // the +3.8% mean is asserted at suite level in the coordinator).
+        assert!(
+            conf.ipc() >= plain.ipc() * 0.9,
+            "LTRF_conf {} vs LTRF {}",
+            conf.ipc(),
+            plain.ipc()
+        );
+    }
+}

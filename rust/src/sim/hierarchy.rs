@@ -1,0 +1,498 @@
+//! Register-file hierarchies under study (§6 comparison points).
+//!
+//! One dispatcher owns the shared timing resources (MRF banks, RF$ banks,
+//! the narrow refill crossbar) and implements the four policies:
+//!
+//! * **BL** — every operand read/write goes to an MRF bank.
+//! * **RFC** — per-warp FIFO hardware cache in front of the MRF
+//!   (Gebhart ISCA'11); no prefetch, write-back victims.
+//! * **SHRF** — compiler-managed partitions scoped to strands (Gebhart
+//!   MICRO'11): on-demand fill, write-back + release at strand exit.
+//! * **LTRF / LTRF+** — this paper: the whole register-interval working
+//!   set is prefetched through the narrow crossbar at interval entry and
+//!   *every* in-interval access hits the RF$ (asserted); LTRF+ filters
+//!   dead registers out of write-back/refetch traffic using the liveness
+//!   bit-vector.
+
+use super::config::{HierarchyKind, SimConfig};
+use super::regfile::{BankArray, TransferLink};
+use super::stats::Stats;
+use super::warp::WarpSim;
+use crate::compiler::{BankMap, CompiledKernel};
+use crate::ir::Inst;
+use crate::util::RegSet;
+
+/// The register-file hierarchy of one SM.
+#[derive(Clone, Debug)]
+pub struct RegHierarchy {
+    pub kind: HierarchyKind,
+    /// Main register file banks (single-ported, non-pipelined).
+    pub mrf: BankArray,
+    /// Register-file-cache banks (#regs-per-interval banks; a warp's
+    /// cached registers are interleaved one per bank — §5.1).
+    pub rf_cache: BankArray,
+    /// Narrow MRF→RF$ refill crossbar (§5.2).
+    pub xbar: TransferLink,
+}
+
+/// What happens when a warp is about to issue from a new block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryAction {
+    /// Proceed with issue.
+    Proceed,
+    /// A prefetch was started; the warp blocks until this cycle.
+    Prefetch { done_at: u64 },
+}
+
+impl RegHierarchy {
+    pub fn new(cfg: &SimConfig) -> Self {
+        RegHierarchy {
+            kind: cfg.hierarchy,
+            mrf: BankArray::new(
+                cfg.mrf_banks,
+                cfg.mrf_access_cycles,
+                cfg.mrf_occupancy_cycles,
+                cfg.bank_map,
+            ),
+            // RF$ banks are indexed by WCB slot, not architectural id.
+            rf_cache: BankArray::new(
+                cfg.regs_per_interval.max(1),
+                cfg.cache_access_cycles,
+                cfg.cache_access_cycles,
+                BankMap::Interleave,
+            ),
+            xbar: TransferLink::new(cfg.xbar_regs_per_cycle, cfg.xbar_latency),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Operand read path
+    // ---------------------------------------------------------------
+
+    /// Schedule the operand reads of `inst` for `warp`; returns the cycle
+    /// all operands are collected.
+    pub fn read_operands(
+        &mut self,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let mut ready = now + 1; // decode/collect minimum
+        match self.kind {
+            HierarchyKind::Baseline => {
+                for r in inst.uses() {
+                    let t = self.mrf.schedule_reg(r, warp.id, now);
+                    stats.mrf_reads += 1;
+                    ready = ready.max(t);
+                }
+            }
+            HierarchyKind::Rfc => {
+                for r in inst.uses() {
+                    if warp.rfc.contains(r) {
+                        stats.rfc_hits += 1;
+                        stats.cache_reads += 1;
+                        ready = ready.max(now + self.rf_cache.access_cycles as u64);
+                    } else {
+                        // Read misses go straight to the MRF and do NOT
+                        // allocate: the RFC caches *results* (values are
+                        // written, then read back soon) — Gebhart ISCA'11.
+                        stats.rfc_misses += 1;
+                        stats.mrf_reads += 1;
+                        let t = self.mrf.schedule_reg(r, warp.id, now);
+                        ready = ready.max(t);
+                    }
+                }
+            }
+            HierarchyKind::Shrf => {
+                for r in inst.uses() {
+                    if warp.wcb.valid.contains(r) {
+                        stats.rfc_hits += 1;
+                        stats.cache_reads += 1;
+                        let slot = warp.wcb.bank_of(r).unwrap() as usize;
+                        ready = ready.max(self.rf_cache.schedule(slot, now));
+                    } else {
+                        // On-demand fill from the MRF.
+                        stats.rfc_misses += 1;
+                        stats.mrf_reads += 1;
+                        let t = self.mrf.schedule_reg(r, warp.id, now);
+                        let arr = self.xbar.transfer(t);
+                        warp.wcb.allocate(r);
+                        ready = ready.max(arr);
+                    }
+                }
+            }
+            HierarchyKind::Ltrf { .. } => {
+                for r in inst.uses() {
+                    // The central guarantee (§3.1): every in-interval
+                    // access is serviced from the RF$.
+                    debug_assert!(
+                        warp.wcb.valid.contains(r),
+                        "LTRF service guarantee violated: r{r} not resident (warp {}, interval {:?})",
+                        warp.id,
+                        warp.wcb.current_interval
+                    );
+                    stats.cache_reads += 1;
+                    let slot = warp.wcb.bank_of(r).unwrap_or(0) as usize;
+                    ready = ready.max(self.rf_cache.schedule(slot, now));
+                }
+            }
+        }
+        ready
+    }
+
+    /// Schedule the destination write of an instruction completing at
+    /// `done`. Returns the write completion time.
+    pub fn write_dest(
+        &mut self,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        match self.kind {
+            HierarchyKind::Baseline => {
+                stats.mrf_writes += 1;
+                self.mrf.note_write(done)
+            }
+            HierarchyKind::Rfc => {
+                stats.cache_writes += 1;
+                if warp.rfc.insert(reg, true).is_some() {
+                    // Dirty victim written back to the MRF.
+                    stats.mrf_writes += 1;
+                    self.mrf.note_write(done);
+                }
+                done + self.rf_cache.access_cycles as u64
+            }
+            HierarchyKind::Shrf | HierarchyKind::Ltrf { .. } => {
+                stats.cache_writes += 1;
+                warp.wcb.allocate(reg);
+                warp.wcb.dirty.insert(reg);
+                warp.wcb.live.insert(reg);
+                let slot = warp.wcb.bank_of(reg).unwrap_or(0) as usize;
+                let _ = slot;
+                self.rf_cache.note_write(done)
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Prefetch-subgraph transitions
+    // ---------------------------------------------------------------
+
+    /// Called when `warp` is about to issue the first instruction of a
+    /// block. Handles interval/strand transitions.
+    pub fn on_block_enter(
+        &mut self,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        block: usize,
+        now: u64,
+        stats: &mut Stats,
+    ) -> EntryAction {
+        if !self.kind.uses_subgraphs() {
+            return EntryAction::Proceed;
+        }
+        let interval = ck.intervals.block_interval[block];
+        if warp.wcb.current_interval == Some(interval) {
+            return EntryAction::Proceed;
+        }
+        match self.kind {
+            HierarchyKind::Shrf => {
+                // Strand exit: write back dirty registers, release the
+                // partition, fill on demand in the new strand.
+                let dirty = warp.wcb.dirty;
+                for r in dirty.iter() {
+                    self.mrf.schedule_reg_write(r, warp.id, now);
+                    stats.mrf_writes += 1;
+                    stats.writeback_regs += 1;
+                }
+                warp.wcb.release_all();
+                warp.wcb.current_interval = Some(interval);
+                EntryAction::Proceed
+            }
+            HierarchyKind::Ltrf { plus } => {
+                // Write back displaced dirty registers…
+                let new_ws = ck.intervals.intervals[interval].working_set;
+                let mut displaced = warp.wcb.dirty.difference(&new_ws);
+                if plus {
+                    displaced = displaced.intersect(&warp.wcb.live);
+                    stats.dead_regs_skipped +=
+                        (warp.wcb.dirty.difference(&new_ws).len() - displaced.len()) as u64;
+                }
+                for r in displaced.iter() {
+                    self.mrf.schedule_reg_write(r, warp.id, now);
+                    stats.mrf_writes += 1;
+                    stats.writeback_regs += 1;
+                }
+                // …release everything outside the new working set…
+                let stale = warp.wcb.valid.difference(&new_ws);
+                for r in stale.iter() {
+                    warp.wcb.release(r);
+                }
+                // …and prefetch the registers not already resident.
+                let fetch = if plus {
+                    new_ws.difference(&warp.wcb.valid).intersect(&warp.wcb.live)
+                } else {
+                    new_ws.difference(&warp.wcb.valid)
+                };
+                // Dead registers still need RF$ space (allocation without
+                // data movement — §5.2).
+                for r in new_ws.difference(&warp.wcb.valid).iter() {
+                    warp.wcb.allocate(r);
+                }
+                warp.wcb.current_interval = Some(interval);
+                let done_at = self.run_prefetch(&fetch, warp.id, now, stats);
+                if done_at > now {
+                    EntryAction::Prefetch { done_at }
+                } else {
+                    EntryAction::Proceed
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Move `fetch` from the MRF into the RF$ (bank-conflict-serialized
+    /// reads + narrow-crossbar transfer). Returns completion time.
+    fn run_prefetch(&mut self, fetch: &RegSet, warp_id: usize, now: u64, stats: &mut Stats) -> u64 {
+        if fetch.is_empty() {
+            return now;
+        }
+        stats.prefetch_ops += 1;
+        stats.prefetch_regs += fetch.len() as u64;
+        let conflicts_before = self.mrf.conflict_cycles;
+        let mut done = now;
+        for r in fetch.iter() {
+            let t = self.mrf.schedule_reg(r, warp_id, now);
+            stats.mrf_reads += 1;
+            let arr = self.xbar.transfer(t);
+            done = done.max(arr);
+        }
+        let delta = self.mrf.conflict_cycles - conflicts_before;
+        stats.prefetch_bank_conflicts += delta / self.mrf.occupancy_cycles.max(1) as u64;
+        done
+    }
+
+    // ---------------------------------------------------------------
+    // Two-level scheduler hooks
+    // ---------------------------------------------------------------
+
+    /// Warp descheduled on a long-latency miss (§5.2 "Warp Stall").
+    pub fn on_deactivate(&mut self, warp: &mut WarpSim, now: u64, stats: &mut Stats) {
+        match self.kind {
+            HierarchyKind::Baseline => {}
+            HierarchyKind::Rfc => {
+                for r in warp.rfc.flush() {
+                    self.mrf.schedule_reg_write(r, warp.id, now);
+                    stats.mrf_writes += 1;
+                    stats.writeback_regs += 1;
+                }
+            }
+            HierarchyKind::Shrf | HierarchyKind::Ltrf { .. } => {
+                let plus = matches!(self.kind, HierarchyKind::Ltrf { plus: true });
+                // LTRF writes back the whole dirty set; LTRF+ only the
+                // live part.
+                let mut wb = warp.wcb.dirty;
+                if plus {
+                    let dead = wb.difference(&warp.wcb.live);
+                    stats.dead_regs_skipped += dead.len() as u64;
+                    wb = wb.intersect(&warp.wcb.live);
+                }
+                for r in wb.iter() {
+                    self.mrf.schedule_reg_write(r, warp.id, now);
+                    stats.mrf_writes += 1;
+                    stats.writeback_regs += 1;
+                }
+                warp.wcb.release_all();
+            }
+        }
+    }
+
+    /// Warp re-entering the active pool. Returns the prefetch completion
+    /// cycle if the warp must refetch its working set first.
+    pub fn on_activate(
+        &mut self,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        now: u64,
+        stats: &mut Stats,
+    ) -> Option<u64> {
+        stats.activations += 1;
+        match self.kind {
+            HierarchyKind::Ltrf { plus } => {
+                let interval = warp.wcb.current_interval?;
+                // Refetch the working-set (live part under LTRF+) —
+                // §5.2 "Warp Stall" step 3 / working-set bit-vector.
+                // Registers already resident (an early refetch ran while
+                // the warp was pending) are not moved again.
+                let ws = ck.intervals.intervals[interval].working_set;
+                let mut fetch = ws.difference(&warp.wcb.valid);
+                if plus {
+                    fetch = fetch.intersect(&warp.wcb.live);
+                }
+                for r in ws.iter() {
+                    warp.wcb.allocate(r);
+                }
+                let done = self.run_prefetch(&fetch, warp.id, now, stats);
+                (done > now).then_some(done)
+            }
+            // BL/RFC/SHRF warps restart cold (RFC/SHRF refill on demand).
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::ir::{parser, Op};
+
+    const KSRC: &str = r#"
+.kernel h
+  mov r0, #4096
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  add r0, r0, #4
+  add r1, r1, #1
+  setp.lt p0, r1, #8
+  @p0 bra L1
+  st.global [r0], r3
+  exit
+"#;
+
+    fn setup(kind: HierarchyKind) -> (RegHierarchy, WarpSim, CompiledKernel, Stats) {
+        let k = parser::parse(KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf(16));
+        let cfg = SimConfig::with_hierarchy(kind);
+        let h = RegHierarchy::new(&cfg);
+        let w = WarpSim::new(0, crate::ir::exec::ExecState::new(1, &[]), 16, 16);
+        (h, w, ck, Stats::default())
+    }
+
+    fn add_inst() -> Inst {
+        let mut i = Inst::new(Op::IAdd);
+        i.dst = Some(3);
+        i.srcs = [Some(1), Some(2), None];
+        i
+    }
+
+    #[test]
+    fn baseline_reads_hit_mrf() {
+        let (mut h, mut w, _ck, mut st) = setup(HierarchyKind::Baseline);
+        let t = h.read_operands(&mut w, &add_inst(), 0, &mut st);
+        assert_eq!(st.mrf_reads, 2);
+        assert!(t >= 2, "MRF access is 2 cycles at 1x");
+    }
+
+    #[test]
+    fn rfc_allocates_on_write_not_read() {
+        let (mut h, mut w, _ck, mut st) = setup(HierarchyKind::Rfc);
+        // Reads miss and do NOT allocate.
+        let _ = h.read_operands(&mut w, &add_inst(), 0, &mut st);
+        assert_eq!(st.rfc_misses, 2);
+        let _ = h.read_operands(&mut w, &add_inst(), 100, &mut st);
+        assert_eq!(st.rfc_misses, 4, "read misses must not fill the RFC");
+        // A write allocates; the next read of that register hits.
+        let _ = h.write_dest(&mut w, 1, 200, &mut st);
+        let t = h.read_operands(&mut w, &add_inst(), 300, &mut st);
+        assert_eq!(st.rfc_hits, 1);
+        assert!(t >= 301);
+    }
+
+    #[test]
+    fn ltrf_interval_entry_prefetches_then_reads_hit_cache() {
+        let (mut h, mut w, ck, mut st) = setup(HierarchyKind::Ltrf { plus: false });
+        let act = h.on_block_enter(&mut w, &ck, 0, 0, &mut st);
+        let done = match act {
+            EntryAction::Prefetch { done_at } => done_at,
+            EntryAction::Proceed => panic!("first entry must prefetch"),
+        };
+        assert!(done > 0);
+        assert_eq!(st.prefetch_ops, 1);
+        assert!(st.prefetch_regs > 0);
+        // After the prefetch the working set is resident; reads hit.
+        let iv = ck.intervals.block_interval[0];
+        let ws = ck.intervals.intervals[iv].working_set;
+        assert!(ws.is_subset(&w.wcb.valid));
+        let mut i = Inst::new(Op::IAdd);
+        let regs: Vec<u16> = ws.iter().take(2).collect();
+        i.dst = Some(regs[0]);
+        i.srcs = [Some(regs[0]), Some(regs[1]), None];
+        let before = st.mrf_reads;
+        let _ = h.read_operands(&mut w, &i, done, &mut st);
+        assert_eq!(st.mrf_reads, before, "in-interval reads never touch the MRF");
+        assert_eq!(st.cache_reads, 2);
+    }
+
+    #[test]
+    fn ltrf_same_interval_no_refetch() {
+        let (mut h, mut w, ck, mut st) = setup(HierarchyKind::Ltrf { plus: false });
+        let _ = h.on_block_enter(&mut w, &ck, 0, 0, &mut st);
+        let iv = ck.intervals.block_interval[0];
+        // Entering another block of the same interval: no new prefetch.
+        if let Some(&b2) = ck.intervals.intervals[iv].blocks.get(1) {
+            let act = h.on_block_enter(&mut w, &ck, b2, 50, &mut st);
+            assert_eq!(act, EntryAction::Proceed);
+            assert_eq!(st.prefetch_ops, 1);
+        }
+    }
+
+    #[test]
+    fn ltrf_deactivate_writes_back_dirty_and_reactivation_refetches() {
+        let (mut h, mut w, ck, mut st) = setup(HierarchyKind::Ltrf { plus: false });
+        let _ = h.on_block_enter(&mut w, &ck, 0, 0, &mut st);
+        // Dirty one register.
+        let r = w.wcb.valid.iter().next().unwrap();
+        w.wcb.dirty.insert(r);
+        w.wcb.live.insert(r);
+        h.on_deactivate(&mut w, 100, &mut st);
+        assert_eq!(st.writeback_regs, 1);
+        assert_eq!(w.wcb.resident(), 0);
+        let done = h.on_activate(&mut w, &ck, 200, &mut st);
+        assert!(done.is_some(), "reactivation must refetch the working set");
+        assert!(w.wcb.resident() > 0);
+    }
+
+    #[test]
+    fn ltrf_plus_skips_dead_registers() {
+        let (mut h, mut w, ck, mut st) = setup(HierarchyKind::Ltrf { plus: true });
+        let _ = h.on_block_enter(&mut w, &ck, 0, 0, &mut st);
+        // Two dirty registers, one live, one dead.
+        let mut it = w.wcb.valid.iter();
+        let a = it.next().unwrap();
+        let b = it.next().unwrap();
+        w.wcb.dirty.insert(a);
+        w.wcb.dirty.insert(b);
+        w.wcb.live.insert(a); // b stays dead
+        h.on_deactivate(&mut w, 100, &mut st);
+        assert_eq!(st.writeback_regs, 1);
+        assert_eq!(st.dead_regs_skipped, 1);
+    }
+
+    #[test]
+    fn shrf_fills_on_demand_and_flushes_at_strand_exit() {
+        let k = parser::parse(KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::strands(16));
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Shrf);
+        let mut h = RegHierarchy::new(&cfg);
+        let mut w = WarpSim::new(0, crate::ir::exec::ExecState::new(1, &[]), 16, 16);
+        let mut st = Stats::default();
+        assert_eq!(h.on_block_enter(&mut w, &ck, 0, 0, &mut st), EntryAction::Proceed);
+        let _ = h.read_operands(&mut w, &add_inst(), 0, &mut st);
+        assert_eq!(st.rfc_misses, 2);
+        let _ = h.read_operands(&mut w, &add_inst(), 50, &mut st);
+        assert_eq!(st.rfc_hits, 2);
+        // Strand exit writes back dirty and clears the partition.
+        let _ = h.write_dest(&mut w, 3, 60, &mut st);
+        let next_strand = (0..ck.kernel.num_blocks())
+            .find(|&b| ck.intervals.block_interval[b] != ck.intervals.block_interval[0])
+            .unwrap();
+        let _ = h.on_block_enter(&mut w, &ck, next_strand, 100, &mut st);
+        assert_eq!(st.writeback_regs, 1);
+        assert_eq!(w.wcb.resident(), 0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Memory system: per-SM L1D, shared LLC, bandwidth-limited DRAM.
+//!
+//! Latency/bandwidth fidelity only — no coherence, no data (values come
+//! from the functional executor). Misses allocate MSHRs; DRAM channels are
+//! busy-until resources (FR-FCFS is abstracted as per-channel in-order
+//! service at the channel's line rate, which preserves the bandwidth and
+//! queueing behaviour the paper's workloads exercise).
+
+use super::config::MemConfig;
+
+const LINE_SHIFT: u64 = 7; // 128B lines
+
+/// Set-associative tag array with LRU.
+#[derive(Clone, Debug)]
+struct TagArray {
+    sets: usize,
+    assoc: usize,
+    /// tag per way, `u64::MAX` = invalid.
+    tags: Vec<u64>,
+    /// LRU stamp per way.
+    stamp: Vec<u64>,
+    tick: u64,
+}
+
+impl TagArray {
+    fn new(lines: usize, assoc: usize) -> Self {
+        let sets = (lines / assoc).max(1);
+        TagArray {
+            sets,
+            assoc,
+            tags: vec![u64::MAX; sets * assoc],
+            stamp: vec![0; sets * assoc],
+            tick: 0,
+        }
+    }
+
+    /// Probe for `line`; on miss, fill with LRU eviction. Returns hit.
+    fn access(&mut self, line: u64) -> bool {
+        self.tick += 1;
+        let set = (line % self.sets as u64) as usize;
+        let base = set * self.assoc;
+        for w in 0..self.assoc {
+            if self.tags[base + w] == line {
+                self.stamp[base + w] = self.tick;
+                return true;
+            }
+        }
+        // Miss: replace LRU way.
+        let victim = (0..self.assoc).min_by_key(|&w| self.stamp[base + w]).unwrap();
+        self.tags[base + victim] = line;
+        self.stamp[base + victim] = self.tick;
+        false
+    }
+}
+
+/// The shared part: LLC tags + DRAM channels.
+#[derive(Clone, Debug)]
+pub struct SharedMem {
+    llc: TagArray,
+    dram_free: Vec<u64>,
+    cfg: MemConfig,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+}
+
+impl SharedMem {
+    pub fn new(cfg: MemConfig) -> Self {
+        SharedMem {
+            llc: TagArray::new(cfg.llc_lines, cfg.llc_assoc),
+            dram_free: vec![0; cfg.dram_channels],
+            cfg,
+            llc_hits: 0,
+            llc_misses: 0,
+        }
+    }
+
+    /// Service an L1 miss for `line` arriving at `now`; returns data
+    /// arrival time at the SM.
+    pub fn access(&mut self, line: u64, now: u64) -> u64 {
+        if self.llc.access(line) {
+            self.llc_hits += 1;
+            now + self.cfg.llc_hit_cycles as u64
+        } else {
+            self.llc_misses += 1;
+            let ch = (line % self.cfg.dram_channels as u64) as usize;
+            let start = self.dram_free[ch].max(now + self.cfg.llc_hit_cycles as u64);
+            self.dram_free[ch] = start + self.cfg.dram_service_cycles as u64;
+            start + self.cfg.dram_latency as u64
+        }
+    }
+}
+
+/// Per-SM level: L1D tags + MSHR accounting.
+#[derive(Clone, Debug)]
+pub struct SmMem {
+    l1: TagArray,
+    /// Completion times of outstanding misses (MSHR occupancy).
+    outstanding: Vec<u64>,
+    cfg: MemConfig,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+}
+
+/// Outcome of a global-memory access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemResult {
+    /// Data ready at cycle (an L1 hit — short latency, warp stays active).
+    Hit(u64),
+    /// L1 miss; data ready at cycle (long latency, warp deactivates).
+    /// MSHR exhaustion is folded in: a miss with no free MSHR queues
+    /// behind the earliest outstanding one.
+    Miss(u64),
+}
+
+impl SmMem {
+    pub fn new(cfg: MemConfig) -> Self {
+        SmMem {
+            l1: TagArray::new(cfg.l1_lines, cfg.l1_assoc),
+            outstanding: Vec::new(),
+            cfg,
+            l1_hits: 0,
+            l1_misses: 0,
+        }
+    }
+
+    /// Access `addr` at cycle `now` against the shared levels.
+    pub fn access_global(&mut self, addr: u64, now: u64, shared: &mut SharedMem) -> MemResult {
+        let line = addr >> LINE_SHIFT;
+        // Retire completed MSHRs.
+        self.outstanding.retain(|&t| t > now);
+        if self.l1.access(line) {
+            self.l1_hits += 1;
+            return MemResult::Hit(now + self.cfg.l1_hit_cycles as u64);
+        }
+        self.l1_misses += 1;
+        let mut start = now;
+        if self.outstanding.len() >= self.cfg.mshrs {
+            // No free MSHR: the miss queues until the earliest outstanding
+            // one retires (bandwidth limit, not a deadlock).
+            let (i, &earliest) = self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &t)| t)
+                .expect("mshrs > 0");
+            start = start.max(earliest);
+            self.outstanding.swap_remove(i);
+        }
+        let done = shared.access(line, start + self.cfg.l1_hit_cycles as u64);
+        self.outstanding.push(done);
+        MemResult::Miss(done)
+    }
+
+    /// Shared-memory access (fixed latency, never misses).
+    pub fn access_shared(&self, now: u64) -> u64 {
+        now + self.cfg.shared_cycles as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MemConfig {
+        MemConfig::default()
+    }
+
+    #[test]
+    fn l1_hit_after_fill() {
+        let mut shared = SharedMem::new(cfg());
+        let mut sm = SmMem::new(cfg());
+        let r1 = sm.access_global(0x1000, 0, &mut shared);
+        assert!(matches!(r1, MemResult::Miss(_)));
+        let r2 = sm.access_global(0x1000, 1000, &mut shared);
+        assert_eq!(r2, MemResult::Hit(1000 + cfg().l1_hit_cycles as u64));
+        assert_eq!(sm.l1_hits, 1);
+        assert_eq!(sm.l1_misses, 1);
+    }
+
+    #[test]
+    fn same_line_same_set() {
+        let mut shared = SharedMem::new(cfg());
+        let mut sm = SmMem::new(cfg());
+        let _ = sm.access_global(0x1000, 0, &mut shared);
+        // Same 128B line → hit.
+        assert!(matches!(sm.access_global(0x1040, 10, &mut shared), MemResult::Hit(_)));
+    }
+
+    #[test]
+    fn mshr_exhaustion_queues() {
+        let mut shared = SharedMem::new(cfg());
+        let mut sm = SmMem::new(cfg());
+        // Fire more distinct lines than MSHRs at cycle 0; the overflow
+        // requests must serialize behind earlier completions.
+        let mut times = Vec::new();
+        for i in 0..(cfg().mshrs + 4) {
+            match sm.access_global((i as u64) << 20, 0, &mut shared) {
+                MemResult::Miss(t) => times.push(t),
+                MemResult::Hit(_) => panic!("distinct lines cannot hit"),
+            }
+        }
+        let max_in_window = times.iter().take(cfg().mshrs).max().copied().unwrap();
+        let overflow_min = times[cfg().mshrs..].iter().min().copied().unwrap();
+        assert!(
+            overflow_min > *times[..cfg().mshrs].iter().min().unwrap(),
+            "overflow misses must queue (got {overflow_min} vs window max {max_in_window})"
+        );
+    }
+
+    #[test]
+    fn dram_bandwidth_queues() {
+        let mut shared = SharedMem::new(cfg());
+        // Two distinct lines mapping to the same channel (ch = line % 8).
+        let a = shared.access(8, 0);
+        let b = shared.access(16, 0);
+        assert!(b > a - cfg().dram_latency as u64, "second request must queue behind first");
+        assert_eq!(shared.llc_misses, 2);
+    }
+
+    #[test]
+    fn llc_hit_cheaper_than_dram() {
+        let mut shared = SharedMem::new(cfg());
+        let miss_t = shared.access(99, 0);
+        let hit_t = shared.access(99, 0);
+        assert!(hit_t < miss_t);
+        assert_eq!(shared.llc_hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_works() {
+        let mut t = TagArray::new(4, 2); // 2 sets × 2 ways
+        assert!(!t.access(0)); // set 0
+        assert!(!t.access(2)); // set 0
+        assert!(t.access(0)); // hit, refreshes
+        assert!(!t.access(4)); // set 0 → evicts line 2 (LRU)
+        assert!(!t.access(2)); // line 2 gone
+    }
+}

@@ -1,0 +1,40 @@
+//! Cycle-level GPU SM simulator — the GPGPU-Sim stand-in.
+//!
+//! Models exactly the structures the paper's evaluation depends on:
+//!
+//! * a **two-level warp scheduler** ([`scheduler`]): a small active pool
+//!   (8 warps) issues round-robin; a warp that misses in the L1 is
+//!   descheduled and replaced from the pending pool (§3.2);
+//! * **banked register files** ([`regfile`]): single-ported, non-pipelined
+//!   banks whose conflicts serialize accesses — the central latency
+//!   mechanism of the paper;
+//! * the **register-file hierarchies** under study ([`hierarchy`]):
+//!   BL (no cache), RFC (hardware register cache, Gebhart ISCA'11), SHRF
+//!   (compiler-managed strands, Gebhart MICRO'11), and LTRF / LTRF+ /
+//!   LTRF_conf (software register-interval prefetching, this paper);
+//! * the **Warp Control Block** ([`wcb`]) and **Address Allocation Unit**
+//!   ([`alloc`]) of §5.1–5.2;
+//! * a latency/bandwidth **memory system** ([`memsys`]): L1D per SM,
+//!   shared LLC, bandwidth-limited DRAM channels.
+//!
+//! Timing discipline: issue is cycle-stepped; register-bank and
+//! interconnect occupancy are tracked as busy-until resources, which
+//! preserves queueing and conflict serialization without a per-port
+//! event loop (see DESIGN.md §Substitutions).
+
+pub mod alloc;
+pub mod config;
+pub mod gpu;
+pub mod hierarchy;
+pub mod memsys;
+pub mod regfile;
+pub mod rfc;
+pub mod scheduler;
+pub mod sm;
+pub mod stats;
+pub mod warp;
+pub mod wcb;
+
+pub use config::{HierarchyKind, MemConfig, SimConfig};
+pub use gpu::{run, run_workload};
+pub use stats::Stats;

@@ -1,0 +1,107 @@
+//! Hardware register-file cache — the RFC baseline (Gebhart et al.,
+//! ISCA'11).
+//!
+//! A small per-active-warp cache: FIFO replacement, allocate on read miss
+//! and on write, write-back of dirty victims. No prefetching — this is the
+//! design whose 8–30% hit rate (Fig. 4) motivates LTRF.
+
+use std::collections::VecDeque;
+
+/// One warp's RFC partition.
+#[derive(Clone, Debug)]
+pub struct RfcState {
+    /// FIFO of (register, dirty).
+    slots: VecDeque<(u16, bool)>,
+    capacity: usize,
+}
+
+impl RfcState {
+    pub fn new(capacity: usize) -> Self {
+        RfcState { slots: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    /// Is `r` resident?
+    pub fn contains(&self, r: u16) -> bool {
+        self.slots.iter().any(|&(reg, _)| reg == r)
+    }
+
+    /// Insert `r` (no-op if resident; marks dirty if `dirty`). Returns a
+    /// dirty victim that must be written back, if any.
+    pub fn insert(&mut self, r: u16, dirty: bool) -> Option<u16> {
+        if let Some(slot) = self.slots.iter_mut().find(|(reg, _)| *reg == r) {
+            slot.1 |= dirty;
+            return None;
+        }
+        let mut victim = None;
+        if self.slots.len() == self.capacity {
+            if let Some((vreg, vdirty)) = self.slots.pop_front() {
+                if vdirty {
+                    victim = Some(vreg);
+                }
+            }
+        }
+        self.slots.push_back((r, dirty));
+        victim
+    }
+
+    /// Evict everything (warp deactivation); returns dirty registers to
+    /// write back.
+    pub fn flush(&mut self) -> Vec<u16> {
+        let dirty: Vec<u16> =
+            self.slots.iter().filter(|&&(_, d)| d).map(|&(r, _)| r).collect();
+        self.slots.clear();
+        dirty
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_eviction() {
+        let mut c = RfcState::new(2);
+        assert!(c.insert(1, false).is_none());
+        assert!(c.insert(2, false).is_none());
+        assert!(c.insert(3, false).is_none()); // evicts clean r1
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn dirty_victim_returned() {
+        let mut c = RfcState::new(2);
+        c.insert(1, true);
+        c.insert(2, false);
+        assert_eq!(c.insert(3, false), Some(1));
+    }
+
+    #[test]
+    fn reinsert_merges_dirty() {
+        let mut c = RfcState::new(2);
+        c.insert(1, false);
+        c.insert(1, true);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.flush(), vec![1]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn flush_returns_only_dirty() {
+        let mut c = RfcState::new(4);
+        c.insert(1, true);
+        c.insert(2, false);
+        c.insert(3, true);
+        let mut d = c.flush();
+        d.sort_unstable();
+        assert_eq!(d, vec![1, 3]);
+    }
+}

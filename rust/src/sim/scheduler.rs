@@ -1,0 +1,134 @@
+//! Two-level warp scheduler (§3.2; Gebhart ISCA'11 / Narasiman MICRO'11).
+//!
+//! A small *active pool* issues round-robin; the remaining resident warps
+//! are *pending*. A warp that hits a long-latency operation leaves the
+//! pool and a pending warp takes its slot (under LTRF, paying a
+//! working-set prefetch on the way in, overlapped with other active
+//! warps' execution).
+
+/// Active-pool bookkeeping. Warp state lives in `WarpSim`; the scheduler
+/// only tracks pool membership and the round-robin cursor.
+#[derive(Clone, Debug)]
+pub struct TwoLevelScheduler {
+    active: Vec<usize>,
+    rr: usize,
+    pub capacity: usize,
+}
+
+impl TwoLevelScheduler {
+    pub fn new(capacity: usize) -> Self {
+        TwoLevelScheduler { active: Vec::with_capacity(capacity), rr: 0, capacity }
+    }
+
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.active.len() < self.capacity
+    }
+
+    pub fn is_active(&self, wid: usize) -> bool {
+        self.active.contains(&wid)
+    }
+
+    /// Add a warp to the active pool.
+    pub fn activate(&mut self, wid: usize) {
+        debug_assert!(!self.is_active(wid), "warp {wid} activated twice");
+        debug_assert!(self.has_space());
+        self.active.push(wid);
+    }
+
+    /// Remove a warp (long-latency stall or completion).
+    pub fn deactivate(&mut self, wid: usize) {
+        if let Some(pos) = self.active.iter().position(|&w| w == wid) {
+            self.active.remove(pos);
+            if self.rr > pos {
+                self.rr -= 1;
+            }
+            if !self.active.is_empty() {
+                self.rr %= self.active.len();
+            } else {
+                self.rr = 0;
+            }
+        }
+    }
+
+    /// Round-robin issue order for this cycle: starts at the cursor,
+    /// wraps once around the pool.
+    pub fn issue_order(&self) -> impl Iterator<Item = usize> + '_ {
+        let n = self.active.len();
+        (0..n).map(move |i| self.active[(self.rr + i) % n.max(1)])
+    }
+
+    /// Advance the round-robin cursor past the warp that just issued
+    /// (fair round-robin — §3.2).
+    pub fn issued(&mut self, wid: usize) {
+        if let Some(pos) = self.active.iter().position(|&w| w == wid) {
+            self.rr = (pos + 1) % self.active.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_capacity_respected() {
+        let mut s = TwoLevelScheduler::new(2);
+        s.activate(0);
+        assert!(s.has_space());
+        s.activate(1);
+        assert!(!s.has_space());
+    }
+
+    #[test]
+    fn deactivate_frees_slot() {
+        let mut s = TwoLevelScheduler::new(2);
+        s.activate(3);
+        s.activate(7);
+        s.deactivate(3);
+        assert!(s.has_space());
+        assert!(!s.is_active(3));
+        assert!(s.is_active(7));
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut s = TwoLevelScheduler::new(4);
+        for w in 0..4 {
+            s.activate(w);
+        }
+        let first: Vec<usize> = s.issue_order().collect();
+        assert_eq!(first, vec![0, 1, 2, 3]);
+        s.issued(0);
+        let second: Vec<usize> = s.issue_order().collect();
+        assert_eq!(second, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn cursor_survives_removals() {
+        let mut s = TwoLevelScheduler::new(4);
+        for w in 0..4 {
+            s.activate(w);
+        }
+        s.issued(2); // cursor → index 3
+        s.deactivate(1);
+        let order: Vec<usize> = s.issue_order().collect();
+        assert_eq!(order.len(), 3);
+        // All remaining warps still covered.
+        for w in [0, 2, 3] {
+            assert!(order.contains(&w));
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // the guard is a debug_assert on the hot path
+    #[should_panic(expected = "activated twice")]
+    fn double_activation_detected() {
+        let mut s = TwoLevelScheduler::new(2);
+        s.activate(0);
+        s.activate(0);
+    }
+}

@@ -1,0 +1,463 @@
+//! One streaming multiprocessor: issue loop, events, warp lifecycle.
+
+use super::config::{HierarchyKind, SimConfig};
+use super::hierarchy::{EntryAction, RegHierarchy};
+use super::memsys::{MemResult, SmMem, SharedMem};
+use super::scheduler::TwoLevelScheduler;
+use super::stats::Stats;
+use super::warp::{WarpSim, WarpState};
+use crate::compiler::CompiledKernel;
+use crate::ir::exec::ExecState;
+use crate::ir::ExecUnit;
+use crate::workloads::gen::REG_BASE;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Deferred completions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// Destination register write completed → clear scoreboard.
+    Writeback(u16),
+    /// Long-latency load data arrived → clear scoreboard, warp becomes
+    /// activatable.
+    MemArrive(u16),
+    /// Working-set prefetch finished → warp resumes issue.
+    PrefetchDone,
+    /// An operand collector was released.
+    CollectorFree,
+}
+
+pub struct SmSim<'a> {
+    pub cfg: &'a SimConfig,
+    pub ck: &'a CompiledKernel,
+    pub warps: Vec<WarpSim>,
+    pub sched: TwoLevelScheduler,
+    pub hier: RegHierarchy,
+    pub mem: SmMem,
+    pub stats: Stats,
+    events: BinaryHeap<Reverse<(u64, usize, EventKind)>>,
+    collectors_free: usize,
+    finished: usize,
+    /// Reusable issue-order buffer (avoids per-cycle allocation).
+    order_buf: Vec<usize>,
+    /// Warps ready for activation (state WaitActivate), FIFO.
+    ready_queue: std::collections::VecDeque<usize>,
+    /// Next never-started warp (warps launch in id order).
+    next_launch: usize,
+}
+
+impl<'a> SmSim<'a> {
+    pub fn new(cfg: &'a SimConfig, ck: &'a CompiledKernel, resident: usize, sm_id: usize) -> Self {
+        // Renumbering may relocate the ABI base register.
+        let base_reg = ck.map_reg(REG_BASE);
+        let warps = (0..resident)
+            .map(|w| {
+                let salt = (sm_id as u64) * 1_000_003 + w as u64 + 1;
+                // Warps in the same group of 8 share a data stream (CTAs
+                // work on shared tiles), so L1 locality survives high TLP.
+                let base = 0x1_0000u32 + (w as u32 % 8) * 8192 + (w as u32 / 8) * 256;
+                WarpSim::new(
+                    w,
+                    ExecState::new(salt, &[(base_reg, base)]),
+                    cfg.regs_per_interval,
+                    cfg.rfc_regs_per_warp,
+                )
+            })
+            .collect();
+        SmSim {
+            cfg,
+            ck,
+            warps,
+            sched: TwoLevelScheduler::new(cfg.active_warps),
+            hier: RegHierarchy::new(cfg),
+            mem: SmMem::new(cfg.mem),
+            stats: Stats::default(),
+            events: BinaryHeap::new(),
+            collectors_free: cfg.operand_collectors,
+            finished: 0,
+            order_buf: Vec::new(),
+            ready_queue: std::collections::VecDeque::new(),
+            next_launch: 0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished == self.warps.len()
+    }
+
+    fn push_event(&mut self, t: u64, wid: usize, e: EventKind) {
+        self.events.push(Reverse((t, wid, e)));
+    }
+
+    fn drain_events(&mut self, now: u64) {
+        while let Some(&Reverse((t, wid, e))) = self.events.peek() {
+            if t > now {
+                break;
+            }
+            self.events.pop();
+            match e {
+                EventKind::Writeback(r) => {
+                    self.warps[wid].pending.remove(r);
+                    self.warps[wid].clear_writer(r);
+                }
+                EventKind::MemArrive(r) => {
+                    self.warps[wid].pending.remove(r);
+                    self.warps[wid].miss_pending.remove(r);
+                    self.warps[wid].clear_writer(r);
+                    let w = &self.warps[wid];
+                    if matches!(w.state, WarpState::PendingMem { .. })
+                        && (w.wait_reg == Some(r) || w.wait_reg.is_none())
+                    {
+                        self.warps[wid].wait_reg = None;
+                        if self.cfg.early_refetch {
+                            // §3.2: the working set is prefetched *before*
+                            // the warp becomes active, overlapped with the
+                            // other active warps' execution.
+                            match self
+                                .hier
+                                .on_activate(&mut self.warps[wid], self.ck, t, &mut self.stats)
+                            {
+                                Some(done) => {
+                                    self.warps[wid].state =
+                                        WarpState::Refetching { done_at: done };
+                                    self.events
+                                        .push(Reverse((done, wid, EventKind::PrefetchDone)));
+                                }
+                                None => {
+                                    self.warps[wid].state = WarpState::WaitActivate;
+                                    self.ready_queue.push_back(wid);
+                                }
+                            }
+                        } else {
+                            self.warps[wid].state = WarpState::WaitActivate;
+                            self.ready_queue.push_back(wid);
+                        }
+                    }
+                }
+                EventKind::PrefetchDone => {
+                    let w = &mut self.warps[wid];
+                    match w.state {
+                        WarpState::Prefetching { .. } => w.state = WarpState::Active,
+                        WarpState::Refetching { .. } => {
+                            w.state = WarpState::WaitActivate;
+                            self.ready_queue.push_back(wid);
+                        }
+                        _ => {}
+                    }
+                }
+                EventKind::CollectorFree => self.collectors_free += 1,
+            }
+        }
+    }
+
+    /// Refill the active pool: returned warps first (they hold completed
+    /// data), then never-started warps. O(1) per activation: returned
+    /// warps come off `ready_queue`, fresh warps off the launch cursor.
+    fn fill_pool(&mut self, _now: u64) {
+        while self.sched.has_space() {
+            let wid = loop {
+                match self.ready_queue.pop_front() {
+                    Some(w) if self.warps[w].state == WarpState::WaitActivate => break Some(w),
+                    Some(_) => continue, // stale entry
+                    None => break None,
+                }
+            };
+            let wid = wid.or_else(|| {
+                while self.next_launch < self.warps.len() {
+                    let w = self.next_launch;
+                    if self.warps[w].state == WarpState::NotStarted {
+                        return Some(w);
+                    }
+                    self.next_launch += 1;
+                }
+                None
+            });
+            let Some(wid) = wid else { break };
+            let fresh = self.warps[wid].state == WarpState::NotStarted;
+            if fresh {
+                self.next_launch = wid + 1;
+            }
+            // With early refetch the working set is already resident;
+            // otherwise (ablation) the refetch runs inside the slot.
+            self.sched.activate(wid);
+            self.warps[wid].state = WarpState::Active;
+            if !fresh && !self.cfg.early_refetch {
+                if let Some(done) =
+                    self.hier.on_activate(&mut self.warps[wid], self.ck, _now, &mut self.stats)
+                {
+                    self.warps[wid].state = WarpState::Prefetching { done_at: done };
+                    self.stats.prefetch_stall_cycles += done - _now;
+                    self.push_event(done, wid, EventKind::PrefetchDone);
+                }
+            }
+        }
+    }
+
+    /// One simulation cycle. Returns a hint for the next interesting
+    /// cycle (global skip-ahead).
+    pub fn step(&mut self, now: u64, shared: &mut SharedMem) -> u64 {
+        self.drain_events(now);
+        self.fill_pool(now);
+
+        let mut issued = 0usize;
+        self.order_buf.clear();
+        self.order_buf.extend(self.sched.issue_order());
+        let order = std::mem::take(&mut self.order_buf);
+        for &wid in &order {
+            if issued >= self.cfg.issue_width {
+                break;
+            }
+            if self.try_issue(wid, now, shared) {
+                issued += 1;
+                self.sched.issued(wid);
+            }
+        }
+        self.order_buf = order;
+
+        if self.done() {
+            return u64::MAX;
+        }
+        if issued > 0 {
+            return now + 1;
+        }
+        self.stats.stall_no_ready_warp += 1;
+        // Idle: skip to the next event (or the next issue-throttle expiry).
+        let mut hint = self.events.peek().map(|&Reverse((t, _, _))| t).unwrap_or(u64::MAX);
+        for &wid in self.sched.active() {
+            let w = &self.warps[wid];
+            if w.state == WarpState::Active && !w.exec.finished {
+                hint = hint.min(w.next_issue.max(now + 1));
+            }
+        }
+        hint.max(now + 1)
+    }
+
+    /// Attempt to issue one instruction from warp `wid`.
+    fn try_issue(&mut self, wid: usize, now: u64, shared: &mut SharedMem) -> bool {
+        if !self.warps[wid].issuable(now) {
+            return false;
+        }
+
+        // Prefetch-subgraph transition at block entry (LTRF/SHRF).
+        let (block, idx) = (self.warps[wid].exec.block, self.warps[wid].exec.idx);
+        if idx == 0 {
+            match self.hier.on_block_enter(&mut self.warps[wid], self.ck, block, now, &mut self.stats)
+            {
+                EntryAction::Proceed => {}
+                EntryAction::Prefetch { done_at } => {
+                    self.warps[wid].state = WarpState::Prefetching { done_at };
+                    self.stats.prefetch_stall_cycles += done_at - now;
+                    self.push_event(done_at, wid, EventKind::PrefetchDone);
+                    return false;
+                }
+            }
+        }
+
+        let inst = self.warps[wid].exec.peek(&self.ck.kernel).expect("issuable warp has inst").clone();
+        if let Err(blocking) = self.warps[wid].deps_ready(&inst) {
+            self.stats.stall_scoreboard += 1;
+            if self.warps[wid].miss_pending.contains(blocking) {
+                // Blocked on an outstanding L1 miss: the two-level
+                // scheduler swaps this warp out (§3.2).
+                self.deactivate_on_miss(wid, blocking, now);
+            } else if let Some(t) = self.warps[wid].writer_done(blocking) {
+                // In-order: nothing can issue before the blocking writer
+                // completes; sleep the warp until then (pure optimization,
+                // no timing change — the warp could not issue earlier).
+                let w = &mut self.warps[wid];
+                w.next_issue = w.next_issue.max(t);
+            }
+            return false;
+        }
+        if self.collectors_free == 0 {
+            self.stats.stall_collectors += 1;
+            return false;
+        }
+
+        // ---- issue ----
+        let info = self.warps[wid].exec.step(&self.ck.kernel).expect("step after peek");
+        self.stats.instructions += 1;
+        self.warps[wid].issued += 1;
+        self.warps[wid].next_issue = now + 1;
+
+        // Operand collection (register reads).
+        let ready = self.hier.read_operands(&mut self.warps[wid], &inst, now, &mut self.stats);
+        self.collectors_free -= 1;
+        self.push_event(ready, wid, EventKind::CollectorFree);
+
+        // LTRF+ liveness bit-vector update from dead-operand bits (§3.2).
+        if matches!(self.cfg.hierarchy, HierarchyKind::Ltrf { plus: true }) {
+            let dead = &self.ck.dead_bits[info.block][info.idx];
+            for r in dead.iter() {
+                self.warps[wid].wcb.live.remove(r);
+            }
+        }
+
+        // Execute + complete.
+        if self.warps[wid].exec.finished {
+            self.warps[wid].state = WarpState::Finished;
+            self.sched.deactivate(wid);
+            self.finished += 1;
+            self.stats.warps_finished += 1;
+            return true;
+        }
+
+        let is_load = inst.op.is_load();
+        let done = match inst.op.unit() {
+            ExecUnit::MemGlobal if is_load => {
+                let addr = info.mem_addr.unwrap_or(0);
+                match self.mem.access_global(addr, ready, shared) {
+                    MemResult::Hit(t) => t,
+                    MemResult::Miss(t) => {
+                        // The warp keeps issuing independent instructions
+                        // (MLP); it is swapped out only when a dependent
+                        // instruction blocks on this register.
+                        let dst = inst.def().expect("loads have destinations");
+                        self.warps[wid].pending.insert(dst);
+                        self.warps[wid].miss_pending.insert(dst);
+                        self.warps[wid].inflight.push((dst, t));
+                        // Returning data is written to the MRF bank (the
+                        // value must survive warp deactivation).
+                        self.hier.mrf.note_write(t);
+                        self.stats.mrf_writes += 1;
+                        self.warps[wid].wcb.live.insert(dst);
+                        self.push_event(t, wid, EventKind::MemArrive(dst));
+                        return true;
+                    }
+                }
+            }
+            ExecUnit::MemGlobal => {
+                // Store: posted write; consumes memory bandwidth but the
+                // warp does not wait (and never deactivates).
+                let addr = info.mem_addr.unwrap_or(0);
+                let _ = self.mem.access_global(addr, ready, shared);
+                ready + 1
+            }
+            ExecUnit::MemShared => self.mem.access_shared(ready),
+            ExecUnit::Sfu => ready + self.cfg.sfu_cycles as u64,
+            ExecUnit::Alu => ready + self.cfg.alu_cycles as u64,
+            ExecUnit::Ctrl => ready + 1,
+        };
+
+        if let Some(d) = inst.def() {
+            self.warps[wid].pending.insert(d);
+            let t_w = self.hier.write_dest(&mut self.warps[wid], d, done, &mut self.stats);
+            self.warps[wid].inflight.push((d, t_w));
+            self.push_event(t_w, wid, EventKind::Writeback(d));
+        }
+        true
+    }
+
+    /// Warp blocked on an outstanding L1 miss: deactivate it (two-level
+    /// scheduler) until the blocking register's data arrives.
+    fn deactivate_on_miss(&mut self, wid: usize, blocking: u16, now: u64) {
+        self.warps[wid].state = WarpState::PendingMem { done_at: u64::MAX };
+        self.warps[wid].wait_reg = Some(blocking);
+        self.sched.deactivate(wid);
+        self.hier.on_deactivate(&mut self.warps[wid], now, &mut self.stats);
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::ir::parser;
+
+    const KSRC: &str = r#"
+.kernel s
+  mov r0, #65536
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  add r0, r0, #128
+  add r1, r1, #1
+  setp.lt p0, r1, #32
+  @p0 bra L1
+  st.global [r0], r3
+  exit
+"#;
+
+    fn run_one(kind: HierarchyKind) -> Stats {
+        let k = parser::parse(KSRC).unwrap();
+        let opts = CompileOptions {
+            mode: kind.subgraph_mode(),
+            ..CompileOptions::ltrf(16)
+        };
+        let ck = compile(&k, opts);
+        let cfg = SimConfig::with_hierarchy(kind);
+        let mut shared = SharedMem::new(cfg.mem);
+        let mut sm = SmSim::new(&cfg, &ck, 8, 0);
+        let mut now = 0;
+        while !sm.done() && now < 1_000_000 {
+            let hint = sm.step(now, &mut shared);
+            now = hint.max(now + 1).min(1_000_000);
+        }
+        let mut st = sm.stats.clone();
+        st.cycles = now;
+        st.l1_hits = sm.mem.l1_hits;
+        st.l1_misses = sm.mem.l1_misses;
+        st
+    }
+
+    #[test]
+    fn all_hierarchies_complete() {
+        for kind in [
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Shrf,
+            HierarchyKind::Ltrf { plus: false },
+            HierarchyKind::Ltrf { plus: true },
+        ] {
+            let st = run_one(kind);
+            assert_eq!(st.warps_finished, 8, "{}", kind.name());
+            assert!(st.instructions > 8 * 100, "{}", kind.name());
+            assert!(st.ipc() > 0.0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn ltrf_reads_bypass_mrf() {
+        let st = run_one(HierarchyKind::Ltrf { plus: false });
+        assert_eq!(st.mrf_reads, st.prefetch_regs, "only prefetches read the MRF");
+        assert!(st.cache_reads > 0);
+        assert!(st.prefetch_ops > 0);
+    }
+
+    #[test]
+    fn baseline_never_touches_cache() {
+        let st = run_one(HierarchyKind::Baseline);
+        assert_eq!(st.cache_reads, 0);
+        assert_eq!(st.prefetch_ops, 0);
+        assert!(st.mrf_reads > 0);
+    }
+
+    #[test]
+    fn rfc_has_hits_and_misses() {
+        let st = run_one(HierarchyKind::Rfc);
+        assert!(st.rfc_hits > 0);
+        assert!(st.rfc_misses > 0);
+        let hr = st.rfc_hit_rate();
+        assert!(hr > 0.0 && hr < 1.0, "hit rate {hr}");
+    }
+
+    #[test]
+    fn memory_misses_deactivate_warps() {
+        let st = run_one(HierarchyKind::Ltrf { plus: false });
+        assert!(st.l1_misses > 0, "workload must miss");
+        assert!(st.activations > 0, "misses must trigger warp swaps");
+    }
+
+    #[test]
+    fn ltrf_plus_reduces_traffic() {
+        let plain = run_one(HierarchyKind::Ltrf { plus: false });
+        let plus = run_one(HierarchyKind::Ltrf { plus: true });
+        assert!(
+            plus.prefetch_regs + plus.writeback_regs
+                <= plain.prefetch_regs + plain.writeback_regs,
+            "LTRF+ must not move more registers"
+        );
+    }
+}

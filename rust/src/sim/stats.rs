@@ -1,0 +1,162 @@
+//! Simulation statistics: IPC, hit rates, stall breakdown, traffic counts.
+
+/// Counters collected per simulation run (summed across SMs).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub cycles: u64,
+    /// Warp-instructions issued (the paper's IPC numerator).
+    pub instructions: u64,
+    /// Warps that ran to completion.
+    pub warps_finished: u64,
+
+    // --- register file traffic (drives the §5.3 power model) ---
+    /// Operand reads served by the MRF.
+    pub mrf_reads: u64,
+    /// Writes to the MRF (incl. write-backs).
+    pub mrf_writes: u64,
+    /// Operand reads served by the RF$.
+    pub cache_reads: u64,
+    pub cache_writes: u64,
+
+    // --- RFC / SHRF hit tracking (Fig. 4) ---
+    pub rfc_hits: u64,
+    pub rfc_misses: u64,
+
+    // --- LTRF prefetch machinery (§5.2) ---
+    pub prefetch_ops: u64,
+    /// Registers moved by prefetches.
+    pub prefetch_regs: u64,
+    /// Cycles warps spent blocked on an in-flight prefetch.
+    pub prefetch_stall_cycles: u64,
+    /// Extra serialized bank accesses observed during prefetches.
+    pub prefetch_bank_conflicts: u64,
+    /// Warp activations (pending → active transitions).
+    pub activations: u64,
+    /// Registers written back on deactivation.
+    pub writeback_regs: u64,
+    /// Registers skipped by LTRF+ liveness filtering.
+    pub dead_regs_skipped: u64,
+
+    // --- memory system ---
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+
+    // --- issue-stall breakdown (diagnostics) ---
+    pub stall_scoreboard: u64,
+    pub stall_collectors: u64,
+    pub stall_no_ready_warp: u64,
+}
+
+impl Stats {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.instructions as f64 / self.cycles as f64
+    }
+
+    /// Register-cache hit rate (RFC/SHRF designs; Fig. 4).
+    pub fn rfc_hit_rate(&self) -> f64 {
+        let total = self.rfc_hits + self.rfc_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.rfc_hits as f64 / total as f64
+    }
+
+    pub fn l1_hit_rate(&self) -> f64 {
+        let total = self.l1_hits + self.l1_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.l1_hits as f64 / total as f64
+    }
+
+    /// MRF access reduction vs a design serving all reads from the MRF
+    /// (the paper reports 4–6× for LTRF — §5.2).
+    pub fn mrf_access_reduction(&self) -> f64 {
+        let total_reads = self.mrf_reads + self.cache_reads;
+        if self.mrf_reads + self.mrf_writes == 0 {
+            return f64::INFINITY;
+        }
+        (total_reads + self.cache_writes) as f64 / (self.mrf_reads + self.mrf_writes) as f64
+    }
+
+    /// Merge counters from another SM / run shard.
+    pub fn merge(&mut self, o: &Stats) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.instructions += o.instructions;
+        self.warps_finished += o.warps_finished;
+        self.mrf_reads += o.mrf_reads;
+        self.mrf_writes += o.mrf_writes;
+        self.cache_reads += o.cache_reads;
+        self.cache_writes += o.cache_writes;
+        self.rfc_hits += o.rfc_hits;
+        self.rfc_misses += o.rfc_misses;
+        self.prefetch_ops += o.prefetch_ops;
+        self.prefetch_regs += o.prefetch_regs;
+        self.prefetch_stall_cycles += o.prefetch_stall_cycles;
+        self.prefetch_bank_conflicts += o.prefetch_bank_conflicts;
+        self.activations += o.activations;
+        self.writeback_regs += o.writeback_regs;
+        self.dead_regs_skipped += o.dead_regs_skipped;
+        self.l1_hits += o.l1_hits;
+        self.l1_misses += o.l1_misses;
+        self.llc_hits += o.llc_hits;
+        self.llc_misses += o.llc_misses;
+        self.stall_scoreboard += o.stall_scoreboard;
+        self.stall_collectors += o.stall_collectors;
+        self.stall_no_ready_warp += o.stall_no_ready_warp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_and_rates() {
+        let s = Stats {
+            cycles: 1000,
+            instructions: 1500,
+            rfc_hits: 30,
+            rfc_misses: 70,
+            l1_hits: 90,
+            l1_misses: 10,
+            ..Default::default()
+        };
+        assert!((s.ipc() - 1.5).abs() < 1e-12);
+        assert!((s.rfc_hit_rate() - 0.3).abs() < 1e-12);
+        assert!((s.l1_hit_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = Stats::default();
+        assert_eq!(s.ipc(), 0.0);
+        assert_eq!(s.rfc_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_takes_max_cycles_and_sums() {
+        let mut a = Stats { cycles: 10, instructions: 5, ..Default::default() };
+        let b = Stats { cycles: 20, instructions: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 20);
+        assert_eq!(a.instructions, 12);
+    }
+
+    #[test]
+    fn mrf_reduction() {
+        let s = Stats {
+            mrf_reads: 100,
+            mrf_writes: 0,
+            cache_reads: 400,
+            cache_writes: 0,
+            ..Default::default()
+        };
+        assert!((s.mrf_access_reduction() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-warp simulation state.
+
+use super::rfc::RfcState;
+use super::wcb::WarpControlBlock;
+use crate::ir::exec::ExecState;
+use crate::util::RegSet;
+
+/// Warp scheduling state (the two-level scheduler's view — §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarpState {
+    /// In the active pool, eligible for issue.
+    Active,
+    /// In the active pool, blocked on a register prefetch until `done_at`.
+    Prefetching { done_at: u64 },
+    /// Descheduled, waiting on a long-latency memory access.
+    PendingMem { done_at: u64 },
+    /// Data arrived; the working-set refetch is in flight (§3.2: the
+    /// working set is prefetched *before* the warp becomes active, so the
+    /// refetch overlaps with other warps' execution).
+    Refetching { done_at: u64 },
+    /// Ready for an active-pool slot (refetch complete).
+    WaitActivate,
+    /// Not yet launched (no free active slot so far).
+    NotStarted,
+    Finished,
+}
+
+/// Everything the SM tracks per warp.
+#[derive(Clone, Debug)]
+pub struct WarpSim {
+    pub id: usize,
+    pub exec: ExecState,
+    pub state: WarpState,
+    /// Scoreboard: registers with an in-flight writer.
+    pub pending: RegSet,
+    /// Destinations of outstanding long-latency (L1-miss) loads.
+    pub miss_pending: RegSet,
+    /// The register whose miss descheduled this warp.
+    pub wait_reg: Option<u16>,
+    /// Earliest cycle the warp may issue again (1 inst/cycle/warp, or the
+    /// completion time of the register blocking an in-order dependency).
+    pub next_issue: u64,
+    /// In-flight register writers: (register, completion cycle).
+    pub inflight: Vec<(u16, u64)>,
+    /// LTRF machinery (unused under BL/RFC).
+    pub wcb: WarpControlBlock,
+    /// RFC machinery (unused otherwise).
+    pub rfc: RfcState,
+    /// Instructions issued by this warp (diagnostics).
+    pub issued: u64,
+}
+
+impl WarpSim {
+    /// Completion time of the in-flight writer of `r`, if tracked.
+    pub fn writer_done(&self, r: u16) -> Option<u64> {
+        self.inflight.iter().find(|&&(reg, _)| reg == r).map(|&(_, t)| t)
+    }
+
+    /// Drop the in-flight record for `r` (its writeback completed).
+    pub fn clear_writer(&mut self, r: u16) {
+        self.inflight.retain(|&(reg, _)| reg != r);
+    }
+
+    pub fn new(
+        id: usize,
+        exec: ExecState,
+        partition_regs: usize,
+        rfc_capacity: usize,
+    ) -> Self {
+        WarpSim {
+            id,
+            exec,
+            state: WarpState::NotStarted,
+            pending: RegSet::new(),
+            miss_pending: RegSet::new(),
+            wait_reg: None,
+            next_issue: 0,
+            inflight: Vec::with_capacity(8),
+            wcb: WarpControlBlock::new(partition_regs),
+            rfc: RfcState::new(rfc_capacity),
+            issued: 0,
+        }
+    }
+
+    /// Can the scheduler consider this warp this cycle?
+    pub fn issuable(&self, now: u64) -> bool {
+        self.state == WarpState::Active && self.next_issue <= now && !self.exec.finished
+    }
+
+    /// Scoreboard check. `Ok(())` when all registers are ready; otherwise
+    /// the first blocking register.
+    pub fn deps_ready(&self, inst: &crate::ir::Inst) -> Result<(), u16> {
+        for r in inst.uses() {
+            if self.pending.contains(r) {
+                return Err(r);
+            }
+        }
+        if let Some(d) = inst.def() {
+            if self.pending.contains(d) {
+                return Err(d); // WAW on an in-flight writer
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Inst, Op};
+
+    fn warp() -> WarpSim {
+        WarpSim::new(0, ExecState::new(0, &[]), 16, 16)
+    }
+
+    #[test]
+    fn not_started_warp_not_issuable() {
+        let w = warp();
+        assert!(!w.issuable(0));
+    }
+
+    #[test]
+    fn scoreboard_blocks_raw_and_waw() {
+        let mut w = warp();
+        w.state = WarpState::Active;
+        w.pending.insert(5);
+        let mut raw = Inst::new(Op::IAdd);
+        raw.dst = Some(1);
+        raw.srcs = [Some(5), Some(2), None];
+        assert_eq!(w.deps_ready(&raw), Err(5));
+        let mut waw = Inst::new(Op::Mov);
+        waw.dst = Some(5);
+        waw.imm = Some(0);
+        assert_eq!(w.deps_ready(&waw), Err(5));
+        let mut ok = Inst::new(Op::IAdd);
+        ok.dst = Some(1);
+        ok.srcs = [Some(2), Some(3), None];
+        assert_eq!(w.deps_ready(&ok), Ok(()));
+    }
+
+    #[test]
+    fn issue_throttle() {
+        let mut w = warp();
+        w.state = WarpState::Active;
+        w.next_issue = 10;
+        assert!(!w.issuable(9));
+        assert!(w.issuable(10));
+    }
+}

@@ -1,0 +1,133 @@
+//! Warp Control Block (§5.1, Fig. 12).
+//!
+//! Per-warp metadata for the prefetch machinery: the register-cache
+//! address table (architectural register → RF$ bank), the working-set
+//! bit-vector (valid bits), and the liveness bit-vector (LTRF+).
+
+use super::alloc::AddressAllocationUnit;
+use crate::util::RegSet;
+
+const INVALID: u8 = 0xFF;
+
+#[derive(Clone, Debug)]
+pub struct WarpControlBlock {
+    /// RF$ bank number per architectural register (`INVALID` = not cached).
+    addr_table: [u8; 256],
+    /// Working-set bit-vector: registers currently resident in the RF$.
+    pub valid: RegSet,
+    /// Liveness bit-vector (LTRF+): registers holding a live value.
+    pub live: RegSet,
+    /// Registers written since they were fetched (need write-back).
+    pub dirty: RegSet,
+    /// Bank allocator for this warp's RF$ partition.
+    pub aau: AddressAllocationUnit,
+    /// Prefetch subgraph the warp is currently executing.
+    pub current_interval: Option<usize>,
+}
+
+impl WarpControlBlock {
+    pub fn new(partition_regs: usize) -> Self {
+        WarpControlBlock {
+            addr_table: [INVALID; 256],
+            valid: RegSet::new(),
+            live: RegSet::new(),
+            dirty: RegSet::new(),
+            aau: AddressAllocationUnit::new(partition_regs),
+            current_interval: None,
+        }
+    }
+
+    /// RF$ bank holding register `r`, if cached.
+    pub fn bank_of(&self, r: u16) -> Option<u8> {
+        let b = self.addr_table[r as usize];
+        (b != INVALID).then_some(b)
+    }
+
+    /// Allocate RF$ space for `r` (idempotent). Returns the bank.
+    pub fn allocate(&mut self, r: u16) -> u8 {
+        if let Some(b) = self.bank_of(r) {
+            return b;
+        }
+        let b = self
+            .aau
+            .alloc()
+            .expect("RF$ partition exhausted: working set exceeded the compiler bound");
+        self.addr_table[r as usize] = b;
+        self.valid.insert(r);
+        b
+    }
+
+    /// Release one register's slot.
+    pub fn release(&mut self, r: u16) {
+        if let Some(b) = self.bank_of(r) {
+            self.aau.free(b);
+            self.addr_table[r as usize] = INVALID;
+            self.valid.remove(r);
+            self.dirty.remove(r);
+        }
+    }
+
+    /// Release the whole partition (warp deactivation — §5.2 "Warp
+    /// Stall": clears all valid bits in the register cache address table).
+    pub fn release_all(&mut self) {
+        let valid = self.valid;
+        for r in valid.iter() {
+            self.release(r);
+        }
+        debug_assert!(self.valid.is_empty());
+    }
+
+    /// Number of cached registers.
+    pub fn resident(&self) -> usize {
+        self.valid.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_assigns_distinct_banks() {
+        let mut wcb = WarpControlBlock::new(16);
+        let b0 = wcb.allocate(3);
+        let b1 = wcb.allocate(200);
+        assert_ne!(b0, b1);
+        assert_eq!(wcb.bank_of(3), Some(b0));
+        assert_eq!(wcb.resident(), 2);
+        // Idempotent.
+        assert_eq!(wcb.allocate(3), b0);
+        assert_eq!(wcb.resident(), 2);
+    }
+
+    #[test]
+    fn release_all_clears_partition() {
+        let mut wcb = WarpControlBlock::new(8);
+        for r in 0..8u16 {
+            wcb.allocate(r);
+        }
+        assert_eq!(wcb.aau.available(), 0);
+        wcb.release_all();
+        assert_eq!(wcb.aau.available(), 8);
+        assert_eq!(wcb.resident(), 0);
+        assert_eq!(wcb.bank_of(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "partition exhausted")]
+    fn overflow_is_a_bug() {
+        let mut wcb = WarpControlBlock::new(2);
+        wcb.allocate(0);
+        wcb.allocate(1);
+        wcb.allocate(2);
+    }
+
+    #[test]
+    fn dirty_tracking_independent_of_valid() {
+        let mut wcb = WarpControlBlock::new(4);
+        wcb.allocate(5);
+        wcb.dirty.insert(5);
+        wcb.release(5);
+        assert!(!wcb.dirty.contains(5), "release clears dirty");
+    }
+}

@@ -1,0 +1,102 @@
+//! Per-bank latency characterization — the CACTI/NVSim output database.
+//!
+//! The paper runs CACTI 6.0 (non-pipelined bank models) and NVSim per
+//! (technology, bank geometry), then measures *average* access latency in
+//! GPGPU-Sim including bank-conflict queueing. We cannot re-run those
+//! tools, so this module carries their characterized outputs directly —
+//! the device+queueing latency component of each Table-2 design point,
+//! with the interconnect component factored out (see
+//! [`crate::timing::network`]) — and interpolates log-linearly in bank
+//! size for sweep configurations between characterized points.
+
+use super::network::NetworkKind;
+use super::tech::Tech;
+
+/// Characterized device latency (baseline-normalized units) at the two
+/// bank geometries Table 2 uses: 1× (16KB) and 8× (128KB) banks.
+/// `latency = device(tech, size) + network.traversal_factor(banks)`.
+fn device_points(tech: Tech) -> (f64, f64) {
+    match tech {
+        // cfg1: 0.8 + 0.2(xbar) = 1.0×; cfg2: 1.05 + 0.2 = 1.25×.
+        Tech::HpSram => (0.8, 1.05),
+        // cfg5: 2.1 + 0.7(fb128) = 2.8×; cfg4: 1.4 + 0.2 = 1.6×.
+        // (The small-bank point is *slower* after queueing: LSTP's long
+        // non-pipelined occupancy makes 16KB banks conflict-bound.)
+        Tech::LstpSram => (2.1, 1.4),
+        // cfg6: 4.6 + 0.7 = 5.3×.
+        Tech::TfetSram => (4.6, 5.9),
+        // cfg7: 5.6 + 0.7 = 6.3×. DWM adds domain-shift latency on top of
+        // TFET-class sensing.
+        Tech::Dwm => (5.6, 7.1),
+    }
+}
+
+/// Device latency factor for an arbitrary bank-size ratio (log-linear
+/// interpolation/extrapolation between the characterized 1× and 8×
+/// points).
+pub fn device_latency(tech: Tech, bank_size_ratio: f64) -> f64 {
+    assert!(bank_size_ratio > 0.0);
+    let (l1, l8) = device_points(tech);
+    let slope = (l8 - l1) / 3.0; // per doubling, 8× = 3 doublings
+    (l1 + slope * bank_size_ratio.log2()).max(0.1)
+}
+
+/// Total average access latency factor for a register-file design
+/// (baseline HP-SRAM 16-bank crossbar = 1.0).
+pub fn access_latency(tech: Tech, bank_size_ratio: f64, num_banks: usize, net: NetworkKind) -> f64 {
+    device_latency(tech, bank_size_ratio) + net.traversal_factor(num_banks)
+}
+
+/// Silicon area factor for a design of `capacity_ratio` total capacity.
+pub fn area(tech: Tech, capacity_ratio: f64) -> f64 {
+    capacity_ratio / tech.params().density
+}
+
+/// Power factor for a design of `capacity_ratio` total capacity.
+pub fn power(tech: Tech, capacity_ratio: f64) -> f64 {
+    capacity_ratio * tech.params().power_factor
+}
+
+/// Convert a latency *factor* to MRF bank access cycles, given the
+/// baseline bank access time in core cycles. Non-pipelined banks (CACTI
+/// register-file model): the bank is busy for the whole access.
+pub fn cycles(latency_factor: f64, baseline_cycles: u32) -> u32 {
+    (latency_factor * baseline_cycles as f64).round().max(1.0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_hits_characterized_points() {
+        for t in Tech::ALL {
+            let (l1, l8) = device_points(t);
+            assert!((device_latency(t, 1.0) - l1).abs() < 1e-9);
+            assert!((device_latency(t, 8.0) - l8).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn interpolation_monotone_between_points_hp() {
+        let l1 = device_latency(Tech::HpSram, 1.0);
+        let l2 = device_latency(Tech::HpSram, 2.0);
+        let l4 = device_latency(Tech::HpSram, 4.0);
+        let l8 = device_latency(Tech::HpSram, 8.0);
+        assert!(l1 < l2 && l2 < l4 && l4 < l8);
+    }
+
+    #[test]
+    fn cycles_rounds_and_floors() {
+        assert_eq!(cycles(1.0, 4), 4);
+        assert_eq!(cycles(6.3, 4), 25);
+        assert_eq!(cycles(0.1, 1), 1);
+    }
+
+    #[test]
+    fn area_power_scaling() {
+        assert!((area(Tech::Dwm, 8.0) - 0.25).abs() < 1e-9); // Table 2 row #7
+        assert!((power(Tech::TfetSram, 8.0) - 1.05).abs() < 1e-9);
+        assert!((area(Tech::HpSram, 8.0) - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Register-file design points — Table 2 and the §7 design space.
+
+use super::bank;
+use super::network::NetworkKind;
+use super::tech::Tech;
+
+/// One register-file design (a Table-2 row), with all quantities
+/// normalized to the baseline (config #1: 256KB, 16 banks, HP SRAM,
+/// crossbar).
+#[derive(Clone, Copy, Debug)]
+pub struct RfDesign {
+    pub id: usize,
+    pub tech: Tech,
+    /// Bank count relative to 16.
+    pub banks_ratio: f64,
+    /// Bank size relative to 16KB.
+    pub bank_size_ratio: f64,
+    pub network: NetworkKind,
+}
+
+impl RfDesign {
+    pub const fn new(
+        id: usize,
+        tech: Tech,
+        banks_ratio: f64,
+        bank_size_ratio: f64,
+        network: NetworkKind,
+    ) -> Self {
+        RfDesign { id, tech, banks_ratio, bank_size_ratio, network }
+    }
+
+    /// Total capacity factor (= banks × bank size).
+    pub fn capacity(&self) -> f64 {
+        self.banks_ratio * self.bank_size_ratio
+    }
+
+    /// Absolute bank count (baseline 16).
+    pub fn num_banks(&self) -> usize {
+        (16.0 * self.banks_ratio).round() as usize
+    }
+
+    /// Capacity in bytes (baseline 256KB per SM).
+    pub fn capacity_bytes(&self) -> usize {
+        (self.capacity() * 256.0 * 1024.0).round() as usize
+    }
+
+    /// Capacity in 1024-bit warp-registers (baseline 2048 per SM).
+    pub fn warp_registers(&self) -> usize {
+        self.capacity_bytes() / 128
+    }
+
+    pub fn area(&self) -> f64 {
+        bank::area(self.tech, self.capacity())
+    }
+
+    pub fn power(&self) -> f64 {
+        bank::power(self.tech, self.capacity())
+    }
+
+    /// Average access latency factor (device + interconnect + queueing, as
+    /// characterized from the paper's CACTI/NVSim + GPGPU-Sim flow).
+    pub fn latency(&self) -> f64 {
+        bank::access_latency(self.tech, self.bank_size_ratio, self.num_banks(), self.network)
+    }
+
+    pub fn capacity_per_area(&self) -> f64 {
+        self.capacity() / self.area()
+    }
+
+    pub fn capacity_per_power(&self) -> f64 {
+        self.capacity() / self.power()
+    }
+}
+
+/// Table 2, configurations #1–#7.
+pub fn table2() -> Vec<RfDesign> {
+    vec![
+        RfDesign::new(1, Tech::HpSram, 1.0, 1.0, NetworkKind::Crossbar),
+        RfDesign::new(2, Tech::HpSram, 1.0, 8.0, NetworkKind::Crossbar),
+        RfDesign::new(3, Tech::HpSram, 8.0, 1.0, NetworkKind::FlattenedButterfly),
+        RfDesign::new(4, Tech::LstpSram, 1.0, 8.0, NetworkKind::Crossbar),
+        RfDesign::new(5, Tech::LstpSram, 8.0, 1.0, NetworkKind::FlattenedButterfly),
+        RfDesign::new(6, Tech::TfetSram, 8.0, 1.0, NetworkKind::FlattenedButterfly),
+        RfDesign::new(7, Tech::Dwm, 8.0, 1.0, NetworkKind::FlattenedButterfly),
+    ]
+}
+
+/// Config #6 — the 2MB TFET design (§7.1): 8× capacity at ~baseline power.
+pub const DESIGN_6_TFET: RfDesign =
+    RfDesign::new(6, Tech::TfetSram, 8.0, 1.0, NetworkKind::FlattenedButterfly);
+
+/// Config #7 — the 2MB DWM design (§7.1): 8× capacity, 0.25× area,
+/// 0.65× power, 6.3× latency. The headline design point.
+pub const DESIGN_7_DWM: RfDesign =
+    RfDesign::new(7, Tech::Dwm, 8.0, 1.0, NetworkKind::FlattenedButterfly);
+
+/// The evaluation design points of §7.1: (label, design, latency override).
+/// `Ideal` is config #1 scaled 8× with *no* latency increase.
+pub fn design_points() -> Vec<(&'static str, RfDesign, Option<f64>)> {
+    vec![
+        ("#6 (TFET)", DESIGN_6_TFET, None),
+        ("#7 (DWM)", DESIGN_7_DWM, None),
+        ("Ideal 8x", RfDesign::new(0, Tech::HpSram, 8.0, 1.0, NetworkKind::Crossbar), Some(1.0)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The normalized numbers printed in Table 2 of the paper.
+    const PAPER: [(f64, f64, f64, f64); 7] = [
+        // (capacity, area, power, latency)
+        (1.0, 1.0, 1.0, 1.0),
+        (8.0, 8.0, 8.0, 1.25),
+        (8.0, 8.0, 8.0, 1.5),
+        (8.0, 8.0, 3.2, 1.6),
+        (8.0, 8.0, 3.2, 2.8),
+        (8.0, 8.0, 1.05, 5.3),
+        (8.0, 0.25, 0.65, 6.3),
+    ];
+
+    #[test]
+    fn table2_reproduced() {
+        for (row, (cap, area, power, lat)) in table2().iter().zip(PAPER) {
+            assert!((row.capacity() - cap).abs() < 1e-9, "cfg{} capacity", row.id);
+            assert!((row.area() - area).abs() < 1e-9, "cfg{} area", row.id);
+            assert!((row.power() - power).abs() < 1e-9, "cfg{} power", row.id);
+            assert!(
+                (row.latency() - lat).abs() < 0.06,
+                "cfg{} latency {} != {}",
+                row.id,
+                row.latency(),
+                lat
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_density_ratios() {
+        let rows = table2();
+        // cfg7 (DWM): 32× capacity/area, 12.3× capacity/power.
+        assert!((rows[6].capacity_per_area() - 32.0).abs() < 1e-6);
+        assert!((rows[6].capacity_per_power() - 12.3).abs() < 0.02);
+        // cfg6 (TFET): 7.6× capacity/power.
+        assert!((rows[5].capacity_per_power() - 7.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn warp_register_counts() {
+        let rows = table2();
+        assert_eq!(rows[0].warp_registers(), 2048); // 256KB
+        assert_eq!(rows[6].warp_registers(), 16384); // 2MB
+        assert_eq!(rows[0].num_banks(), 16);
+        assert_eq!(rows[6].num_banks(), 128);
+    }
+
+    #[test]
+    fn design_points_cover_section_7() {
+        let pts = design_points();
+        assert_eq!(pts.len(), 3);
+        assert!(pts.iter().any(|(n, _, ov)| n.contains("Ideal") && *ov == Some(1.0)));
+        assert!((DESIGN_7_DWM.latency() - 6.3).abs() < 0.06);
+        assert!((DESIGN_6_TFET.latency() - 5.3).abs() < 0.06);
+    }
+}

@@ -1,0 +1,21 @@
+//! Register-file timing/area/power models — the CACTI 6.0 + NVSim stand-in.
+//!
+//! The paper extracts per-bank timing, area, and power from CACTI (SRAM
+//! variants) and NVSim (DWM), then feeds them to GPGPU-Sim; Table 2 reports
+//! the resulting *normalized average access latencies* (including queueing
+//! from bank conflicts). Those tools are unavailable offline, so
+//! [`bank`] carries their output as a characterization database — per
+//! (technology, bank-size class) latency/area/power factors calibrated so
+//! the seven Table-2 design points are reproduced exactly — and
+//! interpolates between characterized points for sweeps. [`config`] builds
+//! the Table-2 rows and the design points used throughout §7.
+
+pub mod bank;
+pub mod config;
+pub mod network;
+pub mod power;
+pub mod tech;
+
+pub use config::{design_points, table2, RfDesign, DESIGN_6_TFET, DESIGN_7_DWM};
+pub use network::NetworkKind;
+pub use tech::Tech;

@@ -1,0 +1,94 @@
+//! Memory cell technologies (§2.2, Table 2).
+
+/// Cell technology for register-file banks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tech {
+    /// High-performance CMOS SRAM — the conventional GPU register file.
+    HpSram,
+    /// Low-standby-power CMOS SRAM.
+    LstpSram,
+    /// Tunnel-FET SRAM.
+    TfetSram,
+    /// Domain-wall (racetrack) memory.
+    Dwm,
+}
+
+/// Device-level parameters, normalized to HP SRAM at the baseline bank
+/// size (16KB). `power_factor` is total (dynamic + static) power per byte
+/// at iso-capacity; `density` is bits per area relative to HP SRAM.
+#[derive(Clone, Copy, Debug)]
+pub struct TechParams {
+    pub name: &'static str,
+    /// Power per capacity relative to HP SRAM (Table 2: an 8× LSTP file
+    /// burns 3.2× baseline power where 8× HP burns 8×).
+    pub power_factor: f64,
+    /// Bits per silicon area relative to HP SRAM (DWM racetrack packs
+    /// 8× capacity in 0.25× area ⇒ 32× capacity/area — Table 2 row #7).
+    pub density: f64,
+    /// Whether the cell is non-volatile (zero leakage when idle).
+    pub non_volatile: bool,
+}
+
+impl Tech {
+    pub fn params(self) -> TechParams {
+        match self {
+            Tech::HpSram => TechParams {
+                name: "HP SRAM",
+                power_factor: 1.0,
+                density: 1.0,
+                non_volatile: false,
+            },
+            Tech::LstpSram => TechParams {
+                name: "LSTP SRAM",
+                power_factor: 0.4, // 3.2× power at 8× capacity
+                density: 1.0,
+                non_volatile: false,
+            },
+            Tech::TfetSram => TechParams {
+                name: "TFET SRAM",
+                power_factor: 0.13125, // 1.05× power at 8× capacity
+                density: 1.0,
+                non_volatile: false,
+            },
+            Tech::Dwm => TechParams {
+                name: "DWM",
+                power_factor: 0.08125, // 0.65× power at 8× capacity
+                density: 32.0,         // 0.25× area at 8× capacity (32× cap/area)
+                non_volatile: true,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.params().name
+    }
+
+    pub const ALL: [Tech; 4] = [Tech::HpSram, Tech::LstpSram, Tech::TfetSram, Tech::Dwm];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_factors_match_table2_at_8x() {
+        // capacity 8× → power = 8 × power_factor.
+        assert!((8.0 * Tech::HpSram.params().power_factor - 8.0).abs() < 1e-9);
+        assert!((8.0 * Tech::LstpSram.params().power_factor - 3.2).abs() < 1e-9);
+        assert!((8.0 * Tech::TfetSram.params().power_factor - 1.05).abs() < 1e-9);
+        assert!((8.0 * Tech::Dwm.params().power_factor - 0.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dwm_density_matches_table2_area() {
+        // Table 2 row #7: 8× capacity in 0.25× baseline area.
+        let area = 8.0 / Tech::Dwm.params().density;
+        assert!((area - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn names_distinct() {
+        let names: std::collections::HashSet<_> = Tech::ALL.iter().map(|t| t.name()).collect();
+        assert_eq!(names.len(), 4);
+    }
+}

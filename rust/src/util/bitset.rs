@@ -1,0 +1,257 @@
+//! `RegSet` — a fixed 256-bit set over architectural register ids.
+//!
+//! 256 is the maximum number of registers the CUDA compiler can allocate to
+//! a thread (§3.2 of the paper), and is therefore the width of the prefetch
+//! bit-vectors LTRF embeds in the instruction stream. The same layout
+//! (4 × u64 little-endian words) is what the Pallas prefetch-evaluation
+//! kernel consumes as 8 × u32 lanes, so this type is the wire format between
+//! L3 and the AOT artifact.
+
+/// Maximum architectural registers per thread (CUDA limit, §3.2).
+pub const MAX_REGS: usize = 256;
+const WORDS: usize = MAX_REGS / 64;
+
+/// Fixed-size 256-bit register set / prefetch bit-vector.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct RegSet {
+    words: [u64; WORDS],
+}
+
+impl RegSet {
+    /// The empty set.
+    #[inline]
+    pub const fn new() -> Self {
+        RegSet { words: [0; WORDS] }
+    }
+
+    /// Set with a single register.
+    #[inline]
+    pub fn singleton(r: u16) -> Self {
+        let mut s = Self::new();
+        s.insert(r);
+        s
+    }
+
+    /// Build from an iterator of register ids.
+    pub fn from_iter<I: IntoIterator<Item = u16>>(iter: I) -> Self {
+        let mut s = Self::new();
+        for r in iter {
+            s.insert(r);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn insert(&mut self, r: u16) {
+        debug_assert!((r as usize) < MAX_REGS, "register id {r} out of range");
+        self.words[(r >> 6) as usize] |= 1u64 << (r & 63);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, r: u16) {
+        self.words[(r >> 6) as usize] &= !(1u64 << (r & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, r: u16) -> bool {
+        (self.words[(r >> 6) as usize] >> (r & 63)) & 1 == 1
+    }
+
+    /// Number of registers in the set.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Set union (`self ∪ other`).
+    #[inline]
+    pub fn union(&self, other: &Self) -> Self {
+        let mut out = *self;
+        for i in 0..WORDS {
+            out.words[i] |= other.words[i];
+        }
+        out
+    }
+
+    /// Set intersection.
+    #[inline]
+    pub fn intersect(&self, other: &Self) -> Self {
+        let mut out = *self;
+        for i in 0..WORDS {
+            out.words[i] &= other.words[i];
+        }
+        out
+    }
+
+    /// Set difference (`self \ other`).
+    #[inline]
+    pub fn difference(&self, other: &Self) -> Self {
+        let mut out = *self;
+        for i in 0..WORDS {
+            out.words[i] &= !other.words[i];
+        }
+        out
+    }
+
+    /// In-place union; returns true if `self` changed (dataflow fixpoints).
+    #[inline]
+    pub fn union_in_place(&mut self, other: &Self) -> bool {
+        let mut changed = false;
+        for i in 0..WORDS {
+            let next = self.words[i] | other.words[i];
+            changed |= next != self.words[i];
+            self.words[i] = next;
+        }
+        changed
+    }
+
+    /// True if `self ⊆ other`.
+    #[inline]
+    pub fn is_subset(&self, other: &Self) -> bool {
+        (0..WORDS).all(|i| self.words[i] & !other.words[i] == 0)
+    }
+
+    /// True if the sets share at least one register.
+    #[inline]
+    pub fn intersects(&self, other: &Self) -> bool {
+        (0..WORDS).any(|i| self.words[i] & other.words[i] != 0)
+    }
+
+    /// Iterate over register ids in ascending order.
+    pub fn iter(&self) -> RegSetIter<'_> {
+        RegSetIter { set: self, word: 0, bits: self.words[0] }
+    }
+
+    /// Raw 64-bit words (little-endian bit order), for the PJRT bridge.
+    #[inline]
+    pub fn words(&self) -> &[u64; WORDS] {
+        &self.words
+    }
+
+    /// The set as 8 little-endian u32 lanes — the layout the Pallas kernel
+    /// and its jnp oracle consume.
+    pub fn to_u32_lanes(&self) -> [u32; 8] {
+        let mut out = [0u32; 8];
+        for (i, w) in self.words.iter().enumerate() {
+            out[2 * i] = *w as u32;
+            out[2 * i + 1] = (*w >> 32) as u32;
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for RegSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (i, r) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "r{r}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Iterator over the ids of a `RegSet`.
+pub struct RegSetIter<'a> {
+    set: &'a RegSet,
+    word: usize,
+    bits: u64,
+}
+
+impl Iterator for RegSetIter<'_> {
+    type Item = u16;
+
+    fn next(&mut self) -> Option<u16> {
+        loop {
+            if self.bits != 0 {
+                let bit = self.bits.trailing_zeros() as u16;
+                self.bits &= self.bits - 1;
+                return Some((self.word as u16) * 64 + bit);
+            }
+            self.word += 1;
+            if self.word >= WORDS {
+                return None;
+            }
+            self.bits = self.set.words[self.word];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_set() {
+        let s = RegSet::new();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.iter().count(), 0);
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = RegSet::new();
+        for r in [0u16, 1, 63, 64, 127, 128, 200, 255] {
+            assert!(!s.contains(r));
+            s.insert(r);
+            assert!(s.contains(r));
+        }
+        assert_eq!(s.len(), 8);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 7);
+    }
+
+    #[test]
+    fn iter_ascending() {
+        let s = RegSet::from_iter([200u16, 3, 64, 3, 127]);
+        let v: Vec<u16> = s.iter().collect();
+        assert_eq!(v, vec![3, 64, 127, 200]);
+    }
+
+    #[test]
+    fn set_algebra() {
+        let a = RegSet::from_iter([1u16, 2, 3, 100]);
+        let b = RegSet::from_iter([3u16, 100, 200]);
+        assert_eq!(a.union(&b).len(), 5);
+        assert_eq!(a.intersect(&b).len(), 2);
+        assert_eq!(a.difference(&b).len(), 2);
+        assert!(a.intersects(&b));
+        assert!(a.intersect(&b).is_subset(&a));
+        assert!(!a.is_subset(&b));
+    }
+
+    #[test]
+    fn union_in_place_reports_change() {
+        let mut a = RegSet::from_iter([1u16, 2]);
+        let b = RegSet::from_iter([2u16, 3]);
+        assert!(a.union_in_place(&b));
+        assert!(!a.union_in_place(&b));
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn u32_lanes_roundtrip() {
+        let s = RegSet::from_iter([0u16, 31, 32, 63, 64, 255]);
+        let lanes = s.to_u32_lanes();
+        // Reconstruct and compare.
+        let mut count = 0;
+        for (lane, word) in lanes.iter().enumerate() {
+            for bit in 0..32 {
+                if (word >> bit) & 1 == 1 {
+                    assert!(s.contains((lane * 32 + bit) as u16));
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, s.len());
+    }
+}

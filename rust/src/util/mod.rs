@@ -1,0 +1,12 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build environment is fully offline with only the `xla` + `anyhow`
+//! crates vendored, so we carry our own bitset, PRNG, and property-testing
+//! helpers instead of pulling `bitvec`/`rand`/`proptest`.
+
+pub mod bitset;
+pub mod prop;
+pub mod rng;
+
+pub use bitset::RegSet;
+pub use rng::Xoshiro256;

@@ -1,0 +1,53 @@
+//! Minimal property-testing harness (offline stand-in for `proptest`).
+//!
+//! `check(cases, seed, f)` runs `f` on `cases` independent RNG streams;
+//! failures report the failing case seed so a test can be replayed with
+//! `check(1, <seed>, f)`. Shrinking is not implemented — generators in this
+//! repo are parameterized by small integers, so failing cases are already
+//! small and directly inspectable.
+
+use super::rng::Xoshiro256;
+
+/// Number of cases used by most property tests (kept modest: the full
+/// `cargo test` suite runs hundreds of properties).
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Run `f` against `cases` deterministic RNG streams derived from `seed`.
+///
+/// Panics (failing the enclosing test) with the case index and derived seed
+/// on the first property violation.
+pub fn check<F: FnMut(&mut Xoshiro256)>(cases: u64, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        check(16, 1, |_| n += 1);
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        check(16, 1, |rng| {
+            assert!(rng.below(4) < 3, "hit the 1/4 branch");
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! The remaining 21 workloads of the 35-benchmark pool (§2.1 / Table 1).
+//!
+//! The paper recompiles **35** CUDA SDK / Rodinia / Parboil benchmarks with
+//! `maxregcount` unconstrained to measure register demand (Table 1), then
+//! randomly selects 9 register-sensitive + 5 register-insensitive for the
+//! timing figures (§6). [`super::suite`] holds the selected 14; this module
+//! holds the other 21, used only for the Table-1 capacity-demand analysis
+//! (their generator parameters still produce valid kernels, so they also
+//! serve as extra compiler-pass fodder in tests).
+
+use super::spec::{RegClass, WorkloadSpec};
+
+macro_rules! w {
+    ($name:literal, $class:ident, $rm:expr, $rf:expr, $iters:expr, $unroll:expr,
+     $mem:expr, $fp:expr, $sfu:expr, $br:expr, $reuse:expr, $seed:expr) => {
+        WorkloadSpec {
+            name: $name,
+            class: RegClass::$class,
+            regs_maxwell: $rm,
+            regs_fermi: $rf,
+            outer_iters: $iters,
+            unroll: $unroll,
+            mem_ratio: $mem,
+            footprint_log2: $fp,
+            sfu_ratio: $sfu,
+            branch_ratio: $br,
+            reuse: $reuse,
+            seed: $seed,
+        }
+    };
+}
+
+/// The non-selected 21 of the paper's 35-benchmark pool.
+pub static EXTRAS: &[WorkloadSpec] = &[
+    // Rodinia
+    w!("streamcluster", Insensitive, 22, 18, 40, 1, 0.35, 10, 0.02, 0.20, 0.55, 0x57C1),
+    w!("particlefilter", Sensitive, 60, 38, 28, 2, 0.28, 10, 0.10, 0.25, 0.60, 0xAAF1),
+    w!("myocyte", Sensitive, 152, 62, 20, 5, 0.20, 8, 0.20, 0.10, 0.70, 0x3307),
+    w!("mummergpu", Insensitive, 24, 18, 36, 1, 0.45, 13, 0.00, 0.60, 0.30, 0x3355),
+    w!("nn", Insensitive, 14, 12, 48, 1, 0.38, 9, 0.04, 0.05, 0.70, 0x0171),
+    w!("dwt2d", Sensitive, 52, 34, 32, 2, 0.30, 10, 0.06, 0.12, 0.60, 0xD32D),
+    w!("huffman", Insensitive, 20, 16, 40, 1, 0.33, 9, 0.00, 0.55, 0.55, 0x4FF),
+    w!("cell", Sensitive, 72, 44, 28, 3, 0.26, 10, 0.08, 0.10, 0.65, 0xCE11),
+    // Parboil
+    w!("mri-q", Sensitive, 44, 30, 36, 2, 0.22, 9, 0.18, 0.05, 0.70, 0x3219),
+    w!("mri-gridding", Sensitive, 64, 40, 28, 3, 0.30, 11, 0.12, 0.20, 0.55, 0x6214),
+    w!("sgemm", Sensitive, 96, 48, 30, 4, 0.25, 10, 0.02, 0.05, 0.75, 0x5E33),
+    w!("spmv", Insensitive, 18, 14, 44, 1, 0.48, 13, 0.00, 0.35, 0.35, 0x5133),
+    w!("stencil", Sensitive, 40, 28, 36, 2, 0.34, 9, 0.02, 0.08, 0.75, 0x57E2),
+    w!("tpacf", Sensitive, 56, 36, 30, 2, 0.24, 9, 0.16, 0.15, 0.65, 0x7ACF),
+    w!("lbm", Sensitive, 140, 60, 22, 5, 0.32, 12, 0.06, 0.05, 0.50, 0x1B33),
+    w!("histo", Insensitive, 16, 13, 46, 1, 0.40, 10, 0.00, 0.40, 0.50, 0x4157),
+    w!("cutcp", Sensitive, 48, 32, 34, 2, 0.24, 9, 0.14, 0.10, 0.70, 0xC7C9),
+    w!("sad", Insensitive, 26, 20, 40, 1, 0.36, 9, 0.02, 0.15, 0.65, 0x5AD2),
+    // CUDA SDK
+    w!("matrixMul", Sensitive, 42, 30, 36, 2, 0.28, 9, 0.00, 0.04, 0.80, 0x3A7),
+    w!("reduction", Insensitive, 12, 10, 52, 1, 0.42, 10, 0.00, 0.10, 0.60, 0x4ED),
+    w!("transpose", Insensitive, 15, 12, 48, 1, 0.46, 10, 0.00, 0.05, 0.55, 0x7A2),
+];
+
+/// The full 35-benchmark pool (selected 14 + extras 21), Table-1 scope.
+pub fn all35() -> Vec<&'static WorkloadSpec> {
+    super::suite::SUITE.iter().chain(EXTRAS.iter()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::execute;
+    use crate::workloads::gen;
+
+    #[test]
+    fn pool_is_35_workloads() {
+        assert_eq!(EXTRAS.len(), 21);
+        assert_eq!(all35().len(), 35);
+        let mut names: Vec<_> = all35().iter().map(|w| w.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 35, "duplicate names in the pool");
+    }
+
+    #[test]
+    fn extras_generate_valid_terminating_kernels() {
+        for spec in EXTRAS {
+            let k = gen::build(spec);
+            assert!(k.validate().is_ok(), "{}", spec.name);
+            let out = execute(&k, 3, &[(gen::REG_BASE, 0x1_0000)], 3_000_000, false);
+            assert!(out.finished, "{} did not terminate", spec.name);
+        }
+    }
+
+    #[test]
+    fn extras_compile_cleanly() {
+        use crate::compiler::{compile, CompileOptions};
+        for spec in EXTRAS {
+            let k = gen::build(spec);
+            let ck = compile(&k, CompileOptions::ltrf_conf(16));
+            assert_eq!(ck.intervals.validate(&ck.kernel), Ok(()), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn fermi_caps_respected() {
+        for w in EXTRAS {
+            assert!(w.regs_fermi <= 64 && w.regs_fermi <= w.regs_maxwell, "{}", w.name);
+        }
+    }
+}

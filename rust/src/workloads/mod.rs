@@ -1,0 +1,19 @@
+//! Synthetic workload suite — the CUDA-SDK/Rodinia/Parboil stand-in.
+//!
+//! Real CUDA binaries are unavailable offline, so each benchmark named in
+//! the paper's figures is modeled by a deterministic generated kernel whose
+//! *published characteristics* are reproduced: register demand (which
+//! drives TLP sensitivity — Table 1 / Fig. 3), memory intensity and
+//! footprint (which drive L1 behaviour and latency-hiding headroom), SFU
+//! and branch density, and loop structure. The compiler passes only ever
+//! see CFG structure and register def/use chains, so these kernels exercise
+//! exactly the properties the paper's mechanisms depend on.
+
+pub mod extras;
+pub mod gen;
+pub mod spec;
+pub mod suite;
+
+pub use extras::all35;
+pub use spec::{RegClass, WorkloadSpec};
+pub use suite::{suite, workload_by_name};

@@ -1,0 +1,103 @@
+//! Per-benchmark parameter records.
+
+/// Whether enlarging the register file raises the workload's achievable
+/// TLP (the paper's §2.1 classification).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegClass {
+    /// Register file size is not the TLP bottleneck.
+    Insensitive,
+    /// More register file capacity ⇒ more resident warps.
+    Sensitive,
+}
+
+/// Generator parameters for one synthetic benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub class: RegClass,
+    /// Registers per thread when compiled with `maxregcount` unconstrained
+    /// (the Maxwell-era compiler demand; Table 1).
+    pub regs_maxwell: u16,
+    /// Registers per thread under the Fermi-era compiler (less aggressive
+    /// unrolling, 64-register ISA cap; Table 1).
+    pub regs_fermi: u16,
+    /// Outer-loop trip count (dynamic length knob).
+    pub outer_iters: u32,
+    /// Unrolled work groups per loop iteration (each group uses its own
+    /// register window, as real unrolled code does).
+    pub unroll: usize,
+    /// Loads+stores as a fraction of group instructions.
+    pub mem_ratio: f64,
+    /// log2 of the global-memory footprint in 128-byte lines; larger
+    /// footprints overflow the L1 and stress the memory system.
+    pub footprint_log2: u32,
+    /// SFU (transcendental) op density.
+    pub sfu_ratio: f64,
+    /// Probability that a group carries a data-dependent diamond.
+    pub branch_ratio: f64,
+    /// Temporal locality of global loads: fraction of a group's loads
+    /// that re-touch the group's hot lines (drives L1 hit rate).
+    pub reuse: f64,
+    /// Deterministic generator seed.
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Register demand seen by the (Maxwell-like) simulated GPU.
+    pub fn regs_per_thread(&self) -> u16 {
+        self.regs_maxwell
+    }
+
+    /// Warps resident per SM given a register file of `warp_regs` 1024-bit
+    /// warp-registers and a hardware cap of `max_warps`.
+    /// (One warp-register = 32 threads × 32 bits.)
+    pub fn resident_warps(&self, warp_regs: usize, max_warps: usize) -> usize {
+        (warp_regs / self.regs_per_thread() as usize).clamp(1, max_warps)
+    }
+
+    /// Required register file bytes to reach `max_warps` TLP on this
+    /// workload (Table 1 arithmetic): warps × 32 threads × regs × 4B.
+    pub fn required_rf_bytes(&self, regs_per_thread: u16, max_warps: usize) -> usize {
+        max_warps * 32 * regs_per_thread as usize * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(regs: u16) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "t",
+            class: RegClass::Sensitive,
+            regs_maxwell: regs,
+            regs_fermi: regs.min(64),
+            outer_iters: 8,
+            unroll: 2,
+            mem_ratio: 0.2,
+            footprint_log2: 10,
+            sfu_ratio: 0.0,
+            branch_ratio: 0.0,
+            reuse: 0.5,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn resident_warps_capacity_bound() {
+        let s = spec(64);
+        // 256KB = 2048 warp-registers → 32 warps at 64 regs/thread.
+        assert_eq!(s.resident_warps(2048, 64), 32);
+        // 8× capacity lifts the cap to the hardware limit.
+        assert_eq!(s.resident_warps(16384, 64), 64);
+        // Tiny RF still runs one warp.
+        assert_eq!(s.resident_warps(32, 64), 1);
+    }
+
+    #[test]
+    fn required_bytes_table1_arithmetic() {
+        let s = spec(32);
+        // 64 warps × 32 threads × 32 regs × 4B = 256KB.
+        assert_eq!(s.required_rf_bytes(32, 64), 256 * 1024);
+    }
+}

@@ -1,0 +1,114 @@
+//! The 14-benchmark suite used across the paper's figures: 5
+//! register-insensitive and 9 register-sensitive workloads (§6 selects 5+9
+//! from the 35-benchmark pool the same way).
+//!
+//! Parameter provenance: register demands follow the published per-kernel
+//! `nvcc -maxrregcount`-unconstrained counts for these benchmarks (Rodinia/
+//! Parboil characterization papers) rounded to generator-friendly values;
+//! memory intensity / footprint / SFU / branchiness follow each benchmark's
+//! well-known behaviour (e.g. `bfs` branchy + irregular, `lavaMD`
+//! compute-dense, `cfd` register- and memory-hungry).
+
+use super::spec::{RegClass, WorkloadSpec};
+
+macro_rules! w {
+    ($name:literal, $class:ident, $rm:expr, $rf:expr, $iters:expr, $unroll:expr,
+     $mem:expr, $fp:expr, $sfu:expr, $br:expr, $reuse:expr, $seed:expr) => {
+        WorkloadSpec {
+            name: $name,
+            class: RegClass::$class,
+            regs_maxwell: $rm,
+            regs_fermi: $rf,
+            outer_iters: $iters,
+            unroll: $unroll,
+            mem_ratio: $mem,
+            footprint_log2: $fp,
+            sfu_ratio: $sfu,
+            branch_ratio: $br,
+            reuse: $reuse,
+            seed: $seed,
+        }
+    };
+}
+
+/// All 14 workloads: insensitive first, then sensitive (figure order).
+pub static SUITE: &[WorkloadSpec] = &[
+    // -------- register-insensitive (RF is not the TLP bottleneck) -------
+    w!("btree", Insensitive, 20, 16, 40, 1, 0.40, 11, 0.00, 0.65, 0.50, 0xB7EE),
+    w!("kmeans", Insensitive, 18, 14, 48, 1, 0.30, 8, 0.05, 0.10, 0.70, 0x4EA5),
+    w!("bfs", Insensitive, 16, 12, 44, 1, 0.42, 12, 0.00, 0.70, 0.15, 0xBF5),
+    w!("hotspot", Insensitive, 26, 20, 40, 1, 0.30, 6, 0.05, 0.10, 0.85, 0x407),
+    w!("lud", Insensitive, 24, 18, 44, 1, 0.22, 7, 0.02, 0.15, 0.80, 0x10D),
+    // -------- register-sensitive (more RF ⇒ more resident warps) --------
+    w!("backprop", Sensitive, 96, 42, 36, 3, 0.30, 12, 0.08, 0.10, 0.55, 0xBAC),
+    w!("cfd", Sensitive, 188, 64, 24, 6, 0.30, 12, 0.10, 0.08, 0.45, 0xCFD),
+    w!("gaussian", Sensitive, 108, 48, 32, 3, 0.28, 12, 0.04, 0.12, 0.50, 0x6A5),
+    w!("heartwall", Sensitive, 132, 56, 28, 4, 0.28, 12, 0.12, 0.15, 0.50, 0x4EA7),
+    w!("lavaMD", Sensitive, 124, 52, 28, 4, 0.24, 11, 0.15, 0.05, 0.60, 0x1A7A),
+    w!("leukocyte", Sensitive, 148, 60, 24, 5, 0.26, 12, 0.14, 0.08, 0.55, 0x1E0),
+    w!("nw", Sensitive, 88, 40, 36, 2, 0.34, 12, 0.00, 0.25, 0.45, 0x500),
+    w!("srad_v1", Sensitive, 116, 52, 30, 3, 0.32, 13, 0.10, 0.10, 0.45, 0x5AD),
+    w!("pathfinder", Sensitive, 84, 38, 40, 2, 0.32, 12, 0.02, 0.30, 0.50, 0xAA74),
+];
+
+/// The full suite.
+pub fn suite() -> Vec<&'static WorkloadSpec> {
+    SUITE.iter().collect()
+}
+
+/// Look up one workload by name.
+pub fn workload_by_name(name: &str) -> Option<&'static WorkloadSpec> {
+    SUITE.iter().find(|w| w.name == name)
+}
+
+/// Only the register-sensitive workloads.
+pub fn sensitive() -> Vec<&'static WorkloadSpec> {
+    SUITE.iter().filter(|w| w.class == RegClass::Sensitive).collect()
+}
+
+/// Only the register-insensitive workloads.
+pub fn insensitive() -> Vec<&'static WorkloadSpec> {
+    SUITE.iter().filter(|w| w.class == RegClass::Insensitive).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_composition_matches_paper() {
+        assert_eq!(suite().len(), 14);
+        assert_eq!(insensitive().len(), 5);
+        assert_eq!(sensitive().len(), 9);
+    }
+
+    #[test]
+    fn names_unique_and_lookup_works() {
+        let mut names: Vec<_> = SUITE.iter().map(|w| w.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 14);
+        assert_eq!(workload_by_name("cfd").unwrap().regs_maxwell, 188);
+        assert!(workload_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn sensitive_workloads_actually_capacity_limited() {
+        // At 256KB (2048 warp-registers) a sensitive workload must not fit
+        // 64 warps; an insensitive one must.
+        for w in sensitive() {
+            assert!(w.resident_warps(2048, 64) < 64, "{} not capacity-limited", w.name);
+        }
+        for w in insensitive() {
+            assert_eq!(w.resident_warps(2048, 64), 64, "{} is capacity-limited", w.name);
+        }
+    }
+
+    #[test]
+    fn fermi_demand_no_larger_than_maxwell() {
+        for w in SUITE {
+            assert!(w.regs_fermi <= w.regs_maxwell);
+            assert!(w.regs_fermi <= 64, "{} exceeds the Fermi ISA cap", w.name);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: compiler → simulator across the whole suite and all
+//! hierarchies; checks the cross-module invariants DESIGN.md §4 lists.
+
+use ltrf::compiler::{compile, CompileOptions, SubgraphMode};
+use ltrf::ir::execute;
+use ltrf::sim::{gpu, HierarchyKind, SimConfig};
+use ltrf::workloads::{gen, suite};
+
+#[test]
+fn full_suite_compiles_with_valid_intervals() {
+    for spec in suite::suite() {
+        let kernel = gen::build(spec);
+        for n in [8usize, 16, 32] {
+            let ck = compile(&kernel, CompileOptions::ltrf(n));
+            assert_eq!(ck.intervals.validate(&ck.kernel), Ok(()), "{} N={n}", spec.name);
+            for iv in &ck.intervals.intervals {
+                assert!(iv.working_set.len() <= n, "{} N={n}", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn renumbering_preserves_suite_semantics() {
+    for spec in suite::suite() {
+        let kernel = gen::build(spec);
+        let plain = compile(&kernel, CompileOptions::ltrf(16));
+        let conf = compile(&kernel, CompileOptions::ltrf_conf(16));
+        let a = execute(
+            &plain.kernel,
+            7,
+            &[(plain.map_reg(gen::REG_BASE), 0x1_0000u32)],
+            3_000_000,
+            false,
+        );
+        let b = execute(
+            &conf.kernel,
+            7,
+            &[(conf.map_reg(gen::REG_BASE), 0x1_0000u32)],
+            3_000_000,
+            false,
+        );
+        assert!(a.finished && b.finished, "{}", spec.name);
+        assert_eq!(a.stores, b.stores, "{}: stores differ after renumbering", spec.name);
+        assert_eq!(a.dyn_insts, b.dyn_insts, "{}", spec.name);
+    }
+}
+
+#[test]
+fn renumbering_never_increases_suite_conflicts() {
+    for spec in suite::suite() {
+        let kernel = gen::build(spec);
+        let plain = compile(&kernel, CompileOptions::ltrf(16));
+        let conf = compile(&kernel, CompileOptions::ltrf_conf(16));
+        assert!(
+            conf.conflict_free_fraction() >= plain.conflict_free_fraction(),
+            "{}: conflict-free {:.2} -> {:.2}",
+            spec.name,
+            plain.conflict_free_fraction(),
+            conf.conflict_free_fraction()
+        );
+    }
+}
+
+#[test]
+fn every_hierarchy_completes_every_quick_workload() {
+    for name in ["kmeans", "bfs", "cfd"] {
+        let spec = suite::workload_by_name(name).unwrap();
+        for kind in [
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Shrf,
+            HierarchyKind::Ltrf { plus: false },
+            HierarchyKind::Ltrf { plus: true },
+        ] {
+            let cfg =
+                SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
+            let st = gpu::run_workload(spec, &cfg, kind.uses_subgraphs());
+            assert!(st.warps_finished > 0, "{name} on {}", kind.name());
+            assert!(st.cycles < cfg.max_cycles, "{name} on {} hit cycle cap", kind.name());
+            assert!(st.ipc() > 0.01, "{name} on {}: ipc {}", kind.name(), st.ipc());
+        }
+    }
+}
+
+#[test]
+fn ltrf_service_guarantee_holds_under_strands_too() {
+    // The debug_assert inside read_operands fires if any in-interval access
+    // misses the RF$; running LTRF in both subgraph modes exercises it.
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    for mode in [SubgraphMode::RegisterIntervals, SubgraphMode::Strands] {
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: true })
+            .with_latency_factor(4.0);
+        let kernel = gen::build(spec);
+        let mut opts = gpu::compile_options(&cfg, false);
+        opts.mode = mode;
+        let ck = compile(&kernel, opts);
+        let st = gpu::run(&ck, &cfg);
+        assert!(st.warps_finished > 0, "{mode:?}");
+        // All operand reads served by the cache.
+        assert_eq!(st.mrf_reads, st.prefetch_regs, "{mode:?}: only prefetches touch the MRF");
+    }
+}
+
+#[test]
+fn capacity_scales_resident_warps_and_work() {
+    let spec = suite::workload_by_name("cfd").unwrap(); // 188 regs/thread
+    let small = SimConfig::with_hierarchy(HierarchyKind::Baseline);
+    let big = SimConfig { warp_regs_capacity: 16384, ..small };
+    let s = gpu::run_workload(spec, &small, false);
+    let b = gpu::run_workload(spec, &big, false);
+    // 2048/188 = 10 warps vs 64 warps: 6.4× the instructions.
+    assert_eq!(small.resident_warps(188), 10);
+    assert_eq!(big.resident_warps(188), 64);
+    assert!(b.instructions > 6 * s.instructions);
+}

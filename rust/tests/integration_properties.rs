@@ -1,0 +1,98 @@
+//! Cross-module property tests over randomly generated kernels.
+
+use ltrf::compiler::{compile, CompileOptions};
+use ltrf::ir::{analysis, execute, parser};
+use ltrf::sim::{gpu, HierarchyKind, SimConfig};
+use ltrf::util::prop;
+use ltrf::workloads::gen;
+
+/// display → parse → display is a fixpoint, and parsing preserves
+/// semantics, for arbitrary generated kernels.
+#[test]
+fn prop_parser_roundtrip_random_kernels() {
+    prop::check(48, 0x70AD, |rng| {
+        let k = gen::random_kernel(rng, 24);
+        let text = k.display();
+        let k2 = parser::parse(&text).expect("reparse of displayed kernel");
+        assert_eq!(text, k2.display(), "display must be a fixpoint");
+        let a = execute(&k, 5, &[], 500_000, false);
+        let b = execute(&k2, 5, &[], 500_000, false);
+        assert_eq!(a.stores, b.stores);
+        assert_eq!(a.dyn_insts, b.dyn_insts);
+    });
+}
+
+/// The full compile pipeline never changes observable behaviour, for any
+/// mode/N/renumber combination.
+#[test]
+fn prop_compile_semantics_invariant() {
+    prop::check(32, 0xC0DE, |rng| {
+        let k = gen::random_kernel(rng, 24);
+        let baseline = execute(&k, 11, &[], 500_000, false);
+        for (n, renumber) in [(8usize, false), (16, true), (32, true)] {
+            let mut opts = CompileOptions::ltrf(n);
+            opts.renumber = renumber;
+            let ck = compile(&k, opts);
+            let out = execute(
+                &ck.kernel,
+                11,
+                &[(ck.map_reg(0), 0)],
+                500_000,
+                false,
+            );
+            assert_eq!(baseline.stores, out.stores, "N={n} renumber={renumber}");
+            assert_eq!(baseline.dyn_insts, out.dyn_insts);
+        }
+    });
+}
+
+/// Dominator facts hold on random kernels: the entry dominates all blocks
+/// and every idom actually dominates its block.
+#[test]
+fn prop_dominators_sound() {
+    prop::check(48, 0xD0A, |rng| {
+        let k = gen::random_kernel(rng, 20);
+        let dom = analysis::Dominators::compute(&k);
+        for b in 0..k.num_blocks() {
+            assert!(dom.dominates(0, b));
+            assert!(dom.dominates(dom.idom[b], b));
+        }
+    });
+}
+
+/// Simulation conservation laws: every resident warp finishes exactly
+/// once, instruction counts match the architectural stream, and cache
+/// residency is bounded by the partition size throughout.
+#[test]
+fn prop_simulation_conservation() {
+    prop::check(12, 0x51AB, |rng| {
+        let spec = *rng.choose(&ltrf::workloads::suite::suite().as_slice());
+        let kind = *rng.choose(&[
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Ltrf { plus: true },
+        ]);
+        let factor = *rng.choose(&[1.0f64, 3.0, 6.3]);
+        let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(factor).normalize_capacity();
+        let kernel = gen::build(spec);
+        let ck = compile(&kernel, gpu::compile_options(&cfg, false));
+        let resident = cfg.resident_warps(ck.kernel.num_regs);
+        let st = gpu::run(&ck, &cfg);
+        assert_eq!(st.warps_finished as usize, resident, "{} on {}", spec.name, kind.name());
+        // Per-warp architectural instruction count matches the sim count.
+        let mut expect = 0u64;
+        for w in 0..resident {
+            let salt = w as u64 + 1;
+            let base = 0x1_0000u32 + (w as u32 % 8) * 8192 + (w as u32 / 8) * 256;
+            let out = execute(
+                &ck.kernel,
+                salt,
+                &[(ck.map_reg(0), base)],
+                10_000_000,
+                false,
+            );
+            expect += out.dyn_insts;
+        }
+        assert_eq!(st.instructions, expect, "{} on {}", spec.name, kind.name());
+    });
+}

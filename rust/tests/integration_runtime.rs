@@ -1,0 +1,72 @@
+//! Integration: the three-layer bridge. Compiled kernels' real prefetch
+//! bit-vectors flow through the PJRT artifact (L1 Pallas kernel inside the
+//! L2 JAX model) and must agree exactly with both the rust reference
+//! evaluator and the compiler's own conflict accounting.
+
+use ltrf::compiler::{compile, renumber, CompileOptions};
+use ltrf::runtime::prefetch_eval::{evaluate_reference, LatencyParams};
+use ltrf::runtime::PrefetchEvaluator;
+use ltrf::util::bitset::MAX_REGS;
+use ltrf::workloads::{gen, suite};
+use std::path::Path;
+
+fn artifact_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn interleave_assign() -> [usize; MAX_REGS] {
+    let mut a = [0usize; MAX_REGS];
+    for (r, slot) in a.iter_mut().enumerate() {
+        *slot = r % 16;
+    }
+    a
+}
+
+#[test]
+fn artifact_agrees_on_real_compiled_working_sets() {
+    let ev = match PrefetchEvaluator::load(&artifact_dir()) {
+        Ok(ev) => ev,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    assert!(ev.is_pjrt());
+    let params = LatencyParams::default();
+    let assign = interleave_assign();
+    for spec in suite::suite() {
+        let kernel = gen::build(spec);
+        let ck = compile(&kernel, CompileOptions::ltrf(16));
+        let sets: Vec<_> = ck.intervals.intervals.iter().map(|i| i.working_set).collect();
+        let got = ev.evaluate(&sets, &assign, params).unwrap();
+        let want = evaluate_reference(&sets, &assign, params);
+        assert_eq!(got, want, "{}: PJRT vs reference mismatch", spec.name);
+        // Cross-check against the compiler's own conflict metric.
+        for (ws, row) in sets.iter().zip(&got) {
+            assert_eq!(
+                row.conflicts as usize,
+                renumber::bank_conflicts(ws, 16, ltrf::compiler::BankMap::Interleave),
+                "{}",
+                spec.name
+            );
+            assert_eq!(row.total as usize, ws.len());
+        }
+    }
+}
+
+#[test]
+fn artifact_latency_model_matches_simulator_inputs() {
+    let ev = PrefetchEvaluator::load_or_reference(&artifact_dir());
+    // A conflict-free 8-register set at 13-cycle banks, 2 regs/cycle xbar,
+    // 4-cycle traversal: 13 + 4 + 4 = 21 cycles.
+    let ws = ltrf::util::RegSet::from_iter(0u16..8);
+    let rows = ev
+        .evaluate(
+            &[ws],
+            &interleave_assign(),
+            LatencyParams { mrf_cycles: 13.0, xbar_rate: 2.0, xbar_latency: 4.0 },
+        )
+        .unwrap();
+    assert_eq!(rows[0].conflicts, 0);
+    assert_eq!(rows[0].latency, 21);
+}

@@ -13,6 +13,7 @@
 //! Run: `cargo run --release --example e2e_headline` (add `--quick` for
 //! the 5-workload subset). Results are recorded in EXPERIMENTS.md.
 
+use ltrf::coordinator::engine::{two_phase, Engine};
 use ltrf::coordinator::experiments::{headline, ExperimentContext};
 use ltrf::runtime::PrefetchEvaluator;
 
@@ -32,8 +33,12 @@ fn main() {
     );
 
     let t0 = std::time::Instant::now();
-    let (improvement, table) = headline(&ctx);
+    // Two-phase engine run: the headline's points (suite × {baseline,
+    // config #7}) execute as one deduplicated parallel job matrix.
+    let mut eng = Engine::new(ctx.jobs);
+    let (improvement, table) = two_phase(&ctx, &mut eng, headline);
     println!("{}", table.render());
+    eprintln!("{}", eng.summary());
     println!(
         "LTRF_conf on config #7 (DWM, 2MB, 6.3x): mean IPC improvement +{:.1}% (paper: +34%)",
         improvement * 100.0

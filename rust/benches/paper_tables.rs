@@ -1,31 +1,91 @@
 //! Bench: end-to-end regeneration time of each paper table/figure driver
-//! (quick context). This is the harness a user runs to reproduce the
-//! evaluation, so its wall-clock is itself a deliverable.
+//! (quick context), plus serial-vs-engine comparisons of a shared design
+//! matrix so the executor's speedup is tracked in the perf trajectory.
 //!
 //! Run: `cargo bench --bench paper_tables`
 
 mod bench_util;
 use bench_util::bench;
+use ltrf::coordinator::engine::{two_phase, CfgTweaks, Engine};
 use ltrf::coordinator::experiments as exp;
+use ltrf::sim::HierarchyKind;
+use ltrf::workloads::suite;
+
+/// The comparison matrix: 3 workloads × 3 designs × 2 latency factors.
+fn matrix_points() -> Vec<(&'static ltrf::workloads::WorkloadSpec, exp::DesignUnderTest, f64)> {
+    let workloads = ["kmeans", "gaussian", "pathfinder"];
+    let designs = [
+        exp::DesignUnderTest::new(HierarchyKind::Baseline, false),
+        exp::DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false),
+        exp::DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true),
+    ];
+    let mut points = Vec::new();
+    for w in workloads {
+        let spec = suite::workload_by_name(w).unwrap();
+        for d in &designs {
+            for factor in [1.0, 4.0] {
+                points.push((spec, d.clone(), factor));
+            }
+        }
+    }
+    points
+}
 
 fn main() {
     let ctx = exp::ExperimentContext::quick();
 
-    bench("table1 (TLP capacity demand)", 3, || exp::table1(&ctx).rows.len() as u64);
-    bench("table2 (design points)", 10, || exp::table2_table(&ctx).rows.len() as u64);
-    bench("fig3 (ideal vs TFET 8x)", 1, || exp::fig3(&ctx).rows.len() as u64);
-    bench("fig4 (register cache hit rates)", 1, || exp::fig4(&ctx).rows.len() as u64);
-    bench("fig6 (conflict distribution)", 1, || exp::fig6(&ctx).rows.len() as u64);
+    // --- per-driver regeneration through the engine (quick context) ---
+    let drv = |f: fn(&exp::ExperimentContext, &mut Engine) -> ltrf::report::Table| {
+        let ctx = ctx.clone();
+        move || {
+            let mut eng = Engine::new(0);
+            two_phase(&ctx, &mut eng, f).rows.len() as u64
+        }
+    };
+    bench("table1 (TLP capacity demand)", 3, drv(exp::table1));
+    bench("table2 (design points)", 10, drv(exp::table2_table));
+    bench("fig3 (ideal vs TFET 8x)", 1, drv(exp::fig3));
+    bench("fig4 (register cache hit rates)", 1, drv(exp::fig4));
+    bench("fig6 (conflict distribution)", 1, drv(exp::fig6));
     bench("fig14 (overall IPC, cfgs #6/#7)", 1, || {
-        exp::fig14(&ctx).iter().map(|t| t.rows.len() as u64).sum()
+        let mut eng = Engine::new(0);
+        two_phase(&ctx, &mut eng, exp::fig14).iter().map(|t| t.rows.len() as u64).sum()
     });
-    bench("fig15 (max tolerable latency)", 1, || exp::fig15(&ctx).rows.len() as u64);
+    bench("fig15 (max tolerable latency)", 1, drv(exp::fig15));
     bench("fig16 (conflicts x N)", 1, || {
-        exp::fig16(&ctx).iter().map(|t| t.rows.len() as u64).sum()
+        let mut eng = Engine::new(0);
+        two_phase(&ctx, &mut eng, exp::fig16).iter().map(|t| t.rows.len() as u64).sum()
     });
-    bench("table4 (interval lengths)", 1, || exp::table4(&ctx).rows.len() as u64);
-    bench("fig19 (vs strand-based designs)", 1, || exp::fig19(&ctx).rows.len() as u64);
+    bench("table4 (interval lengths)", 1, drv(exp::table4));
+    bench("fig19 (vs strand-based designs)", 1, drv(exp::fig19));
     bench("headline (config #7 improvement)", 1, || {
-        exp::headline(&ctx).1.rows.len() as u64
+        let mut eng = Engine::new(0);
+        two_phase(&ctx, &mut eng, exp::headline).1.rows.len() as u64
     });
+
+    // --- serial legacy path vs the parallel engine on the same matrix ---
+    println!();
+    let points = matrix_points();
+    bench("matrix 3wl x 3designs x 2lat, serial (uncached)", 2, || {
+        points.iter().map(|(s, d, f)| d.run(s, *f).instructions).sum()
+    });
+    for jobs in [1usize, 0] {
+        let label = if jobs == 1 {
+            "matrix 3wl x 3designs x 2lat, engine --jobs 1"
+        } else {
+            "matrix 3wl x 3designs x 2lat, engine --jobs auto"
+        };
+        bench(label, 2, || {
+            let mut eng = Engine::new(jobs);
+            eng.plan_phase();
+            for (s, d, f) in &points {
+                eng.request(*s, d, *f);
+            }
+            eng.execute();
+            points
+                .iter()
+                .map(|(s, d, f)| eng.stats_tweaked(*s, d, *f, CfgTweaks::NONE).instructions)
+                .sum::<u64>()
+        });
+    }
 }

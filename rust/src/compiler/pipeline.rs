@@ -17,7 +17,7 @@ use crate::util::RegSet;
 pub use super::renumber::BankMap;
 
 /// Which prefetch-subgraph formation to use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SubgraphMode {
     /// Register-intervals (LTRF; Algorithms 1+2).
     RegisterIntervals,
@@ -27,7 +27,9 @@ pub enum SubgraphMode {
 
 /// Compiler knobs. Defaults match the paper's Table 3 configuration
 /// (16 registers per register-interval, 16 main-register-file banks).
-#[derive(Clone, Copy, Debug)]
+/// `Eq + Hash` so `(workload, CompileOptions)` can key the coordinator's
+/// compile memoization cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CompileOptions {
     /// N — the register-file-cache partition size in registers.
     pub max_regs_per_interval: usize,

@@ -12,7 +12,7 @@ use crate::util::bitset::MAX_REGS;
 use crate::util::RegSet;
 
 /// How architectural register ids map to main-register-file banks.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BankMap {
     /// `bank = r % num_banks` — fine interleave, the GPGPU-Sim/real-GPU
     /// default and our default everywhere.

@@ -1,0 +1,548 @@
+//! Declarative parallel experiment engine.
+//!
+//! The paper's evaluation (§7) is a cross-product of workloads ×
+//! register-file designs × latency factors, and many figures share points
+//! (every figure normalizes to the same baseline column, Fig. 14/15/17/18
+//! re-probe the same designs). Instead of each driver hand-rolling serial
+//! loops that recompile and re-simulate identical points, drivers declare
+//! the points they need:
+//!
+//! * [`SimJob`] — one simulation point: workload × [`DesignUnderTest`] ×
+//!   MRF latency factor (+ structural [`CfgTweaks`] for ablations);
+//! * [`JobMatrix`] — the deduplicated set of declared points;
+//! * [`CompileCache`] — `(workload, CompileOptions)`-keyed memoization, so
+//!   each unique kernel/options pair is compiled exactly once per run;
+//! * [`ResultSet`] — keyed `Stats` lookup the figures render from;
+//! * [`Engine`] — ties them together with the work-stealing executor in
+//!   [`super::sweep::steal_map`] and a `--jobs N` thread knob.
+//!
+//! Drivers run in two phases (see [`two_phase`]): a *planning* pass where
+//! [`Engine::stats`] registers jobs and returns placeholder zeros (table
+//! output is discarded), one parallel [`Engine::execute`], then a *render*
+//! pass where every lookup hits the `ResultSet`. Adaptive drivers (the
+//! §7.2 tolerable-latency scans) may miss points they only discover while
+//! rendering; those fall back to on-demand simulation through the same
+//! caches, so results stay identical to the serial implementation.
+//!
+//! Determinism: a simulation job touches no global state — it owns its
+//! `SharedMem`, its `SmSim`s, and its per-warp RNG streams — so `Stats`
+//! are a pure function of the job key. Execution order and thread count
+//! (`--jobs 1` vs `--jobs N`) therefore cannot change any output bit (the
+//! integration suite asserts this).
+
+use super::experiments::DesignUnderTest;
+use super::sweep;
+use crate::compiler::{compile, BankMap, CompileOptions, CompiledKernel};
+use crate::sim::config::HierarchyKind;
+use crate::sim::{gpu, SimConfig, Stats};
+use crate::workloads::{gen, WorkloadSpec};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------
+// Jobs and keys
+// ---------------------------------------------------------------------
+
+/// Structural `SimConfig` overrides applied on top of the design's
+/// configuration (the §7.5 ablation knobs). `None` = leave the design's
+/// value alone.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct CfgTweaks {
+    pub early_refetch: Option<bool>,
+    pub xbar_regs_per_cycle: Option<u32>,
+    pub bank_map: Option<BankMap>,
+}
+
+impl CfgTweaks {
+    pub const NONE: CfgTweaks =
+        CfgTweaks { early_refetch: None, xbar_regs_per_cycle: None, bank_map: None };
+
+    /// Apply to a concrete simulator configuration. Must run *before*
+    /// compile options are derived from the config (the bank map feeds
+    /// the compiler).
+    pub fn apply(&self, cfg: &mut SimConfig) {
+        if let Some(v) = self.early_refetch {
+            cfg.early_refetch = v;
+        }
+        if let Some(v) = self.xbar_regs_per_cycle {
+            cfg.xbar_regs_per_cycle = v;
+        }
+        if let Some(v) = self.bank_map {
+            cfg.bank_map = v;
+        }
+    }
+}
+
+/// One simulation point.
+#[derive(Clone, Debug)]
+pub struct SimJob {
+    pub spec: &'static WorkloadSpec,
+    pub dut: DesignUnderTest,
+    pub latency_factor: f64,
+    pub tweaks: CfgTweaks,
+}
+
+impl SimJob {
+    fn key(&self) -> JobKey {
+        JobKey::of(self.spec, &self.dut, self.latency_factor, self.tweaks)
+    }
+
+    /// Static cost estimate for LPT scheduling: resident warps × dynamic
+    /// work × SM count. Only load balance depends on this, never results.
+    fn cost_estimate(&self) -> u64 {
+        let regs = self.spec.regs_per_thread().max(1) as usize;
+        let warps = (self.dut.capacity / regs).clamp(1, self.dut.warps_per_sm) as u64;
+        let work = self.spec.outer_iters as u64 * (1 + self.spec.unroll as u64);
+        let lat = (self.latency_factor * 4.0) as u64 + 1;
+        warps * work * lat * self.dut.num_sms.max(1) as u64
+    }
+}
+
+/// Hashable identity of a simulation point. Every field that can change a
+/// simulated cycle is part of the key; the latency factor is keyed by its
+/// exact bit pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobKey {
+    workload: &'static str,
+    hierarchy: HierarchyKind,
+    renumber: bool,
+    capacity: usize,
+    mrf_banks: usize,
+    regs_per_interval: usize,
+    active_warps: usize,
+    warps_per_sm: usize,
+    num_sms: usize,
+    mode_override: Option<crate::compiler::SubgraphMode>,
+    latency_bits: u64,
+    tweaks: CfgTweaks,
+}
+
+impl JobKey {
+    pub fn of(
+        spec: &WorkloadSpec,
+        dut: &DesignUnderTest,
+        latency_factor: f64,
+        tweaks: CfgTweaks,
+    ) -> JobKey {
+        JobKey {
+            workload: spec.name,
+            hierarchy: dut.hierarchy,
+            renumber: dut.renumber,
+            capacity: dut.capacity,
+            mrf_banks: dut.mrf_banks,
+            regs_per_interval: dut.regs_per_interval,
+            active_warps: dut.active_warps,
+            warps_per_sm: dut.warps_per_sm,
+            num_sms: dut.num_sms,
+            mode_override: dut.mode_override,
+            latency_bits: latency_factor.to_bits(),
+            tweaks,
+        }
+    }
+}
+
+/// Opaque handle into a [`JobMatrix`] / [`ResultSet`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobId(usize);
+
+/// The deduplicated set of declared simulation points.
+#[derive(Default)]
+pub struct JobMatrix {
+    jobs: Vec<SimJob>,
+    index: HashMap<JobKey, usize>,
+}
+
+impl JobMatrix {
+    pub fn new() -> Self {
+        JobMatrix::default()
+    }
+
+    /// Declare a point; identical points collapse to one job.
+    pub fn add(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        latency_factor: f64,
+        tweaks: CfgTweaks,
+    ) -> JobId {
+        let key = JobKey::of(spec, dut, latency_factor, tweaks);
+        if let Some(&i) = self.index.get(&key) {
+            return JobId(i);
+        }
+        let i = self.jobs.len();
+        self.jobs.push(SimJob { spec, dut: dut.clone(), latency_factor, tweaks });
+        self.index.insert(key, i);
+        JobId(i)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn jobs(&self) -> &[SimJob] {
+        &self.jobs
+    }
+}
+
+// ---------------------------------------------------------------------
+// Caches
+// ---------------------------------------------------------------------
+
+/// `(workload, CompileOptions)`-keyed kernel build+compile memoization.
+/// The map lock only guards the entry table; each entry is a per-key
+/// `OnceLock`, so a unique pair compiles exactly once per run while
+/// *distinct* pairs compile concurrently under the parallel executor.
+#[derive(Default)]
+pub struct CompileCache {
+    map: Mutex<HashMap<(&'static str, CompileOptions), Arc<OnceLock<Arc<CompiledKernel>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        CompileCache::default()
+    }
+
+    pub fn get(&self, spec: &WorkloadSpec, opts: CompileOptions) -> Arc<CompiledKernel> {
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            match map.entry((spec.name, opts)) {
+                Entry::Occupied(e) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    e.get().clone()
+                }
+                Entry::Vacant(v) => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    v.insert(Arc::new(OnceLock::new())).clone()
+                }
+            }
+        };
+        // First claimant compiles; concurrent claimants of the same key
+        // block here (and only here) until it lands.
+        cell.get_or_init(|| Arc::new(compile(&gen::build(spec), opts))).clone()
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that compiled (= unique `(workload, options)` pairs seen).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Keyed simulation results the figures render from.
+#[derive(Default)]
+pub struct ResultSet {
+    map: HashMap<JobKey, Stats>,
+}
+
+impl ResultSet {
+    pub fn get(&self, key: &JobKey) -> Option<&Stats> {
+        self.map.get(key)
+    }
+
+    pub fn insert(&mut self, key: JobKey, stats: Stats) {
+        self.map.insert(key, stats);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Point runner (single source of truth for job → Stats)
+// ---------------------------------------------------------------------
+
+/// Run one simulation point: design config + tweaks → compile → simulate.
+/// `DesignUnderTest::run`, the executor, and the render-phase fallback all
+/// go through here, so a point's semantics cannot drift between paths.
+pub fn run_point(
+    spec: &WorkloadSpec,
+    dut: &DesignUnderTest,
+    latency_factor: f64,
+    tweaks: CfgTweaks,
+    cache: Option<&CompileCache>,
+) -> Stats {
+    let mut cfg = dut.cfg_public(latency_factor);
+    tweaks.apply(&mut cfg);
+    let mut opts = gpu::compile_options(&cfg, dut.renumber);
+    if let Some(m) = dut.mode_override {
+        opts.mode = m;
+    }
+    match cache {
+        Some(c) => {
+            let ck = c.get(spec, opts);
+            gpu::run(&ck, &cfg)
+        }
+        None => {
+            let kernel = gen::build(spec);
+            let ck = compile(&kernel, opts);
+            gpu::run(&ck, &cfg)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------
+
+/// The shared experiment engine: job matrix + caches + executor.
+pub struct Engine {
+    /// Worker threads for [`Engine::execute`] (0 = all cores).
+    pub threads: usize,
+    planning: bool,
+    matrix: JobMatrix,
+    results: ResultSet,
+    compile_cache: CompileCache,
+    sims_run: u64,
+    lookups: u64,
+}
+
+impl Engine {
+    pub fn new(threads: usize) -> Self {
+        Engine {
+            threads,
+            planning: false,
+            matrix: JobMatrix::new(),
+            results: ResultSet::default(),
+            compile_cache: CompileCache::new(),
+            sims_run: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Enter the planning phase: subsequent [`Engine::stats`] calls
+    /// register jobs and return placeholder zeros.
+    pub fn plan_phase(&mut self) {
+        self.planning = true;
+    }
+
+    pub fn planning(&self) -> bool {
+        self.planning
+    }
+
+    /// Declare a point without needing its (placeholder) stats.
+    pub fn request(&mut self, spec: &'static WorkloadSpec, dut: &DesignUnderTest, factor: f64) {
+        self.request_tweaked(spec, dut, factor, CfgTweaks::NONE);
+    }
+
+    pub fn request_tweaked(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) {
+        let key = JobKey::of(spec, dut, factor, tweaks);
+        if self.results.get(&key).is_none() {
+            self.matrix.add(spec, dut, factor, tweaks);
+        }
+    }
+
+    /// Stats for a point. Planning: registers the job, returns zeros.
+    /// Rendering: `ResultSet` lookup, with an on-demand (cached,
+    /// memoized) simulation fallback for adaptively-discovered points.
+    pub fn stats(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+    ) -> Stats {
+        self.stats_tweaked(spec, dut, factor, CfgTweaks::NONE)
+    }
+
+    pub fn stats_tweaked(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) -> Stats {
+        if !self.planning {
+            // Render-pass reads only: counting the planning pass too would
+            // make the dedup statistic overstate itself 2×.
+            self.lookups += 1;
+        }
+        let key = JobKey::of(spec, dut, factor, tweaks);
+        if let Some(s) = self.results.get(&key) {
+            return s.clone();
+        }
+        if self.planning {
+            self.matrix.add(spec, dut, factor, tweaks);
+            return Stats::default();
+        }
+        let st = run_point(spec, dut, factor, tweaks, Some(&self.compile_cache));
+        self.sims_run += 1;
+        self.results.insert(key, st.clone());
+        st
+    }
+
+    /// The §6 normalization point: BL @ 1× latency, 256KB (+16KB folded).
+    pub fn baseline_ipc(&mut self, spec: &'static WorkloadSpec) -> f64 {
+        self.stats(spec, &DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0).ipc()
+    }
+
+    /// Compile (or fetch) a kernel through the shared compile cache.
+    pub fn compiled(&self, spec: &WorkloadSpec, opts: CompileOptions) -> Arc<CompiledKernel> {
+        self.compile_cache.get(spec, opts)
+    }
+
+    pub fn compile_cache(&self) -> &CompileCache {
+        &self.compile_cache
+    }
+
+    /// Pending (declared, unexecuted) job count.
+    pub fn pending(&self) -> usize {
+        self.matrix.len()
+    }
+
+    /// Simulations actually run so far (≤ points declared, thanks to
+    /// dedup; render-phase fallbacks included).
+    pub fn sims_run(&self) -> u64 {
+        self.sims_run
+    }
+
+    /// Unique simulation points held in the `ResultSet`.
+    pub fn results_len(&self) -> usize {
+        self.results.len()
+    }
+
+    /// Run every pending job on the work-stealing executor and fold the
+    /// stats into the `ResultSet`; ends the planning phase.
+    pub fn execute(&mut self) {
+        self.planning = false;
+        if self.matrix.is_empty() {
+            return;
+        }
+        let jobs = std::mem::take(&mut self.matrix.jobs);
+        self.matrix.index.clear();
+        // Longest-processing-time-first order feeds the round-robin deal
+        // in steal_map; stealing mops up the estimation error.
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(jobs[i].cost_estimate()));
+        let ordered: Vec<&SimJob> = order.iter().map(|&i| &jobs[i]).collect();
+        let cache = &self.compile_cache;
+        let stats = sweep::steal_map(&ordered, self.threads, |job| {
+            run_point(job.spec, &job.dut, job.latency_factor, job.tweaks, Some(cache))
+        });
+        self.sims_run += stats.len() as u64;
+        for (job, st) in ordered.iter().zip(stats) {
+            self.results.insert(job.key(), st);
+        }
+    }
+
+    /// Point lookups served (planning placeholders + render reads); the
+    /// gap to `sims_run` is what dedup + memoization saved.
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    /// One-line execution report (printed by the CLI after `execute`).
+    pub fn summary(&self) -> String {
+        format!(
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles",
+            self.lookups,
+            self.sims_run,
+            self.compile_cache.hits(),
+            self.compile_cache.misses(),
+        )
+    }
+}
+
+/// Run a driver in the two-phase protocol: plan (CSV emission disabled via
+/// a `csv_dir: None` context), execute the matrix in parallel, render.
+pub fn two_phase<T>(
+    ctx: &super::experiments::ExperimentContext,
+    eng: &mut Engine,
+    f: impl Fn(&super::experiments::ExperimentContext, &mut Engine) -> T,
+) -> T {
+    eng.plan_phase();
+    let plan_ctx =
+        super::experiments::ExperimentContext { csv_dir: None, ..ctx.clone() };
+    let _ = f(&plan_ctx, eng);
+    eng.execute();
+    f(ctx, eng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::suite;
+
+    fn bl() -> DesignUnderTest {
+        DesignUnderTest::new(HierarchyKind::Baseline, false)
+    }
+
+    #[test]
+    fn matrix_dedups_identical_points() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut m = JobMatrix::new();
+        let a = m.add(spec, &bl(), 1.0, CfgTweaks::NONE);
+        let b = m.add(spec, &bl(), 1.0, CfgTweaks::NONE);
+        let c = m.add(spec, &bl(), 2.0, CfgTweaks::NONE);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(m.len(), 2);
+        // Tweaked points are distinct jobs.
+        let tw = CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE };
+        let d = m.add(spec, &bl(), 1.0, tw);
+        assert_ne!(a, d);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn planning_registers_then_render_hits_resultset() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(1);
+        eng.plan_phase();
+        let placeholder = eng.stats(spec, &bl(), 1.0);
+        assert_eq!(placeholder, Stats::default());
+        assert_eq!(eng.pending(), 1);
+        eng.execute();
+        assert_eq!(eng.pending(), 0);
+        let st = eng.stats(spec, &bl(), 1.0);
+        assert!(st.instructions > 0);
+        assert_eq!(eng.sims_run(), 1, "render lookup must not re-simulate");
+    }
+
+    #[test]
+    fn shared_points_compile_and_simulate_once() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(2);
+        eng.plan_phase();
+        // Same design at two latency factors: two sims, one compile.
+        eng.request(spec, &bl(), 1.0);
+        eng.request(spec, &bl(), 1.0); // duplicate declaration
+        eng.request(spec, &bl(), 3.0);
+        eng.execute();
+        assert_eq!(eng.sims_run(), 2);
+        assert_eq!(eng.compile_cache().misses(), 1, "one unique (spec, options) pair");
+        assert!(eng.compile_cache().hits() >= 1, "shared design point must hit the cache");
+    }
+
+    #[test]
+    fn run_point_matches_dut_run() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let direct = bl().run(spec, 2.0);
+        let via_engine = run_point(spec, &bl(), 2.0, CfgTweaks::NONE, None);
+        let cache = CompileCache::new();
+        let via_cache = run_point(spec, &bl(), 2.0, CfgTweaks::NONE, Some(&cache));
+        assert_eq!(direct, via_engine);
+        assert_eq!(direct, via_cache);
+    }
+}

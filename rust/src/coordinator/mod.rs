@@ -1,9 +1,13 @@
-//! Experiment coordination: parallel sweeps and the per-table/figure
-//! drivers that regenerate the paper's evaluation (§7).
+//! Experiment coordination: the declarative parallel experiment engine
+//! (job matrix + work-stealing executor + compile/result memoization),
+//! parallel sweep primitives, and the per-table/figure drivers that
+//! regenerate the paper's evaluation (§7).
 
+pub mod engine;
 pub mod experiments;
 pub mod sweep;
 pub mod tolerable;
 
+pub use engine::{two_phase, CfgTweaks, CompileCache, Engine, JobMatrix, ResultSet, SimJob};
 pub use experiments::ExperimentContext;
-pub use sweep::parallel_map;
+pub use sweep::{parallel_map, steal_map};

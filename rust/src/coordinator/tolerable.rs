@@ -2,8 +2,23 @@
 //! MRF latency factor at which a design loses at most 5% IPC relative to
 //! its own 1× performance.
 
+use super::engine::Engine;
 use super::experiments::DesignUnderTest;
 use crate::workloads::WorkloadSpec;
+
+/// Planning-phase pre-registration horizon: the grid up to this factor is
+/// declared to the engine up front (parallel, deduplicated); a design that
+/// tolerates more falls back to on-demand points during the render scan.
+/// Low-tolerance designs (BL/RFC collapse around 2–3× — Fig. 15) get a
+/// short horizon so the parallel plan does not vastly out-simulate the
+/// serial early-exit scan; latency-tolerant designs plan to 8×, where the
+/// figure tops out.
+fn plan_horizon(dut: &DesignUnderTest) -> f64 {
+    match dut.hierarchy {
+        crate::sim::HierarchyKind::Baseline | crate::sim::HierarchyKind::Rfc => 4.0,
+        _ => 8.0,
+    }
+}
 
 /// Latency factors probed, in ascending order (half-steps up to 16×; the
 /// paper's Fig. 15 tops out around 7×).
@@ -25,15 +40,49 @@ pub fn max_tolerable(dut: &DesignUnderTest, spec: &WorkloadSpec, threshold: f64)
     if base <= 0.0 {
         return 1.0;
     }
+    scan(threshold, base, |f| dut.run(spec, f).ipc())
+}
+
+/// Engine-backed variant used by the figure drivers. During planning it
+/// declares the factor grid (up to [`PLAN_HORIZON`]) into the shared job
+/// matrix; during rendering it performs the exact same early-exit scan as
+/// [`max_tolerable`], reading from the `ResultSet` (grid points past the
+/// horizon are simulated on demand through the engine's caches), so the
+/// result is identical to the serial implementation at any `--jobs N`.
+pub fn max_tolerable_engine(
+    eng: &mut Engine,
+    dut: &DesignUnderTest,
+    spec: &'static WorkloadSpec,
+    threshold: f64,
+) -> f64 {
+    if eng.planning() {
+        let horizon = plan_horizon(dut);
+        eng.request(spec, dut, 1.0);
+        for f in factor_grid().into_iter().skip(1) {
+            if f > horizon {
+                break;
+            }
+            eng.request(spec, dut, f);
+        }
+        return 1.0;
+    }
+    let base = eng.stats(spec, dut, 1.0).ipc();
+    if base <= 0.0 {
+        return 1.0;
+    }
+    scan(threshold, base, |f| eng.stats(spec, dut, f).ipc())
+}
+
+/// The shared grid scan: last factor within `threshold × base`, stopping
+/// after two consecutive failures (noise tolerance).
+fn scan(threshold: f64, base: f64, mut ipc_at: impl FnMut(f64) -> f64) -> f64 {
     let mut best = 1.0;
     let mut strikes = 0;
     for f in factor_grid().into_iter().skip(1) {
-        let ipc = dut.run(spec, f).ipc();
-        if ipc >= threshold * base {
+        if ipc_at(f) >= threshold * base {
             best = f;
             strikes = 0;
         } else {
-            // Two consecutive failures end the scan (noise tolerance).
             strikes += 1;
             if strikes >= 2 {
                 break;

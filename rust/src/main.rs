@@ -3,6 +3,7 @@
 //! Every table/figure in the paper's evaluation is a subcommand; `all`
 //! regenerates the full set (EXPERIMENTS.md records the outputs).
 
+use ltrf::coordinator::engine::{two_phase, Engine};
 use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
 use ltrf::report::Table;
 use ltrf::sim::HierarchyKind;
@@ -47,6 +48,8 @@ Flags:
   --quick       5-workload subset, smaller grids
   --csv DIR     also write each table as CSV
   --sms N       simulated SM count (default 1)
+  --jobs N      parallel simulation workers (default: all cores)
+  --engine-stats  print job-matrix / cache statistics after a run
 ";
 
 fn main() {
@@ -65,58 +68,110 @@ fn main() {
         quick: flag("--quick"),
         csv_dir: opt("--csv").map(PathBuf::from),
         num_sms: opt("--sms").and_then(|s| s.parse().ok()).unwrap_or(1),
+        jobs: opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
 
     let print = |t: &Table| println!("{}", t.render());
     let print_all = |ts: &[Table]| ts.iter().for_each(|t| println!("{}", t.render()));
 
+    // Every experiment command shares one engine: figures declare their
+    // simulation points into its job matrix (planning pass), the matrix
+    // runs deduplicated on the work-stealing executor, then the figures
+    // render from the result set.
+    let mut eng = Engine::new(ctx.jobs);
+    let engine_stats = flag("--engine-stats");
+
+    macro_rules! finish {
+        () => {
+            if engine_stats {
+                eprintln!("{}", eng.summary());
+            }
+        };
+    }
+
     match cmd {
-        "table1" => print(&exp::table1(&ctx)),
-        "table2" => print(&exp::table2_table(&ctx)),
-        "fig2" => print(&exp::fig2(&ctx)),
-        "fig3" => print(&exp::fig3(&ctx)),
-        "fig4" => print(&exp::fig4(&ctx)),
-        "fig6" => print(&exp::fig6(&ctx)),
-        "fig14" => print_all(&exp::fig14(&ctx)),
-        "fig15" => print(&exp::fig15(&ctx)),
-        "fig16" => print_all(&exp::fig16(&ctx)),
-        "fig17" => print(&exp::fig17(&ctx)),
-        "fig18" => print(&exp::fig18(&ctx)),
-        "table4" => print(&exp::table4(&ctx)),
-        "fig19" => print(&exp::fig19(&ctx)),
-        "fig20" => print(&exp::fig20(&ctx)),
-        "overheads" => print(&exp::overheads(&ctx)),
-        "ablations" => print_all(&exp::ablations(&ctx)),
-        "ltrfplus" => print(&exp::ltrf_plus(&ctx)),
+        "table1" => {
+            print(&two_phase(&ctx, &mut eng, exp::table1));
+            finish!();
+        }
+        "table2" => {
+            print(&two_phase(&ctx, &mut eng, exp::table2_table));
+            finish!();
+        }
+        "fig2" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig2));
+            finish!();
+        }
+        "fig3" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig3));
+            finish!();
+        }
+        "fig4" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig4));
+            finish!();
+        }
+        "fig6" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig6));
+            finish!();
+        }
+        "fig14" => {
+            print_all(&two_phase(&ctx, &mut eng, exp::fig14));
+            finish!();
+        }
+        "fig15" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig15));
+            finish!();
+        }
+        "fig16" => {
+            print_all(&two_phase(&ctx, &mut eng, exp::fig16));
+            finish!();
+        }
+        "fig17" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig17));
+            finish!();
+        }
+        "fig18" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig18));
+            finish!();
+        }
+        "table4" => {
+            print(&two_phase(&ctx, &mut eng, exp::table4));
+            finish!();
+        }
+        "fig19" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig19));
+            finish!();
+        }
+        "fig20" => {
+            print(&two_phase(&ctx, &mut eng, exp::fig20));
+            finish!();
+        }
+        "overheads" => {
+            print(&two_phase(&ctx, &mut eng, exp::overheads));
+            finish!();
+        }
+        "ablations" => {
+            print_all(&two_phase(&ctx, &mut eng, exp::ablations));
+            finish!();
+        }
+        "ltrfplus" => {
+            print(&two_phase(&ctx, &mut eng, exp::ltrf_plus));
+            finish!();
+        }
         "headline" => {
-            let (imp, t) = exp::headline(&ctx);
+            let (imp, t) = two_phase(&ctx, &mut eng, exp::headline);
             print(&t);
             println!(
                 "LTRF_conf on config #7 improves mean IPC by {:.1}% (paper: 34%)",
                 imp * 100.0
             );
+            finish!();
         }
         "all" => {
-            print(&exp::table1(&ctx));
-            print(&exp::table2_table(&ctx));
-            print(&exp::fig2(&ctx));
-            print(&exp::fig3(&ctx));
-            print(&exp::fig4(&ctx));
-            print(&exp::fig6(&ctx));
-            print_all(&exp::fig14(&ctx));
-            print(&exp::fig15(&ctx));
-            print_all(&exp::fig16(&ctx));
-            print(&exp::fig17(&ctx));
-            print(&exp::fig18(&ctx));
-            print(&exp::table4(&ctx));
-            print(&exp::fig19(&ctx));
-            print(&exp::fig20(&ctx));
-            print(&exp::overheads(&ctx));
-            print_all(&exp::ablations(&ctx));
-            print(&exp::ltrf_plus(&ctx));
-            let (imp, t) = exp::headline(&ctx);
-            print(&t);
+            let (tables, imp) = two_phase(&ctx, &mut eng, exp::all_tables);
+            print_all(&tables);
             println!("Headline: +{:.1}% mean IPC (paper: +34%)", imp * 100.0);
+            finish!();
         }
         "workloads" => {
             let mut t = Table::new(

@@ -4,7 +4,7 @@ use crate::compiler::{BankMap, SubgraphMode};
 use crate::timing::RfDesign;
 
 /// Which register-file hierarchy the SM runs (§6 comparison points).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum HierarchyKind {
     /// Conventional non-cached register file (BL). For fairness the RF$
     /// capacity is added to the MRF (§6).

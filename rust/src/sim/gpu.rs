@@ -32,11 +32,11 @@ pub fn run(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
         now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
     }
 
+    // Per-SM counters (including the L1 memory counters, which SmSim folds
+    // into its own Stats at the access sites) aggregate via plain merges.
     let mut total = Stats::default();
     for sm in &sms {
         total.merge(&sm.stats);
-        total.l1_hits += sm.mem.l1_hits;
-        total.l1_misses += sm.mem.l1_misses;
     }
     total.cycles = now;
     total.llc_hits = shared.llc_hits;

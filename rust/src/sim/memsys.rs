@@ -90,15 +90,15 @@ impl SharedMem {
     }
 }
 
-/// Per-SM level: L1D tags + MSHR accounting.
+/// Per-SM level: L1D tags + MSHR accounting. Hit/miss accounting lives in
+/// the caller's `Stats` (folded from the returned [`MemResult`] by
+/// `SmSim::access_global`), so there is exactly one counter per event.
 #[derive(Clone, Debug)]
 pub struct SmMem {
     l1: TagArray,
     /// Completion times of outstanding misses (MSHR occupancy).
     outstanding: Vec<u64>,
     cfg: MemConfig,
-    pub l1_hits: u64,
-    pub l1_misses: u64,
 }
 
 /// Outcome of a global-memory access.
@@ -118,8 +118,6 @@ impl SmMem {
             l1: TagArray::new(cfg.l1_lines, cfg.l1_assoc),
             outstanding: Vec::new(),
             cfg,
-            l1_hits: 0,
-            l1_misses: 0,
         }
     }
 
@@ -129,10 +127,8 @@ impl SmMem {
         // Retire completed MSHRs.
         self.outstanding.retain(|&t| t > now);
         if self.l1.access(line) {
-            self.l1_hits += 1;
             return MemResult::Hit(now + self.cfg.l1_hit_cycles as u64);
         }
-        self.l1_misses += 1;
         let mut start = now;
         if self.outstanding.len() >= self.cfg.mshrs {
             // No free MSHR: the miss queues until the earliest outstanding
@@ -173,8 +169,6 @@ mod tests {
         assert!(matches!(r1, MemResult::Miss(_)));
         let r2 = sm.access_global(0x1000, 1000, &mut shared);
         assert_eq!(r2, MemResult::Hit(1000 + cfg().l1_hit_cycles as u64));
-        assert_eq!(sm.l1_hits, 1);
-        assert_eq!(sm.l1_misses, 1);
     }
 
     #[test]

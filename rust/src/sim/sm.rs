@@ -232,6 +232,18 @@ impl<'a> SmSim<'a> {
         hint.max(now + 1)
     }
 
+    /// Global-memory access with stats accounting: the per-SM L1 counters
+    /// are folded into `self.stats` here, so `Stats::merge` aggregates them
+    /// like every other counter (no post-merge special cases in gpu::run).
+    fn access_global(&mut self, addr: u64, now: u64, shared: &mut SharedMem) -> MemResult {
+        let r = self.mem.access_global(addr, now, shared);
+        match r {
+            MemResult::Hit(_) => self.stats.l1_hits += 1,
+            MemResult::Miss(_) => self.stats.l1_misses += 1,
+        }
+        r
+    }
+
     /// Attempt to issue one instruction from warp `wid`.
     fn try_issue(&mut self, wid: usize, now: u64, shared: &mut SharedMem) -> bool {
         if !self.warps[wid].issuable(now) {
@@ -306,7 +318,7 @@ impl<'a> SmSim<'a> {
         let done = match inst.op.unit() {
             ExecUnit::MemGlobal if is_load => {
                 let addr = info.mem_addr.unwrap_or(0);
-                match self.mem.access_global(addr, ready, shared) {
+                match self.access_global(addr, ready, shared) {
                     MemResult::Hit(t) => t,
                     MemResult::Miss(t) => {
                         // The warp keeps issuing independent instructions
@@ -330,7 +342,7 @@ impl<'a> SmSim<'a> {
                 // Store: posted write; consumes memory bandwidth but the
                 // warp does not wait (and never deactivates).
                 let addr = info.mem_addr.unwrap_or(0);
-                let _ = self.mem.access_global(addr, ready, shared);
+                let _ = self.access_global(addr, ready, shared);
                 ready + 1
             }
             ExecUnit::MemShared => self.mem.access_shared(ready),
@@ -397,8 +409,6 @@ L1:
         }
         let mut st = sm.stats.clone();
         st.cycles = now;
-        st.l1_hits = sm.mem.l1_hits;
-        st.l1_misses = sm.mem.l1_misses;
         st
     }
 

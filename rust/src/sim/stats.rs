@@ -1,7 +1,9 @@
 //! Simulation statistics: IPC, hit rates, stall breakdown, traffic counts.
 
 /// Counters collected per simulation run (summed across SMs).
-#[derive(Clone, Debug, Default)]
+/// `Eq` so the engine's determinism tests can compare whole runs
+/// bit-for-bit (all counters are integers).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     pub cycles: u64,
     /// Warp-instructions issued (the paper's IPC numerator).
@@ -146,6 +148,19 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.cycles, 20);
         assert_eq!(a.instructions, 12);
+    }
+
+    #[test]
+    fn merge_folds_per_sm_memory_counters() {
+        // gpu::run relies on merge folding the L1 counters (no special
+        // cases after the per-SM merge loop).
+        let mut a = Stats { l1_hits: 3, l1_misses: 1, llc_hits: 2, ..Default::default() };
+        let b = Stats { l1_hits: 4, l1_misses: 6, llc_misses: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.l1_hits, 7);
+        assert_eq!(a.l1_misses, 7);
+        assert_eq!(a.llc_hits, 2);
+        assert_eq!(a.llc_misses, 5);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Integration: the declarative parallel experiment engine.
+//!
+//! The paper-regeneration contract: a figure's numbers may not depend on
+//! how the job matrix is executed. `--jobs 1` and `--jobs 8` must produce
+//! bit-identical `Stats` for every point, shared points must be simulated
+//! once, and each unique `(workload, CompileOptions)` pair must be
+//! compiled exactly once per run (with cache hits for every share).
+
+use ltrf::coordinator::engine::{two_phase, CfgTweaks, Engine};
+use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
+use ltrf::sim::{HierarchyKind, Stats};
+use ltrf::workloads::{suite, WorkloadSpec};
+
+/// 3 workloads × 3 designs (the §6 comparison minus RFC) + per-workload
+/// baseline — the canonical small matrix.
+fn matrix() -> (Vec<&'static WorkloadSpec>, Vec<DesignUnderTest>, f64) {
+    let workloads: Vec<_> = ["kmeans", "gaussian", "pathfinder"]
+        .iter()
+        .map(|n| suite::workload_by_name(n).unwrap())
+        .collect();
+    let designs = vec![
+        DesignUnderTest::new(HierarchyKind::Baseline, false),
+        DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false),
+        DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true),
+    ];
+    (workloads, designs, 4.0)
+}
+
+fn run_matrix(threads: usize) -> (Vec<Stats>, u64, u64, u64) {
+    let (workloads, designs, factor) = matrix();
+    let mut eng = Engine::new(threads);
+    eng.plan_phase();
+    for &spec in &workloads {
+        for d in &designs {
+            eng.request(spec, d, factor);
+        }
+    }
+    eng.execute();
+    let mut out = Vec::new();
+    for &spec in &workloads {
+        for d in &designs {
+            out.push(eng.stats(spec, d, factor));
+        }
+    }
+    (out, eng.sims_run(), eng.compile_cache().hits(), eng.compile_cache().misses())
+}
+
+#[test]
+fn jobs1_vs_jobs8_bit_identical() {
+    let (serial, s_sims, _, _) = run_matrix(1);
+    let (parallel, p_sims, _, _) = run_matrix(8);
+    assert_eq!(serial.len(), 9);
+    assert_eq!(s_sims, 9);
+    assert_eq!(p_sims, 9);
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a, b, "point {i}: stats must be bit-identical across --jobs");
+    }
+    // Sanity: the matrix did real work.
+    assert!(serial.iter().all(|s| s.instructions > 0 && s.cycles > 0));
+}
+
+#[test]
+fn compile_cache_hits_for_every_shared_design_point() {
+    let (_, _, hits, misses) = run_matrix(8);
+    // Per workload: BL and LTRF share compile options (both interval
+    // mode, no renumber — the hierarchy only affects the simulator), and
+    // LTRF_conf compiles its own renumbered kernel. So 2 unique pairs per
+    // workload and at least one hit per shared design point.
+    assert_eq!(misses, 6, "each unique (workload, options) pair compiles exactly once");
+    assert_eq!(hits, 3, "the shared design point must hit the compile cache");
+}
+
+#[test]
+fn figure_tables_byte_identical_across_jobs() {
+    // End-to-end through a real figure driver: fig14 exercises shared
+    // baselines, multiple designs, and two panels.
+    let render = |threads: usize| -> String {
+        let ctx = ExperimentContext { jobs: threads, ..ExperimentContext::quick() };
+        let mut eng = Engine::new(threads);
+        let tables = two_phase(&ctx, &mut eng, exp::fig14);
+        tables.iter().map(|t| t.render()).collect::<Vec<_>>().join("\n")
+    };
+    let one = render(1);
+    let eight = render(8);
+    assert_eq!(one, eight, "--jobs 1 and --jobs 8 must render byte-identical tables");
+    assert!(one.contains("GMEAN"));
+}
+
+#[test]
+fn tweaked_jobs_are_distinct_points() {
+    let spec = suite::workload_by_name("kmeans").unwrap();
+    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let mut eng = Engine::new(2);
+    eng.plan_phase();
+    eng.request_tweaked(spec, &dut, 4.0, CfgTweaks::NONE);
+    eng.request_tweaked(
+        spec,
+        &dut,
+        4.0,
+        CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE },
+    );
+    eng.execute();
+    assert_eq!(eng.sims_run(), 2);
+    let on = eng.stats_tweaked(spec, &dut, 4.0, CfgTweaks::NONE);
+    let off = eng.stats_tweaked(
+        spec,
+        &dut,
+        4.0,
+        CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE },
+    );
+    // §3.2: overlapping the refetch with execution must not hurt.
+    assert!(on.ipc() >= off.ipc() * 0.95, "early refetch regressed: {} vs {}", on.ipc(), off.ipc());
+    assert!(on.instructions > 0 && off.instructions > 0);
+}
+
+#[test]
+fn render_phase_fallback_matches_planned_run() {
+    // A point never declared during planning (the adaptive tolerable-
+    // latency scans hit this path) must come out identical to a planned
+    // one.
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let planned = {
+        let mut eng = Engine::new(2);
+        eng.plan_phase();
+        eng.request(spec, &dut, 6.3);
+        eng.execute();
+        eng.stats(spec, &dut, 6.3)
+    };
+    let fallback = {
+        let mut eng = Engine::new(2);
+        eng.plan_phase();
+        eng.execute(); // empty matrix
+        eng.stats(spec, &dut, 6.3) // on-demand
+    };
+    assert_eq!(planned, fallback);
+}

@@ -1,0 +1,126 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps `xla_extension` (PJRT CPU client + HLO
+//! compilation), which cannot be built in the offline container. This stub
+//! keeps the exact API surface `ltrf::runtime` compiles against, but every
+//! artifact-loading path returns an error, so `PrefetchEvaluator` falls
+//! back to its bit-identical pure-rust reference backend. The CPU client
+//! itself "comes up" (cheap, no native code) so runtime smoke tests can
+//! distinguish "no PJRT at all" from "no compiled artifact".
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` converts it
+/// into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("xla stub: {what} unavailable in the offline build (PJRT backend disabled)"))
+}
+
+/// PJRT CPU client (stub: constructible, cannot compile executables).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("HLO compilation"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructed — parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: unobtainable, methods are type-level only).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Clone, Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("literal tuple access"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("literal data access"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_x: f32) -> Self {
+        Literal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_up_but_compilation_gated() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(!client.platform_name().is_empty());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let _ = comp;
+        assert!(PjRtClient::cpu().unwrap().compile(&XlaComputation).is_err());
+    }
+}

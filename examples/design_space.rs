@@ -16,7 +16,17 @@ fn main() {
 
     let mut t = Table::new(
         "Design space: Table-2 configs under BL vs LTRF_conf (suite gmean, normalized IPC)",
-        &["cfg", "tech", "capacity", "latency", "power", "area", "BL", "LTRF_conf", "perf/power (LTRF)"],
+        &[
+            "cfg",
+            "tech",
+            "capacity",
+            "latency",
+            "power",
+            "area",
+            "BL",
+            "LTRF_conf",
+            "perf/power (LTRF)",
+        ],
     );
     for d in table2() {
         let factor = d.latency();

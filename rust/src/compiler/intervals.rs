@@ -189,8 +189,7 @@ pub fn form_intervals(kernel: &mut Kernel, n: usize) -> IntervalAnalysis {
         let mut ws = worksets[i];
         if let Some(tail) = traverse(kernel, hdr, &mut ws, n) {
             interval_of.resize(kernel.num_blocks(), None);
-            let _ =
-                new_interval(tail, &mut interval_of, &mut headers, &mut members, &mut worksets);
+            let _ = new_interval(tail, &mut interval_of, &mut headers, &mut members, &mut worksets);
             queue.push_back(tail);
         }
         members[i].push(hdr);
@@ -220,13 +219,8 @@ pub fn form_intervals(kernel: &mut Kernel, n: usize) -> IntervalAnalysis {
             let mut ws = worksets[i];
             if let Some(tail) = traverse(kernel, h, &mut ws, n) {
                 interval_of.resize(kernel.num_blocks(), None);
-                let _ = new_interval(
-                    tail,
-                    &mut interval_of,
-                    &mut headers,
-                    &mut members,
-                    &mut worksets,
-                );
+                let _ =
+                    new_interval(tail, &mut interval_of, &mut headers, &mut members, &mut worksets);
                 queue.push_back(tail);
             }
             members[i].push(h);

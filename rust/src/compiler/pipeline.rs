@@ -63,7 +63,11 @@ impl CompileOptions {
     }
 
     pub fn strands(n: usize) -> Self {
-        CompileOptions { max_regs_per_interval: n, mode: SubgraphMode::Strands, ..Default::default() }
+        CompileOptions {
+            max_regs_per_interval: n,
+            mode: SubgraphMode::Strands,
+            ..Default::default()
+        }
     }
 }
 

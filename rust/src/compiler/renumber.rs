@@ -82,7 +82,12 @@ pub struct Renumbering {
 }
 
 /// Apply a coloring: produce the remap and rewrite `kernel` in place.
-pub fn renumber(kernel: &mut Kernel, coloring: &Coloring, num_banks: usize, map: BankMap) -> Renumbering {
+pub fn renumber(
+    kernel: &mut Kernel,
+    coloring: &Coloring,
+    num_banks: usize,
+    map: BankMap,
+) -> Renumbering {
     let n = coloring.color.len().max(kernel.num_regs as usize);
     let mut remap: Vec<u16> = (0..MAX_REGS as u16).collect();
     let mut taken = [false; MAX_REGS];
@@ -225,8 +230,11 @@ L3:
         let ia = merge::reduce(&k, pass1);
         let g = icg::build(&ia);
         let col = chaitin(&g, 4);
-        let before: usize =
-            ia.intervals.iter().map(|i| bank_conflicts(&i.working_set, 4, BankMap::Interleave)).sum();
+        let before: usize = ia
+            .intervals
+            .iter()
+            .map(|i| bank_conflicts(&i.working_set, 4, BankMap::Interleave))
+            .sum();
         let rn = renumber(&mut k, &col, 4, BankMap::Interleave);
         let after: usize = ia
             .intervals
@@ -296,7 +304,8 @@ L3:
                 .intervals
                 .iter()
                 .map(|i| {
-                    bank_conflicts(&remap_set(&i.working_set, &rn.remap), banks, BankMap::Interleave)
+                    let ws = remap_set(&i.working_set, &rn.remap);
+                    bank_conflicts(&ws, banks, BankMap::Interleave)
                 })
                 .max()
                 .unwrap_or(0);

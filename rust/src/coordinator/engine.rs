@@ -268,6 +268,24 @@ impl ResultSet {
 // Point runner (single source of truth for job → Stats)
 // ---------------------------------------------------------------------
 
+/// Derive the concrete simulator configuration and compile options for a
+/// point (design + latency factor + tweaks). Shared by [`run_point`] and
+/// [`run_kernel_point`] so workload-spec jobs and scenario (fuzz) kernels
+/// cannot drift apart in how a point is materialized.
+pub fn point_setup(
+    dut: &DesignUnderTest,
+    latency_factor: f64,
+    tweaks: CfgTweaks,
+) -> (SimConfig, CompileOptions) {
+    let mut cfg = dut.cfg_public(latency_factor);
+    tweaks.apply(&mut cfg);
+    let mut opts = gpu::compile_options(&cfg, dut.renumber);
+    if let Some(m) = dut.mode_override {
+        opts.mode = m;
+    }
+    (cfg, opts)
+}
+
 /// Run one simulation point: design config + tweaks → compile → simulate.
 /// `DesignUnderTest::run`, the executor, and the render-phase fallback all
 /// go through here, so a point's semantics cannot drift between paths.
@@ -278,12 +296,7 @@ pub fn run_point(
     tweaks: CfgTweaks,
     cache: Option<&CompileCache>,
 ) -> Stats {
-    let mut cfg = dut.cfg_public(latency_factor);
-    tweaks.apply(&mut cfg);
-    let mut opts = gpu::compile_options(&cfg, dut.renumber);
-    if let Some(m) = dut.mode_override {
-        opts.mode = m;
-    }
+    let (cfg, opts) = point_setup(dut, latency_factor, tweaks);
     match cache {
         Some(c) => {
             let ck = c.get(spec, opts);
@@ -295,6 +308,29 @@ pub fn run_point(
             gpu::run(&ck, &cfg)
         }
     }
+}
+
+/// Run one simulation point for an arbitrary kernel (the scenario engine's
+/// fuzz-generated kernels have no `WorkloadSpec`, so they cannot key the
+/// compile cache; the point semantics are otherwise identical to
+/// [`run_point`]). `max_cycles` optionally tightens the runaway-simulation
+/// valve (the fuzzer uses a small cap so a liveness bug fails fast).
+/// Returns the stats together with the compiled kernel and the concrete
+/// config, which the scenario oracles need for conservation cross-checks.
+pub fn run_kernel_point(
+    kernel: &crate::ir::Kernel,
+    dut: &DesignUnderTest,
+    latency_factor: f64,
+    tweaks: CfgTweaks,
+    max_cycles: Option<u64>,
+) -> (Stats, Arc<CompiledKernel>, SimConfig) {
+    let (mut cfg, opts) = point_setup(dut, latency_factor, tweaks);
+    if let Some(cap) = max_cycles {
+        cfg.max_cycles = cap;
+    }
+    let ck = Arc::new(compile(kernel, opts));
+    let stats = gpu::run(&ck, &cfg);
+    (stats, ck, cfg)
 }
 
 // ---------------------------------------------------------------------
@@ -472,8 +508,7 @@ pub fn two_phase<T>(
     f: impl Fn(&super::experiments::ExperimentContext, &mut Engine) -> T,
 ) -> T {
     eng.plan_phase();
-    let plan_ctx =
-        super::experiments::ExperimentContext { csv_dir: None, ..ctx.clone() };
+    let plan_ctx = super::experiments::ExperimentContext { csv_dir: None, ..ctx.clone() };
     let _ = f(&plan_ctx, eng);
     eng.execute();
     f(ctx, eng)

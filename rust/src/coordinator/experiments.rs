@@ -178,7 +178,14 @@ pub fn baseline_ipc(spec: &WorkloadSpec) -> f64 {
 pub fn table1(ctx: &ExperimentContext, _eng: &mut Engine) -> Table {
     let mut t = Table::new(
         "Table 1 — register file capacity required for max TLP",
-        &["workload", "class", "Fermi regs/thr", "Fermi req KB", "Maxwell regs/thr", "Maxwell req KB"],
+        &[
+            "workload",
+            "class",
+            "Fermi regs/thr",
+            "Fermi req KB",
+            "Maxwell regs/thr",
+            "Maxwell req KB",
+        ],
     );
     // Fermi: 48 warps/SM (1536 threads); Maxwell: 64 warps/SM.
     let (fermi_warps, maxwell_warps) = (48, 64);
@@ -229,7 +236,19 @@ pub fn table1(ctx: &ExperimentContext, _eng: &mut Engine) -> Table {
 pub fn table2_table(ctx: &ExperimentContext, _eng: &mut Engine) -> Table {
     let mut t = Table::new(
         "Table 2 — register file designs (normalized to config #1)",
-        &["cfg", "tech", "#banks", "bank size", "network", "cap", "area", "power", "cap/area", "cap/power", "latency"],
+        &[
+            "cfg",
+            "tech",
+            "#banks",
+            "bank size",
+            "network",
+            "cap",
+            "area",
+            "power",
+            "cap/area",
+            "cap/power",
+            "latency",
+        ],
     );
     for d in table2() {
         t.row(vec![
@@ -673,15 +692,17 @@ pub fn fig19(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["design", "1x", "2x", "3x", "4x", "5x", "6x", "8x"],
     );
     let factors = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0];
-    let mut ltrf_strand =
-        DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let mut ltrf_strand = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
     ltrf_strand.mode_override = Some(SubgraphMode::Strands);
     let designs: Vec<(&str, DesignUnderTest)> = vec![
         ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false)),
         ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false)),
         ("SHRF", DesignUnderTest::new(HierarchyKind::Shrf, false)),
         ("LTRF (strand)", ltrf_strand),
-        ("LTRF (register-interval)", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)),
+        (
+            "LTRF (register-interval)",
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false),
+        ),
     ];
     for (name, dut) in designs {
         let mut cells = vec![name.to_string()];
@@ -825,7 +846,8 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
             "Ablation A1 — reactivation refetch overlap (LTRF, cfg #7)",
             &["variant", "gmean IPC vs baseline"],
         );
-        let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
+        let dut =
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
         for early in [true, false] {
             let tw = CfgTweaks { early_refetch: Some(early), ..CfgTweaks::NONE };
             let vals: Vec<f64> = ctx
@@ -851,7 +873,8 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
             "Ablation A2 — MRF→RF$ crossbar width (LTRF, cfg #7)",
             &["regs/cycle", "gmean IPC vs baseline"],
         );
-        let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
+        let dut =
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
         for width in [1u32, 2, 4, 8] {
             let tw = CfgTweaks { xbar_regs_per_cycle: Some(width), ..CfgTweaks::NONE };
             let vals: Vec<f64> = ctx
@@ -978,7 +1001,14 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
 pub fn ltrf_plus(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     let mut t = Table::new(
         "§3.2 — LTRF vs LTRF+ (liveness filtering) on config #7",
-        &["workload", "regs moved (LTRF)", "regs moved (LTRF+)", "traffic saved", "IPC LTRF", "IPC LTRF+"],
+        &[
+            "workload",
+            "regs moved (LTRF)",
+            "regs moved (LTRF+)",
+            "traffic saved",
+            "IPC LTRF",
+            "IPC LTRF+",
+        ],
     );
     let cap = 16384;
     let factor = 6.3;
@@ -1156,8 +1186,7 @@ mod tests {
     #[test]
     fn ltrf_plus_saves_traffic() {
         let t = run2(ltrf_plus);
-        let mean_saved: f64 =
-            t.rows.last().unwrap()[3].trim_end_matches('%').parse().unwrap();
+        let mean_saved: f64 = t.rows.last().unwrap()[3].trim_end_matches('%').parse().unwrap();
         assert!(mean_saved > 0.0, "liveness filtering must cut traffic ({mean_saved}%)");
     }
 

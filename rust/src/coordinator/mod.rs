@@ -8,6 +8,8 @@ pub mod experiments;
 pub mod sweep;
 pub mod tolerable;
 
-pub use engine::{two_phase, CfgTweaks, CompileCache, Engine, JobMatrix, ResultSet, SimJob};
+pub use engine::{
+    run_kernel_point, two_phase, CfgTweaks, CompileCache, Engine, JobMatrix, ResultSet, SimJob,
+};
 pub use experiments::ExperimentContext;
 pub use sweep::{parallel_map, steal_map};

@@ -50,6 +50,11 @@ impl KernelBuilder {
         self.items.push(Item::Bind(label));
     }
 
+    /// The textual name of a label handle (parser diagnostics).
+    pub fn label_name(&self, label: Label) -> &str {
+        &self.label_names[label]
+    }
+
     /// Low-level push of a fully-formed instruction.
     pub fn push(&mut self, inst: Inst) {
         self.items.push(Item::Inst(inst));
@@ -223,7 +228,16 @@ impl KernelBuilder {
                     .iter()
                     .position(|p| *p == Some(i))
                     .map(|l| label_names[l].clone())
-                    .unwrap_or_else(|| format!("bb{}", kernel.blocks.len()));
+                    .unwrap_or_else(|| {
+                        // Synthetic fall-through label; must not collide
+                        // with a user label literally named `bbN`, or the
+                        // kernel's display would bind one label twice.
+                        let mut name = format!("bb{}", kernel.blocks.len());
+                        while label_names.contains(&name) {
+                            name.push('_');
+                        }
+                        name
+                    });
                 kernel.blocks.push(Block::new(label));
             }
             inst_block[i] = kernel.blocks.len() - 1;
@@ -320,6 +334,25 @@ mod tests {
         let l = b.fresh_label("nowhere");
         b.bra(l);
         b.finish();
+    }
+
+    #[test]
+    fn synthetic_labels_dodge_user_bb_names() {
+        // A user label literally named `bb1` must not collide with the
+        // synthetic name of the unlabeled fall-through block (index 1).
+        let mut b = KernelBuilder::new("clash");
+        let user = b.named_label("bb1");
+        b.mov_imm(0, 0);
+        b.setp_imm(Cmp::Lt, 0, 0, 1);
+        b.bra_if(0, true, user);
+        b.mov_imm(1, 1); // unlabeled fall-through block
+        b.bind(user);
+        b.exit();
+        let k = b.finish();
+        let mut seen = std::collections::HashSet::new();
+        for blk in &k.blocks {
+            assert!(seen.insert(blk.label.clone()), "duplicate label `{}`", blk.label);
+        }
     }
 
     #[test]

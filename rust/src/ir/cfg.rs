@@ -194,6 +194,17 @@ impl Kernel {
                 if i.op.is_terminator() && !last {
                     return Err(format!("block {bid} has terminator mid-block at {k}"));
                 }
+                // The executor's predicate file is fixed-size; the parser
+                // enforces this for text input, builder paths land here.
+                let preds = i.dpred.into_iter().chain(i.guard.map(|(p, _)| p));
+                for p in preds {
+                    if p as usize >= super::inst::MAX_PREDS {
+                        return Err(format!(
+                            "block {bid} inst {k}: predicate p{p} out of range (max {})",
+                            super::inst::MAX_PREDS - 1
+                        ));
+                    }
+                }
                 if let Op::Bra = i.op {
                     let t = i.target.ok_or(format!("block {bid}: bra without target"))?;
                     if !b.succs.contains(&t) {
@@ -205,6 +216,11 @@ impl Kernel {
                 Some(Op::Exit) => {
                     if !b.succs.is_empty() {
                         return Err(format!("block {bid}: exit block has successors"));
+                    }
+                    if b.insts.last().unwrap().guard.is_some() {
+                        // A predicated-off exit would need a fall-through
+                        // successor, which exit blocks cannot have.
+                        return Err(format!("block {bid}: exit cannot be guarded"));
                     }
                 }
                 Some(Op::Bra) => {
@@ -228,6 +244,20 @@ impl Kernel {
             }
         }
         Ok(())
+    }
+
+    /// Structural equality modulo label names: same block partition, same
+    /// instructions (branch targets compare as resolved block ids, so two
+    /// kernels whose labels were renamed still compare equal), and the
+    /// same successor lists. This is the round-trip oracle's notion of
+    /// `parse(print(k)) == k`.
+    pub fn structurally_eq(&self, other: &Kernel) -> bool {
+        self.blocks.len() == other.blocks.len()
+            && self
+                .blocks
+                .iter()
+                .zip(&other.blocks)
+                .all(|(a, b)| a.insts == b.insts && a.succs == b.succs)
     }
 
     /// All labels (indexed by block id), for display.
@@ -304,6 +334,15 @@ mod tests {
         assert_eq!(k.blocks[1].succs, vec![new_id]);
         // The back edge now targets block 1, which still owns the loop header.
         assert!(k.blocks[new_id].succs.contains(&1));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_predicate() {
+        let mut k = loop_kernel();
+        k.blocks[1].insts[1].dpred = Some(9); // setp to p9: beyond the file
+        let err = k.validate().unwrap_err();
+        assert!(err.contains("p9"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! * `bar` is a pipeline op only (no inter-warp synchronization).
 
 use super::cfg::{BlockId, Kernel};
-use super::inst::{Op, Reg};
+use super::inst::{Op, Reg, MAX_PREDS};
 
 /// splitmix64 — deterministic "memory contents".
 #[inline]
@@ -73,7 +73,7 @@ impl ExecState {
             block: 0,
             idx: 0,
             regs,
-            preds: vec![false; 8],
+            preds: vec![false; MAX_PREDS],
             dyn_insts: 0,
             finished: false,
             salt,
@@ -191,8 +191,10 @@ impl ExecState {
                     self.regs[inst.dst.unwrap() as usize] = v.to_bits();
                 }
                 Op::FFma => {
-                    let v = f32::from_bits(self.src(inst.srcs[0]))
-                        .mul_add(f32::from_bits(self.src(inst.srcs[1])), f32::from_bits(self.src(inst.srcs[2])));
+                    let v = f32::from_bits(self.src(inst.srcs[0])).mul_add(
+                        f32::from_bits(self.src(inst.srcs[1])),
+                        f32::from_bits(self.src(inst.srcs[2])),
+                    );
                     self.regs[inst.dst.unwrap() as usize] = v.to_bits();
                 }
                 Op::Sfu => {

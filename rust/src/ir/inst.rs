@@ -8,6 +8,11 @@ pub type Reg = u16;
 /// real NVIDIA hardware) and do not occupy main-register-file banks.
 pub type Pred = u8;
 
+/// Size of the predicate file (`p0..p7`, the PTX default). The executor
+/// allocates exactly this many predicate slots, so the parser and the
+/// kernel generators must stay within it.
+pub const MAX_PREDS: usize = 8;
+
 /// Comparison operator for `setp`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Cmp {

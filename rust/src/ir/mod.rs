@@ -16,4 +16,4 @@ pub mod parser;
 pub use builder::KernelBuilder;
 pub use cfg::{Block, BlockId, Kernel};
 pub use exec::{execute, ExecOutcome, Trace, TraceEntry};
-pub use inst::{Cmp, ExecUnit, Inst, Op, Pred, Reg};
+pub use inst::{Cmp, ExecUnit, Inst, Op, Pred, Reg, Space};

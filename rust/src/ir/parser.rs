@@ -16,15 +16,27 @@
 
 use super::builder::KernelBuilder;
 use super::cfg::Kernel;
-use super::inst::{Cmp, Inst, Op, Space};
+use super::inst::{Cmp, Inst, Op, Space, MAX_PREDS};
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Parse one kernel from text.
+///
+/// All structural errors — duplicate labels, branches to labels that are
+/// never bound, a label trailing the last instruction, a kernel that does
+/// not end in a terminator — are reported here with the offending line
+/// number, *before* block construction (the builder would only catch them
+/// later as asserts, losing the source position).
 pub fn parse(text: &str) -> Result<Kernel> {
     let mut name = None;
     let mut builder: Option<KernelBuilder> = None;
-    let mut bound: std::collections::HashSet<String> = Default::default();
-    let mut targets: Vec<String> = Vec::new();
+    // Label -> line it was bound on (1-based), for duplicate diagnostics.
+    let mut bound: std::collections::HashMap<String, usize> = Default::default();
+    // (target label, line) of every branch, resolved after the scan.
+    let mut targets: Vec<(String, usize)> = Vec::new();
+    // The most recent label with no instruction after it yet.
+    let mut dangling: Option<(String, usize)> = None;
+    // Last parsed instruction: (op, guarded, line).
+    let mut last_inst: Option<(Op, bool, usize)> = None;
 
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split("//").next().unwrap_or("").trim();
@@ -49,24 +61,48 @@ pub fn parse(text: &str) -> Result<Kernel> {
             if !is_ident(label) {
                 bail!("{}: bad label `{label}`", ctx());
             }
+            if let Some(first) = bound.get(label) {
+                bail!("{}: label `{label}` bound twice (first bound at line {first})", ctx());
+            }
             let l = b.named_label(label);
             b.bind(l);
-            bound.insert(label.to_string());
+            bound.insert(label.to_string(), lineno + 1);
+            dangling = Some((label.to_string(), lineno + 1));
             continue;
         }
 
-        if let Some(tgt) = line.split_whitespace().skip_while(|t| *t != "bra").nth(1) {
-            targets.push(tgt.to_string());
-        }
         let inst = parse_inst(line, b).with_context(ctx)?;
+        if matches!(inst.op, Op::Exit) && inst.guard.is_some() {
+            // An exit block has no successors, so there is nowhere to fall
+            // through when the guard is false — the executor would crash.
+            bail!("{}: `exit` cannot be guarded (no fall-through exists)", ctx());
+        }
+        if let (Op::Bra, Some(t)) = (inst.op, inst.target) {
+            targets.push((b.label_name(t).to_string(), lineno + 1));
+        }
+        last_inst = Some((inst.op, inst.guard.is_some(), lineno + 1));
+        dangling = None;
         b.push(inst);
     }
 
-    let _ = name.ok_or_else(|| anyhow!("no .kernel directive found"))?;
-    for t in &targets {
-        if !bound.contains(t) {
-            bail!("branch to unbound label `{t}`");
+    let name = name.ok_or_else(|| anyhow!("no .kernel directive found"))?;
+    let (last_op, last_guarded, last_line) = match last_inst {
+        Some(t) => t,
+        None => bail!("kernel `{name}` has no instructions"),
+    };
+    for (t, line) in &targets {
+        if !bound.contains_key(t) {
+            bail!("line {line}: branch to label `{t}` which is never bound");
         }
+    }
+    if let Some((label, line)) = dangling {
+        bail!("line {line}: label `{label}` is bound after the last instruction");
+    }
+    if !last_op.is_terminator() {
+        bail!("line {last_line}: kernel must end with `exit` or an unconditional `bra`");
+    }
+    if last_op.is_branch() && last_guarded {
+        bail!("line {last_line}: a guarded branch cannot end the kernel (no fall-through)");
     }
     let b = builder.unwrap();
     let kernel = b.finish();
@@ -225,7 +261,11 @@ fn parse_reg(tok: &str) -> Result<u16> {
 
 fn parse_pred(tok: &str) -> Result<u8> {
     let n = tok.strip_prefix('p').ok_or_else(|| anyhow!("expected predicate, got `{tok}`"))?;
-    n.parse().map_err(|_| anyhow!("bad predicate `{tok}`"))
+    let id: u8 = n.parse().map_err(|_| anyhow!("bad predicate `{tok}`"))?;
+    if id as usize >= MAX_PREDS {
+        bail!("predicate id {id} out of range (predicate file has {MAX_PREDS} registers)");
+    }
+    Ok(id)
 }
 
 fn parse_imm(tok: &str) -> Result<i64> {
@@ -314,6 +354,66 @@ L3:
         assert!(parse(".kernel k\n  add r1\n  exit").is_err());
         assert!(parse(".kernel k\n  bra nowhere").is_err());
         assert!(parse(".kernel k\n  mov r999, #0\n  exit").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_label_with_line() {
+        let err = parse(".kernel k\nL:\n  mov r0, #1\nL:\n  exit").unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("bound twice"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unbound_branch_target_with_line() {
+        let err =
+            parse(".kernel k\n  mov r0, #1\n  bra missing\nL:\n  exit").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("never bound"), "{err}");
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_label() {
+        let err = parse(".kernel k\n  mov r0, #1\n  exit\ntail:").unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("after the last instruction"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_terminator() {
+        let err = parse(".kernel k\n  mov r0, #1").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("must end with"), "{err}");
+    }
+
+    #[test]
+    fn rejects_guarded_branch_at_end() {
+        let src = ".kernel k\ntop:\n  mov r0, #1\n  setp.lt p0, r0, #5\n  @p0 bra top";
+        let err = parse(src).unwrap_err().to_string();
+        assert!(err.contains("line 5"), "{err}");
+        assert!(err.contains("guarded branch"), "{err}");
+    }
+
+    #[test]
+    fn rejects_guarded_exit() {
+        let src = ".kernel k\n  setp.lt p0, r0, #5\n  @p0 exit";
+        let err = parse(src).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("cannot be guarded"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_predicate() {
+        let err = parse(".kernel k\n  setp.eq p8, r0, #0\n  exit").unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(parse(".kernel k\n  setp.eq p7, r0, #0\n  exit").is_ok());
+    }
+
+    #[test]
+    fn rejects_empty_kernel() {
+        let err = parse(".kernel k\n").unwrap_err().to_string();
+        assert!(err.contains("no instructions"), "{err}");
     }
 
     #[test]

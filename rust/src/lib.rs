@@ -20,6 +20,9 @@
 //!   prefetch-evaluation artifact and runs it from the sweep path;
 //! * [`coordinator`] — experiment drivers regenerating every table and
 //!   figure in the paper's evaluation;
+//! * [`scenario`] — differential scenario engine: seeded kernel fuzzing,
+//!   cross-config oracles, failure shrinking, and the golden-stats
+//!   regression snapshot;
 //! * [`report`] — ascii/CSV table rendering.
 
 pub mod compiler;
@@ -27,6 +30,7 @@ pub mod coordinator;
 pub mod ir;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod timing;
 pub mod util;

@@ -44,6 +44,16 @@ Tool commands:
   trace <workload> [--cycles N] [--hierarchy H] [--latency F]
               Per-cycle warp-state timeline (debugging)
 
+Verification commands:
+  fuzz [--seed-range A..B] [--corpus DIR] [--jobs N] [--shrink-budget N]
+              Differential scenario fuzzing: replay the corpus, generate
+              seeded kernels, and check the cross-config oracles; failures
+              shrink to minimal .ltrf repros under corpus/regressions/
+  snapshot (--check | --bless) [--golden PATH] [--quick] [--jobs N]
+              Golden-stats harness: --bless captures the workload x config
+              counter snapshot; --check diffs the current simulator
+              against the committed golden file (keyed diff on drift)
+
 Flags:
   --quick       5-workload subset, smaller grids
   --csv DIR     also write each table as CSV
@@ -172,6 +182,98 @@ fn main() {
             print_all(&tables);
             println!("Headline: +{:.1}% mean IPC (paper: +34%)", imp * 100.0);
             finish!();
+        }
+        "fuzz" => {
+            let range = opt("--seed-range").unwrap_or_else(|| "0..200".into());
+            let Some((a, b)) = range.split_once("..") else {
+                eprintln!("bad --seed-range `{range}` (expected A..B)");
+                std::process::exit(2);
+            };
+            let (Ok(seed_start), Ok(seed_end)) = (a.parse::<u64>(), b.parse::<u64>()) else {
+                eprintln!("bad --seed-range `{range}` (expected A..B)");
+                std::process::exit(2);
+            };
+            if seed_end <= seed_start {
+                eprintln!("empty --seed-range `{range}`");
+                std::process::exit(2);
+            }
+            let fuzz_opts = ltrf::scenario::FuzzOptions {
+                seed_start,
+                seed_end,
+                jobs: ctx.jobs,
+                corpus_dir: opt("--corpus").map(PathBuf::from).unwrap_or_else(|| "corpus".into()),
+                shrink_budget: opt("--shrink-budget").and_then(|s| s.parse().ok()).unwrap_or(400),
+                ..Default::default()
+            };
+            let report = ltrf::scenario::run_fuzz(&fuzz_opts);
+            println!("{}", report.summary());
+            if !report.ok() {
+                for f in &report.failures {
+                    eprintln!("\nFAIL [{}] {}", f.oracle, f.detail);
+                    if let Some(seed) = f.seed {
+                        eprintln!("  seed: {seed}");
+                    }
+                    if let Some(src) = &f.source {
+                        eprintln!("  source: {}", src.display());
+                    }
+                    match &f.repro_path {
+                        Some(p) => eprintln!("  shrunken repro: {}", p.display()),
+                        None => eprintln!("  minimized repro:\n{}", f.minimized),
+                    }
+                }
+                std::process::exit(1);
+            }
+        }
+        "snapshot" => {
+            let golden = opt("--golden")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from(ltrf::scenario::snapshot::GOLDEN_PATH));
+            if flag("--bless") {
+                let snap = ltrf::scenario::snapshot::capture(ctx.quick, ctx.jobs);
+                if let Err(e) = snap.save(&golden) {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+                println!("blessed {} keys into {}", snap.entries.len(), golden.display());
+            } else if flag("--check") {
+                let gold = match ltrf::scenario::snapshot::Snapshot::load(&golden) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        eprintln!("{e}\nrun `ltrf snapshot --bless` to create the golden file");
+                        std::process::exit(1);
+                    }
+                };
+                if gold.is_empty() {
+                    println!(
+                        "snapshot: {} has no entries yet — capture skipped (bless and commit \
+                         it to arm the drift gate)",
+                        golden.display()
+                    );
+                    return;
+                }
+                let current = ltrf::scenario::snapshot::capture(ctx.quick, ctx.jobs);
+                let diffs = gold.diff_against(&current);
+                if diffs.is_empty() {
+                    println!(
+                        "snapshot OK: {} keys match {}",
+                        current.entries.len(),
+                        golden.display()
+                    );
+                } else {
+                    eprintln!("snapshot DRIFT against {}:", golden.display());
+                    for d in &diffs {
+                        eprintln!("  {d}");
+                    }
+                    eprintln!(
+                        "{} diffs; if intended, re-bless with `ltrf snapshot --bless`",
+                        diffs.len()
+                    );
+                    std::process::exit(1);
+                }
+            } else {
+                eprintln!("usage: ltrf snapshot (--check | --bless) [--golden PATH] [--quick]");
+                std::process::exit(2);
+            }
         }
         "workloads" => {
             let mut t = Table::new(

@@ -263,7 +263,8 @@ mod tests {
             Ok(ev) => ev,
             Err(_) => return,
         };
-        let sets: Vec<RegSet> = (0..N_BATCH + 7).map(|i| RegSet::singleton((i % 256) as u16)).collect();
+        let sets: Vec<RegSet> =
+            (0..N_BATCH + 7).map(|i| RegSet::singleton((i % 256) as u16)).collect();
         let rows = ev
             .evaluate(&sets, &interleave_assign(), LatencyParams::default())
             .unwrap();

@@ -1,0 +1,97 @@
+//! Corpus management: seed kernels replayed every fuzz run, and shrunken
+//! regression repros written on oracle failures.
+//!
+//! Layout under the corpus root (default `corpus/`):
+//!
+//! ```text
+//! corpus/seeds/*.ltrf         hand-written interesting kernels
+//! corpus/regressions/*.ltrf   auto-shrunk repros (committed on triage)
+//! corpus/golden/stats.tsv     golden-stats snapshot (see `snapshot`)
+//! ```
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Subdirectories replayed at the start of every fuzz run.
+pub const REPLAY_DIRS: [&str; 2] = ["seeds", "regressions"];
+
+/// Load every `.ltrf` file under `root`'s replay directories, sorted by
+/// path so replay order (and therefore report output) is stable.
+pub fn load_replay_corpus(root: &Path) -> Vec<(PathBuf, String)> {
+    let mut out = Vec::new();
+    for sub in REPLAY_DIRS {
+        let dir = root.join(sub);
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => continue, // missing dir = empty corpus
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if matches!(path.extension(), Some(e) if e == "ltrf") {
+                if let Ok(text) = fs::read_to_string(&path) {
+                    out.push((path, text));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Write a shrunken repro under `root/regressions/`, returning its path.
+/// The header comments carry everything needed to triage and replay.
+pub fn write_regression(
+    root: &Path,
+    oracle: &str,
+    seed: Option<u64>,
+    detail: &str,
+    minimized: &str,
+) -> io::Result<PathBuf> {
+    let dir = root.join("regressions");
+    fs::create_dir_all(&dir)?;
+    let stem = match seed {
+        Some(s) => format!("{oracle}-seed{s}"),
+        None => format!("{oracle}-corpus"),
+    };
+    let path = dir.join(format!("{stem}.ltrf"));
+    let seed_line = match seed {
+        Some(s) => format!("// seed: {s}\n"),
+        None => String::new(),
+    };
+    let contents = format!(
+        "// oracle: {oracle}\n{seed_line}// detail: {}\n// replay: cargo run --release -- fuzz (corpus replay picks this file up)\n{minimized}",
+        detail.replace('\n', " / ")
+    );
+    fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser;
+
+    #[test]
+    fn missing_corpus_is_empty() {
+        let root = std::env::temp_dir().join("ltrf-corpus-missing-test");
+        let _ = fs::remove_dir_all(&root);
+        assert!(load_replay_corpus(&root).is_empty());
+    }
+
+    #[test]
+    fn regression_roundtrips_through_parser() {
+        let root = std::env::temp_dir().join("ltrf-corpus-write-test");
+        let _ = fs::remove_dir_all(&root);
+        let text = ".kernel mini\n  mov r0, #1\n  exit\n";
+        let path = write_regression(&root, "roundtrip", Some(42), "multi\nline detail", text)
+            .expect("write repro");
+        let loaded = load_replay_corpus(&root);
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].0, path);
+        // Header comments must not break the parser.
+        let k = parser::parse(&loaded[0].1).expect("repro parses");
+        assert_eq!(k.name, "mini");
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,400 @@
+//! Seeded kernel fuzzer — the scenario engine's shape-directed generator.
+//!
+//! Every shape is constructed to *terminate by construction* (loop
+//! counters live in dedicated registers their bodies never write, and
+//! irregular CFGs only branch forward), so a non-terminating execution is
+//! always a bug in the pipeline under test, never in the input. Shapes
+//! cover the regions the 14-benchmark suite does not: deep loop nests,
+//! dense predication (guards on non-branch instructions), irregular
+//! branchy CFGs, register-pressure ramps, barrier/SFU mixes, and the
+//! degenerate one-interval and many-interval extremes.
+
+use crate::ir::{Cmp, Inst, Kernel, KernelBuilder, Op, Pred, Reg, Space};
+use crate::util::Xoshiro256;
+use crate::workloads::gen::{random_kernel_with, RandomKernelCfg};
+
+/// The shape dimensions the fuzzer draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// Tiny straight-line kernel whose working set fits any RF$ partition:
+    /// the whole kernel is one register-interval.
+    OneInterval,
+    /// Long straight-line kernel of disjoint register phases, each wider
+    /// than a partition: interval formation must split it into dozens of
+    /// intervals.
+    ManyIntervals,
+    /// Loop nests 3–5 deep with tiny bodies (the suite stops at depth 2).
+    DeepNest,
+    /// Dense predication: guards on ALU/memory instructions, not just
+    /// branches, plus guarded diamonds.
+    PredicatedDense,
+    /// Irregular forward-branching CFG (switch-like segment chains).
+    BranchyForward,
+    /// Straight segments with register windows ramping from 8 to ~120
+    /// registers inside a loop (stresses merge + renumber pools).
+    PressureRamp,
+    /// Barriers, SFU chains, and shared-memory traffic interleaved.
+    BarrierSfuMix,
+    /// The original property-test random CFG, at depth 3.
+    RandomCfg,
+}
+
+impl Shape {
+    pub const ALL: [Shape; 8] = [
+        Shape::OneInterval,
+        Shape::ManyIntervals,
+        Shape::DeepNest,
+        Shape::PredicatedDense,
+        Shape::BranchyForward,
+        Shape::PressureRamp,
+        Shape::BarrierSfuMix,
+        Shape::RandomCfg,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::OneInterval => "one-interval",
+            Shape::ManyIntervals => "many-intervals",
+            Shape::DeepNest => "deep-nest",
+            Shape::PredicatedDense => "predicated-dense",
+            Shape::BranchyForward => "branchy-forward",
+            Shape::PressureRamp => "pressure-ramp",
+            Shape::BarrierSfuMix => "barrier-sfu-mix",
+            Shape::RandomCfg => "random-cfg",
+        }
+    }
+}
+
+/// Architectural execution bound every generated kernel must finish
+/// within (the largest shape runs ~10k dynamic instructions).
+pub const DYN_INST_BOUND: u64 = 300_000;
+
+/// Generate the kernel for `seed`. The shape rotates with the seed so any
+/// contiguous seed range covers every dimension.
+pub fn generate(seed: u64) -> (Shape, Kernel) {
+    let shape = Shape::ALL[(seed % Shape::ALL.len() as u64) as usize];
+    let mut rng = Xoshiro256::seeded(seed ^ 0x5C3A_A10F_0DD5_EED5);
+    (shape, build_shape(shape, &mut rng))
+}
+
+/// Build one kernel of the given shape from an explicit RNG stream.
+pub fn build_shape(shape: Shape, rng: &mut Xoshiro256) -> Kernel {
+    let k = match shape {
+        Shape::OneInterval => one_interval(rng),
+        Shape::ManyIntervals => many_intervals(rng),
+        Shape::DeepNest => deep_nest(rng),
+        Shape::PredicatedDense => predicated_dense(rng),
+        Shape::BranchyForward => branchy_forward(rng),
+        Shape::PressureRamp => pressure_ramp(rng),
+        Shape::BarrierSfuMix => barrier_sfu_mix(rng),
+        Shape::RandomCfg => {
+            let cfg = RandomKernelCfg {
+                max_regs: rng.range(18, 32) as u16,
+                max_loop_depth: 3,
+                min_constructs: 2,
+                max_constructs: 5,
+            };
+            random_kernel_with(rng, &cfg)
+        }
+    };
+    debug_assert_eq!(k.validate(), Ok(()));
+    k
+}
+
+/// A guarded (predicated) instruction; the builder helpers never guard
+/// non-branch ops, so the dense-predication shape constructs them raw.
+fn guarded(op: Op, guard: (Pred, bool)) -> Inst {
+    let mut i = Inst::new(op);
+    i.guard = Some(guard);
+    i
+}
+
+fn one_interval(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_one_interval");
+    b.mov_imm(0, 0x1000);
+    // Working set stays within 7 registers — one interval at any N >= 8.
+    for _ in 0..rng.range(3, 8) {
+        let dst = rng.range(1, 6) as Reg;
+        let a = rng.range(1, 6) as Reg;
+        match rng.below(4) {
+            0 => b.iadd_imm(dst, a, rng.below(64) as i64),
+            1 => b.alu(Op::Xor, dst, a, rng.range(1, 6) as Reg),
+            2 => b.ld_global(dst, 0, (rng.below(4) * 128) as i64),
+            _ => b.alu_imm(Op::IMul, dst, a, 2654435761),
+        }
+    }
+    b.st_global(0, 0, rng.range(1, 6) as Reg);
+    b.exit();
+    b.finish()
+}
+
+fn many_intervals(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_many_intervals");
+    b.mov_imm(0, 0x2000);
+    let phases = rng.range(24, 48);
+    for p in 0..phases {
+        // Each phase touches a full 20-register window (plus the base
+        // pointer), so its working set always overflows a 16-register
+        // partition and interval formation must split inside every phase.
+        let base = 4 + ((p * 13) % 180) as Reg;
+        for j in 0..20u16 {
+            if j % 5 == 0 {
+                b.ld_global(base + j, 0, (rng.below(6) * 128) as i64);
+            } else {
+                b.iadd_imm(base + j, base + ((j + 1) % 20), p as i64 + j as i64);
+            }
+        }
+        if p % 7 == 3 {
+            b.st_global(0, (p as i64) * 8, base + 1);
+        }
+    }
+    b.st_global(0, 0, 4);
+    b.exit();
+    b.finish()
+}
+
+fn deep_nest(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_deep_nest");
+    b.mov_imm(0, 0x3000);
+    let depth = rng.range(3, 5) as u8;
+    nest_level(&mut b, rng, 0, depth);
+    b.st_global(0, 0, 4);
+    b.exit();
+    b.finish()
+}
+
+/// Emit loop level `level` of a `depth`-deep nest. Counters live at
+/// r250-level (never touched by bodies), predicates at p{level}.
+fn nest_level(b: &mut KernelBuilder, rng: &mut Xoshiro256, level: u8, depth: u8) {
+    if level == depth {
+        for _ in 0..rng.range(2, 4) {
+            let dst = rng.range(4, 20) as Reg;
+            let a = rng.range(4, 20) as Reg;
+            match rng.below(3) {
+                0 => b.iadd(dst, a, rng.range(4, 20) as Reg),
+                1 => b.ld_global(dst, 0, (rng.below(8) * 128) as i64),
+                _ => b.alu(Op::Xor, dst, dst, a),
+            }
+        }
+        return;
+    }
+    let ctr: Reg = 250 - level as Reg;
+    let p: Pred = level;
+    let trip = rng.range(2, 3) as i64;
+    let top = b.fresh_label("nest");
+    b.mov_imm(ctr, 0);
+    b.bind(top);
+    nest_level(b, rng, level + 1, depth);
+    b.iadd_imm(ctr, ctr, 1);
+    b.setp_imm(Cmp::Lt, p, ctr, trip);
+    b.bra_if(p, true, top);
+}
+
+fn predicated_dense(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_predicated");
+    b.mov_imm(0, 0x4000);
+    for r in 1..=6u16 {
+        b.mov_imm(r, rng.below(100) as i64);
+    }
+    for _ in 0..rng.range(10, 24) {
+        let p = rng.below(4) as Pred;
+        let cond = rng.range(1, 6) as Reg;
+        let cmp = *rng.choose(&[Cmp::Lt, Cmp::Ge, Cmp::Eq, Cmp::Ne]);
+        b.setp_imm(cmp, p, cond, rng.below(100) as i64);
+        let positive = rng.chance(0.5);
+        let dst = rng.range(1, 6) as Reg;
+        let a = rng.range(1, 6) as Reg;
+        // Guards on non-branch instructions — the paper's workloads only
+        // ever guard branches, so this path is otherwise unexercised.
+        let i = match rng.below(4) {
+            0 => {
+                let mut i = guarded(Op::IAdd, (p, positive));
+                i.dst = Some(dst);
+                i.srcs[0] = Some(a);
+                i.imm = Some(rng.below(32) as i64);
+                i
+            }
+            1 => {
+                let mut i = guarded(Op::Mov, (p, positive));
+                i.dst = Some(dst);
+                i.imm = Some(rng.below(1000) as i64);
+                i
+            }
+            2 => {
+                let mut i = guarded(Op::Ld(Space::Global), (p, positive));
+                i.dst = Some(dst);
+                i.srcs[0] = Some(0);
+                i.imm = Some((rng.below(8) * 128) as i64);
+                i
+            }
+            _ => {
+                let mut i = guarded(Op::St(Space::Global), (p, positive));
+                i.srcs[0] = Some(0);
+                i.srcs[1] = Some(a);
+                i.imm = Some((rng.below(8) * 8) as i64);
+                i
+            }
+        };
+        b.push(i);
+    }
+    // A couple of guarded diamonds on top.
+    for d in 0..rng.range(1, 3) {
+        let p = (4 + d % 3) as Pred;
+        let t = b.fresh_label("pt");
+        let join = b.fresh_label("pj");
+        b.setp_imm(Cmp::Lt, p, (1 + d % 6) as Reg, 50);
+        b.bra_if(p, true, t);
+        b.iadd_imm(2, 2, 13);
+        b.bra(join);
+        b.bind(t);
+        b.alu_imm(Op::ISub, 2, 2, 7);
+        b.bind(join);
+        b.iadd_imm(3, 3, 1);
+    }
+    b.st_global(0, 0, 2);
+    b.exit();
+    b.finish()
+}
+
+fn branchy_forward(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_branchy");
+    let segments = rng.range(6, 12);
+    let labels: Vec<_> = (0..segments).map(|_| b.fresh_label("seg")).collect();
+    b.mov_imm(0, 0x5000);
+    b.mov_imm(1, 7);
+    for (s, &label) in labels.iter().enumerate() {
+        b.bind(label);
+        for _ in 0..rng.range(2, 5) {
+            let dst = rng.range(4, 20) as Reg;
+            let a = rng.range(1, 20) as Reg;
+            match rng.below(3) {
+                0 => b.iadd_imm(dst, a, s as i64 + 1),
+                1 => b.ld_global(dst, 0, (rng.below(6) * 128) as i64),
+                _ => b.alu(Op::And, dst, a, 1),
+            }
+        }
+        if s + 1 < segments {
+            // Guarded forward branch to a random later segment; the
+            // fall-through is the next segment, so every segment stays
+            // reachable and the CFG is an irregular DAG.
+            let p = (s % 7) as Pred;
+            b.setp_imm(Cmp::Lt, p, rng.range(4, 20) as Reg, rng.below(200) as i64);
+            let target = labels[rng.range(s + 1, segments - 1)];
+            b.bra_if(p, rng.chance(0.5), target);
+        }
+    }
+    b.st_global(0, 0, rng.range(4, 20) as Reg);
+    b.exit();
+    b.finish()
+}
+
+fn pressure_ramp(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_pressure");
+    b.mov_imm(0, 0x6000);
+    let ctr: Reg = 254;
+    let trip = rng.range(2, 3) as i64;
+    let steps = rng.range(4, 8);
+    let top = b.fresh_label("ramp");
+    b.mov_imm(ctr, 0);
+    b.bind(top);
+    for step in 0..steps {
+        let width = (8 + step * 16) as u16;
+        for j in 0..width {
+            let dst = 4 + j;
+            if j % 5 == 0 {
+                b.ld_global(dst, 0, (j as i64 % 11) * 128);
+            } else {
+                b.iadd_imm(dst, 4 + ((j + 1) % width), j as i64);
+            }
+        }
+    }
+    b.iadd_imm(ctr, ctr, 1);
+    b.setp_imm(Cmp::Lt, 0, ctr, trip);
+    b.bra_if(0, true, top);
+    b.st_global(0, 0, 5);
+    b.exit();
+    b.finish()
+}
+
+fn barrier_sfu_mix(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_barrier_sfu");
+    b.mov_imm(0, 0x7000);
+    b.mov_imm(1, 0x100);
+    let ctr: Reg = 253;
+    let trip = rng.range(3, 6) as i64;
+    let top = b.fresh_label("bsf");
+    b.mov_imm(ctr, 0);
+    b.bind(top);
+    for i in 0..rng.range(4, 10) {
+        let dst = rng.range(4, 12) as Reg;
+        match rng.below(5) {
+            0 => b.sfu(dst, rng.range(4, 12) as Reg),
+            1 => b.bar(),
+            2 => b.ld_shared(dst, 1, (i as i64 % 4) * 4),
+            3 => b.st(Space::Shared, 1, (i as i64 % 4) * 4, dst),
+            _ => b.ld_global(dst, 0, (rng.below(6) * 128) as i64),
+        }
+    }
+    b.iadd_imm(ctr, ctr, 1);
+    b.setp_imm(Cmp::Lt, 0, ctr, trip);
+    b.bra_if(0, true, top);
+    b.st_global(0, 0, 4);
+    b.exit();
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::execute;
+
+    #[test]
+    fn all_shapes_valid_and_terminate() {
+        for seed in 0..64u64 {
+            let (shape, k) = generate(seed);
+            assert_eq!(k.validate(), Ok(()), "seed {seed} shape {}", shape.name());
+            assert!(k.num_regs <= 256, "seed {seed}");
+            let out = execute(&k, seed ^ 1, &[], DYN_INST_BOUND, false);
+            assert!(out.finished, "seed {seed} shape {} did not terminate", shape.name());
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for seed in [0u64, 3, 17, 100] {
+            let (s1, k1) = generate(seed);
+            let (s2, k2) = generate(seed);
+            assert_eq!(s1, s2);
+            assert_eq!(k1.display(), k2.display());
+        }
+    }
+
+    #[test]
+    fn seed_rotation_covers_every_shape() {
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..Shape::ALL.len() as u64 {
+            seen.insert(generate(seed).0);
+        }
+        assert_eq!(seen.len(), Shape::ALL.len());
+    }
+
+    #[test]
+    fn many_intervals_shape_produces_many_intervals() {
+        let mut rng = Xoshiro256::seeded(11);
+        let k = build_shape(Shape::ManyIntervals, &mut rng);
+        let ck = crate::compiler::compile(&k, crate::compiler::CompileOptions::ltrf(16));
+        assert!(
+            ck.intervals.intervals.len() >= 24,
+            "expected a degenerate interval count, got {}",
+            ck.intervals.intervals.len()
+        );
+    }
+
+    #[test]
+    fn one_interval_shape_is_single_interval() {
+        let mut rng = Xoshiro256::seeded(5);
+        let k = build_shape(Shape::OneInterval, &mut rng);
+        let ck = crate::compiler::compile(&k, crate::compiler::CompileOptions::ltrf(8));
+        assert_eq!(ck.intervals.intervals.len(), 1);
+    }
+}

@@ -1,0 +1,263 @@
+//! Differential scenario engine: seeded kernel fuzzing, cross-config
+//! oracles, failure shrinking, corpus replay, and the golden-stats
+//! snapshot harness.
+//!
+//! The fuzz pipeline per seed:
+//!
+//! 1. [`generator`] builds a kernel of a seed-selected shape (deep nests,
+//!    dense predication, branchy CFGs, pressure ramps, barrier/SFU mixes,
+//!    interval-count extremes, random CFGs);
+//! 2. [`oracles`] round-trips it through the `.ltrf` parser and checks
+//!    the cross-config invariants (functional equivalence under every
+//!    hierarchy, renumbering soundness, conservation laws, timing
+//!    invariance, TLP monotonicity, re-run determinism) over a config
+//!    matrix run through the PR-1 engine's point runner;
+//! 3. on failure, [`shrink`] reduces the kernel to a minimal `.ltrf`
+//!    repro and [`corpus`] writes it to `corpus/regressions/`.
+//!
+//! [`snapshot`] is the companion drift gate: a committed per-point
+//! counter snapshot diffed in CI.
+
+pub mod corpus;
+pub mod generator;
+pub mod oracles;
+pub mod shrink;
+pub mod snapshot;
+
+use crate::coordinator::sweep::steal_map;
+use crate::ir::parser;
+use oracles::{CheckStats, OracleFailure};
+use std::path::PathBuf;
+
+/// Fuzz-run options (the `ltrf fuzz` subcommand's knobs).
+#[derive(Clone, Debug)]
+pub struct FuzzOptions {
+    pub seed_start: u64,
+    pub seed_end: u64,
+    /// Worker threads (0 = all cores). Seeds are independent, so the
+    /// report is identical for any value — asserted by the tests.
+    pub jobs: usize,
+    /// Corpus root (seeds/ and regressions/ are replayed; repros land in
+    /// regressions/).
+    pub corpus_dir: PathBuf,
+    /// Shrink (and write repros for) at most this many failures; every
+    /// failure is still reported, later ones with their full kernel text.
+    pub max_failures: usize,
+    /// Write shrunken repros into the corpus (tests disable this).
+    pub write_repros: bool,
+    /// Shrink-candidate evaluation budget per failure.
+    pub shrink_budget: usize,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> Self {
+        FuzzOptions {
+            seed_start: 0,
+            seed_end: 200,
+            jobs: 0,
+            corpus_dir: PathBuf::from("corpus"),
+            max_failures: 3,
+            write_repros: true,
+            shrink_budget: 400,
+        }
+    }
+}
+
+/// One oracle failure, with its shrunken repro.
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    pub oracle: &'static str,
+    /// Generator seed (None for corpus replays).
+    pub seed: Option<u64>,
+    /// Source file for corpus replays.
+    pub source: Option<PathBuf>,
+    pub detail: String,
+    /// Minimized kernel text (equals the original for corpus replays,
+    /// which are already minimal).
+    pub minimized: String,
+    /// Where the repro was written (when `write_repros`).
+    pub repro_path: Option<PathBuf>,
+}
+
+/// Aggregate fuzz-run report.
+#[derive(Clone, Debug, Default)]
+pub struct FuzzReport {
+    pub seeds_run: u64,
+    pub corpus_replayed: usize,
+    /// (shape name, kernels generated) in shape order.
+    pub shape_counts: Vec<(&'static str, u64)>,
+    pub sims: u64,
+    pub checks: u64,
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// One-paragraph summary for the CLI.
+    pub fn summary(&self) -> String {
+        let shapes: Vec<String> =
+            self.shape_counts.iter().map(|(n, c)| format!("{n}:{c}")).collect();
+        format!(
+            "fuzz: {} seeds + {} corpus kernels, {} oracle checks, {} sims, {} failures\nshapes: {}",
+            self.seeds_run,
+            self.corpus_replayed,
+            self.checks,
+            self.sims,
+            self.failures.len(),
+            shapes.join(" ")
+        )
+    }
+}
+
+enum SeedOutcome {
+    Pass(generator::Shape, CheckStats),
+    Fail(generator::Shape, CheckStats, String, OracleFailure),
+}
+
+/// Run the full scenario pipeline: corpus replay, then the seed range.
+pub fn run_fuzz(opts: &FuzzOptions) -> FuzzReport {
+    let mut report = FuzzReport::default();
+    for shape in generator::Shape::ALL {
+        report.shape_counts.push((shape.name(), 0));
+    }
+
+    // ---- corpus replay (seeds + committed regressions) ----------------
+    let corpus = corpus::load_replay_corpus(&opts.corpus_dir);
+    report.corpus_replayed = corpus.len();
+    for (path, text) in &corpus {
+        match parser::parse(text) {
+            Ok(k) => {
+                let (cs, failure) = oracles::check_kernel(&k);
+                report.sims += cs.sims;
+                report.checks += cs.checks;
+                if let Some(f) = failure {
+                    report.failures.push(FuzzFailure {
+                        oracle: f.oracle.name(),
+                        seed: None,
+                        source: Some(path.clone()),
+                        detail: f.detail,
+                        minimized: text.clone(),
+                        repro_path: None,
+                    });
+                }
+            }
+            Err(e) => report.failures.push(FuzzFailure {
+                oracle: "parse",
+                seed: None,
+                source: Some(path.clone()),
+                detail: format!("{e:#}"),
+                minimized: text.clone(),
+                repro_path: None,
+            }),
+        }
+    }
+
+    // ---- seeded generation --------------------------------------------
+    let seeds: Vec<u64> = (opts.seed_start..opts.seed_end).collect();
+    report.seeds_run = seeds.len() as u64;
+    let outcomes = steal_map(&seeds, opts.jobs, |&seed| {
+        let (shape, k) = generator::generate(seed);
+        let (cs, failure) = oracles::check_kernel(&k);
+        match failure {
+            None => SeedOutcome::Pass(shape, cs),
+            Some(f) => SeedOutcome::Fail(shape, cs, k.display(), f),
+        }
+    });
+
+    let mut pending: Vec<(u64, String, OracleFailure)> = Vec::new();
+    for (seed, outcome) in seeds.iter().zip(outcomes) {
+        let (shape, cs) = match &outcome {
+            SeedOutcome::Pass(s, cs) => (*s, *cs),
+            SeedOutcome::Fail(s, cs, _, _) => (*s, *cs),
+        };
+        report.sims += cs.sims;
+        report.checks += cs.checks;
+        for entry in report.shape_counts.iter_mut() {
+            if entry.0 == shape.name() {
+                entry.1 += 1;
+            }
+        }
+        if let SeedOutcome::Fail(_, _, text, f) = outcome {
+            pending.push((*seed, text, f));
+        }
+    }
+
+    // ---- shrink + record failures (serial; failures are rare). Every
+    // failure is reported; only the first `max_failures` get the (costly)
+    // shrink + repro file, the rest keep their full kernel text. --------
+    for (idx, (seed, text, f)) in pending.into_iter().enumerate() {
+        let kind = f.oracle;
+        let minimized = if idx < opts.max_failures {
+            let mut probe_stats = CheckStats::default();
+            let shrunk = shrink::shrink(&text, opts.shrink_budget, &mut |k| {
+                oracles::run_oracle(k, kind, &mut probe_stats).is_err()
+            });
+            report.sims += probe_stats.sims;
+            shrunk.text
+        } else {
+            text
+        };
+        let repro_path = if opts.write_repros && idx < opts.max_failures {
+            corpus::write_regression(
+                &opts.corpus_dir,
+                kind.name(),
+                Some(seed),
+                &f.detail,
+                &minimized,
+            )
+            .ok()
+        } else {
+            None
+        };
+        report.failures.push(FuzzFailure {
+            oracle: kind.name(),
+            seed: Some(seed),
+            source: None,
+            detail: f.detail,
+            minimized,
+            repro_path,
+        });
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_opts(start: u64, end: u64, jobs: usize) -> FuzzOptions {
+        FuzzOptions {
+            seed_start: start,
+            seed_end: end,
+            jobs,
+            corpus_dir: PathBuf::from("/nonexistent/ltrf-corpus"),
+            write_repros: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mini_fuzz_run_is_green() {
+        let report = run_fuzz(&quiet_opts(0, 8, 2));
+        assert!(report.ok(), "failures: {:?}", report.failures);
+        assert_eq!(report.seeds_run, 8);
+        assert!(report.sims > 0);
+        assert!(report.checks > 0);
+        let total: u64 = report.shape_counts.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn report_is_independent_of_thread_count() {
+        let a = run_fuzz(&quiet_opts(8, 14, 1));
+        let b = run_fuzz(&quiet_opts(8, 14, 4));
+        assert_eq!(a.sims, b.sims);
+        assert_eq!(a.checks, b.checks);
+        assert_eq!(a.shape_counts, b.shape_counts);
+        assert!(a.ok() && b.ok());
+    }
+}

@@ -1,0 +1,122 @@
+//! Failure minimization — ddmin-style line reduction over `.ltrf` text.
+//!
+//! A shrink candidate is the current text with a contiguous chunk of
+//! lines deleted; it is accepted when it still parses *and* still fails
+//! the same oracle. The parser's structural checks (labels must be bound,
+//! the kernel must end in a terminator, ...) act as the validity filter,
+//! so the shrinker needs no IR-level surgery: any candidate that parses
+//! is a legal kernel.
+
+use crate::ir::{parser, Kernel};
+
+/// Outcome of a shrink run.
+#[derive(Clone, Debug)]
+pub struct ShrinkResult {
+    /// The minimized kernel text.
+    pub text: String,
+    /// Candidate evaluations spent.
+    pub evals: usize,
+    /// Lines removed from the original.
+    pub removed: usize,
+}
+
+/// Minimize `text` while `still_fails` holds, evaluating at most
+/// `max_evals` candidates. `still_fails` receives the parsed candidate
+/// kernel and must return `true` iff the original failure reproduces.
+pub fn shrink(
+    text: &str,
+    max_evals: usize,
+    still_fails: &mut dyn FnMut(&Kernel) -> bool,
+) -> ShrinkResult {
+    let mut lines: Vec<String> =
+        text.lines().map(|l| l.to_string()).filter(|l| !l.trim().is_empty()).collect();
+    let original = lines.len();
+    let mut evals = 0usize;
+
+    let mut chunk = (lines.len() / 2).max(1);
+    loop {
+        let mut improved = false;
+        let mut start = 0;
+        while start < lines.len() && evals < max_evals {
+            let end = (start + chunk).min(lines.len());
+            let mut candidate = lines.clone();
+            candidate.drain(start..end);
+            if candidate.is_empty() {
+                start = end;
+                continue;
+            }
+            let joined = candidate.join("\n");
+            evals += 1;
+            let keep = match parser::parse(&joined) {
+                Ok(k) => still_fails(&k),
+                Err(_) => false,
+            };
+            if keep {
+                lines = candidate;
+                improved = true;
+                // Re-try the same start position at the same granularity.
+            } else {
+                start = end;
+            }
+        }
+        if evals >= max_evals || (chunk == 1 && !improved) {
+            break;
+        }
+        if !improved {
+            chunk = (chunk / 2).max(1);
+        }
+    }
+
+    ShrinkResult { text: lines.join("\n") + "\n", evals, removed: original - lines.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    const FAT: &str = "\
+.kernel fat
+  mov r0, #4096
+  mov r1, #7
+  add r2, r0, #1
+  xor r3, r2, r1
+  sfu r4, r3
+  add r5, r4, #2
+  st.global [r0], r5
+  exit
+";
+
+    fn has_sfu(k: &Kernel) -> bool {
+        k.blocks.iter().any(|b| b.insts.iter().any(|i| i.op == Op::Sfu))
+    }
+
+    #[test]
+    fn shrinks_to_minimal_sfu_repro() {
+        let r = shrink(FAT, 500, &mut has_sfu);
+        let k = parser::parse(&r.text).expect("minimized text parses");
+        assert!(has_sfu(&k), "minimized kernel lost the failure");
+        // Minimal repro: .kernel + sfu + exit.
+        assert!(
+            r.text.lines().count() <= 4,
+            "expected a near-minimal repro, got:\n{}",
+            r.text
+        );
+        assert!(r.removed >= 4);
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let r = shrink(FAT, 3, &mut has_sfu);
+        assert!(r.evals <= 3);
+        assert!(parser::parse(&r.text).is_ok());
+    }
+
+    #[test]
+    fn unshrinkable_failure_keeps_text_parseable() {
+        // A predicate that never reproduces leaves the original intact.
+        let r = shrink(FAT, 100, &mut |_| false);
+        assert_eq!(r.removed, 0);
+        assert!(parser::parse(&r.text).is_ok());
+    }
+}

@@ -1,0 +1,266 @@
+//! Golden-stats regression harness.
+//!
+//! A snapshot is the full `Stats` counter set for every point of a fixed
+//! workload x config matrix, serialized one line per point. The committed
+//! snapshot (`corpus/golden/stats.tsv`) turns any unintended simulator
+//! drift into a keyed diff in CI; `ltrf snapshot --bless` re-captures it
+//! after an *intended* model change.
+//!
+//! Capture runs on the PR-1 engine substrate ([`run_point`] + a shared
+//! [`CompileCache`] under [`steal_map`]), so snapshot capture is also a
+//! determinism gate: `--jobs 1` and `--jobs N` must serialize to the
+//! identical file.
+
+use crate::coordinator::engine::{run_point, CfgTweaks, CompileCache};
+use crate::coordinator::experiments::DesignUnderTest;
+use crate::coordinator::sweep::steal_map;
+use crate::sim::{HierarchyKind, Stats};
+use crate::workloads::{suite, WorkloadSpec};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Default committed snapshot location (relative to the repo root).
+pub const GOLDEN_PATH: &str = "corpus/golden/stats.tsv";
+
+const HEADER: &str =
+    "# ltrf golden stats v1 (key\\tfield=value...) — update with `ltrf snapshot --bless`";
+
+/// Every counter a run produces, as (field, value) pairs. Perturbing any
+/// single counter in the simulator changes at least one field here.
+pub fn stat_fields(s: &Stats) -> Vec<(&'static str, u64)> {
+    vec![
+        ("cycles", s.cycles),
+        ("instructions", s.instructions),
+        ("warps_finished", s.warps_finished),
+        ("mrf_reads", s.mrf_reads),
+        ("mrf_writes", s.mrf_writes),
+        ("cache_reads", s.cache_reads),
+        ("cache_writes", s.cache_writes),
+        ("rfc_hits", s.rfc_hits),
+        ("rfc_misses", s.rfc_misses),
+        ("prefetch_ops", s.prefetch_ops),
+        ("prefetch_regs", s.prefetch_regs),
+        ("prefetch_stall_cycles", s.prefetch_stall_cycles),
+        ("prefetch_bank_conflicts", s.prefetch_bank_conflicts),
+        ("activations", s.activations),
+        ("writeback_regs", s.writeback_regs),
+        ("dead_regs_skipped", s.dead_regs_skipped),
+        ("l1_hits", s.l1_hits),
+        ("l1_misses", s.l1_misses),
+        ("llc_hits", s.llc_hits),
+        ("llc_misses", s.llc_misses),
+        ("stall_scoreboard", s.stall_scoreboard),
+        ("stall_collectors", s.stall_collectors),
+        ("stall_no_ready_warp", s.stall_no_ready_warp),
+    ]
+}
+
+/// A captured or parsed snapshot, keyed `workload|design|latency`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub entries: BTreeMap<String, Vec<(&'static str, u64)>>,
+}
+
+/// The snapshot matrix: each suite workload under the §6 comparison
+/// designs at the latency factors the headline figures use.
+pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, DesignUnderTest, f64)> {
+    let workloads: Vec<&'static WorkloadSpec> = if quick {
+        ["kmeans", "bfs", "gaussian", "pathfinder", "cfd"]
+            .iter()
+            .map(|n| suite::workload_by_name(n).expect("quick workload"))
+            .collect()
+    } else {
+        suite::suite()
+    };
+    let configs: Vec<(&str, DesignUnderTest, f64)> = vec![
+        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0),
+        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false), 1.0),
+        ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 1.0),
+        ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 6.3),
+        ("LTRF_conf", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true), 6.3),
+    ];
+    let mut out = Vec::new();
+    for spec in workloads {
+        for (name, dut, factor) in &configs {
+            out.push((
+                format!("{}|{}|{:.1}", spec.name, name, factor),
+                spec,
+                dut.clone(),
+                *factor,
+            ));
+        }
+    }
+    out
+}
+
+/// Capture the snapshot matrix on `jobs` workers (0 = all cores).
+pub fn capture(quick: bool, jobs: usize) -> Snapshot {
+    let points = snapshot_points(quick);
+    let cache = CompileCache::new();
+    let stats = steal_map(&points, jobs, |(_, spec, dut, factor)| {
+        run_point(spec, dut, *factor, CfgTweaks::NONE, Some(&cache))
+    });
+    let mut snap = Snapshot::default();
+    for ((key, _, _, _), st) in points.iter().zip(stats) {
+        snap.entries.insert(key.clone(), stat_fields(&st));
+    }
+    snap
+}
+
+impl Snapshot {
+    /// Serialize to the committed text format (stable order).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        for (key, fields) in &self.entries {
+            out.push_str(key);
+            for (name, value) in fields {
+                let _ = write!(out, "\t{name}={value}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the committed text format. Unknown field names are rejected
+    /// (the gate is deliberately strict: a stale or hand-edited golden
+    /// file should fail loudly, not diff quietly).
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        // Canonical field names, hoisted once: parsed names intern to
+        // these `&'static str`s (and unknown fields are rejected).
+        let known: Vec<&'static str> =
+            stat_fields(&Stats::default()).into_iter().map(|(n, _)| n).collect();
+        let mut snap = Snapshot::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let key = parts.next().ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+            let mut fields = Vec::new();
+            for p in parts {
+                let (name, value) = p
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {}: bad field `{p}`", lineno + 1))?;
+                let value: u64 = value
+                    .parse()
+                    .map_err(|_| format!("line {}: bad value in `{p}`", lineno + 1))?;
+                let name = known
+                    .iter()
+                    .copied()
+                    .find(|n| *n == name)
+                    .ok_or_else(|| format!("line {}: unknown field `{name}`", lineno + 1))?;
+                fields.push((name, value));
+            }
+            snap.entries.insert(key.to_string(), fields);
+        }
+        Ok(snap)
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Snapshot::parse(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_text())
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Keyed diff: every entry of `current` must match `self` (the
+    /// golden). Golden keys absent from `current` are ignored so a
+    /// `--quick` check can run against a full golden file.
+    pub fn diff_against(&self, current: &Snapshot) -> Vec<String> {
+        let mut out = Vec::new();
+        for (key, cur_fields) in &current.entries {
+            match self.entries.get(key) {
+                None => out.push(format!("{key}: missing from golden (run `snapshot --bless`)")),
+                Some(gold_fields) => {
+                    let gold: BTreeMap<_, _> = gold_fields.iter().copied().collect();
+                    for (name, cur) in cur_fields {
+                        match gold.get(name) {
+                            None => out.push(format!("{key}: field {name} missing from golden")),
+                            Some(g) if g != cur => {
+                                out.push(format!("{key}: {name} {g} -> {cur}"));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_snapshot() -> Snapshot {
+        let mut snap = Snapshot::default();
+        let st = Stats { cycles: 100, instructions: 250, l1_hits: 9, ..Default::default() };
+        snap.entries.insert("kmeans|BL|1.0".into(), stat_fields(&st));
+        snap
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let snap = tiny_snapshot();
+        let text = snap.to_text();
+        let back = Snapshot::parse(&text).expect("parse");
+        assert_eq!(snap, back);
+        assert!(text.starts_with('#'), "header line present");
+    }
+
+    #[test]
+    fn empty_and_comment_lines_ignored() {
+        let snap = Snapshot::parse("# comment\n\n").expect("parse");
+        assert!(snap.is_empty());
+    }
+
+    #[test]
+    fn diff_flags_perturbed_counter_with_key() {
+        let golden = tiny_snapshot();
+        let mut current = tiny_snapshot();
+        for f in current.entries.get_mut("kmeans|BL|1.0").unwrap() {
+            if f.0 == "instructions" {
+                f.1 += 1;
+            }
+        }
+        let diffs = golden.diff_against(&current);
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].contains("kmeans|BL|1.0"), "{}", diffs[0]);
+        assert!(diffs[0].contains("instructions 250 -> 251"), "{}", diffs[0]);
+        assert!(golden.diff_against(&golden).is_empty());
+    }
+
+    #[test]
+    fn diff_flags_missing_key() {
+        let golden = Snapshot::default();
+        let diffs = golden.diff_against(&tiny_snapshot());
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].contains("missing from golden"));
+    }
+
+    #[test]
+    fn matrix_covers_suite_and_configs() {
+        assert_eq!(snapshot_points(true).len(), 5 * 5);
+        assert_eq!(snapshot_points(false).len(), 14 * 5);
+        // Keys are unique.
+        let points = snapshot_points(false);
+        let keys: std::collections::HashSet<_> = points.iter().map(|p| p.0.clone()).collect();
+        assert_eq!(keys.len(), points.len());
+    }
+}

@@ -189,8 +189,7 @@ impl SimConfig {
     /// cells use the non-pipelined CACTI bank model (occupancy = latency).
     pub fn with_latency_factor(mut self, factor: f64) -> Self {
         self.mrf_access_cycles = crate::timing::bank::cycles(factor, 2);
-        self.mrf_occupancy_cycles =
-            if factor <= 1.25 { 1 } else { self.mrf_access_cycles };
+        self.mrf_occupancy_cycles = if factor <= 1.25 { 1 } else { self.mrf_access_cycles };
         self
     }
 

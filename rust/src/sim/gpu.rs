@@ -14,8 +14,7 @@ use crate::workloads::WorkloadSpec;
 pub fn run(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
     let resident = cfg.resident_warps(ck.kernel.num_regs);
     let mut shared = SharedMem::new(cfg.mem);
-    let mut sms: Vec<SmSim> =
-        (0..cfg.num_sms).map(|s| SmSim::new(cfg, ck, resident, s)).collect();
+    let mut sms: Vec<SmSim> = (0..cfg.num_sms).map(|s| SmSim::new(cfg, ck, resident, s)).collect();
 
     let mut now: u64 = 0;
     loop {
@@ -88,7 +87,10 @@ mod tests {
         let spec = suite::workload_by_name("cfd").unwrap();
         let small = quick_cfg(HierarchyKind::Ltrf { plus: false });
         let big = SimConfig { warp_regs_capacity: 16384, ..small };
-        assert!(big.resident_warps(spec.regs_per_thread()) > small.resident_warps(spec.regs_per_thread()));
+        assert!(
+            big.resident_warps(spec.regs_per_thread())
+                > small.resident_warps(spec.regs_per_thread())
+        );
     }
 
     #[test]

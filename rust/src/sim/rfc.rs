@@ -47,8 +47,7 @@ impl RfcState {
     /// Evict everything (warp deactivation); returns dirty registers to
     /// write back.
     pub fn flush(&mut self) -> Vec<u16> {
-        let dirty: Vec<u16> =
-            self.slots.iter().filter(|&&(_, d)| d).map(|&(r, _)| r).collect();
+        let dirty: Vec<u16> = self.slots.iter().filter(|&&(_, d)| d).map(|&(r, _)| r).collect();
         self.slots.clear();
         dirty
     }

@@ -46,19 +46,28 @@ pub struct SmSim<'a> {
     next_launch: usize,
 }
 
+/// Per-warp load-data salt: distinct warps (and SMs) see distinct memory
+/// contents. Shared with the scenario oracles, which re-derive the
+/// architectural streams the simulator must conserve.
+pub fn warp_salt(sm_id: usize, w: usize) -> u64 {
+    (sm_id as u64) * 1_000_003 + w as u64 + 1
+}
+
+/// Per-warp base address. Warps in the same group of 8 share a data
+/// stream (CTAs work on shared tiles), so L1 locality survives high TLP.
+pub fn warp_base(w: usize) -> u32 {
+    0x1_0000u32 + (w as u32 % 8) * 8192 + (w as u32 / 8) * 256
+}
+
 impl<'a> SmSim<'a> {
     pub fn new(cfg: &'a SimConfig, ck: &'a CompiledKernel, resident: usize, sm_id: usize) -> Self {
         // Renumbering may relocate the ABI base register.
         let base_reg = ck.map_reg(REG_BASE);
         let warps = (0..resident)
             .map(|w| {
-                let salt = (sm_id as u64) * 1_000_003 + w as u64 + 1;
-                // Warps in the same group of 8 share a data stream (CTAs
-                // work on shared tiles), so L1 locality survives high TLP.
-                let base = 0x1_0000u32 + (w as u32 % 8) * 8192 + (w as u32 / 8) * 256;
                 WarpSim::new(
                     w,
-                    ExecState::new(salt, &[(base_reg, base)]),
+                    ExecState::new(warp_salt(sm_id, w), &[(base_reg, warp_base(w))]),
                     cfg.regs_per_interval,
                     cfg.rfc_regs_per_warp,
                 )
@@ -118,8 +127,7 @@ impl<'a> SmSim<'a> {
                                 .on_activate(&mut self.warps[wid], self.ck, t, &mut self.stats)
                             {
                                 Some(done) => {
-                                    self.warps[wid].state =
-                                        WarpState::Refetching { done_at: done };
+                                    self.warps[wid].state = WarpState::Refetching { done_at: done };
                                     self.events
                                         .push(Reverse((done, wid, EventKind::PrefetchDone)));
                                 }
@@ -253,8 +261,13 @@ impl<'a> SmSim<'a> {
         // Prefetch-subgraph transition at block entry (LTRF/SHRF).
         let (block, idx) = (self.warps[wid].exec.block, self.warps[wid].exec.idx);
         if idx == 0 {
-            match self.hier.on_block_enter(&mut self.warps[wid], self.ck, block, now, &mut self.stats)
-            {
+            match self.hier.on_block_enter(
+                &mut self.warps[wid],
+                self.ck,
+                block,
+                now,
+                &mut self.stats,
+            ) {
                 EntryAction::Proceed => {}
                 EntryAction::Prefetch { done_at } => {
                     self.warps[wid].state = WarpState::Prefetching { done_at };
@@ -265,7 +278,8 @@ impl<'a> SmSim<'a> {
             }
         }
 
-        let inst = self.warps[wid].exec.peek(&self.ck.kernel).expect("issuable warp has inst").clone();
+        let inst =
+            self.warps[wid].exec.peek(&self.ck.kernel).expect("issuable warp has inst").clone();
         if let Err(blocking) = self.warps[wid].deps_ready(&inst) {
             self.stats.stall_scoreboard += 1;
             if self.warps[wid].miss_pending.contains(blocking) {

@@ -60,8 +60,7 @@ pub fn build(spec: &WorkloadSpec) -> Kernel {
 
     for g in 0..spec.unroll {
         // Register window for this group (wraps within the body span).
-        let wr =
-            |i: usize| -> Reg { FIRST_WORK_REG + (((g * group_regs) + i) % body_span) as Reg };
+        let wr = |i: usize| -> Reg { FIRST_WORK_REG + (((g * group_regs) + i) % body_span) as Reg };
 
         // Address computation: a0 = ((ctr*stride_lines + g*64)·128 & mask)
         // + base. Line-granular strides walk the spec'd footprint, so L1
@@ -162,15 +161,46 @@ pub fn build(spec: &WorkloadSpec) -> Kernel {
     k
 }
 
-/// Random structured kernel for property tests: loop nests (depth ≤ 2),
-/// diamonds, straight-line ALU/memory code. Always terminates: loop
-/// counters live in reserved high registers the random body never touches.
+/// Shape knobs for [`random_kernel_with`]. The defaults reproduce the
+/// original property-test generator (loop depth ≤ 2, 2–6 constructs); the
+/// scenario fuzzer drives deeper nests and wider register windows.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomKernelCfg {
+    pub max_regs: u16,
+    /// Maximum loop-nest depth. Each live loop holds one reserved counter
+    /// register and one predicate, so this is bounded by the reserve below.
+    pub max_loop_depth: u8,
+    pub min_constructs: usize,
+    pub max_constructs: usize,
+}
+
+impl RandomKernelCfg {
+    pub fn new(max_regs: u16) -> Self {
+        RandomKernelCfg { max_regs, max_loop_depth: 2, min_constructs: 2, max_constructs: 6 }
+    }
+
+    /// Register ids reserved at the top of the file for loop counters (the
+    /// random body never touches them, which is what guarantees
+    /// termination).
+    fn reserve(&self) -> u16 {
+        (self.max_loop_depth as u16 + 2).max(4)
+    }
+}
+
+/// Random structured kernel for property tests: loop nests, diamonds,
+/// straight-line ALU/memory code. Always terminates: loop counters live in
+/// reserved high registers the random body never touches.
 pub fn random_kernel(rng: &mut Xoshiro256, max_regs: u16) -> Kernel {
-    assert!(max_regs >= 12);
-    let body_regs = max_regs - 4; // top 4 ids reserved for loop counters
+    random_kernel_with(rng, &RandomKernelCfg::new(max_regs))
+}
+
+/// [`random_kernel`] with explicit shape knobs (scenario-fuzzer entry).
+pub fn random_kernel_with(rng: &mut Xoshiro256, cfg: &RandomKernelCfg) -> Kernel {
+    assert!(cfg.max_regs >= cfg.reserve() + 8);
+    let body_regs = cfg.max_regs - cfg.reserve();
     let mut b = KernelBuilder::new("rand");
     let mut loop_depth = 0u8;
-    let mut next_counter = max_regs - 1;
+    let mut next_counter = cfg.max_regs - 1;
     let mut next_pred = 0u8;
 
     // Seed a few registers.
@@ -178,16 +208,16 @@ pub fn random_kernel(rng: &mut Xoshiro256, max_regs: u16) -> Kernel {
         b.mov_imm(r, 0x1000 + r as i64 * 64);
     }
 
-    let n_constructs = rng.range(2, 6);
+    let n_constructs = rng.range(cfg.min_constructs, cfg.max_constructs);
     for _ in 0..n_constructs {
         emit_construct(
             &mut b,
             rng,
             body_regs,
+            cfg.max_loop_depth,
             &mut loop_depth,
             &mut next_counter,
             &mut next_pred,
-            0,
         );
     }
     // Observable epilogue.
@@ -217,14 +247,14 @@ fn emit_construct(
     b: &mut KernelBuilder,
     rng: &mut Xoshiro256,
     body_regs: u16,
+    max_loop_depth: u8,
     loop_depth: &mut u8,
     next_counter: &mut u16,
     next_pred: &mut u8,
-    depth: u8,
 ) {
     match rng.below(3) {
         0 => emit_straight(b, rng, body_regs),
-        1 if *loop_depth < 2 && *next_counter > body_regs && *next_pred < 7 => {
+        1 if *loop_depth < max_loop_depth && *next_counter > body_regs && *next_pred < 7 => {
             // Bounded loop.
             let ctr = *next_counter;
             *next_counter -= 1;
@@ -237,7 +267,15 @@ fn emit_construct(
             *loop_depth += 1;
             let inner = rng.range(1, 2);
             for _ in 0..inner {
-                emit_construct(b, rng, body_regs, loop_depth, next_counter, next_pred, depth + 1);
+                emit_construct(
+                    b,
+                    rng,
+                    body_regs,
+                    max_loop_depth,
+                    loop_depth,
+                    next_counter,
+                    next_pred,
+                );
             }
             *loop_depth -= 1;
             b.iadd_imm(ctr, ctr, 1);

@@ -42,8 +42,7 @@ fn fig14_ordering_holds_on_config7() {
 fn fig15_tolerable_latency_ordering() {
     let spec = suite::workload_by_name("gaussian").unwrap();
     let points = exp::comparison_points(2048);
-    let t: Vec<f64> =
-        points.iter().map(|(_, d)| tolerable::max_tolerable(d, spec, 0.95)).collect();
+    let t: Vec<f64> = points.iter().map(|(_, d)| tolerable::max_tolerable(d, spec, 0.95)).collect();
     assert!(t[0] < t[2], "BL {} < LTRF {}", t[0], t[2]);
     assert!(t[1] < t[2], "RFC {} < LTRF {}", t[1], t[2]);
     assert!(t[3] >= t[2] * 0.9, "LTRF_conf {} ~>= LTRF {}", t[3], t[2]);

@@ -73,8 +73,7 @@ fn every_hierarchy_completes_every_quick_workload() {
             HierarchyKind::Ltrf { plus: false },
             HierarchyKind::Ltrf { plus: true },
         ] {
-            let cfg =
-                SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
+            let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
             let st = gpu::run_workload(spec, &cfg, kind.uses_subgraphs());
             assert!(st.warps_finished > 0, "{name} on {}", kind.name());
             assert!(st.cycles < cfg.max_cycles, "{name} on {} hit cycle cap", kind.name());

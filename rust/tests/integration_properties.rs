@@ -82,12 +82,10 @@ fn prop_simulation_conservation() {
         // Per-warp architectural instruction count matches the sim count.
         let mut expect = 0u64;
         for w in 0..resident {
-            let salt = w as u64 + 1;
-            let base = 0x1_0000u32 + (w as u32 % 8) * 8192 + (w as u32 / 8) * 256;
             let out = execute(
                 &ck.kernel,
-                salt,
-                &[(ck.map_reg(0), base)],
+                ltrf::sim::sm::warp_salt(0, w),
+                &[(ck.map_reg(0), ltrf::sim::sm::warp_base(w))],
                 10_000_000,
                 false,
             );

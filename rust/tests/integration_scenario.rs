@@ -1,0 +1,179 @@
+//! End-to-end tests for the differential scenario engine: round-trip
+//! properties over the benchmark suite and the fuzzer corpus, a real
+//! (small) fuzz run, the shrinker, the golden-stats snapshot, and the
+//! "deliberately broken pass" acceptance checks.
+
+use ltrf::compiler::{compile, CompileOptions};
+use ltrf::ir::parser;
+use ltrf::scenario::{generator, oracles, shrink, snapshot, FuzzOptions};
+use ltrf::workloads::{gen, suite};
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------------
+// Round-trip properties (pretty-printer <-> parser)
+// ---------------------------------------------------------------------
+
+/// `parse(print(k)) == k` (modulo label names) for all 14 benchmarks.
+#[test]
+fn suite_kernels_roundtrip_through_parser() {
+    for spec in suite::suite() {
+        let k = gen::build(spec);
+        let text = k.display();
+        let k2 = parser::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: reparse failed: {e:#}", spec.name));
+        assert_eq!(text, k2.display(), "{}: display not a fixpoint", spec.name);
+        assert!(k.structurally_eq(&k2), "{}: structural mismatch", spec.name);
+    }
+}
+
+/// The same round-trip over 200 fuzzer seeds (covers every shape 25x).
+#[test]
+fn fuzzer_seeds_roundtrip_through_parser() {
+    for seed in 0..200u64 {
+        let (shape, k) = generator::generate(seed);
+        let text = k.display();
+        let k2 = parser::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed} ({}): {e:#}", shape.name()));
+        assert_eq!(text, k2.display(), "seed {seed} ({})", shape.name());
+        assert!(k.structurally_eq(&k2), "seed {seed} ({})", shape.name());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fuzz pipeline
+// ---------------------------------------------------------------------
+
+/// A small end-to-end fuzz run over every shape must come back green.
+#[test]
+fn fuzz_run_is_green_over_all_shapes() {
+    let opts = FuzzOptions {
+        seed_start: 0,
+        seed_end: 16,
+        jobs: 0,
+        corpus_dir: PathBuf::from("/nonexistent/ltrf-it-corpus"),
+        write_repros: false,
+        ..Default::default()
+    };
+    let report = ltrf::scenario::run_fuzz(&opts);
+    assert!(report.ok(), "oracle failures: {:#?}", report.failures);
+    assert_eq!(report.seeds_run, 16);
+    // Every shape appears twice in 16 rotating seeds.
+    for (name, count) in &report.shape_counts {
+        assert_eq!(*count, 2, "shape {name}");
+    }
+    assert!(report.sims >= 16 * 10, "matrix sims ran ({})", report.sims);
+    assert!(report.checks == 16 * 8, "all oracles checked ({})", report.checks);
+}
+
+/// The committed corpus seeds replay cleanly (parse + oracles).
+#[test]
+fn committed_corpus_seeds_replay_green() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("corpus");
+    let opts = FuzzOptions {
+        seed_start: 0,
+        seed_end: 1, // one generated seed; the corpus is the point
+        jobs: 1,
+        corpus_dir: root,
+        write_repros: false,
+        ..Default::default()
+    };
+    let report = ltrf::scenario::run_fuzz(&opts);
+    assert!(report.corpus_replayed >= 3, "committed seeds found");
+    assert!(report.ok(), "corpus failures: {:#?}", report.failures);
+}
+
+/// Shrinking a sim-level failure predicate produces a minimal repro that
+/// still parses and still fails.
+#[test]
+fn shrinker_produces_minimal_failing_repro() {
+    // Use a barrier/SFU kernel and an artificial "contains sfu" defect.
+    let (_, k) = generator::generate(6); // seed 6 -> barrier-sfu-mix
+    let text = k.display();
+    fn contains_sfu(k: &ltrf::ir::Kernel) -> bool {
+        k.blocks.iter().any(|b| b.insts.iter().any(|i| i.op == ltrf::ir::Op::Sfu))
+    }
+    if !contains_sfu(&k) {
+        // Shape mixes ops randomly; fall back to another seed if needed.
+        return;
+    }
+    let r = shrink::shrink(&text, 400, &mut contains_sfu);
+    let k2 = parser::parse(&r.text).expect("minimized repro parses");
+    assert!(contains_sfu(&k2), "minimized repro lost the defect");
+    assert!(
+        r.text.lines().count() < text.lines().count(),
+        "shrinker removed nothing:\n{}",
+        r.text
+    );
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: deliberately breaking a pass must trip an oracle
+// ---------------------------------------------------------------------
+
+/// Flipping one bank assignment in a cleanly-colored kernel must fail the
+/// renumbering oracle (the ISSUE's acceptance check, in unit form).
+#[test]
+fn bank_flip_trips_renumber_oracle() {
+    // A tiny straight-line kernel is always cleanly colorable.
+    let (_, k) = generator::generate(0); // seed 0 -> one-interval
+    let mut ck = compile(&k, CompileOptions::ltrf_conf(16));
+    let col = ck.coloring.as_ref().expect("coloring ran");
+    let rn = ck.renumbering.as_ref().expect("renumber ran");
+    assert_eq!(col.forced, 0, "tiny kernel must color cleanly");
+    assert_eq!(rn.fallback, 0);
+    assert!(oracles::check_renumber_invariants(&ck).is_ok());
+
+    // Flip one register's bank: move some working-set register onto the
+    // bank of another (interleaved map: +16 keeps the same bank as +0).
+    let ws = &mut ck.intervals.intervals[0].working_set;
+    let regs: Vec<u16> = ws.iter().collect();
+    assert!(regs.len() >= 2, "working set too small to collide");
+    let a = regs[0];
+    let b = regs[1];
+    let mut clash = a + 16;
+    while ws.contains(clash) {
+        clash += 16;
+    }
+    ws.remove(b);
+    ws.insert(clash);
+    let err = oracles::check_renumber_invariants(&ck).expect_err("bank flip must be caught");
+    assert!(err.contains("bank conflicts"), "{err}");
+}
+
+/// Perturbing a stat counter must produce a keyed snapshot diff (the
+/// ISSUE's other acceptance check, against an in-memory golden).
+#[test]
+fn counter_perturbation_trips_snapshot_diff() {
+    let golden = snapshot::capture(true, 0);
+    assert_eq!(golden.entries.len(), 25);
+
+    // Determinism: a second capture diffs clean.
+    let again = snapshot::capture(true, 0);
+    assert!(golden.diff_against(&again).is_empty(), "capture must be deterministic");
+
+    // Text round-trip.
+    let reparsed = snapshot::Snapshot::parse(&golden.to_text()).expect("parse");
+    assert_eq!(golden, reparsed);
+
+    // Perturb one counter the way a simulator regression would.
+    let mut drifted = golden.clone();
+    let (key, fields) = drifted.entries.iter_mut().next().expect("non-empty");
+    let key = key.clone();
+    for f in fields.iter_mut() {
+        if f.0 == "prefetch_ops" || f.0 == "cycles" {
+            f.1 += 1;
+        }
+    }
+    let diffs = golden.diff_against(&drifted);
+    assert!(!diffs.is_empty(), "perturbation must be detected");
+    assert!(diffs[0].contains(&key), "diff is keyed: {}", diffs[0]);
+}
+
+/// Snapshot capture is bit-identical across thread counts (the CI gate's
+/// `--jobs 1` vs `--jobs 4` comparison, in-process).
+#[test]
+fn snapshot_capture_thread_count_invariant() {
+    let a = snapshot::capture(true, 1);
+    let b = snapshot::capture(true, 4);
+    assert_eq!(a.to_text(), b.to_text());
+}

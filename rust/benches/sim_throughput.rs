@@ -1,13 +1,16 @@
-//! Bench: cycle-level simulator throughput (warp-instructions/second) per
-//! register-file hierarchy — the L3 hot path whose §Perf target is
-//! ≥ 10M warp-instructions/s.
+//! Bench: cycle-level simulator throughput per register-file hierarchy
+//! and per *backend* — the L3 hot path whose §Perf target is ≥ 10M
+//! warp-instructions/s, now tracked as a trajectory in `BENCH_sim.json`
+//! at the repo root.
 //!
-//! Run: `cargo bench --bench sim_throughput`
+//! Run: `cargo bench --bench sim_throughput` (or `ltrf bench --json` for
+//! the same measurement through the CLI).
 
 mod bench_util;
 use bench_util::bench;
+use ltrf::bench::{run_bench, BenchOptions};
 use ltrf::compiler::compile;
-use ltrf::sim::{gpu, HierarchyKind, SimConfig};
+use ltrf::sim::{gpu, HierarchyKind, SimBackend, SimConfig};
 use ltrf::workloads::{gen, suite};
 
 fn main() {
@@ -27,6 +30,36 @@ fn main() {
         });
     }
 
+    // Backend comparison on the same hot point (1 SM: the parallel
+    // backend's serial two-phase loop vs the inline reference).
+    {
+        let base = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: true })
+            .with_latency_factor(6.3)
+            .normalize_capacity();
+        let kernel = gen::build(spec);
+        let ck = compile(&kernel, gpu::compile_options(&base, true));
+        for (label, backend, threads) in [
+            ("reference", SimBackend::Reference, 1usize),
+            ("parallel t1", SimBackend::Parallel, 1),
+        ] {
+            let cfg = SimConfig { backend, sim_threads: threads, ..base };
+            bench(&format!("gaussian LTRF+ @6.3x, {label} (winst/s)"), 5, || {
+                gpu::run(&ck, &cfg).instructions
+            });
+        }
+        // Multi-SM: where the threaded step phase earns its keep.
+        for (label, backend, threads) in [
+            ("reference", SimBackend::Reference, 1usize),
+            ("parallel t1", SimBackend::Parallel, 1),
+            ("parallel t4", SimBackend::Parallel, 4),
+        ] {
+            let cfg = SimConfig { num_sms: 8, backend, sim_threads: threads, ..base };
+            bench(&format!("gaussian LTRF+ @6.3x x8 SMs, {label} (winst/s)"), 3, || {
+                gpu::run(&ck, &cfg).instructions
+            });
+        }
+    }
+
     // End-to-end including build+compile (the sweep-path unit of work).
     let cfg = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: true })
         .with_latency_factor(6.3)
@@ -34,4 +67,18 @@ fn main() {
     bench("build+compile+simulate gaussian (winst/s)", 5, || {
         gpu::run_workload(spec, &cfg, true).instructions
     });
+
+    // The committed trajectory: both backends over the fig14 matrix,
+    // written to BENCH_sim.json at the repo root.
+    let report = run_bench(&BenchOptions::default());
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = root.join("BENCH_sim.json");
+    std::fs::write(&path, report.to_json()).expect("write BENCH_sim.json");
+    if let Some(s) = report.fig14_speedup() {
+        println!(
+            "fig14 matrix: parallel x{} is {s:.2}x reference wall time -> {}",
+            report.sim_threads,
+            path.display()
+        );
+    }
 }

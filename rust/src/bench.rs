@@ -1,0 +1,318 @@
+//! Simulator-throughput trajectory: the measurement core behind
+//! `benches/sim_throughput.rs` and the `ltrf bench --json` CLI path.
+//!
+//! Two families of entries:
+//!
+//! * **hot-loop throughput** — simulated-cycles/sec and
+//!   warp-instructions/sec of `gpu::run` on a single hot point, per
+//!   backend;
+//! * **fig14-matrix wall time** — end-to-end wall seconds to simulate the
+//!   Fig. 14 comparison matrix (workloads × BL/RFC/LTRF/LTRF_conf on the
+//!   8×-capacity configs #6/#7) at a multi-SM configuration, per backend
+//!   and step-phase thread count.
+//!
+//! Every comparison first asserts the backends' `Stats` are bit-identical
+//! on the measured points — a speedup over a diverging simulator is not a
+//! speedup — then reports machine-readable JSON (`BENCH_sim.json` at the
+//! repo root) so CI can track the trajectory PR over PR.
+
+use crate::coordinator::experiments::comparison_points;
+use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
+use crate::timing::{design_points, Tech};
+use crate::workloads::{suite, WorkloadSpec};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Bench knobs (`ltrf bench` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    /// Smaller workload set and fewer iterations (the CI perf-smoke mode).
+    pub quick: bool,
+    /// Step-phase worker threads for the threaded parallel entries.
+    pub sim_threads: usize,
+    /// Timed iterations per entry (wall time is the per-iteration mean).
+    pub iters: u32,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { quick: false, sim_threads: 4, iters: 3 }
+    }
+}
+
+impl BenchOptions {
+    pub fn quick() -> Self {
+        BenchOptions { quick: true, iters: 1, ..Default::default() }
+    }
+}
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    pub backend: &'static str,
+    pub sim_threads: usize,
+    /// Mean wall seconds per iteration.
+    pub wall_seconds: f64,
+    /// Simulated cycles covered by one iteration (summed over points).
+    pub simulated_cycles: u64,
+    /// Warp-instructions covered by one iteration.
+    pub instructions: u64,
+}
+
+impl BenchEntry {
+    pub fn cycles_per_second(&self) -> f64 {
+        self.simulated_cycles as f64 / self.wall_seconds.max(1e-12)
+    }
+
+    pub fn winst_per_second(&self) -> f64 {
+        self.instructions as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+/// The full trajectory report.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub sim_threads: usize,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    /// Entry lookup by `(name, backend, sim_threads)`.
+    pub fn entry(&self, name: &str, backend: &str, sim_threads: usize) -> Option<&BenchEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.backend == backend && e.sim_threads == sim_threads)
+    }
+
+    /// fig14-matrix wall-time speedup of the threaded parallel backend
+    /// over the reference backend (the headline trajectory number).
+    pub fn fig14_speedup(&self) -> Option<f64> {
+        let reference = self.entry("fig14_matrix", "reference", 1)?;
+        let parallel = self.entry("fig14_matrix", "parallel", self.sim_threads)?;
+        Some(reference.wall_seconds / parallel.wall_seconds.max(1e-12))
+    }
+
+    /// Serialize as stable, machine-readable JSON (no external deps; the
+    /// schema is versioned so future PRs can extend it additively).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v1\",");
+        let _ = writeln!(out, "  \"quick\": {},", self.quick);
+        let _ = writeln!(out, "  \"sim_threads\": {},", self.sim_threads);
+        let _ = writeln!(
+            out,
+            "  \"host_parallelism\": {},",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
+        if let Some(s) = self.fig14_speedup() {
+            let _ = writeln!(out, "  \"fig14_speedup_parallel_over_reference\": {:.4},", s);
+        }
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let comma = if i + 1 == self.entries.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"backend\": \"{}\", \"sim_threads\": {}, \
+                 \"wall_seconds\": {:.6}, \"simulated_cycles\": {}, \"instructions\": {}, \
+                 \"cycles_per_second\": {:.1}, \"winst_per_second\": {:.1}}}{}",
+                e.name,
+                e.backend,
+                e.sim_threads,
+                e.wall_seconds,
+                e.simulated_cycles,
+                e.instructions,
+                e.cycles_per_second(),
+                e.winst_per_second(),
+                comma
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// A backend variant under measurement.
+fn backend_variants(opts: &BenchOptions) -> Vec<(SimBackend, usize)> {
+    let mut v = vec![(SimBackend::Reference, 1), (SimBackend::Parallel, 1)];
+    if opts.sim_threads > 1 {
+        v.push((SimBackend::Parallel, opts.sim_threads));
+    }
+    v
+}
+
+fn apply_backend(cfg: &SimConfig, backend: SimBackend, sim_threads: usize) -> SimConfig {
+    SimConfig { backend, sim_threads, ..*cfg }
+}
+
+/// One measured point: a compiled kernel + concrete config.
+struct Point {
+    ck: crate::compiler::CompiledKernel,
+    cfg: SimConfig,
+}
+
+fn workloads(opts: &BenchOptions) -> Vec<&'static WorkloadSpec> {
+    let names: &[&str] = if opts.quick {
+        &["kmeans", "gaussian", "pathfinder"]
+    } else {
+        &["kmeans", "bfs", "gaussian", "pathfinder", "cfd"]
+    };
+    names.iter().map(|n| suite::workload_by_name(n).expect("bench workload")).collect()
+}
+
+/// The fig14 comparison matrix at a multi-SM configuration: configs #6/#7
+/// (8× capacity), BL/RFC/LTRF/LTRF_conf columns. Multi-SM because the
+/// parallel backend's speedup comes from stepping SMs concurrently;
+/// single-SM points (the per-SM-IPC reproduction default) have no step
+/// phase to parallelize.
+fn fig14_points(opts: &BenchOptions, num_sms: usize) -> Vec<Point> {
+    let mut pts = Vec::new();
+    for (_, design, _) in design_points() {
+        if design.tech == Tech::HpSram {
+            continue; // Ideal is a column, not a design under measurement
+        }
+        if opts.quick && design.tech != Tech::Dwm {
+            continue; // quick mode: config #7 only
+        }
+        let factor = design.latency();
+        for spec in workloads(opts) {
+            let kernel = crate::workloads::gen::build(spec);
+            for (_, mut dut) in comparison_points(design.warp_registers()) {
+                dut.num_sms = num_sms;
+                let (cfg, copts) = crate::coordinator::engine::point_setup(
+                    &dut,
+                    factor,
+                    crate::coordinator::engine::CfgTweaks::NONE,
+                );
+                let ck = crate::compiler::compile(&kernel, copts);
+                pts.push(Point { ck, cfg });
+            }
+        }
+    }
+    pts
+}
+
+/// The single-point hot loop (gaussian on LTRF+ @ 6.3×).
+fn hot_points(num_sms: usize) -> Vec<Point> {
+    let spec = suite::workload_by_name("gaussian").expect("gaussian");
+    let cfg = SimConfig { num_sms, ..SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: true }) }
+        .with_latency_factor(6.3)
+        .normalize_capacity();
+    let kernel = crate::workloads::gen::build(spec);
+    let ck = crate::compiler::compile(&kernel, gpu::compile_options(&cfg, true));
+    vec![Point { ck, cfg }]
+}
+
+/// Run all points under one backend variant once; returns merged totals.
+fn run_once(points: &[Point], backend: SimBackend, sim_threads: usize) -> (u64, u64, Vec<Stats>) {
+    let mut cycles = 0u64;
+    let mut insts = 0u64;
+    let mut all = Vec::with_capacity(points.len());
+    for p in points {
+        let st = gpu::run(&p.ck, &apply_backend(&p.cfg, backend, sim_threads));
+        cycles += st.cycles;
+        insts += st.instructions;
+        all.push(st);
+    }
+    (cycles, insts, all)
+}
+
+/// Measure one entry family over every backend variant, asserting the
+/// backends agree bit-for-bit on every point before timing them.
+fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: &BenchOptions) {
+    // Equivalence gate first (untimed; the Reference variant is the
+    // baseline itself, so only the parallel variants need a pass).
+    let (_, _, reference) = run_once(points, SimBackend::Reference, 1);
+    for &(backend, threads) in &backend_variants(opts) {
+        if backend == SimBackend::Reference {
+            continue;
+        }
+        let (_, _, got) = run_once(points, backend, threads);
+        for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a, b,
+                "bench refuses to time diverging backends: {name} point {i} under {} x{threads}",
+                backend.name()
+            );
+        }
+    }
+    // Timed runs.
+    for &(backend, threads) in &backend_variants(opts) {
+        let mut cycles = 0;
+        let mut insts = 0;
+        let t0 = Instant::now();
+        for _ in 0..opts.iters.max(1) {
+            let (c, i, _) = run_once(points, backend, threads);
+            cycles = c;
+            insts = i;
+        }
+        let wall = t0.elapsed().as_secs_f64() / opts.iters.max(1) as f64;
+        report.entries.push(BenchEntry {
+            name: name.to_string(),
+            backend: backend.name(),
+            sim_threads: threads,
+            wall_seconds: wall,
+            simulated_cycles: cycles,
+            instructions: insts,
+        });
+    }
+}
+
+/// Run the full trajectory measurement.
+pub fn run_bench(opts: &BenchOptions) -> BenchReport {
+    let mut report =
+        BenchReport { quick: opts.quick, sim_threads: opts.sim_threads, entries: Vec::new() };
+    let num_sms = 8;
+    measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
+    measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
+    measure_family(&mut report, "fig14_matrix", &fig14_points(opts, num_sms), opts);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_and_lookup() {
+        let mut r = BenchReport { quick: true, sim_threads: 4, entries: Vec::new() };
+        r.entries.push(BenchEntry {
+            name: "fig14_matrix".into(),
+            backend: "reference",
+            sim_threads: 1,
+            wall_seconds: 2.0,
+            simulated_cycles: 1000,
+            instructions: 500,
+        });
+        r.entries.push(BenchEntry {
+            name: "fig14_matrix".into(),
+            backend: "parallel",
+            sim_threads: 4,
+            wall_seconds: 1.0,
+            simulated_cycles: 1000,
+            instructions: 500,
+        });
+        let speedup = r.fig14_speedup().expect("both entries present");
+        assert!((speedup - 2.0).abs() < 1e-9);
+        let json = r.to_json();
+        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v1\""));
+        assert!(json.contains("\"fig14_speedup_parallel_over_reference\": 2.0000"));
+        assert!(json.contains("\"cycles_per_second\": 500.0"));
+        assert!(json.ends_with("]\n}\n"));
+        assert_eq!(r.entry("fig14_matrix", "reference", 1).unwrap().instructions, 500);
+        assert!(r.entry("fig14_matrix", "reference", 9).is_none());
+    }
+
+    #[test]
+    fn hot_loop_points_build() {
+        // The measurement harness must be constructible without timing
+        // anything expensive: one untimed run over the 1-SM hot point.
+        let pts = hot_points(1);
+        let (cycles, insts, stats) = run_once(&pts, SimBackend::Reference, 1);
+        assert!(cycles > 0 && insts > 0);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].hit_cycle_cap, 0);
+    }
+}

@@ -34,7 +34,7 @@ use super::experiments::DesignUnderTest;
 use super::sweep;
 use crate::compiler::{compile, BankMap, CompileOptions, CompiledKernel};
 use crate::sim::config::HierarchyKind;
-use crate::sim::{gpu, SimConfig, Stats};
+use crate::sim::{gpu, SimBackend, SimConfig, Stats};
 use crate::workloads::{gen, WorkloadSpec};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -46,18 +46,38 @@ use std::sync::{Arc, Mutex, OnceLock};
 // ---------------------------------------------------------------------
 
 /// Structural `SimConfig` overrides applied on top of the design's
-/// configuration (the §7.5 ablation knobs). `None` = leave the design's
+/// configuration (the §7.5 ablation knobs, plus the simulator-backend
+/// selection the equivalence gates sweep). `None` = leave the design's
 /// value alone.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub struct CfgTweaks {
     pub early_refetch: Option<bool>,
     pub xbar_regs_per_cycle: Option<u32>,
     pub bank_map: Option<BankMap>,
+    /// Multi-SM stepping backend (`Reference`/`Parallel`). Part of the
+    /// job key so a backend comparison never dedups against the other
+    /// backend's result.
+    pub backend: Option<SimBackend>,
+    /// Step-phase worker threads for the `Parallel` backend. Defaults to
+    /// 1 inside engine jobs (jobs are already parallel at job
+    /// granularity; nesting is opt-in via `--sim-threads`).
+    pub sim_threads: Option<usize>,
 }
 
 impl CfgTweaks {
-    pub const NONE: CfgTweaks =
-        CfgTweaks { early_refetch: None, xbar_regs_per_cycle: None, bank_map: None };
+    pub const NONE: CfgTweaks = CfgTweaks {
+        early_refetch: None,
+        xbar_regs_per_cycle: None,
+        bank_map: None,
+        backend: None,
+        sim_threads: None,
+    };
+
+    /// Backend/thread selection only (the equivalence oracle and the
+    /// snapshot CLI's `--backend`/`--sim-threads` knobs).
+    pub fn with_backend(backend: SimBackend, sim_threads: usize) -> CfgTweaks {
+        CfgTweaks { backend: Some(backend), sim_threads: Some(sim_threads), ..CfgTweaks::NONE }
+    }
 
     /// Apply to a concrete simulator configuration. Must run *before*
     /// compile options are derived from the config (the bank map feeds
@@ -71,6 +91,12 @@ impl CfgTweaks {
         }
         if let Some(v) = self.bank_map {
             cfg.bank_map = v;
+        }
+        if let Some(v) = self.backend {
+            cfg.backend = v;
+        }
+        if let Some(v) = self.sim_threads {
+            cfg.sim_threads = v;
         }
     }
 }
@@ -568,6 +594,26 @@ mod tests {
         assert_eq!(eng.sims_run(), 2);
         assert_eq!(eng.compile_cache().misses(), 1, "one unique (spec, options) pair");
         assert!(eng.compile_cache().hits() >= 1, "shared design point must hit the cache");
+    }
+
+    #[test]
+    fn backend_tweak_is_keyed_and_bit_identical() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let reference = run_point(spec, &bl(), 1.0, CfgTweaks::NONE, None);
+        let parallel = run_point(
+            spec,
+            &bl(),
+            1.0,
+            CfgTweaks::with_backend(SimBackend::Parallel, 1),
+            None,
+        );
+        assert_eq!(reference, parallel, "backends must agree bit-for-bit");
+        // …but the points must not collapse to one job in the matrix.
+        let mut m = JobMatrix::new();
+        let a = m.add(spec, &bl(), 1.0, CfgTweaks::NONE);
+        let b = m.add(spec, &bl(), 1.0, CfgTweaks::with_backend(SimBackend::Parallel, 1));
+        assert_ne!(a, b);
+        assert_eq!(m.len(), 2);
     }
 
     #[test]

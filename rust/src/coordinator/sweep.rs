@@ -9,6 +9,13 @@
 //! so the output order (and, because every job is an isolated
 //! deterministic simulation, the output *values*) are independent of the
 //! thread count and of the steal interleaving.
+//!
+//! Parallelism nests in two layers: `--jobs N` (this executor, across
+//! simulation points) and `--sim-threads N` (the `Parallel` backend's
+//! step-phase pool, across SMs *inside* one point — see `sim::gpu`).
+//! Engine jobs default the inner knob to 1 so the layers do not
+//! oversubscribe each other; both layers are bit-deterministic, so any
+//! combination produces identical results.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;

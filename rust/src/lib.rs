@@ -21,10 +21,12 @@
 //! * [`coordinator`] — experiment drivers regenerating every table and
 //!   figure in the paper's evaluation;
 //! * [`scenario`] — differential scenario engine: seeded kernel fuzzing,
-//!   cross-config oracles, failure shrinking, and the golden-stats
-//!   regression snapshot;
+//!   cross-config oracles (including backend equivalence), failure
+//!   shrinking, and the golden-stats regression snapshot;
+//! * [`bench`] — the simulator-throughput trajectory (`BENCH_sim.json`);
 //! * [`report`] — ascii/CSV table rendering.
 
+pub mod bench;
 pub mod compiler;
 pub mod coordinator;
 pub mod ir;

@@ -3,10 +3,10 @@
 //! Every table/figure in the paper's evaluation is a subcommand; `all`
 //! regenerates the full set (EXPERIMENTS.md records the outputs).
 
-use ltrf::coordinator::engine::{two_phase, Engine};
+use ltrf::coordinator::engine::{run_point, two_phase, CfgTweaks, Engine};
 use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
 use ltrf::report::Table;
-use ltrf::sim::HierarchyKind;
+use ltrf::sim::{HierarchyKind, SimBackend};
 use ltrf::workloads::suite;
 use std::path::PathBuf;
 
@@ -53,12 +53,18 @@ Verification commands:
               Golden-stats harness: --bless captures the workload x config
               counter snapshot; --check diffs the current simulator
               against the committed golden file (keyed diff on drift)
+  bench [--json PATH] [--quick] [--sim-threads N] [--iters N]
+              Simulator throughput trajectory: simulated-cycles/sec and
+              fig14-matrix wall time for both backends, written as
+              machine-readable JSON (default BENCH_sim.json)
 
 Flags:
   --quick       5-workload subset, smaller grids
   --csv DIR     also write each table as CSV
   --sms N       simulated SM count (default 1)
   --jobs N      parallel simulation workers (default: all cores)
+  --backend B   simulator backend: reference | parallel (default reference)
+  --sim-threads N  step-phase threads for the parallel backend (default 1)
   --engine-stats  print job-matrix / cache statistics after a run
 ";
 
@@ -79,6 +85,24 @@ fn main() {
         csv_dir: opt("--csv").map(PathBuf::from),
         num_sms: opt("--sms").and_then(|s| s.parse().ok()).unwrap_or(1),
         jobs: opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(0),
+    };
+
+    // Simulator-backend selection (`run` / `snapshot` / `bench`). The
+    // experiment drivers always use the default backend; the knobs exist
+    // so CI can diff the backends against each other.
+    let backend_tweaks = {
+        let mut tw = CfgTweaks::NONE;
+        if let Some(name) = opt("--backend") {
+            match SimBackend::by_name(&name) {
+                Some(b) => tw.backend = Some(b),
+                None => {
+                    eprintln!("unknown --backend `{name}` (expected: reference | parallel)");
+                    std::process::exit(2);
+                }
+            }
+        }
+        tw.sim_threads = opt("--sim-threads").and_then(|s| s.parse().ok());
+        tw
     };
 
     let print = |t: &Table| println!("{}", t.render());
@@ -229,7 +253,8 @@ fn main() {
                 .map(PathBuf::from)
                 .unwrap_or_else(|| PathBuf::from(ltrf::scenario::snapshot::GOLDEN_PATH));
             if flag("--bless") {
-                let snap = ltrf::scenario::snapshot::capture(ctx.quick, ctx.jobs);
+                let snap =
+                    ltrf::scenario::snapshot::capture_tweaked(ctx.quick, ctx.jobs, backend_tweaks);
                 if let Err(e) = snap.save(&golden) {
                     eprintln!("{e}");
                     std::process::exit(1);
@@ -251,7 +276,8 @@ fn main() {
                     );
                     return;
                 }
-                let current = ltrf::scenario::snapshot::capture(ctx.quick, ctx.jobs);
+                let current =
+                    ltrf::scenario::snapshot::capture_tweaked(ctx.quick, ctx.jobs, backend_tweaks);
                 let diffs = gold.diff_against(&current);
                 if diffs.is_empty() {
                     println!(
@@ -274,6 +300,37 @@ fn main() {
                 eprintln!("usage: ltrf snapshot (--check | --bless) [--golden PATH] [--quick]");
                 std::process::exit(2);
             }
+        }
+        "bench" => {
+            let sim_threads = opt("--sim-threads").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let iters = opt("--iters")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(if ctx.quick { 1 } else { 3 });
+            let opts = ltrf::bench::BenchOptions { quick: ctx.quick, sim_threads, iters };
+            let report = ltrf::bench::run_bench(&opts);
+            for e in &report.entries {
+                println!(
+                    "{:<16} {:>10} x{:<2} {:>10.3} ms  {:>14.0} cycles/s  {:>12.0} winst/s",
+                    e.name,
+                    e.backend,
+                    e.sim_threads,
+                    e.wall_seconds * 1e3,
+                    e.cycles_per_second(),
+                    e.winst_per_second()
+                );
+            }
+            if let Some(s) = report.fig14_speedup() {
+                println!(
+                    "fig14 matrix: parallel x{} is {s:.2}x reference wall time",
+                    report.sim_threads
+                );
+            }
+            let path = opt("--json").map(PathBuf::from).unwrap_or_else(|| "BENCH_sim.json".into());
+            if let Err(e) = std::fs::write(&path, report.to_json()) {
+                eprintln!("cannot write {}: {e}", path.display());
+                std::process::exit(1);
+            }
+            println!("wrote {}", path.display());
         }
         "workloads" => {
             let mut t = Table::new(
@@ -358,7 +415,7 @@ fn main() {
                 dut = dut.with_capacity(cap);
             }
             dut.num_sms = ctx.num_sms;
-            let st = dut.run(spec, factor);
+            let st = run_point(spec, &dut, factor, backend_tweaks, None);
             println!(
                 "{name} on {} @ {factor}x: IPC {:.3} ({} insts / {} cycles)",
                 hierarchy.name(),
@@ -366,6 +423,9 @@ fn main() {
                 st.instructions,
                 st.cycles
             );
+            if st.hit_cycle_cap != 0 {
+                println!("  WARNING: truncated at the max_cycles cap — not a converged result");
+            }
             println!(
                 "  L1 hit {:.1}%  RFC hit {:.1}%  prefetches {} ({} regs)  activations {}  MRF acc reduction {:.1}x",
                 st.l1_hit_rate() * 100.0,
@@ -410,7 +470,7 @@ fn main() {
             );
             let mut now = 0u64;
             while now < max && !sm.done() {
-                let hint = sm.step(now, &mut shared);
+                let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared));
                 let line: String = sm
                     .warps
                     .iter()

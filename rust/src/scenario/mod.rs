@@ -9,9 +9,10 @@
 //!    interval-count extremes, random CFGs);
 //! 2. [`oracles`] round-trips it through the `.ltrf` parser and checks
 //!    the cross-config invariants (functional equivalence under every
-//!    hierarchy, renumbering soundness, conservation laws, timing
-//!    invariance, TLP monotonicity, re-run determinism) over a config
-//!    matrix run through the PR-1 engine's point runner;
+//!    hierarchy, renumbering soundness, conservation laws, simulator
+//!    backend equivalence, timing invariance, TLP monotonicity, re-run
+//!    determinism) over a config matrix run through the PR-1 engine's
+//!    point runner;
 //! 3. on failure, [`shrink`] reduces the kernel to a minimal `.ltrf`
 //!    repro and [`corpus`] writes it to `corpus/regressions/`.
 //!

@@ -13,7 +13,7 @@ use crate::compiler::{compile, CompileOptions, CompiledKernel};
 use crate::coordinator::engine::{run_kernel_point, CfgTweaks};
 use crate::coordinator::experiments::DesignUnderTest;
 use crate::ir::{execute, parser, Kernel};
-use crate::sim::{HierarchyKind, SimConfig, Stats};
+use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
 use crate::util::bitset::MAX_REGS;
 use std::sync::Arc;
 
@@ -48,6 +48,10 @@ pub enum OracleKind {
     /// Every config in the matrix: the sim finishes, every resident warp
     /// finishes, and issued instructions equal the architectural streams.
     SimConservation,
+    /// The `Parallel` two-phase backend produces bit-identical `Stats` to
+    /// `Reference` on every matrix point (field-for-field), including
+    /// multi-SM points with the threaded step phase at 1 and 4 workers.
+    BackendEquivalence,
     /// MRF latency changes timing only: architectural work (instructions,
     /// finished warps) is bit-identical across latency factors.
     TimingInvariance,
@@ -60,12 +64,13 @@ pub enum OracleKind {
 }
 
 impl OracleKind {
-    pub const ALL: [OracleKind; 8] = [
+    pub const ALL: [OracleKind; 9] = [
         OracleKind::Validate,
         OracleKind::RoundTrip,
         OracleKind::ExecEquivalence,
         OracleKind::RenumberInvariants,
         OracleKind::SimConservation,
+        OracleKind::BackendEquivalence,
         OracleKind::TimingInvariance,
         OracleKind::TlpMonotonic,
         OracleKind::RerunDeterminism,
@@ -78,6 +83,7 @@ impl OracleKind {
             OracleKind::ExecEquivalence => "exec-equivalence",
             OracleKind::RenumberInvariants => "renumber-invariants",
             OracleKind::SimConservation => "sim-conservation",
+            OracleKind::BackendEquivalence => "backend-equivalence",
             OracleKind::TimingInvariance => "timing-invariance",
             OracleKind::TlpMonotonic => "tlp-monotonic",
             OracleKind::RerunDeterminism => "rerun-determinism",
@@ -171,6 +177,7 @@ pub fn run_oracle(k: &Kernel, kind: OracleKind, cs: &mut CheckStats) -> Result<(
         OracleKind::ExecEquivalence => oracle_exec_equivalence(k),
         OracleKind::RenumberInvariants => oracle_renumber(k),
         OracleKind::SimConservation => oracle_conservation(k, cs),
+        OracleKind::BackendEquivalence => oracle_backend_equivalence(k, cs),
         OracleKind::TimingInvariance => oracle_timing_invariance(k, cs),
         OracleKind::TlpMonotonic => oracle_tlp_monotonic(k, cs),
         OracleKind::RerunDeterminism => oracle_rerun_determinism(k, cs),
@@ -285,9 +292,9 @@ pub fn check_renumber_invariants(ck: &CompiledKernel) -> Result<(), String> {
 
 fn oracle_conservation(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
     for (name, dut, factor) in sim_matrix() {
-        let (st, resident, ck, cfg) = sim_point(k, &dut, factor);
+        let (st, resident, ck, _cfg) = sim_point(k, &dut, factor);
         cs.sims += 1;
-        if st.cycles >= cfg.max_cycles {
+        if st.hit_cycle_cap != 0 {
             return Err(format!("{name}: simulation hit the {CYCLE_CAP}-cycle cap"));
         }
         if st.warps_finished as usize != resident {
@@ -315,6 +322,79 @@ fn oracle_conservation(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
                 "{name}: issued {} instructions, architectural streams total {expect}",
                 st.instructions
             ));
+        }
+    }
+    Ok(())
+}
+
+/// The multi-SM add-on points for the backend-equivalence oracle: 2 SMs
+/// sharing the LLC/DRAM so the canonical commit order actually carries
+/// cross-SM ordering, on the cheapest and the most latency-stressed
+/// designs. Kept small — each point costs ~2 single-SM sims.
+fn multi_sm_points() -> Vec<(&'static str, DesignUnderTest, f64)> {
+    let mut pts = vec![
+        ("BL@1.0", DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0),
+        ("LTRF@6.3", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 6.3),
+    ];
+    for p in &mut pts {
+        p.1.warps_per_sm = 16;
+        p.1.num_sms = 2;
+    }
+    pts
+}
+
+/// Field-for-field diff of two `Stats` (the oracle's failure detail).
+fn stats_field_diff(reference: &Stats, other: &Stats) -> String {
+    let fa = super::snapshot::stat_fields(reference);
+    let fb = super::snapshot::stat_fields(other);
+    let diffs: Vec<String> = fa
+        .iter()
+        .zip(&fb)
+        .filter(|((_, a), (_, b))| a != b)
+        .map(|(&(name, a), &(_, b))| format!("{name} {a} vs {b}"))
+        .collect();
+    if diffs.is_empty() {
+        "(no counter field differs)".into()
+    } else {
+        diffs.join(", ")
+    }
+}
+
+fn oracle_backend_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
+    // Single-SM: the full design × latency matrix through the serial
+    // two-phase core.
+    for (name, dut, factor) in sim_matrix() {
+        let (reference, _, ck, cfg) = sim_point(k, &dut, factor);
+        cs.sims += 1;
+        let mut pcfg = cfg;
+        pcfg.backend = SimBackend::Parallel;
+        let parallel = gpu::run(&ck, &pcfg);
+        cs.sims += 1;
+        if parallel != reference {
+            return Err(format!(
+                "{name}: Parallel backend diverges from Reference: {}",
+                stats_field_diff(&reference, &parallel)
+            ));
+        }
+    }
+    // Multi-SM: the threaded step phase at 1 and 4 workers (4 is capped
+    // to the SM count; it still exercises the barrier pool).
+    for (name, dut, factor) in multi_sm_points() {
+        let (reference, _, ck, cfg) = sim_point(k, &dut, factor);
+        cs.sims += 1;
+        for threads in [1usize, 4] {
+            let mut pcfg = cfg;
+            pcfg.backend = SimBackend::Parallel;
+            pcfg.sim_threads = threads;
+            let parallel = gpu::run(&ck, &pcfg);
+            cs.sims += 1;
+            if parallel != reference {
+                return Err(format!(
+                    "{name} x{} SMs, {threads} sim-threads: Parallel diverges: {}",
+                    cfg.num_sms,
+                    stats_field_diff(&reference, &parallel)
+                ));
+            }
         }
     }
     Ok(())

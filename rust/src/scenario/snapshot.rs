@@ -53,6 +53,11 @@ pub fn stat_fields(s: &Stats) -> Vec<(&'static str, u64)> {
         ("stall_scoreboard", s.stall_scoreboard),
         ("stall_collectors", s.stall_collectors),
         ("stall_no_ready_warp", s.stall_no_ready_warp),
+        // Additive in PR 3 (cycle-cap truncation flag). Justification for
+        // blessing: the counter is new — zero on every converged run — so
+        // it cannot mask drift in any pre-existing field, and carrying it
+        // makes a silently-truncated run show up as keyed drift.
+        ("hit_cycle_cap", s.hit_cycle_cap),
     ]
 }
 
@@ -73,12 +78,21 @@ pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, Desig
     } else {
         suite::suite()
     };
+    // The 4-SM point exists so backend comparisons under `--sim-threads 4`
+    // actually reach the threaded step phase: single-SM points clamp
+    // sim_threads to 1, which would make the CI thread gate vacuous.
+    let ltrf_4sm = {
+        let mut d = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        d.num_sms = 4;
+        d
+    };
     let configs: Vec<(&str, DesignUnderTest, f64)> = vec![
         ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0),
         ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false), 1.0),
         ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 1.0),
         ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 6.3),
         ("LTRF_conf", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true), 6.3),
+        ("LTRF_4sm", ltrf_4sm, 6.3),
     ];
     let mut out = Vec::new();
     for spec in workloads {
@@ -96,10 +110,18 @@ pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, Desig
 
 /// Capture the snapshot matrix on `jobs` workers (0 = all cores).
 pub fn capture(quick: bool, jobs: usize) -> Snapshot {
+    capture_tweaked(quick, jobs, CfgTweaks::NONE)
+}
+
+/// Capture with `SimConfig` overrides — the backend-equivalence CI gate
+/// captures the same matrix under `--backend parallel --sim-threads {1,4}`
+/// and requires the serialized files to be byte-identical to the
+/// reference capture.
+pub fn capture_tweaked(quick: bool, jobs: usize, tweaks: CfgTweaks) -> Snapshot {
     let points = snapshot_points(quick);
     let cache = CompileCache::new();
     let stats = steal_map(&points, jobs, |(_, spec, dut, factor)| {
-        run_point(spec, dut, *factor, CfgTweaks::NONE, Some(&cache))
+        run_point(spec, dut, *factor, tweaks, Some(&cache))
     });
     let mut snap = Snapshot::default();
     for ((key, _, _, _), st) in points.iter().zip(stats) {
@@ -256,8 +278,11 @@ mod tests {
 
     #[test]
     fn matrix_covers_suite_and_configs() {
-        assert_eq!(snapshot_points(true).len(), 5 * 5);
-        assert_eq!(snapshot_points(false).len(), 14 * 5);
+        assert_eq!(snapshot_points(true).len(), 5 * 6);
+        assert_eq!(snapshot_points(false).len(), 14 * 6);
+        // At least one point must be multi-SM, or the `--sim-threads`
+        // backend gates never exercise the threaded step phase.
+        assert!(snapshot_points(true).iter().any(|(_, _, d, _)| d.num_sms > 1));
         // Keys are unique.
         let points = snapshot_points(false);
         let keys: std::collections::HashSet<_> = points.iter().map(|p| p.0.clone()).collect();

@@ -19,8 +19,10 @@ pub struct AddressAllocationUnit {
 impl AddressAllocationUnit {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity <= 256);
+        // NB: not `0..capacity as u8` — at the 256-slot ceiling that cast
+        // wraps to 0 and would build an always-exhausted allocator.
         AddressAllocationUnit {
-            unused: (0..capacity as u8).collect(),
+            unused: (0..capacity).map(|s| s as u8).collect(),
             occupied_count: 0,
             capacity,
         }
@@ -102,6 +104,45 @@ mod tests {
         let a = aau.alloc().unwrap();
         aau.free(a);
         aau.free(a);
+    }
+
+    #[test]
+    fn exhaustion_recovers_after_free() {
+        // The AAU must come back from full exhaustion: §5.2's warp-stall
+        // path frees a whole partition and immediately refills it.
+        let mut aau = AddressAllocationUnit::new(4);
+        let slots: Vec<u8> = (0..4).map(|_| aau.alloc().unwrap()).collect();
+        assert!(aau.alloc().is_none());
+        assert!(aau.alloc().is_none(), "repeated alloc at exhaustion stays None");
+        for &s in &slots {
+            aau.free(s);
+        }
+        assert_eq!(aau.available(), 4);
+        let refill: Vec<u8> = (0..4).map(|_| aau.alloc().unwrap()).collect();
+        assert_eq!(refill, slots, "free order = re-allocation order (FIFO)");
+        assert!(aau.alloc().is_none(), "exhaustion detected again after refill");
+    }
+
+    #[test]
+    fn zero_capacity_unit_always_exhausted() {
+        let mut aau = AddressAllocationUnit::new(0);
+        assert_eq!(aau.capacity(), 0);
+        assert_eq!(aau.available(), 0);
+        assert!(aau.alloc().is_none());
+    }
+
+    #[test]
+    fn max_capacity_boundary() {
+        // 256 slots is the hard ceiling (bank ids are u8).
+        let mut aau = AddressAllocationUnit::new(256);
+        let mut seen = [false; 256];
+        for _ in 0..256 {
+            let s = aau.alloc().expect("within capacity");
+            assert!(!seen[s as usize], "slot {s} handed out twice");
+            seen[s as usize] = true;
+        }
+        assert!(aau.alloc().is_none());
+        assert_eq!(aau.in_use(), 256);
     }
 
     #[test]

@@ -46,6 +46,39 @@ impl HierarchyKind {
     }
 }
 
+/// Which multi-SM stepping strategy `gpu::run` uses. Both backends are
+/// required to produce bit-identical [`super::stats::Stats`] on every
+/// kernel/config/seed — enforced by the scenario backend-equivalence
+/// oracle and the CI snapshot gates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SimBackend {
+    /// The original inline path: SMs step serially in lockstep and mutate
+    /// the shared LLC/DRAM directly at issue time.
+    #[default]
+    Reference,
+    /// Two-phase core: an embarrassingly-parallel per-SM step phase that
+    /// *records* LLC requests, then a deterministic serial commit phase
+    /// that drains them in canonical `(sm_id, seq)` order.
+    Parallel,
+}
+
+impl SimBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimBackend::Reference => "reference",
+            SimBackend::Parallel => "parallel",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SimBackend> {
+        match name {
+            "reference" => Some(SimBackend::Reference),
+            "parallel" => Some(SimBackend::Parallel),
+            _ => None,
+        }
+    }
+}
+
 /// Memory system parameters (Table 3 + GDDR5 timing abstracted to
 /// latency/bandwidth).
 #[derive(Clone, Copy, Debug)]
@@ -137,6 +170,12 @@ pub struct SimConfig {
     pub early_refetch: bool,
     /// Safety valve for runaway simulations.
     pub max_cycles: u64,
+    /// Multi-SM stepping strategy (see [`SimBackend`]).
+    pub backend: SimBackend,
+    /// Worker threads for the `Parallel` backend's step phase (capped at
+    /// `num_sms`). Default 1: engine jobs are already parallel at job
+    /// granularity, so nesting defaults off to avoid oversubscription.
+    pub sim_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -163,6 +202,8 @@ impl Default for SimConfig {
             bank_map: BankMap::Interleave,
             early_refetch: true,
             max_cycles: 30_000_000,
+            backend: SimBackend::Reference,
+            sim_threads: 1,
         }
     }
 }
@@ -241,6 +282,16 @@ mod tests {
         assert_eq!(c.warp_regs_capacity, 2048 + 128);
         let l = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: false }).normalize_capacity();
         assert_eq!(l.warp_regs_capacity, 2048);
+    }
+
+    #[test]
+    fn backend_names_roundtrip_and_default_is_reference() {
+        assert_eq!(SimConfig::default().backend, SimBackend::Reference);
+        assert_eq!(SimConfig::default().sim_threads, 1);
+        for b in [SimBackend::Reference, SimBackend::Parallel] {
+            assert_eq!(SimBackend::by_name(b.name()), Some(b));
+        }
+        assert_eq!(SimBackend::by_name("nonsense"), None);
     }
 
     #[test]

@@ -1,46 +1,277 @@
-//! Multi-SM driver: lockstep SM simulation over a shared memory system,
-//! with global skip-ahead when no SM can make progress this cycle.
+//! Multi-SM driver, in two interchangeable backends:
+//!
+//! * [`SimBackend::Reference`] — the original inline path: SMs step
+//!   serially in lockstep and mutate the shared LLC/DRAM directly at
+//!   issue time.
+//! * [`SimBackend::Parallel`] — the two-phase core: each global cycle is
+//!   (1) an embarrassingly-parallel per-SM step phase in which every SM
+//!   computes locally and *records* its shared-level requests, then
+//!   (2) a deterministic serial commit phase that drains those requests
+//!   in canonical `(sm_id, seq)` order — `seq` being the per-SM issue
+//!   order — applies them to the LLC/DRAM, and posts `MemArrive` replies.
+//!
+//! Determinism argument: the canonical commit order is exactly the order
+//! in which the reference backend performs the same shared accesses (SMs
+//! in ascending id, requests in issue order within an SM), every other
+//! structure an SM touches during the step phase is SM-private, and an
+//! instruction that records a request always counts as issued — so the
+//! skip-ahead hint a stepping SM returns never depends on the
+//! not-yet-known reply times. Both backends therefore produce
+//! bit-identical [`Stats`] on every kernel, config, and seed; the
+//! scenario backend-equivalence oracle and the CI snapshot gates enforce
+//! this.
+//!
+//! The step phase additionally skips SMs whose previous hint lies beyond
+//! the current cycle: the hint is a promise that no event fires and no
+//! warp becomes issuable before it, so the only side effect a reference
+//! step would have had is one `stall_no_ready_warp` increment — which the
+//! driver applies directly (idle SMs are not polled every tick).
 
-use super::config::SimConfig;
+use super::config::{SimBackend, SimConfig};
 use super::memsys::SharedMem;
-use super::sm::SmSim;
+use super::sm::{MemPort, SmSim};
 use super::stats::Stats;
 use crate::compiler::{compile, CompileOptions, CompiledKernel};
+use crate::util::sync::SpinBarrier;
 use crate::workloads::gen;
 use crate::workloads::WorkloadSpec;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Run a compiled kernel under `cfg`. Resident warp count follows the MRF
 /// capacity (TLP — §2.1); all SMs run the same kernel on staggered data.
 pub fn run(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
-    let resident = cfg.resident_warps(ck.kernel.num_regs);
-    let mut shared = SharedMem::new(cfg.mem);
-    let mut sms: Vec<SmSim> = (0..cfg.num_sms).map(|s| SmSim::new(cfg, ck, resident, s)).collect();
-
-    let mut now: u64 = 0;
-    loop {
-        let mut next = u64::MAX;
-        let mut all_done = true;
-        for sm in &mut sms {
-            let hint = sm.step(now, &mut shared);
-            next = next.min(hint);
-            all_done &= sm.done();
-        }
-        if all_done || now >= cfg.max_cycles {
-            break;
-        }
-        now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
+    match cfg.backend {
+        SimBackend::Reference => run_reference(ck, cfg),
+        SimBackend::Parallel => run_parallel(ck, cfg),
     }
+}
 
-    // Per-SM counters (including the L1 memory counters, which SmSim folds
-    // into its own Stats at the access sites) aggregate via plain merges.
+fn new_sms<'a>(ck: &'a CompiledKernel, cfg: &'a SimConfig) -> Vec<SmSim<'a>> {
+    let resident = cfg.resident_warps(ck.kernel.num_regs);
+    (0..cfg.num_sms).map(|s| SmSim::new(cfg, ck, resident, s)).collect()
+}
+
+/// Aggregate per-SM counters (including the L1 memory counters, which
+/// `SmSim` folds into its own `Stats` at the access sites) via plain
+/// merges, then attach the run-level cycle count, LLC counters, and the
+/// cycle-cap truncation flag.
+fn finish(sms: &[SmSim], shared: &SharedMem, now: u64, capped: bool) -> Stats {
     let mut total = Stats::default();
-    for sm in &sms {
+    for sm in sms {
         total.merge(&sm.stats);
     }
     total.cycles = now;
     total.llc_hits = shared.llc_hits;
     total.llc_misses = shared.llc_misses;
+    if capped {
+        total.hit_cycle_cap = 1;
+    }
     total
+}
+
+/// The reference backend: serial lockstep stepping with inline shared
+/// memory, with global skip-ahead when no SM can make progress.
+fn run_reference(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
+    let mut shared = SharedMem::new(cfg.mem);
+    let mut sms = new_sms(ck, cfg);
+
+    let mut now: u64 = 0;
+    let mut capped = false;
+    loop {
+        let mut next = u64::MAX;
+        let mut all_done = true;
+        for sm in &mut sms {
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            next = next.min(hint);
+            all_done &= sm.done();
+        }
+        if all_done {
+            break;
+        }
+        if now >= cfg.max_cycles {
+            capped = true;
+            break;
+        }
+        now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
+    }
+    finish(&sms, &shared, now, capped)
+}
+
+/// Commit-order selector for [`run_two_phase`]. `PerturbedReversed`
+/// exists only so tests can prove the backend-equivalence oracle trips
+/// when the canonical order is violated; real backends always use
+/// `Canonical`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitOrder {
+    /// Ascending `sm_id`, per-SM issue order — the reference interleaving.
+    Canonical,
+    /// Descending `sm_id`, per-SM ops reversed (deliberately wrong).
+    PerturbedReversed,
+}
+
+/// The parallel backend's driver. `sim_threads <= 1` (the default inside
+/// engine jobs, which are already parallel at job granularity) runs the
+/// same two-phase loop on the calling thread.
+fn run_parallel(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
+    let threads = cfg.sim_threads.clamp(1, cfg.num_sms.max(1));
+    if threads <= 1 {
+        run_two_phase(ck, cfg, CommitOrder::Canonical)
+    } else {
+        run_two_phase_threaded(ck, cfg, threads)
+    }
+}
+
+/// Single-threaded two-phase loop. Public (with a selectable
+/// [`CommitOrder`]) so the scenario tests can demonstrate that violating
+/// the canonical commit order is caught by the equivalence oracle.
+pub fn run_two_phase(ck: &CompiledKernel, cfg: &SimConfig, order: CommitOrder) -> Stats {
+    let mut shared = SharedMem::new(cfg.mem);
+    let mut sms = new_sms(ck, cfg);
+    let n = sms.len();
+    let mut hints = vec![0u64; n];
+    let mut dones = vec![false; n];
+
+    let mut now: u64 = 0;
+    let mut capped = false;
+    loop {
+        // Phase 1: step every due SM (SM-local work only).
+        for i in 0..n {
+            if dones[i] {
+                continue;
+            }
+            if hints[i] > now {
+                // Provably equivalent to stepping an idle SM: the hint
+                // promises no event and no issuable warp before it, so a
+                // reference step here would only bump the idle counter.
+                sms[i].stats.stall_no_ready_warp += 1;
+                continue;
+            }
+            hints[i] = sms[i].step(now, &mut MemPort::Deferred);
+            dones[i] = sms[i].done();
+        }
+        // Phase 2: deterministic serial commit.
+        match order {
+            CommitOrder::Canonical => {
+                for sm in sms.iter_mut() {
+                    sm.commit_mem(&mut shared);
+                }
+            }
+            CommitOrder::PerturbedReversed => {
+                for sm in sms.iter_mut().rev() {
+                    sm.commit_mem_perturbed(&mut shared);
+                }
+            }
+        }
+        if dones.iter().all(|&d| d) {
+            break;
+        }
+        if now >= cfg.max_cycles {
+            capped = true;
+            break;
+        }
+        let next = hints
+            .iter()
+            .zip(&dones)
+            .filter(|&(_, &d)| !d)
+            .map(|(&h, _)| h)
+            .min()
+            .unwrap_or(u64::MAX);
+        now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
+    }
+    finish(&sms, &shared, now, capped)
+}
+
+/// Threaded two-phase loop: a persistent pool of `threads` workers claims
+/// due SMs from a shared cursor each cycle (work-stealing-style dynamic
+/// balance without per-cycle thread spawns), synchronized against the
+/// main thread's serial commit phase by a spinning barrier. Produces the
+/// same `Stats` bit-for-bit as [`run_two_phase`] at any thread count: the
+/// step phase only touches SM-private state, and commit order is fixed by
+/// `sm_id`, not by which worker stepped an SM.
+fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) -> Stats {
+    let n = cfg.num_sms;
+    let sms: Vec<Mutex<SmSim>> = new_sms(ck, cfg).into_iter().map(Mutex::new).collect();
+    let hints: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let dones: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    // Workers + the committing main thread.
+    let barrier = SpinBarrier::new(threads + 1);
+    let now = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let claim = AtomicUsize::new(0);
+
+    let mut shared = SharedMem::new(cfg.mem);
+    let mut final_now: u64 = 0;
+    let mut capped = false;
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let sms = &sms;
+            let hints = &hints;
+            let dones = &dones;
+            let barrier = &barrier;
+            let now = &now;
+            let stop = &stop;
+            let claim = &claim;
+            scope.spawn(move || loop {
+                barrier.wait(); // cycle start (S1)
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let t = now.load(Ordering::SeqCst);
+                loop {
+                    let i = claim.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    if dones[i].load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    let mut sm = sms[i].lock().unwrap();
+                    if hints[i].load(Ordering::SeqCst) > t {
+                        sm.stats.stall_no_ready_warp += 1;
+                    } else {
+                        let h = sm.step(t, &mut MemPort::Deferred);
+                        hints[i].store(h, Ordering::SeqCst);
+                        if sm.done() {
+                            dones[i].store(true, Ordering::SeqCst);
+                        }
+                    }
+                }
+                barrier.wait(); // step phase complete (S2)
+            });
+        }
+
+        // Main thread: serial commit phase + clock control.
+        loop {
+            barrier.wait(); // S1: release workers into the step phase
+            barrier.wait(); // S2: all SMs stepped, workers idle at next S1
+            let mut all_done = true;
+            let mut next = u64::MAX;
+            for i in 0..n {
+                let mut sm = sms[i].lock().unwrap();
+                sm.commit_mem(&mut shared);
+                if !dones[i].load(Ordering::SeqCst) {
+                    all_done = false;
+                    next = next.min(hints[i].load(Ordering::SeqCst));
+                }
+            }
+            let t = now.load(Ordering::SeqCst);
+            if all_done || t >= cfg.max_cycles {
+                capped = !all_done;
+                final_now = t;
+                stop.store(true, Ordering::SeqCst);
+                barrier.wait(); // release workers so they observe `stop`
+                break;
+            }
+            let new_now = if next == u64::MAX { t + 1 } else { next.max(t + 1) };
+            now.store(new_now, Ordering::SeqCst);
+            claim.store(0, Ordering::SeqCst);
+        }
+    });
+
+    let sms: Vec<SmSim> = sms.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    finish(&sms, &shared, final_now, capped)
 }
 
 /// Compile options matching a simulator configuration.
@@ -79,6 +310,7 @@ mod tests {
             let st = run_workload(spec, &quick_cfg(kind), false);
             assert!(st.warps_finished > 0, "{}", kind.name());
             assert!(st.cycles < 5_000_000, "{} hit the cycle cap", kind.name());
+            assert_eq!(st.hit_cycle_cap, 0, "{} must not be truncated", kind.name());
         }
     }
 
@@ -139,5 +371,49 @@ mod tests {
             conf.ipc(),
             plain.ipc()
         );
+    }
+
+    #[test]
+    fn parallel_backend_bit_identical_single_sm() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        for kind in [
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Shrf,
+            HierarchyKind::Ltrf { plus: true },
+        ] {
+            let reference = run_workload(spec, &quick_cfg(kind), false);
+            let par_cfg = SimConfig { backend: SimBackend::Parallel, ..quick_cfg(kind) };
+            let parallel = run_workload(spec, &par_cfg, false);
+            assert_eq!(reference, parallel, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn parallel_backend_bit_identical_multi_sm_any_thread_count() {
+        let spec = suite::workload_by_name("hotspot").unwrap();
+        let base = SimConfig { num_sms: 3, ..quick_cfg(HierarchyKind::Ltrf { plus: true }) }
+            .with_latency_factor(6.3);
+        let reference = run_workload(spec, &base, false);
+        for threads in [1usize, 2, 4] {
+            let cfg = SimConfig { backend: SimBackend::Parallel, sim_threads: threads, ..base };
+            assert_eq!(reference, run_workload(spec, &cfg, false), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cycle_cap_truncation_is_recorded_not_silent() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        for backend in [SimBackend::Reference, SimBackend::Parallel] {
+            let cfg = SimConfig {
+                max_cycles: 50,
+                backend,
+                ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
+            }
+            .normalize_capacity();
+            let st = run_workload(spec, &cfg, false);
+            assert_eq!(st.hit_cycle_cap, 1, "{}", backend.name());
+            assert!(st.warps_finished == 0 || st.cycles >= 50);
+        }
     }
 }

@@ -10,6 +10,13 @@ use super::config::MemConfig;
 
 const LINE_SHIFT: u64 = 7; // 128B lines
 
+/// Cache-line index of a byte address (128B lines). Public so the SM's
+/// deferred-request path records the same line the inline path probes.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr >> LINE_SHIFT
+}
+
 /// Set-associative tag array with LRU.
 #[derive(Clone, Debug)]
 struct TagArray {
@@ -121,14 +128,44 @@ impl SmMem {
         }
     }
 
-    /// Access `addr` at cycle `now` against the shared levels.
+    /// Access `addr` at cycle `now` against the shared levels (the
+    /// `Reference` backend's inline path). Composed from the same halves
+    /// the `Parallel` backend's commit phase replays — [`Self::probe_l1`]
+    /// plus [`Self::commit_retire`]/[`Self::commit_miss`] — so the two
+    /// paths cannot drift apart.
     pub fn access_global(&mut self, addr: u64, now: u64, shared: &mut SharedMem) -> MemResult {
-        let line = addr >> LINE_SHIFT;
+        let line = line_of(addr);
         // Retire completed MSHRs.
-        self.outstanding.retain(|&t| t > now);
-        if self.l1.access(line) {
+        self.commit_retire(now);
+        if self.probe_l1(line) {
             return MemResult::Hit(now + self.cfg.l1_hit_cycles as u64);
         }
+        MemResult::Miss(self.commit_miss(line, now, shared))
+    }
+
+    /// Probe the L1 for `line`, filling on miss. This is the phase-1 local
+    /// half of an access: hit/miss is a pure function of per-SM tag state,
+    /// so the `Parallel` backend runs it at issue time while deferring all
+    /// MSHR/LLC side effects to the commit phase.
+    #[inline]
+    pub fn probe_l1(&mut self, line: u64) -> bool {
+        self.l1.access(line)
+    }
+
+    /// Retire MSHRs whose misses completed by `now`. The inline path runs
+    /// this before the tag probe; the deferred path replays it during
+    /// commit (ordering with the probe is immaterial — the probe never
+    /// reads MSHR state — and re-retiring at the same `now` is a no-op).
+    #[inline]
+    pub fn commit_retire(&mut self, now: u64) {
+        self.outstanding.retain(|&t| t > now);
+    }
+
+    /// Commit one L1 miss issued at `now`: MSHR allocation (queueing
+    /// behind the earliest outstanding miss when exhausted) plus the
+    /// shared LLC/DRAM access. Returns data arrival time at the SM.
+    pub fn commit_miss(&mut self, line: u64, now: u64, shared: &mut SharedMem) -> u64 {
+        self.commit_retire(now);
         let mut start = now;
         if self.outstanding.len() >= self.cfg.mshrs {
             // No free MSHR: the miss queues until the earliest outstanding
@@ -144,7 +181,7 @@ impl SmMem {
         }
         let done = shared.access(line, start + self.cfg.l1_hit_cycles as u64);
         self.outstanding.push(done);
-        MemResult::Miss(done)
+        done
     }
 
     /// Shared-memory access (fixed latency, never misses).
@@ -199,6 +236,44 @@ mod tests {
             overflow_min > *times[..cfg().mshrs].iter().min().unwrap(),
             "overflow misses must queue (got {overflow_min} vs window max {max_in_window})"
         );
+    }
+
+    #[test]
+    fn split_probe_commit_matches_inline_access() {
+        // The deferred path (probe at issue, retire/miss at commit) must
+        // reproduce the inline path exactly — including MSHR-exhaustion
+        // queueing — when ops replay in issue order.
+        let mut seq: Vec<(u64, u64)> =
+            (0..(cfg().mshrs as u64 + 8)).map(|i| (i << 20, i * 3)).collect();
+        // Re-touch early lines so the sequence also exercises L1 hits.
+        for i in 0..4u64 {
+            seq.push((i << 20, 500 + i));
+        }
+        let mut inline_shared = SharedMem::new(cfg());
+        let mut inline_sm = SmMem::new(cfg());
+        let inline_res: Vec<MemResult> =
+            seq.iter().map(|&(a, t)| inline_sm.access_global(a, t, &mut inline_shared)).collect();
+
+        let mut split_shared = SharedMem::new(cfg());
+        let mut split_sm = SmMem::new(cfg());
+        // Phase 1: probes only (local tag state), recording hit/miss.
+        let probes: Vec<bool> = seq.iter().map(|&(a, _)| split_sm.probe_l1(line_of(a))).collect();
+        // Phase 2: replay in issue order.
+        let split_res: Vec<MemResult> = seq
+            .iter()
+            .zip(&probes)
+            .map(|(&(a, t), &hit)| {
+                if hit {
+                    split_sm.commit_retire(t);
+                    MemResult::Hit(t + cfg().l1_hit_cycles as u64)
+                } else {
+                    MemResult::Miss(split_sm.commit_miss(line_of(a), t, &mut split_shared))
+                }
+            })
+            .collect();
+        assert_eq!(inline_res, split_res);
+        assert_eq!(inline_shared.llc_hits, split_shared.llc_hits);
+        assert_eq!(inline_shared.llc_misses, split_shared.llc_misses);
     }
 
     #[test]

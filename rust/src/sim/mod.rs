@@ -21,6 +21,12 @@
 //! interconnect occupancy are tracked as busy-until resources, which
 //! preserves queueing and conflict serialization without a per-port
 //! event loop (see DESIGN.md §Substitutions).
+//!
+//! Multi-SM stepping comes in two bit-identical backends (see [`gpu`] and
+//! [`config::SimBackend`]): the serial `Reference` path and the two-phase
+//! `Parallel` core, which steps SMs data-parallel against per-SM request
+//! arenas and commits shared-memory effects in canonical `(sm_id, seq)`
+//! order.
 
 pub mod alloc;
 pub mod config;
@@ -35,6 +41,6 @@ pub mod stats;
 pub mod warp;
 pub mod wcb;
 
-pub use config::{HierarchyKind, MemConfig, SimConfig};
+pub use config::{HierarchyKind, MemConfig, SimBackend, SimConfig};
 pub use gpu::{run, run_workload};
 pub use stats::Stats;

@@ -103,4 +103,55 @@ mod tests {
         d.sort_unstable();
         assert_eq!(d, vec![1, 3]);
     }
+
+    #[test]
+    fn reinsert_does_not_refresh_fifo_position() {
+        // Gebhart ISCA'11 RFC replacement is FIFO, not LRU: touching a
+        // resident register must not move it to the back of the queue.
+        let mut c = RfcState::new(2);
+        c.insert(1, false);
+        c.insert(2, false);
+        c.insert(1, false); // re-touch the front entry
+        c.insert(3, false); // still evicts r1 (FIFO front), not r2
+        assert!(!c.contains(1), "r1 must be the FIFO victim despite the re-touch");
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn dirty_merge_survives_eviction_cycle() {
+        // A register written (dirty), evicted, and re-written must be
+        // reported dirty again — per-residency dirtiness, no stale state.
+        let mut c = RfcState::new(1);
+        assert_eq!(c.insert(1, true), None);
+        assert_eq!(c.insert(2, false), Some(1), "dirty victim on eviction");
+        assert_eq!(c.insert(3, false), None, "clean victim not reported");
+        assert_eq!(c.insert(3, true), None, "coalesced write, no eviction");
+        assert_eq!(c.insert(4, false), Some(3), "merged dirty bit written back");
+    }
+
+    #[test]
+    fn capacity_one_thrash() {
+        let mut c = RfcState::new(1);
+        for r in 0..10u16 {
+            c.insert(r, false);
+            assert_eq!(c.len(), 1);
+            assert!(c.contains(r));
+            if r > 0 {
+                assert!(!c.contains(r - 1));
+            }
+        }
+        assert_eq!(c.flush(), Vec::<u16>::new());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn flush_preserves_fifo_report_order() {
+        // Write-back traffic drains in FIFO (allocation) order — the
+        // deactivation path's MRF scheduling depends on a stable order.
+        let mut c = RfcState::new(4);
+        for r in [5u16, 3, 9, 1] {
+            c.insert(r, true);
+        }
+        assert_eq!(c.flush(), vec![5, 3, 9, 1]);
+    }
 }

@@ -131,4 +131,68 @@ mod tests {
         s.activate(0);
         s.activate(0);
     }
+
+    #[test]
+    fn promotion_order_is_activation_order() {
+        // Warps promoted into the pool issue in the order they arrived
+        // (FIFO membership), regardless of warp id.
+        let mut s = TwoLevelScheduler::new(4);
+        for w in [9usize, 2, 7] {
+            s.activate(w);
+        }
+        assert_eq!(s.issue_order().collect::<Vec<_>>(), vec![9, 2, 7]);
+    }
+
+    #[test]
+    fn demotion_then_promotion_takes_the_freed_slot_at_the_back() {
+        // §3.2 swap: a demoted warp's replacement joins at the back of
+        // the rotation, it does not inherit the demoted warp's position.
+        let mut s = TwoLevelScheduler::new(3);
+        for w in 0..3 {
+            s.activate(w);
+        }
+        s.deactivate(1);
+        s.activate(5);
+        assert_eq!(s.issue_order().collect::<Vec<_>>(), vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn cursor_tracks_removal_before_it() {
+        // Removing a warp at an index below the cursor must shift the
+        // cursor so the same *warp* (not the same index) issues next.
+        let mut s = TwoLevelScheduler::new(4);
+        for w in 0..4 {
+            s.activate(w);
+        }
+        s.issued(1); // cursor at index 2 (warp 2 next)
+        s.deactivate(0); // pool [1,2,3], warp 2 now at index 1
+        assert_eq!(s.issue_order().next(), Some(2), "cursor must follow warp 2");
+    }
+
+    #[test]
+    fn issued_last_warp_wraps_cursor() {
+        let mut s = TwoLevelScheduler::new(2);
+        s.activate(4);
+        s.activate(6);
+        s.issued(6); // last position -> wraps to index 0
+        assert_eq!(s.issue_order().next(), Some(4));
+    }
+
+    #[test]
+    fn deactivate_unknown_warp_is_noop() {
+        let mut s = TwoLevelScheduler::new(2);
+        s.activate(1);
+        s.deactivate(99);
+        assert!(s.is_active(1));
+        assert_eq!(s.issue_order().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn empty_pool_issue_order_is_empty() {
+        let mut s = TwoLevelScheduler::new(2);
+        assert_eq!(s.issue_order().count(), 0);
+        s.activate(0);
+        s.deactivate(0);
+        assert_eq!(s.issue_order().count(), 0);
+    }
 }

@@ -1,8 +1,16 @@
 //! One streaming multiprocessor: issue loop, events, warp lifecycle.
+//!
+//! The SM is backend-agnostic: [`SmSim::step`] takes a [`MemPort`] that
+//! either reaches the shared LLC/DRAM inline (the `Reference` backend) or
+//! records shared-level operations into a per-SM arena for the `Parallel`
+//! backend's deterministic commit phase ([`SmSim::commit_mem`]). Every
+//! other structure the SM touches — L1 tags, MSHRs, register banks, the
+//! scheduler, the warps — is SM-local, which is what makes the step phase
+//! safe to run data-parallel across SMs.
 
 use super::config::{HierarchyKind, SimConfig};
 use super::hierarchy::{EntryAction, RegHierarchy};
-use super::memsys::{MemResult, SmMem, SharedMem};
+use super::memsys::{self, MemResult, SharedMem, SmMem};
 use super::scheduler::TwoLevelScheduler;
 use super::stats::Stats;
 use super::warp::{WarpSim, WarpState};
@@ -27,6 +35,34 @@ enum EventKind {
     CollectorFree,
 }
 
+/// How a stepping SM reaches the shared memory levels.
+///
+/// `Inline` is the `Reference` backend: LLC/DRAM state mutates at issue
+/// time, SMs must therefore step serially. `Deferred` is the `Parallel`
+/// backend's phase 1: the SM probes its private L1 immediately (hit/miss
+/// is SM-local) but records every shared-level side effect as a [`MemOp`]
+/// in its request arena, to be replayed by [`SmSim::commit_mem`] in
+/// canonical order after all SMs stepped.
+pub enum MemPort<'m> {
+    Inline(&'m mut SharedMem),
+    Deferred,
+}
+
+/// One recorded shared-level operation (the `Parallel` backend's request
+/// arena entry). Ops replay in exactly the per-SM issue order they were
+/// recorded in, which is the order the `Reference` backend would have
+/// performed them — the determinism argument of the two-phase core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemOp {
+    /// An L1 hit at `at`: replay only the MSHR-retire side effect the
+    /// inline path performs up front.
+    Retire { at: u64 },
+    /// An L1 miss at `at` for `line`: MSHR allocation + LLC/DRAM access.
+    /// `dst` is the load destination awaiting a `MemArrive` reply (`None`
+    /// for posted stores, which never wait).
+    Miss { wid: usize, dst: Option<u16>, line: u64, at: u64 },
+}
+
 pub struct SmSim<'a> {
     pub cfg: &'a SimConfig,
     pub ck: &'a CompiledKernel,
@@ -44,6 +80,9 @@ pub struct SmSim<'a> {
     ready_queue: std::collections::VecDeque<usize>,
     /// Next never-started warp (warps launch in id order).
     next_launch: usize,
+    /// Deferred shared-memory ops recorded this cycle (reusable arena;
+    /// only populated when stepping through [`MemPort::Deferred`]).
+    mem_reqs: Vec<MemOp>,
 }
 
 /// Per-warp load-data salt: distinct warps (and SMs) see distinct memory
@@ -87,6 +126,7 @@ impl<'a> SmSim<'a> {
             order_buf: Vec::new(),
             ready_queue: std::collections::VecDeque::new(),
             next_launch: 0,
+            mem_reqs: Vec::new(),
         }
     }
 
@@ -203,7 +243,13 @@ impl<'a> SmSim<'a> {
 
     /// One simulation cycle. Returns a hint for the next interesting
     /// cycle (global skip-ahead).
-    pub fn step(&mut self, now: u64, shared: &mut SharedMem) -> u64 {
+    ///
+    /// With [`MemPort::Deferred`], any shared-level work is recorded into
+    /// the request arena and the caller must run [`SmSim::commit_mem`]
+    /// before the next step. The returned hint stays sound either way: an
+    /// instruction that records a request counts as issued, so the step
+    /// returns `now + 1` and never needs the (not-yet-known) reply times.
+    pub fn step(&mut self, now: u64, port: &mut MemPort) -> u64 {
         self.drain_events(now);
         self.fill_pool(now);
 
@@ -215,7 +261,7 @@ impl<'a> SmSim<'a> {
             if issued >= self.cfg.issue_width {
                 break;
             }
-            if self.try_issue(wid, now, shared) {
+            if self.try_issue(wid, now, port) {
                 issued += 1;
                 self.sched.issued(wid);
             }
@@ -252,8 +298,75 @@ impl<'a> SmSim<'a> {
         r
     }
 
+    /// Issue-time (reply-independent) bookkeeping of a load L1 miss: the
+    /// scoreboard and liveness effects that do not need the arrival time.
+    fn note_load_miss(&mut self, wid: usize, dst: u16) {
+        self.warps[wid].pending.insert(dst);
+        self.warps[wid].miss_pending.insert(dst);
+        // Returning data is written to the MRF bank (the value must
+        // survive warp deactivation).
+        self.stats.mrf_writes += 1;
+        self.warps[wid].wcb.live.insert(dst);
+    }
+
+    /// Reply-time completion of a load L1 miss (arrival time `t` known):
+    /// record the in-flight writer, account the MRF fill, and schedule the
+    /// dependent-wakeup event. Inline path runs this at issue; the
+    /// deferred path runs it from [`SmSim::commit_mem`].
+    fn complete_load_miss(&mut self, wid: usize, dst: u16, t: u64) {
+        self.warps[wid].inflight.push((dst, t));
+        self.hier.mrf.note_write(t);
+        self.push_event(t, wid, EventKind::MemArrive(dst));
+    }
+
+    /// Phase 2 of the `Parallel` backend: replay this SM's recorded
+    /// shared-level ops against the LLC/DRAM in the exact per-SM issue
+    /// order they were recorded, posting `MemArrive` replies. The driver
+    /// calls this serially in ascending `sm_id` order once per global
+    /// cycle, making the total order the canonical `(sm_id, seq)` — the
+    /// same interleaving the `Reference` backend produces inline, which is
+    /// the bit-exactness argument for the two-phase core.
+    pub fn commit_mem(&mut self, shared: &mut SharedMem) {
+        self.commit_ops(shared, false);
+    }
+
+    /// Deliberately WRONG commit order (each SM's ops replayed back to
+    /// front). Exists only so the backend-equivalence oracle tests can
+    /// prove the oracle trips when the canonical order is violated; never
+    /// called by a real backend.
+    pub fn commit_mem_perturbed(&mut self, shared: &mut SharedMem) {
+        self.commit_ops(shared, true);
+    }
+
+    fn commit_ops(&mut self, shared: &mut SharedMem, reversed: bool) {
+        if self.mem_reqs.is_empty() {
+            return;
+        }
+        let ops = std::mem::take(&mut self.mem_reqs);
+        for i in 0..ops.len() {
+            let op = if reversed { ops[ops.len() - 1 - i] } else { ops[i] };
+            self.commit_one(op, shared);
+        }
+        // Hand the (cleared) arena back for reuse — no per-cycle allocs.
+        let mut arena = ops;
+        arena.clear();
+        self.mem_reqs = arena;
+    }
+
+    fn commit_one(&mut self, op: MemOp, shared: &mut SharedMem) {
+        match op {
+            MemOp::Retire { at } => self.mem.commit_retire(at),
+            MemOp::Miss { wid, dst, line, at } => {
+                let done = self.mem.commit_miss(line, at, shared);
+                if let Some(dst) = dst {
+                    self.complete_load_miss(wid, dst, done);
+                }
+            }
+        }
+    }
+
     /// Attempt to issue one instruction from warp `wid`.
-    fn try_issue(&mut self, wid: usize, now: u64, shared: &mut SharedMem) -> bool {
+    fn try_issue(&mut self, wid: usize, now: u64, port: &mut MemPort) -> bool {
         if !self.warps[wid].issuable(now) {
             return false;
         }
@@ -332,23 +445,38 @@ impl<'a> SmSim<'a> {
         let done = match inst.op.unit() {
             ExecUnit::MemGlobal if is_load => {
                 let addr = info.mem_addr.unwrap_or(0);
-                match self.access_global(addr, ready, shared) {
-                    MemResult::Hit(t) => t,
-                    MemResult::Miss(t) => {
-                        // The warp keeps issuing independent instructions
-                        // (MLP); it is swapped out only when a dependent
-                        // instruction blocks on this register.
-                        let dst = inst.def().expect("loads have destinations");
-                        self.warps[wid].pending.insert(dst);
-                        self.warps[wid].miss_pending.insert(dst);
-                        self.warps[wid].inflight.push((dst, t));
-                        // Returning data is written to the MRF bank (the
-                        // value must survive warp deactivation).
-                        self.hier.mrf.note_write(t);
-                        self.stats.mrf_writes += 1;
-                        self.warps[wid].wcb.live.insert(dst);
-                        self.push_event(t, wid, EventKind::MemArrive(dst));
-                        return true;
+                match port {
+                    MemPort::Inline(shared) => match self.access_global(addr, ready, shared) {
+                        MemResult::Hit(t) => t,
+                        MemResult::Miss(t) => {
+                            // The warp keeps issuing independent
+                            // instructions (MLP); it is swapped out only
+                            // when a dependent instruction blocks on this
+                            // register.
+                            let dst = inst.def().expect("loads have destinations");
+                            self.note_load_miss(wid, dst);
+                            self.complete_load_miss(wid, dst, t);
+                            return true;
+                        }
+                    },
+                    MemPort::Deferred => {
+                        let line = memsys::line_of(addr);
+                        if self.mem.probe_l1(line) {
+                            self.stats.l1_hits += 1;
+                            self.mem_reqs.push(MemOp::Retire { at: ready });
+                            ready + self.cfg.mem.l1_hit_cycles as u64
+                        } else {
+                            self.stats.l1_misses += 1;
+                            let dst = inst.def().expect("loads have destinations");
+                            self.note_load_miss(wid, dst);
+                            self.mem_reqs.push(MemOp::Miss {
+                                wid,
+                                dst: Some(dst),
+                                line,
+                                at: ready,
+                            });
+                            return true;
+                        }
                     }
                 }
             }
@@ -356,7 +484,21 @@ impl<'a> SmSim<'a> {
                 // Store: posted write; consumes memory bandwidth but the
                 // warp does not wait (and never deactivates).
                 let addr = info.mem_addr.unwrap_or(0);
-                let _ = self.access_global(addr, ready, shared);
+                match port {
+                    MemPort::Inline(shared) => {
+                        let _ = self.access_global(addr, ready, shared);
+                    }
+                    MemPort::Deferred => {
+                        let line = memsys::line_of(addr);
+                        if self.mem.probe_l1(line) {
+                            self.stats.l1_hits += 1;
+                            self.mem_reqs.push(MemOp::Retire { at: ready });
+                        } else {
+                            self.stats.l1_misses += 1;
+                            self.mem_reqs.push(MemOp::Miss { wid, dst: None, line, at: ready });
+                        }
+                    }
+                }
                 ready + 1
             }
             ExecUnit::MemShared => self.mem.access_shared(ready),
@@ -418,12 +560,48 @@ L1:
         let mut sm = SmSim::new(&cfg, &ck, 8, 0);
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut shared);
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
             now = hint.max(now + 1).min(1_000_000);
         }
         let mut st = sm.stats.clone();
         st.cycles = now;
         st
+    }
+
+    fn run_one_deferred(kind: HierarchyKind) -> Stats {
+        let k = parser::parse(KSRC).unwrap();
+        let opts = CompileOptions {
+            mode: kind.subgraph_mode(),
+            ..CompileOptions::ltrf(16)
+        };
+        let ck = compile(&k, opts);
+        let cfg = SimConfig::with_hierarchy(kind);
+        let mut shared = SharedMem::new(cfg.mem);
+        let mut sm = SmSim::new(&cfg, &ck, 8, 0);
+        let mut now = 0;
+        while !sm.done() && now < 1_000_000 {
+            let hint = sm.step(now, &mut MemPort::Deferred);
+            sm.commit_mem(&mut shared);
+            now = hint.max(now + 1).min(1_000_000);
+        }
+        let mut st = sm.stats.clone();
+        st.cycles = now;
+        st
+    }
+
+    /// The deferred port + per-cycle commit must reproduce the inline
+    /// port bit-for-bit on a single SM (the two-phase core's base case).
+    #[test]
+    fn deferred_port_matches_inline_port() {
+        for kind in [
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Shrf,
+            HierarchyKind::Ltrf { plus: false },
+            HierarchyKind::Ltrf { plus: true },
+        ] {
+            assert_eq!(run_one(kind), run_one_deferred(kind), "{}", kind.name());
+        }
     }
 
     #[test]

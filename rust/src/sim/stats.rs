@@ -49,6 +49,13 @@ pub struct Stats {
     pub stall_scoreboard: u64,
     pub stall_collectors: u64,
     pub stall_no_ready_warp: u64,
+
+    /// 1 when the run was truncated by `SimConfig::max_cycles` before all
+    /// warps finished (summed across merged runs). A capped run must never
+    /// masquerade as a converged result: tier-1 workload tests and the
+    /// scenario oracles assert this is zero, and the golden snapshot
+    /// carries it so truncation shows up as keyed drift.
+    pub hit_cycle_cap: u64,
 }
 
 impl Stats {
@@ -111,6 +118,7 @@ impl Stats {
         self.stall_scoreboard += o.stall_scoreboard;
         self.stall_collectors += o.stall_collectors;
         self.stall_no_ready_warp += o.stall_no_ready_warp;
+        self.hit_cycle_cap += o.hit_cycle_cap;
     }
 }
 
@@ -161,6 +169,14 @@ mod tests {
         assert_eq!(a.l1_misses, 7);
         assert_eq!(a.llc_hits, 2);
         assert_eq!(a.llc_misses, 5);
+    }
+
+    #[test]
+    fn merge_sums_cycle_cap_flags() {
+        let mut a = Stats { hit_cycle_cap: 1, ..Default::default() };
+        let b = Stats { hit_cycle_cap: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.hit_cycle_cap, 2);
     }
 
     #[test]

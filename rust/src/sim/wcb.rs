@@ -130,4 +130,65 @@ mod tests {
         wcb.release(5);
         assert!(!wcb.dirty.contains(5), "release clears dirty");
     }
+
+    #[test]
+    fn release_of_uncached_register_is_noop() {
+        let mut wcb = WarpControlBlock::new(4);
+        wcb.allocate(1);
+        wcb.release(200); // never cached
+        assert_eq!(wcb.resident(), 1);
+        assert_eq!(wcb.aau.available(), 3);
+        // Double release is also safe (no bank double-free).
+        wcb.release(1);
+        wcb.release(1);
+        assert_eq!(wcb.aau.available(), 4);
+    }
+
+    #[test]
+    fn release_preserves_liveness_bits() {
+        // Liveness is a warp-level property (LTRF+ §3.2), not a residency
+        // property: evicting a register must not mark it dead.
+        let mut wcb = WarpControlBlock::new(4);
+        wcb.allocate(7);
+        wcb.live.insert(7);
+        wcb.release(7);
+        assert!(wcb.live.contains(7), "eviction must not kill the value");
+        assert!(!wcb.valid.contains(7));
+    }
+
+    #[test]
+    fn banks_recycle_fifo_after_release_all() {
+        // The AAU hands banks back in free order: a full release followed
+        // by re-allocation walks the banks in the order they were freed
+        // (deterministic placement — renumbering depends on it).
+        let mut wcb = WarpControlBlock::new(3);
+        let b0 = wcb.allocate(10);
+        let b1 = wcb.allocate(11);
+        let b2 = wcb.allocate(12);
+        wcb.release_all();
+        // release_all frees in ascending register order (valid.iter()).
+        assert_eq!(wcb.allocate(20), b0);
+        assert_eq!(wcb.allocate(21), b1);
+        assert_eq!(wcb.allocate(22), b2);
+    }
+
+    #[test]
+    fn interval_eviction_pattern_coalesces() {
+        // Allocate-evict-reallocate churn at partition capacity: the
+        // address table must stay a bijection between resident registers
+        // and banks throughout (the §5.1 RF$ invariant).
+        let mut wcb = WarpControlBlock::new(2);
+        for round in 0..10u16 {
+            let a = round * 2;
+            let b = round * 2 + 1;
+            wcb.allocate(a);
+            wcb.allocate(b);
+            let (ba, bb) = (wcb.bank_of(a).unwrap(), wcb.bank_of(b).unwrap());
+            assert_ne!(ba, bb, "round {round}: distinct banks");
+            assert_eq!(wcb.resident(), 2);
+            wcb.release(a);
+            wcb.release(b);
+            assert_eq!(wcb.aau.available(), 2, "round {round}: all banks back");
+        }
+    }
 }

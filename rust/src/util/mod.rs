@@ -7,6 +7,8 @@
 pub mod bitset;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 pub use bitset::RegSet;
 pub use rng::Xoshiro256;
+pub use sync::SpinBarrier;

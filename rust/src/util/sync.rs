@@ -1,0 +1,92 @@
+//! Lightweight synchronization primitives for the two-phase simulator
+//! core.
+//!
+//! The `Parallel` backend's step phase is a fork-join over SMs *every
+//! simulated cycle*; at that granularity `std::sync::Barrier`'s
+//! mutex/condvar round trips would swamp the step work, so the driver
+//! uses a spinning sense-reversal barrier: arrival is one `fetch_add`,
+//! release is one generation bump, and waiters spin (yielding after a
+//! short burst so oversubscribed hosts still make progress).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A reusable spinning barrier for a fixed set of participants.
+///
+/// All atomics are `SeqCst`: the barrier is the only happens-before edge
+/// between the parallel step phase and the serial commit phase, so we buy
+/// the strongest ordering — its cost is irrelevant at two waits per
+/// simulated cycle.
+pub struct SpinBarrier {
+    parties: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0, "a barrier needs at least one participant");
+        SpinBarrier { parties, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    /// Block (spin) until all `parties` participants have arrived. The
+    /// last arriver resets the barrier for the next round.
+    pub fn wait(&self) {
+        let gen = self.generation.load(Ordering::SeqCst);
+        let arrived = self.count.fetch_add(1, Ordering::SeqCst) + 1;
+        if arrived == self.parties {
+            self.count.store(0, Ordering::SeqCst);
+            self.generation.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::SeqCst) == gen {
+            spins = spins.wrapping_add(1);
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn single_party_never_blocks() {
+        let b = SpinBarrier::new(1);
+        for _ in 0..3 {
+            b.wait();
+        }
+    }
+
+    #[test]
+    fn rounds_are_totally_ordered() {
+        // 4 threads × many rounds: each round's shared counter bump must
+        // be visible to every thread in the next round (the HB edge the
+        // simulator's commit phase depends on).
+        const THREADS: usize = 4;
+        const ROUNDS: u64 = 200;
+        let barrier = SpinBarrier::new(THREADS);
+        let shared = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let barrier = &barrier;
+                let shared = &shared;
+                s.spawn(move || {
+                    for round in 0..ROUNDS {
+                        if t == 0 {
+                            shared.store(round + 1, Ordering::SeqCst);
+                        }
+                        barrier.wait();
+                        assert_eq!(shared.load(Ordering::SeqCst), round + 1);
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+    }
+}

@@ -4,7 +4,9 @@
 
 mod bench_util;
 use bench_util::bench;
-use ltrf::compiler::{coloring, icg, intervals, merge, renumber, BankMap, CompileOptions};
+use ltrf::compiler::{
+    coloring, icg, intervals, merge, renumber, BankMap, CompileOptions, PassManager,
+};
 use ltrf::workloads::{gen, suite};
 
 fn main() {
@@ -54,6 +56,33 @@ fn main() {
         }
         n
     });
+
+    // The pass manager's sweep shape: every kernel compiled as LTRF,
+    // LTRF_conf, and a second bank map — cold recomputes everything,
+    // warm shares the whole DAG through the analysis cache.
+    let sweep = |mgr: &PassManager| {
+        let mut n = 0u64;
+        for k in &kernels {
+            for opts in [
+                CompileOptions::ltrf(16),
+                CompileOptions::ltrf_conf(16),
+                CompileOptions { bank_map: BankMap::Block, ..CompileOptions::ltrf_conf(16) },
+            ] {
+                let ck = mgr.compile(k, opts).expect("valid options");
+                n += ck.intervals.intervals.len() as u64;
+            }
+        }
+        n
+    };
+
+    bench("pass-manager sweep, cold cache, suite", 10, || {
+        let mgr = PassManager::new();
+        sweep(&mgr)
+    });
+
+    let warm = PassManager::new();
+    sweep(&warm);
+    bench("pass-manager sweep, warm cache, suite", 10, || sweep(&warm));
 
     bench("bank-conflict histogram, suite", 50, || {
         let mut n = 0u64;

@@ -1,7 +1,7 @@
 //! Simulator-throughput trajectory: the measurement core behind
 //! `benches/sim_throughput.rs` and the `ltrf bench --json` CLI path.
 //!
-//! Two families of entries:
+//! Three families of entries:
 //!
 //! * **hot-loop throughput** — simulated-cycles/sec and
 //!   warp-instructions/sec of `gpu::run` on a single hot point, per
@@ -9,18 +9,27 @@
 //! * **fig14-matrix wall time** — end-to-end wall seconds to simulate the
 //!   Fig. 14 comparison matrix (workloads × BL/RFC/LTRF/LTRF_conf on the
 //!   8×-capacity configs #6/#7) at a multi-SM configuration, per backend
-//!   and step-phase thread count.
+//!   and step-phase thread count;
+//! * **compile throughput** — wall seconds to compile the fig14 workload
+//!   × design-point option matrix through the incremental pass manager,
+//!   cold (fresh analysis cache per iteration) vs warm (fully shared
+//!   cache) — the trajectory of the PR-4 pass-manager refactor.
 //!
-//! Every comparison first asserts the backends' `Stats` are bit-identical
-//! on the measured points — a speedup over a diverging simulator is not a
-//! speedup — then reports machine-readable JSON (`BENCH_sim.json` at the
-//! repo root) so CI can track the trajectory PR over PR.
+//! Every comparison first asserts the variants' outputs are bit-identical
+//! on the measured points — a speedup over a diverging simulator (or a
+//! miscaching compiler) is not a speedup — then reports machine-readable
+//! JSON (`BENCH_sim.json` at the repo root) so CI can track the
+//! trajectory PR over PR.
 
+use crate::compiler::{CompileOptions, PassManager};
+use crate::coordinator::engine::{point_setup, CfgTweaks};
 use crate::coordinator::experiments::comparison_points;
+use crate::ir::Kernel;
 use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
 use crate::timing::{design_points, Tech};
 use crate::workloads::{suite, WorkloadSpec};
 use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Bench knobs (`ltrf bench` flags).
@@ -70,12 +79,35 @@ impl BenchEntry {
     }
 }
 
+/// One measured compile-throughput configuration (`mode` is `"cold"` —
+/// fresh analysis cache each iteration — or `"warm"` — fully shared).
+#[derive(Clone, Debug)]
+pub struct CompileBenchEntry {
+    pub name: String,
+    pub mode: &'static str,
+    /// Mean wall seconds per iteration (one iteration compiles the whole
+    /// matrix once).
+    pub wall_seconds: f64,
+    /// Compiles per iteration.
+    pub compiles: u64,
+    /// Analysis-cache hits/misses booked during one iteration.
+    pub analysis_hits: u64,
+    pub analysis_misses: u64,
+}
+
+impl CompileBenchEntry {
+    pub fn compiles_per_second(&self) -> f64 {
+        self.compiles as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
 /// The full trajectory report.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
     pub quick: bool,
     pub sim_threads: usize,
     pub entries: Vec<BenchEntry>,
+    pub compile_entries: Vec<CompileBenchEntry>,
 }
 
 impl BenchReport {
@@ -94,12 +126,25 @@ impl BenchReport {
         Some(reference.wall_seconds / parallel.wall_seconds.max(1e-12))
     }
 
+    /// Compile-entry lookup by mode (`"cold"` / `"warm"`).
+    pub fn compile_entry(&self, mode: &str) -> Option<&CompileBenchEntry> {
+        self.compile_entries.iter().find(|e| e.mode == mode)
+    }
+
+    /// Warm-cache compile speedup over cold (the pass-manager headline:
+    /// how much a fully shared analysis cache saves on recompiles).
+    pub fn compile_warm_speedup(&self) -> Option<f64> {
+        let cold = self.compile_entry("cold")?;
+        let warm = self.compile_entry("warm")?;
+        Some(cold.wall_seconds / warm.wall_seconds.max(1e-12))
+    }
+
     /// Serialize as stable, machine-readable JSON (no external deps; the
     /// schema is versioned so future PRs can extend it additively).
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v1\",");
+        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v2\",");
         let _ = writeln!(out, "  \"quick\": {},", self.quick);
         let _ = writeln!(out, "  \"sim_threads\": {},", self.sim_threads);
         let _ = writeln!(
@@ -109,6 +154,9 @@ impl BenchReport {
         );
         if let Some(s) = self.fig14_speedup() {
             let _ = writeln!(out, "  \"fig14_speedup_parallel_over_reference\": {:.4},", s);
+        }
+        if let Some(s) = self.compile_warm_speedup() {
+            let _ = writeln!(out, "  \"compile_warm_speedup\": {:.4},", s);
         }
         out.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
@@ -126,6 +174,25 @@ impl BenchReport {
                 e.instructions,
                 e.cycles_per_second(),
                 e.winst_per_second(),
+                comma
+            );
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"compile\": [\n");
+        for (i, e) in self.compile_entries.iter().enumerate() {
+            let comma = if i + 1 == self.compile_entries.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"mode\": \"{}\", \"wall_seconds\": {:.6}, \
+                 \"compiles\": {}, \"analysis_hits\": {}, \"analysis_misses\": {}, \
+                 \"compiles_per_second\": {:.1}}}{}",
+                e.name,
+                e.mode,
+                e.wall_seconds,
+                e.compiles,
+                e.analysis_hits,
+                e.analysis_misses,
+                e.compiles_per_second(),
                 comma
             );
         }
@@ -260,11 +327,108 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
     }
 }
 
+/// The fig14 workload × design-point compile matrix (same coverage as
+/// [`fig14_points`], without the simulator configs): what the
+/// `compile_throughput` family measures.
+fn compile_matrix(opts: &BenchOptions) -> Vec<(Arc<Kernel>, CompileOptions)> {
+    // Build each workload kernel once; points share it by Arc.
+    let kernels: Vec<Arc<Kernel>> =
+        workloads(opts).iter().map(|s| Arc::new(crate::workloads::gen::build(s))).collect();
+    let mut pts = Vec::new();
+    for (_, design, _) in design_points() {
+        if design.tech == Tech::HpSram {
+            continue;
+        }
+        if opts.quick && design.tech != Tech::Dwm {
+            continue;
+        }
+        let factor = design.latency();
+        for kernel in &kernels {
+            for (_, dut) in comparison_points(design.warp_registers()) {
+                let (_cfg, copts) = point_setup(&dut, factor, CfgTweaks::NONE);
+                pts.push((kernel.clone(), copts));
+            }
+        }
+    }
+    pts
+}
+
+/// Measure the `compile_throughput` family: cold (fresh pass manager per
+/// iteration) vs warm (fully shared analysis cache). Gated on warm
+/// results being bit-identical to cold — a fast miscompile is not a
+/// speedup.
+fn measure_compile_family(report: &mut BenchReport, opts: &BenchOptions) {
+    let pts = compile_matrix(opts);
+    let iters = opts.iters.max(1);
+
+    // Equivalence gate (untimed): the shared-cache (warm) compile of every
+    // point must be bit-identical to an isolated fresh-manager compile of
+    // the same point — an independent baseline, so a cache-keying bug
+    // cannot vouch for itself by returning the same wrong entry twice.
+    let gate = PassManager::new();
+    let compile_all = |mgr: &PassManager| -> Vec<crate::compiler::CompiledKernel> {
+        pts.iter()
+            .map(|(k, o)| mgr.compile(k, *o).expect("bench compile options are valid"))
+            .collect()
+    };
+    let _ = compile_all(&gate); // populate the shared cache
+    let warm_out = compile_all(&gate); // every point served via the cache
+    for (i, ((k, o), b)) in pts.iter().zip(&warm_out).enumerate() {
+        let isolated = PassManager::new().compile(k, *o).expect("bench compile options are valid");
+        assert_eq!(&isolated, b, "warm-cache compile diverges at point {i} ({o:?})");
+    }
+
+    // Cold: a fresh analysis cache every iteration (intra-matrix sharing
+    // still applies — that is the sweep-shaped workload, by design).
+    let mut cold_hits = 0;
+    let mut cold_misses = 0;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mgr = PassManager::new();
+        let _ = compile_all(&mgr);
+        cold_hits = mgr.hits();
+        cold_misses = mgr.misses();
+    }
+    let cold_wall = t0.elapsed().as_secs_f64() / iters as f64;
+    report.compile_entries.push(CompileBenchEntry {
+        name: "compile_throughput".into(),
+        mode: "cold",
+        wall_seconds: cold_wall,
+        compiles: pts.len() as u64,
+        analysis_hits: cold_hits,
+        analysis_misses: cold_misses,
+    });
+
+    // Warm: one pre-warmed manager; every timed compile is served from
+    // the shared cache.
+    let mgr = PassManager::new();
+    let _ = compile_all(&mgr);
+    let (h0, m0) = (mgr.hits(), mgr.misses());
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = compile_all(&mgr);
+    }
+    let warm_wall = t0.elapsed().as_secs_f64() / iters as f64;
+    report.compile_entries.push(CompileBenchEntry {
+        name: "compile_throughput".into(),
+        mode: "warm",
+        wall_seconds: warm_wall,
+        compiles: pts.len() as u64,
+        analysis_hits: (mgr.hits() - h0) / iters as u64,
+        analysis_misses: (mgr.misses() - m0) / iters as u64,
+    });
+}
+
 /// Run the full trajectory measurement.
 pub fn run_bench(opts: &BenchOptions) -> BenchReport {
-    let mut report =
-        BenchReport { quick: opts.quick, sim_threads: opts.sim_threads, entries: Vec::new() };
+    let mut report = BenchReport {
+        quick: opts.quick,
+        sim_threads: opts.sim_threads,
+        entries: Vec::new(),
+        compile_entries: Vec::new(),
+    };
     let num_sms = 8;
+    measure_compile_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
     measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
     measure_family(&mut report, "fig14_matrix", &fig14_points(opts, num_sms), opts);
@@ -277,7 +441,12 @@ mod tests {
 
     #[test]
     fn json_shape_and_lookup() {
-        let mut r = BenchReport { quick: true, sim_threads: 4, entries: Vec::new() };
+        let mut r = BenchReport {
+            quick: true,
+            sim_threads: 4,
+            entries: Vec::new(),
+            compile_entries: Vec::new(),
+        };
         r.entries.push(BenchEntry {
             name: "fig14_matrix".into(),
             backend: "reference",
@@ -294,15 +463,58 @@ mod tests {
             simulated_cycles: 1000,
             instructions: 500,
         });
+        r.compile_entries.push(CompileBenchEntry {
+            name: "compile_throughput".into(),
+            mode: "cold",
+            wall_seconds: 0.4,
+            compiles: 40,
+            analysis_hits: 10,
+            analysis_misses: 90,
+        });
+        r.compile_entries.push(CompileBenchEntry {
+            name: "compile_throughput".into(),
+            mode: "warm",
+            wall_seconds: 0.1,
+            compiles: 40,
+            analysis_hits: 100,
+            analysis_misses: 0,
+        });
         let speedup = r.fig14_speedup().expect("both entries present");
         assert!((speedup - 2.0).abs() < 1e-9);
+        let cspeed = r.compile_warm_speedup().expect("both compile entries present");
+        assert!((cspeed - 4.0).abs() < 1e-9);
         let json = r.to_json();
-        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v1\""));
+        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v2\""));
         assert!(json.contains("\"fig14_speedup_parallel_over_reference\": 2.0000"));
+        assert!(json.contains("\"compile_warm_speedup\": 4.0000"));
         assert!(json.contains("\"cycles_per_second\": 500.0"));
+        assert!(json.contains("\"mode\": \"warm\""));
+        assert!(json.contains("\"analysis_misses\": 90"));
         assert!(json.ends_with("]\n}\n"));
         assert_eq!(r.entry("fig14_matrix", "reference", 1).unwrap().instructions, 500);
         assert!(r.entry("fig14_matrix", "reference", 9).is_none());
+        assert_eq!(r.compile_entry("cold").unwrap().compiles, 40);
+        assert!(r.compile_entry("lukewarm").is_none());
+    }
+
+    #[test]
+    fn compile_family_quick_mode_measures_and_gates() {
+        let opts = BenchOptions::quick();
+        let mut r = BenchReport {
+            quick: true,
+            sim_threads: 1,
+            entries: Vec::new(),
+            compile_entries: Vec::new(),
+        };
+        measure_compile_family(&mut r, &opts);
+        assert_eq!(r.compile_entries.len(), 2);
+        let cold = r.compile_entry("cold").unwrap();
+        let warm = r.compile_entry("warm").unwrap();
+        assert!(cold.compiles > 0);
+        assert_eq!(cold.compiles, warm.compiles);
+        assert!(cold.analysis_misses > 0, "cold iteration computes passes");
+        assert_eq!(warm.analysis_misses, 0, "warm iteration must be all hits");
+        assert!(warm.analysis_hits > 0);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use super::icg::Icg;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Coloring {
     /// Color per register id (`None` only for ids that are not ICG nodes,
     /// i.e. registers appearing in no working set).
@@ -178,6 +178,26 @@ mod tests {
         assert_eq!(usage.iter().sum::<usize>(), 32);
         assert_eq!(*usage.iter().max().unwrap(), 2, "balanced: max 2 per color");
         assert_eq!(c.forced, 16);
+    }
+
+    #[test]
+    fn k_below_clique_lower_bound_forces_but_completes() {
+        // An 8-clique needs 8 colors; k=4 is below the ICG clique lower
+        // bound. Chaitin must still terminate with every node colored,
+        // forcing at least (8 - 4) nodes and keeping the forced colors
+        // balanced (2 nodes per color — the §4.2 no-spill guarantee).
+        let mut edges = Vec::new();
+        for a in 0..8u16 {
+            for b in (a + 1)..8 {
+                edges.push((a, b));
+            }
+        }
+        let g = graph(&edges, 8);
+        let c = chaitin(&g, 4);
+        assert_eq!(c.color.iter().flatten().count(), 8, "every node colored");
+        assert!(c.forced >= 4, "at least clique - k nodes must be forced, got {}", c.forced);
+        assert!(!c.is_proper(&g));
+        assert_eq!(c.usage(), vec![2, 2, 2, 2], "forced colors stay balanced");
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::util::RegSet;
 use std::collections::VecDeque;
 
 /// One register-interval: a set of blocks plus its register working-set.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RegisterInterval {
     pub id: usize,
     /// Header block — the unique control-flow entry; the prefetch
@@ -34,7 +34,7 @@ pub struct RegisterInterval {
 }
 
 /// Result of interval formation over a kernel.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct IntervalAnalysis {
     pub intervals: Vec<RegisterInterval>,
     /// Block id → interval id.

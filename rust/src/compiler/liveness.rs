@@ -8,7 +8,7 @@ use crate::ir::{Inst, Kernel};
 use crate::util::RegSet;
 
 /// Per-block liveness facts.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Liveness {
     /// Registers live at block entry.
     pub live_in: Vec<RegSet>,

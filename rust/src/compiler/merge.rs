@@ -200,4 +200,74 @@ mod tests {
             assert!(ia2.intervals.len() <= before);
         });
     }
+
+    /// Block partition of an analysis (sorted member lists, order-free),
+    /// for comparing two fixpoints modulo interval renumbering.
+    fn partition(ia: &IntervalAnalysis) -> Vec<Vec<usize>> {
+        let mut p: Vec<Vec<usize>> = ia
+            .intervals
+            .iter()
+            .map(|iv| {
+                let mut b = iv.blocks.clone();
+                b.sort_unstable();
+                b
+            })
+            .collect();
+        p.sort();
+        p
+    }
+
+    /// Satellite coverage over the scenario generator's loop-heavy shapes:
+    /// after *every* `reduce_once` application the single-entry invariant
+    /// holds (via `validate`) and the working-set bound re-validates; at
+    /// the fixpoint another application is idempotent (identical block
+    /// partition and headers, not just an equal interval count).
+    #[test]
+    fn prop_reduce_invariants_on_loop_heavy_shapes() {
+        use crate::scenario::generator::{build_shape, Shape};
+        use crate::util::Xoshiro256;
+        for (si, shape) in [Shape::DeepNest, Shape::PressureRamp, Shape::RandomCfg]
+            .into_iter()
+            .enumerate()
+        {
+            for seed in 0..6u64 {
+                let mut rng = Xoshiro256::seeded(0xFEED_0000 + (si as u64) * 1000 + seed);
+                let k0 = build_shape(shape, &mut rng);
+                for n in [8usize, 16, 32] {
+                    let mut k = k0.clone();
+                    let mut cur = form_intervals(&mut k, n);
+                    loop {
+                        let next = reduce_once(&k, &cur);
+                        assert_eq!(next.validate(&k), Ok(()), "{shape:?} seed {seed} N={n}");
+                        for iv in &next.intervals {
+                            assert!(
+                                iv.working_set.len() <= n,
+                                "{shape:?} seed {seed}: working set {} exceeds N={n} post-merge",
+                                iv.working_set.len()
+                            );
+                        }
+                        if next.intervals.len() >= cur.intervals.len() {
+                            // Fixpoint reached: a further application must
+                            // reproduce the exact partition and headers.
+                            let again = reduce_once(&k, &next);
+                            assert_eq!(
+                                partition(&again),
+                                partition(&next),
+                                "{shape:?} seed {seed} N={n}: fixpoint not idempotent"
+                            );
+                            let mut h1: Vec<_> =
+                                next.intervals.iter().map(|iv| iv.header).collect();
+                            let mut h2: Vec<_> =
+                                again.intervals.iter().map(|iv| iv.header).collect();
+                            h1.sort_unstable();
+                            h2.sort_unstable();
+                            assert_eq!(h1, h2, "{shape:?} seed {seed} N={n}: headers drifted");
+                            break;
+                        }
+                        cur = next;
+                    }
+                }
+            }
+        }
+    }
 }

@@ -11,18 +11,26 @@
 //!    coloring with balanced color use, register renumbering.
 //! 5. [`strands`] — SHRF-style strand formation (the §7.6 baseline).
 //!
-//! [`pipeline`] wires these into `compile()`, producing the
-//! [`pipeline::CompiledKernel`] the simulator consumes.
+//! [`passes`] models the pipeline as an explicit DAG of passes over
+//! fingerprinted IR with a shared analysis cache; [`pipeline`] provides
+//! the `compile()` entry point (routed through a pass manager) plus the
+//! legacy single-shot driver the `pass-equivalence` oracle diffs against,
+//! producing the [`pipeline::CompiledKernel`] the simulator consumes.
 
 pub mod coloring;
 pub mod icg;
 pub mod intervals;
 pub mod liveness;
 pub mod merge;
+pub mod passes;
 pub mod pipeline;
 pub mod renumber;
 pub mod strands;
 
 pub use intervals::{IntervalAnalysis, RegisterInterval};
 pub use liveness::Liveness;
-pub use pipeline::{compile, BankMap, CompileOptions, CompiledKernel, SubgraphMode};
+pub use passes::{CompileTrace, PassKey, PassManager, PassTrace};
+pub use pipeline::{
+    compile, try_compile, BankMap, CompileError, CompileOptions, CompiledKernel, SubgraphMode,
+    MIN_REGS_PER_INTERVAL,
+};

@@ -1,0 +1,587 @@
+//! The incremental pass manager — the compile pipeline as an explicit DAG
+//! of passes over fingerprinted IR, with a shared analysis cache.
+//!
+//! The legacy driver ([`super::pipeline::compile_legacy`]) recomputes
+//! liveness, interval formation, merge, ICG, coloring, and renumbering
+//! from scratch for every `(kernel, CompileOptions)` point. But the
+//! evaluation sweeps share most of that work: a BL/RFC/SHRF/LTRF/LTRF_conf
+//! sweep over one kernel shares interval formation and merge between the
+//! renumbered and un-renumbered variants, bank-map ablations share
+//! everything up to the renumber rewrite, and identical final kernels
+//! share liveness/dead-bit analysis regardless of how they were produced.
+//!
+//! [`PassManager`] makes that sharing structural. Every pass result is
+//! memoized under `(Fingerprint, PassKey)` where the fingerprint
+//! ([`crate::ir::fingerprint`]) identifies the exact kernel content the
+//! pass read:
+//!
+//! * passes derived from the *input* kernel (interval formation, merge,
+//!   strand formation, ICG, coloring, renumbering) key on the input
+//!   fingerprint plus every upstream knob that shapes their result — the
+//!   whole chain is deterministic in `(input kernel, knobs)`, so the pair
+//!   is a complete identity;
+//! * analyses of the *final* kernel (liveness, dead-operand bits) key on
+//!   the final kernel's own fingerprint, so two compiles that converge on
+//!   an identical kernel share them, and a kernel-mutating pass (block
+//!   split, renumber rewrite) invalidates exactly the analyses of the
+//!   kernel it replaced — the old entries stay valid for the old
+//!   fingerprint, the new kernel simply never matches them.
+//!
+//! The cache is thread-safe with per-entry `OnceLock`s (the same discipline
+//! as the coordinator's compile cache): one claimant computes, concurrent
+//! claimants of the same entry block only on that entry, distinct entries
+//! compute in parallel.
+//!
+//! Correctness is enforced two ways: the `pass-equivalence` scenario
+//! oracle proves every pass-manager compile (cold *and* warm) is
+//! bit-identical to the legacy single-shot path across the full design ×
+//! latency matrix, and an invalidation check proves a mutated kernel
+//! compiled through a warm cache matches a fresh compile exactly.
+
+use super::coloring::{self, Coloring};
+use super::icg::{self, Icg};
+use super::intervals::{self, IntervalAnalysis};
+use super::liveness::{self, Liveness};
+use super::merge;
+use super::pipeline::{BankMap, CompileError, CompileOptions, CompiledKernel, SubgraphMode};
+use super::renumber::{self, Renumbering};
+use super::strands;
+use crate::ir::{Fingerprint, Kernel};
+use crate::util::RegSet;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Per-instruction dead-operand bit rows (`dead[block][inst]`).
+pub type DeadBits = Vec<Vec<RegSet>>;
+
+// ---------------------------------------------------------------------
+// Pass identities
+// ---------------------------------------------------------------------
+
+/// Cache identity of one pass application. Together with the kernel
+/// fingerprint it fully determines the pass result, so every knob that can
+/// change the output is part of the key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PassKey {
+    /// Algorithm 1 on the input kernel (splits blocks).
+    IntervalForm { max_regs: usize },
+    /// Algorithm 2 to fixpoint over the `IntervalForm` result.
+    MergeReduce { max_regs: usize },
+    /// SHRF strand formation on the input kernel (splits blocks).
+    StrandForm { max_regs: usize },
+    /// Interval Conflict Graph over the final subgraph analysis.
+    IcgBuild { mode: SubgraphMode, max_regs: usize },
+    /// Chaitin coloring of the ICG with `num_banks` colors.
+    Coloring { mode: SubgraphMode, max_regs: usize, num_banks: usize },
+    /// Register renumbering rewrite of the split kernel.
+    Renumber { mode: SubgraphMode, max_regs: usize, num_banks: usize, bank_map: BankMap },
+    /// Backward liveness dataflow on the final kernel.
+    Liveness,
+    /// LTRF+ dead-operand bits on the final kernel.
+    DeadBits,
+}
+
+impl PassKey {
+    pub fn name(self) -> &'static str {
+        match self {
+            PassKey::IntervalForm { .. } => "interval-form",
+            PassKey::MergeReduce { .. } => "merge-reduce",
+            PassKey::StrandForm { .. } => "strand-form",
+            PassKey::IcgBuild { .. } => "icg-build",
+            PassKey::Coloring { .. } => "coloring",
+            PassKey::Renumber { .. } => "renumber",
+            PassKey::Liveness => "liveness",
+            PassKey::DeadBits => "dead-bits",
+        }
+    }
+}
+
+/// The declared pass DAG for an option set: `(pass, direct dependencies)`
+/// in execution order. `prefetch-vectors` is the final emission step (the
+/// per-interval working-set bit-vectors the simulator consumes); it is
+/// derived per compile rather than cached, but it is part of the declared
+/// pipeline shape (`ltrf compile --explain` prints this).
+pub fn dag(options: &CompileOptions) -> Vec<(&'static str, Vec<&'static str>)> {
+    let mut v: Vec<(&'static str, Vec<&'static str>)> = Vec::new();
+    let subgraph = match options.mode {
+        SubgraphMode::RegisterIntervals => {
+            v.push(("interval-form", vec![]));
+            v.push(("merge-reduce", vec!["interval-form"]));
+            "merge-reduce"
+        }
+        SubgraphMode::Strands => {
+            v.push(("strand-form", vec![]));
+            "strand-form"
+        }
+    };
+    if options.renumber {
+        v.push(("icg-build", vec![subgraph]));
+        v.push(("coloring", vec!["icg-build"]));
+        v.push(("renumber", vec![subgraph, "coloring"]));
+        v.push(("prefetch-vectors", vec![subgraph, "renumber"]));
+        v.push(("liveness", vec!["renumber"]));
+    } else {
+        v.push(("prefetch-vectors", vec![subgraph]));
+        v.push(("liveness", vec![subgraph]));
+    }
+    v.push(("dead-bits", vec!["liveness"]));
+    v
+}
+
+// ---------------------------------------------------------------------
+// Cached pass outputs
+// ---------------------------------------------------------------------
+
+/// Output of a kernel-mutating subgraph-formation pass: the (possibly
+/// split) kernel plus the analysis over it.
+#[derive(Clone, Debug)]
+pub struct SubgraphResult {
+    pub kernel: Kernel,
+    pub analysis: IntervalAnalysis,
+}
+
+/// Output of the renumber pass: the rewritten kernel plus the remap.
+#[derive(Clone, Debug)]
+pub struct RenumberResult {
+    pub kernel: Kernel,
+    pub renumbering: Renumbering,
+}
+
+#[derive(Clone)]
+enum PassOutput {
+    Subgraph(Arc<SubgraphResult>),
+    Intervals(Arc<IntervalAnalysis>),
+    Conflicts(Arc<Icg>),
+    Colors(Arc<Coloring>),
+    Renumbered(Arc<RenumberResult>),
+    Live(Arc<Liveness>),
+    Dead(Arc<DeadBits>),
+}
+
+// ---------------------------------------------------------------------
+// Tracing (`ltrf compile --explain`)
+// ---------------------------------------------------------------------
+
+/// One pass application inside a traced compile.
+#[derive(Clone, Debug)]
+pub struct PassTrace {
+    pub pass: PassKey,
+    /// Fingerprint of the kernel the pass keyed on.
+    pub input: Fingerprint,
+    /// Served from the analysis cache (wall time is then the lookup cost).
+    pub cached: bool,
+    pub wall: Duration,
+}
+
+/// Full trace of one compile.
+#[derive(Clone, Debug)]
+pub struct CompileTrace {
+    /// Fingerprint of the input kernel.
+    pub input: Fingerprint,
+    /// Fingerprint of the compiled (split/renumbered) kernel.
+    pub output: Fingerprint,
+    pub passes: Vec<PassTrace>,
+    pub total: Duration,
+}
+
+impl CompileTrace {
+    /// Passes served from the cache.
+    pub fn cache_hits(&self) -> usize {
+        self.passes.iter().filter(|p| p.cached).count()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The manager
+// ---------------------------------------------------------------------
+
+/// Thread-safe pass manager with a shared analysis cache. Cheap to create
+/// (a one-shot compile uses a fresh manager); share one instance to share
+/// analyses across compiles — the coordinator's [`CompileCache`]
+/// (`crate::coordinator::engine`) holds one for the whole run.
+#[derive(Default)]
+pub struct PassManager {
+    entries: Mutex<HashMap<(Fingerprint, PassKey), Arc<OnceLock<PassOutput>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        PassManager::default()
+    }
+
+    /// Cache lookups answered by an existing entry (the entry may still be
+    /// in flight on another thread; the claimant blocks on that entry
+    /// only).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache entries computed (= unique `(fingerprint, pass)` pairs seen).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Unique entries currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn run_pass<T>(
+        &self,
+        fp: Fingerprint,
+        key: PassKey,
+        trace: &mut Vec<PassTrace>,
+        wrap: fn(Arc<T>) -> PassOutput,
+        unwrap: fn(&PassOutput) -> Option<&Arc<T>>,
+        compute: impl FnOnce() -> T,
+    ) -> Arc<T> {
+        let (cell, cached) = {
+            let mut map = self.entries.lock().unwrap();
+            match map.entry((fp, key)) {
+                Entry::Occupied(e) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    (e.get().clone(), true)
+                }
+                Entry::Vacant(v) => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    (v.insert(Arc::new(OnceLock::new())).clone(), false)
+                }
+            }
+        };
+        let t0 = Instant::now();
+        let out = cell.get_or_init(|| wrap(Arc::new(compute())));
+        let result = unwrap(out)
+            .expect("one (fingerprint, PassKey) pair always maps to one output type")
+            .clone();
+        trace.push(PassTrace { pass: key, input: fp, cached, wall: t0.elapsed() });
+        result
+    }
+
+    /// Compile `kernel` under `options`, sharing every cacheable pass with
+    /// previous compiles through this manager. Bit-identical to
+    /// [`super::pipeline::compile_legacy`] (enforced by the
+    /// `pass-equivalence` oracle).
+    pub fn compile(
+        &self,
+        kernel: &Kernel,
+        options: CompileOptions,
+    ) -> Result<CompiledKernel, CompileError> {
+        self.compile_traced(kernel, options).map(|(ck, _)| ck)
+    }
+
+    /// [`PassManager::compile`] plus the per-pass trace.
+    pub fn compile_traced(
+        &self,
+        kernel: &Kernel,
+        options: CompileOptions,
+    ) -> Result<(CompiledKernel, CompileTrace), CompileError> {
+        options.validate()?;
+        let t_start = Instant::now();
+        let mut trace = Vec::new();
+        let fp0 = kernel.fingerprint();
+        let n = options.max_regs_per_interval;
+        let mode = options.mode;
+
+        // Subgraph formation (kernel-mutating: block splits).
+        let (subgraph, ia): (Arc<SubgraphResult>, Arc<IntervalAnalysis>) = match mode {
+            SubgraphMode::RegisterIntervals => {
+                let sg = self.run_pass(
+                    fp0,
+                    PassKey::IntervalForm { max_regs: n },
+                    &mut trace,
+                    PassOutput::Subgraph,
+                    |o| match o {
+                        PassOutput::Subgraph(x) => Some(x),
+                        _ => None,
+                    },
+                    || {
+                        let mut k = kernel.clone();
+                        let analysis = intervals::form_intervals(&mut k, n);
+                        SubgraphResult { kernel: k, analysis }
+                    },
+                );
+                let sg2 = sg.clone();
+                let ia = self.run_pass(
+                    fp0,
+                    PassKey::MergeReduce { max_regs: n },
+                    &mut trace,
+                    PassOutput::Intervals,
+                    |o| match o {
+                        PassOutput::Intervals(x) => Some(x),
+                        _ => None,
+                    },
+                    move || merge::reduce(&sg2.kernel, sg2.analysis.clone()),
+                );
+                (sg, ia)
+            }
+            SubgraphMode::Strands => {
+                let sg = self.run_pass(
+                    fp0,
+                    PassKey::StrandForm { max_regs: n },
+                    &mut trace,
+                    PassOutput::Subgraph,
+                    |o| match o {
+                        PassOutput::Subgraph(x) => Some(x),
+                        _ => None,
+                    },
+                    || {
+                        let mut k = kernel.clone();
+                        let analysis = strands::form_strands(&mut k, n);
+                        SubgraphResult { kernel: k, analysis }
+                    },
+                );
+                let ia = Arc::new(sg.analysis.clone());
+                (sg, ia)
+            }
+        };
+
+        // LTRF_conf: ICG → coloring → renumber rewrite.
+        let (final_kernel, final_ia, renumbering, colors) = if options.renumber {
+            let banks = options.num_banks;
+            let map = options.bank_map;
+            let ia_in = ia.clone();
+            let g = self.run_pass(
+                fp0,
+                PassKey::IcgBuild { mode, max_regs: n },
+                &mut trace,
+                PassOutput::Conflicts,
+                |o| match o {
+                    PassOutput::Conflicts(x) => Some(x),
+                    _ => None,
+                },
+                move || icg::build(&ia_in),
+            );
+            let g_in = g.clone();
+            let col = self.run_pass(
+                fp0,
+                PassKey::Coloring { mode, max_regs: n, num_banks: banks },
+                &mut trace,
+                PassOutput::Colors,
+                |o| match o {
+                    PassOutput::Colors(x) => Some(x),
+                    _ => None,
+                },
+                move || coloring::chaitin(&g_in, banks),
+            );
+            let col_in = col.clone();
+            let sg_in = subgraph.clone();
+            let rn = self.run_pass(
+                fp0,
+                PassKey::Renumber { mode, max_regs: n, num_banks: banks, bank_map: map },
+                &mut trace,
+                PassOutput::Renumbered,
+                |o| match o {
+                    PassOutput::Renumbered(x) => Some(x),
+                    _ => None,
+                },
+                move || {
+                    let mut k2 = sg_in.kernel.clone();
+                    let renumbering = renumber::renumber(&mut k2, &col_in, banks, map);
+                    RenumberResult { kernel: k2, renumbering }
+                },
+            );
+            // Prefetch-vector emission: remap every interval working set
+            // through the renumbering.
+            let mut ia2 = ia.as_ref().clone();
+            for iv in &mut ia2.intervals {
+                iv.working_set = renumber::remap_set(&iv.working_set, &rn.renumbering.remap);
+            }
+            (rn.kernel.clone(), ia2, Some(rn.renumbering.clone()), Some(col.as_ref().clone()))
+        } else {
+            (subgraph.kernel.clone(), ia.as_ref().clone(), None, None)
+        };
+
+        // Final-kernel analyses key on the final kernel's own fingerprint:
+        // shared whenever two compiles converge on an identical kernel,
+        // never consulted for a kernel a mutating pass replaced.
+        let fp_final = final_kernel.fingerprint();
+        let fk = &final_kernel;
+        let lv = self.run_pass(
+            fp_final,
+            PassKey::Liveness,
+            &mut trace,
+            PassOutput::Live,
+            |o| match o {
+                PassOutput::Live(x) => Some(x),
+                _ => None,
+            },
+            || liveness::analyze(fk),
+        );
+        let lv_in = lv.clone();
+        let db = self.run_pass(
+            fp_final,
+            PassKey::DeadBits,
+            &mut trace,
+            PassOutput::Dead,
+            |o| match o {
+                PassOutput::Dead(x) => Some(x),
+                _ => None,
+            },
+            || liveness::dead_operand_bits(fk, &lv_in),
+        );
+
+        let ck = CompiledKernel {
+            kernel: final_kernel,
+            intervals: final_ia,
+            liveness: lv.as_ref().clone(),
+            dead_bits: db.as_ref().clone(),
+            renumbering,
+            coloring: colors,
+            options,
+        };
+        debug_assert_eq!(ck.intervals.validate(&ck.kernel), Ok(()));
+        let trace =
+            CompileTrace { input: fp0, output: fp_final, passes: trace, total: t_start.elapsed() };
+        Ok((ck, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::pipeline::compile_legacy;
+    use crate::ir::parser;
+
+    const KSRC: &str = r#"
+.kernel pm
+  mov r0, #0x1000
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  add r0, r0, #4
+  add r1, r1, #1
+  setp.lt p0, r1, #16
+  @p0 bra L1
+  st.global [r0], r3
+  exit
+"#;
+
+    #[test]
+    fn cold_compile_misses_warm_compile_hits() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        let (cold, t_cold) = mgr.compile_traced(&k, CompileOptions::ltrf_conf(16)).unwrap();
+        assert!(t_cold.passes.iter().all(|p| !p.cached), "fresh manager cannot hit");
+        assert_eq!(t_cold.passes.len(), 7);
+        assert_eq!(mgr.misses(), 7);
+        assert_eq!(t_cold.output, cold.kernel.fingerprint());
+        let (warm, t_warm) = mgr.compile_traced(&k, CompileOptions::ltrf_conf(16)).unwrap();
+        assert!(t_warm.passes.iter().all(|p| p.cached), "identical recompile must fully hit");
+        assert_eq!(t_warm.cache_hits(), 7);
+        assert_eq!(warm, cold, "warm result must be bit-identical");
+    }
+
+    #[test]
+    fn renumbered_and_plain_variants_share_the_subgraph_passes() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        let _ = mgr.compile(&k, CompileOptions::ltrf(16)).unwrap();
+        let misses_after_plain = mgr.misses();
+        let (_, t_conf) = mgr.compile_traced(&k, CompileOptions::ltrf_conf(16)).unwrap();
+        let shared: Vec<_> =
+            t_conf.passes.iter().filter(|p| p.cached).map(|p| p.pass.name()).collect();
+        assert!(shared.contains(&"interval-form"), "shared: {shared:?}");
+        assert!(shared.contains(&"merge-reduce"), "shared: {shared:?}");
+        // ICG/coloring/renumber are conf-only; they must be fresh misses.
+        assert!(mgr.misses() > misses_after_plain);
+    }
+
+    #[test]
+    fn bank_map_variants_share_everything_up_to_renumber() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        let a = CompileOptions::ltrf_conf(16);
+        let b = CompileOptions { bank_map: BankMap::Block, ..a };
+        let _ = mgr.compile(&k, a).unwrap();
+        let (_, t) = mgr.compile_traced(&k, b).unwrap();
+        for p in &t.passes {
+            match p.pass {
+                PassKey::IntervalForm { .. }
+                | PassKey::MergeReduce { .. }
+                | PassKey::IcgBuild { .. }
+                | PassKey::Coloring { .. } => {
+                    assert!(p.cached, "{} must be shared across bank maps", p.pass.name())
+                }
+                PassKey::Renumber { .. } => {
+                    assert!(!p.cached, "renumber depends on the bank map")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_invalidates_no_stale_analysis_survives() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        let opts = CompileOptions::ltrf_conf(16);
+        let _ = mgr.compile(&k, opts).unwrap();
+        let mut mutated = k.clone();
+        mutated.blocks[1].insts[2].imm = Some(8); // add r0, r0, #8
+        assert_ne!(k.fingerprint(), mutated.fingerprint());
+        let via_warm = mgr.compile(&mutated, opts).unwrap();
+        let via_fresh = PassManager::new().compile(&mutated, opts).unwrap();
+        assert_eq!(via_warm, via_fresh, "stale analyses leaked across a kernel mutation");
+        assert_eq!(via_warm, compile_legacy(&mutated, opts));
+    }
+
+    #[test]
+    fn matches_legacy_for_every_variant() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        for opts in [
+            CompileOptions::ltrf(8),
+            CompileOptions::ltrf(16),
+            CompileOptions::ltrf_conf(16),
+            CompileOptions::ltrf_conf(32),
+            CompileOptions::strands(16),
+        ] {
+            let pm = mgr.compile(&k, opts).unwrap();
+            let legacy = compile_legacy(&k, opts);
+            assert_eq!(pm, legacy, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn dag_names_match_trace_names() {
+        let k = parser::parse(KSRC).unwrap();
+        let variants =
+            [CompileOptions::ltrf(16), CompileOptions::ltrf_conf(16), CompileOptions::strands(8)];
+        for opts in variants {
+            let (_, t) = PassManager::new().compile_traced(&k, opts).unwrap();
+            let declared: Vec<&str> = dag(&opts).iter().map(|(n, _)| *n).collect();
+            for p in &t.passes {
+                assert!(
+                    declared.contains(&p.pass.name()),
+                    "trace pass {} missing from dag() for {opts:?}",
+                    p.pass.name()
+                );
+            }
+            // Every declared dependency is itself a declared node.
+            for (node, deps) in dag(&opts) {
+                for d in deps {
+                    assert!(declared.contains(&d), "{node} depends on undeclared {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_options_are_rejected_up_front() {
+        let k = parser::parse(KSRC).unwrap();
+        let mgr = PassManager::new();
+        let bad = CompileOptions { num_banks: 0, ..CompileOptions::default() };
+        assert!(mgr.compile(&k, bad).is_err());
+        assert!(mgr.is_empty(), "a rejected compile must not touch the cache");
+    }
+}

@@ -3,6 +3,14 @@
 //! `register allocation → register-interval formation (pass 1 + pass 2) →
 //! [register renumbering] → prefetch bit-vector emission`, with strand
 //! formation as the SHRF-baseline alternative to interval formation.
+//!
+//! Since the pass-manager refactor, [`compile`]/[`try_compile`] route
+//! through the incremental [`super::passes::PassManager`] (a fresh
+//! manager per call; the coordinator shares one across a whole run). The
+//! original single-shot driver survives as [`compile_legacy`] — the
+//! reference implementation the `pass-equivalence` scenario oracle diffs
+//! every pass-manager compile against, kept until that oracle has soaked
+//! in fuzz + CI.
 
 use super::coloring::{self, Coloring};
 use super::icg;
@@ -12,9 +20,55 @@ use super::merge;
 use super::renumber::{self, Renumbering};
 use super::strands;
 use crate::ir::Kernel;
+use crate::util::bitset::MAX_REGS;
 use crate::util::RegSet;
 
 pub use super::renumber::BankMap;
+
+/// Smallest legal register-interval capacity: one instruction touches up
+/// to 4 registers (3 sources + 1 destination), and `TRAVERSE` cannot split
+/// below instruction granularity.
+pub const MIN_REGS_PER_INTERVAL: usize = 4;
+
+/// Typed rejection of degenerate compiler knobs (instead of a mid-pass
+/// panic or a silent always-conflict compile). Returned by
+/// [`CompileOptions::validate`] / [`try_compile`] /
+/// [`super::passes::PassManager::compile`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompileError {
+    /// `max_regs_per_interval` below [`MIN_REGS_PER_INTERVAL`].
+    IntervalCapacityTooSmall { got: usize, min: usize },
+    /// `num_banks` outside `2..=MAX_REGS`: 0 banks is undefined, 1 bank
+    /// makes every multi-register prefetch conflict by construction, and
+    /// more banks than register ids leaves banks unaddressable.
+    BankCountOutOfRange { got: usize },
+    /// [`BankMap::Block`] needs `MAX_REGS % num_banks == 0`, otherwise the
+    /// top register ids map past the last bank.
+    BlockMapIndivisible { got: usize },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::IntervalCapacityTooSmall { got, min } => write!(
+                f,
+                "max_regs_per_interval = {got} is below the minimum {min} \
+                 (one instruction touches up to {min} registers)"
+            ),
+            CompileError::BankCountOutOfRange { got } => write!(
+                f,
+                "num_banks = {got} is outside 2..={MAX_REGS} \
+                 (0 is undefined, 1 conflicts by construction)"
+            ),
+            CompileError::BlockMapIndivisible { got } => write!(
+                f,
+                "BankMap::Block requires num_banks to divide {MAX_REGS}, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
 
 /// Which prefetch-subgraph formation to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -54,6 +108,24 @@ impl Default for CompileOptions {
 }
 
 impl CompileOptions {
+    /// Reject degenerate knob settings with a typed error (see
+    /// [`CompileError`] for the exact rules).
+    pub fn validate(&self) -> Result<(), CompileError> {
+        if self.max_regs_per_interval < MIN_REGS_PER_INTERVAL {
+            return Err(CompileError::IntervalCapacityTooSmall {
+                got: self.max_regs_per_interval,
+                min: MIN_REGS_PER_INTERVAL,
+            });
+        }
+        if self.num_banks < 2 || self.num_banks > MAX_REGS {
+            return Err(CompileError::BankCountOutOfRange { got: self.num_banks });
+        }
+        if self.bank_map == BankMap::Block && MAX_REGS % self.num_banks != 0 {
+            return Err(CompileError::BlockMapIndivisible { got: self.num_banks });
+        }
+        Ok(())
+    }
+
     pub fn ltrf(n: usize) -> Self {
         CompileOptions { max_regs_per_interval: n, ..Default::default() }
     }
@@ -72,7 +144,9 @@ impl CompileOptions {
 }
 
 /// Everything the simulator needs to run a kernel under LTRF.
-#[derive(Clone, Debug)]
+/// `PartialEq` so the `pass-equivalence` oracle can diff the pass-manager
+/// and legacy compile paths field-for-field.
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompiledKernel {
     /// The (possibly split and renumbered) kernel.
     pub kernel: Kernel,
@@ -106,7 +180,9 @@ impl CompiledKernel {
     }
 
     /// Histogram of main-register-file bank conflicts across prefetch
-    /// bit-vectors (Fig. 6 / Fig. 16).
+    /// bit-vectors (Fig. 6 / Fig. 16). Single source of truth: this is a
+    /// thin view over the generic [`renumber::conflict_histogram`] (pinned
+    /// equal by `conflict_histogram_single_source_of_truth`).
     pub fn conflict_histogram(&self) -> Vec<usize> {
         renumber::conflict_histogram(
             self.intervals.intervals.iter().map(|i| &i.working_set),
@@ -137,8 +213,32 @@ impl CompiledKernel {
     }
 }
 
-/// Run the full pipeline on (a clone of) `kernel`.
+/// Run the full pipeline on (a clone of) `kernel` through the incremental
+/// pass manager (a fresh analysis cache per call — share a
+/// [`super::passes::PassManager`] to share analyses across compiles).
+///
+/// Panics with the [`CompileError`] message on degenerate options; use
+/// [`try_compile`] where the caller wants the typed error.
 pub fn compile(kernel: &Kernel, options: CompileOptions) -> CompiledKernel {
+    try_compile(kernel, options)
+        .unwrap_or_else(|e| panic!("compile({}): {e}", kernel.name))
+}
+
+/// Fallible [`compile`]: degenerate knobs ([`CompileOptions::validate`])
+/// come back as a typed [`CompileError`] instead of a panic.
+pub fn try_compile(
+    kernel: &Kernel,
+    options: CompileOptions,
+) -> Result<CompiledKernel, CompileError> {
+    super::passes::PassManager::new().compile(kernel, options)
+}
+
+/// The original single-shot pipeline driver, kept verbatim as the
+/// reference implementation for the `pass-equivalence` scenario oracle
+/// (and the soak period's escape hatch). Production paths — the
+/// experiment engine, the simulator, the CLI — all compile through the
+/// pass manager; only the oracle and tests should call this.
+pub fn compile_legacy(kernel: &Kernel, options: CompileOptions) -> CompiledKernel {
     let mut k = kernel.clone();
 
     // Prefetch-subgraph formation (splits blocks).
@@ -237,5 +337,83 @@ L1:
         let o = CompileOptions::default();
         assert_eq!(o.max_regs_per_interval, 16);
         assert_eq!(o.num_banks, 16);
+        assert_eq!(o.validate(), Ok(()));
+    }
+
+    #[test]
+    fn compile_matches_legacy_single_shot() {
+        let k = parser::parse(KSRC).unwrap();
+        for opts in [
+            CompileOptions::ltrf(8),
+            CompileOptions::ltrf_conf(16),
+            CompileOptions::strands(16),
+        ] {
+            assert_eq!(compile(&k, opts), compile_legacy(&k, opts), "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn conflict_histogram_single_source_of_truth() {
+        // The method and the generic renumber helper must agree on a
+        // renumbered kernel (the two historical implementations are now
+        // one; this test pins them together).
+        let k = parser::parse(KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf_conf(8));
+        assert!(ck.renumbering.is_some());
+        let direct = renumber::conflict_histogram(
+            ck.intervals.intervals.iter().map(|i| &i.working_set),
+            ck.options.num_banks,
+            ck.options.bank_map,
+        );
+        assert_eq!(ck.conflict_histogram(), direct);
+        assert_eq!(direct.iter().sum::<usize>(), ck.intervals.intervals.len());
+    }
+
+    #[test]
+    fn degenerate_knobs_produce_typed_errors() {
+        let k = parser::parse(KSRC).unwrap();
+        for banks in [0usize, 1, 257, 1024] {
+            let opts = CompileOptions { num_banks: banks, ..CompileOptions::default() };
+            assert_eq!(
+                try_compile(&k, opts).unwrap_err(),
+                CompileError::BankCountOutOfRange { got: banks }
+            );
+        }
+        for n in [0usize, 1, 3] {
+            let opts = CompileOptions { max_regs_per_interval: n, ..CompileOptions::default() };
+            assert_eq!(
+                try_compile(&k, opts).unwrap_err(),
+                CompileError::IntervalCapacityTooSmall { got: n, min: MIN_REGS_PER_INTERVAL }
+            );
+        }
+        let opts = CompileOptions {
+            num_banks: 24,
+            bank_map: BankMap::Block,
+            ..CompileOptions::default()
+        };
+        assert_eq!(
+            try_compile(&k, opts).unwrap_err(),
+            CompileError::BlockMapIndivisible { got: 24 }
+        );
+        // The messages are human-readable (the CLI prints them verbatim).
+        let msg = CompileError::BankCountOutOfRange { got: 0 }.to_string();
+        assert!(msg.contains("num_banks = 0"), "{msg}");
+    }
+
+    #[test]
+    fn banks_below_clique_bound_compile_without_panic() {
+        // KSRC's working sets are ~5 registers; 2 banks force the coloring
+        // well below the ICG clique lower bound. The compile must complete
+        // with balanced forced colors, not panic or spill.
+        let k = parser::parse(KSRC).unwrap();
+        let opts = CompileOptions { num_banks: 2, ..CompileOptions::ltrf_conf(16) };
+        let ck = try_compile(&k, opts).expect("forced coloring still compiles");
+        let col = ck.coloring.as_ref().unwrap();
+        assert!(col.forced > 0, "5-register cliques over 2 banks must force");
+        for iv in &ck.intervals.intervals {
+            let c = renumber::bank_conflicts(&iv.working_set, 2, BankMap::Interleave);
+            let ceiling = (iv.working_set.len() + 1) / 2;
+            assert!(c <= ceiling.max(1), "conflicts {c} above balanced ceiling {ceiling}");
+        }
     }
 }

@@ -70,7 +70,7 @@ pub fn conflict_histogram<'a, I: IntoIterator<Item = &'a RegSet>>(
 }
 
 /// Outcome of the renumbering pass.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Renumbering {
     /// Old register id → new register id (identity for untouched ids).
     pub remap: Vec<u16>,

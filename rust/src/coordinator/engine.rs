@@ -32,7 +32,7 @@
 
 use super::experiments::DesignUnderTest;
 use super::sweep;
-use crate::compiler::{compile, BankMap, CompileOptions, CompiledKernel};
+use crate::compiler::{compile, BankMap, CompileOptions, CompiledKernel, PassManager};
 use crate::sim::config::HierarchyKind;
 use crate::sim::{gpu, SimBackend, SimConfig, Stats};
 use crate::workloads::{gen, WorkloadSpec};
@@ -220,15 +220,51 @@ impl JobMatrix {
 // Caches
 // ---------------------------------------------------------------------
 
+/// Aggregated cache statistics of one run, carried in the [`ResultSet`]
+/// so drivers and the CLI can report how much work dedup + the shared
+/// analysis cache saved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheReport {
+    /// Whole-`CompiledKernel` lookups answered from the compile cache.
+    pub compile_hits: u64,
+    /// Unique `(workload, CompileOptions)` pairs compiled.
+    pub compile_misses: u64,
+    /// Analysis-cache lookups answered from an existing `(fingerprint,
+    /// pass)` entry — this is the *cross-design-point* sharing: e.g. an
+    /// LTRF_conf compile reusing the LTRF compile's interval formation.
+    pub analysis_hits: u64,
+    /// Unique `(fingerprint, pass)` entries computed.
+    pub analysis_misses: u64,
+}
+
+impl CacheReport {
+    /// Fraction of analysis-pass lookups served from the cache.
+    pub fn analysis_hit_rate(&self) -> f64 {
+        let total = self.analysis_hits + self.analysis_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.analysis_hits as f64 / total as f64
+    }
+}
+
 /// `(workload, CompileOptions)`-keyed kernel build+compile memoization.
 /// The map lock only guards the entry table; each entry is a per-key
 /// `OnceLock`, so a unique pair compiles exactly once per run while
 /// *distinct* pairs compile concurrently under the parallel executor.
+///
+/// Since the pass-manager refactor every compile runs through one shared
+/// [`PassManager`], so even *distinct* option pairs share per-analysis
+/// work (interval formation between LTRF and LTRF_conf, ICG + coloring
+/// between bank maps, liveness between identical final kernels) — the
+/// whole-compile memoization is now just the outermost layer over the
+/// shared analysis cache.
 #[derive(Default)]
 pub struct CompileCache {
     map: Mutex<HashMap<(&'static str, CompileOptions), Arc<OnceLock<Arc<CompiledKernel>>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    passes: PassManager,
 }
 
 impl CompileCache {
@@ -252,7 +288,14 @@ impl CompileCache {
         };
         // First claimant compiles; concurrent claimants of the same key
         // block here (and only here) until it lands.
-        cell.get_or_init(|| Arc::new(compile(&gen::build(spec), opts))).clone()
+        cell.get_or_init(|| {
+            Arc::new(
+                self.passes
+                    .compile(&gen::build(spec), opts)
+                    .expect("engine-derived compile options are valid by construction"),
+            )
+        })
+        .clone()
     }
 
     /// Lookups answered from the cache.
@@ -264,12 +307,31 @@ impl CompileCache {
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
+
+    /// The shared pass manager the cache compiles through.
+    pub fn passes(&self) -> &PassManager {
+        &self.passes
+    }
+
+    /// Snapshot of both cache layers.
+    pub fn report(&self) -> CacheReport {
+        CacheReport {
+            compile_hits: self.hits(),
+            compile_misses: self.misses(),
+            analysis_hits: self.passes.hits(),
+            analysis_misses: self.passes.misses(),
+        }
+    }
 }
 
-/// Keyed simulation results the figures render from.
+/// Keyed simulation results the figures render from, plus the cache
+/// report of the run that produced them (refreshed by
+/// [`Engine::execute`] and every render-phase fallback simulation).
 #[derive(Default)]
 pub struct ResultSet {
     map: HashMap<JobKey, Stats>,
+    /// Compile/analysis cache statistics of the producing run.
+    pub cache: CacheReport,
 }
 
 impl ResultSet {
@@ -451,6 +513,7 @@ impl Engine {
         let st = run_point(spec, dut, factor, tweaks, Some(&self.compile_cache));
         self.sims_run += 1;
         self.results.insert(key, st.clone());
+        self.results.cache = self.compile_cache.report();
         st
     }
 
@@ -466,6 +529,11 @@ impl Engine {
 
     pub fn compile_cache(&self) -> &CompileCache {
         &self.compile_cache
+    }
+
+    /// The keyed results (and the cache report) of the executed matrix.
+    pub fn results(&self) -> &ResultSet {
+        &self.results
     }
 
     /// Pending (declared, unexecuted) job count.
@@ -506,6 +574,7 @@ impl Engine {
         for (job, st) in ordered.iter().zip(stats) {
             self.results.insert(job.key(), st);
         }
+        self.results.cache = self.compile_cache.report();
     }
 
     /// Point lookups served (planning placeholders + render reads); the
@@ -516,12 +585,16 @@ impl Engine {
 
     /// One-line execution report (printed by the CLI after `execute`).
     pub fn summary(&self) -> String {
+        let report = self.compile_cache.report();
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate)",
             self.lookups,
             self.sims_run,
-            self.compile_cache.hits(),
-            self.compile_cache.misses(),
+            report.compile_hits,
+            report.compile_misses,
+            report.analysis_hits,
+            report.analysis_misses,
+            report.analysis_hit_rate() * 100.0,
         )
     }
 }
@@ -614,6 +687,23 @@ mod tests {
         let b = m.add(spec, &bl(), 1.0, CfgTweaks::with_backend(SimBackend::Parallel, 1));
         assert_ne!(a, b);
         assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn analysis_cache_shared_across_option_pairs() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let cache = CompileCache::new();
+        let plain = cache.get(spec, CompileOptions::ltrf(16));
+        let conf = cache.get(spec, CompileOptions::ltrf_conf(16));
+        assert_eq!(cache.misses(), 2, "two distinct option pairs, two compiles");
+        assert_eq!(cache.hits(), 0);
+        let r = cache.report();
+        assert!(
+            r.analysis_hits >= 2,
+            "LTRF_conf must reuse LTRF's interval-form + merge passes: {r:?}"
+        );
+        assert!(r.analysis_hit_rate() > 0.0);
+        assert!(plain.renumbering.is_none() && conf.renumbering.is_some());
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub type BlockId = usize;
 
 /// A basic block: straight-line instructions with the terminator (if any)
 /// as the final instruction.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Block {
     /// Human-readable label (parser labels or generated `bbN`).
     pub label: String,
@@ -38,7 +38,9 @@ impl Block {
 }
 
 /// A compiled kernel: the unit the compiler passes and the simulator run on.
-#[derive(Clone, Debug)]
+/// `PartialEq` is full content equality (labels included) — see
+/// [`Kernel::structurally_eq`] for the label-insensitive variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Kernel {
     pub name: String,
     /// Block 0 is the unique entry.

@@ -1,0 +1,285 @@
+//! Content fingerprinting for [`Kernel`]s — the identity the incremental
+//! compiler caches on.
+//!
+//! The pass manager ([`crate::compiler::passes`]) memoizes analysis
+//! results keyed `(kernel_fingerprint, pass_key)`. That is only sound if
+//! the fingerprint covers *every* kernel property an analysis can observe,
+//! so the hash feeds in the full structure: blocks (labels included, so a
+//! cached post-split kernel round-trips its exact labels), every
+//! instruction field, successor/predecessor lists, and the derived
+//! register/predicate counts. Kernel-mutating passes (block splits,
+//! renumber rewrites) therefore change the fingerprint of their output
+//! kernel, which is exactly how stale analyses are invalidated: an
+//! analysis cached for the pre-mutation fingerprint simply never matches
+//! the post-mutation kernel.
+//!
+//! The hash is FNV-1a/128 over a canonical little-endian byte encoding,
+//! prefixed with [`FINGERPRINT_VERSION`]; bump the version whenever the
+//! encoding (or any pass semantics the cache key does not otherwise
+//! capture) changes, and every previously-computed fingerprint goes stale
+//! at once.
+
+use super::cfg::Kernel;
+use super::inst::{Cmp, Inst, Op, Space};
+
+/// Encoding version folded into every fingerprint.
+pub const FINGERPRINT_VERSION: u32 = 1;
+
+/// A 128-bit kernel content hash. Equal fingerprints mean (up to hash
+/// collision, ~2⁻¹²⁸ per pair) byte-identical kernel structure.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(u128);
+
+impl Fingerprint {
+    pub fn as_u128(self) -> u128 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+impl std::fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fingerprint({:032x})", self.0)
+    }
+}
+
+/// FNV-1a, 128-bit variant.
+struct Fnv128(u128);
+
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013B;
+
+impl Fnv128 {
+    fn new() -> Self {
+        Fnv128(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u128;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    /// `Option<u16>` with an explicit none sentinel outside the value range.
+    fn opt_u16(&mut self, v: Option<u16>) {
+        self.u32(v.map(|x| x as u32).unwrap_or(u32::MAX));
+    }
+
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.byte(1);
+                self.u64(x);
+            }
+            None => self.byte(0),
+        }
+    }
+}
+
+/// Stable opcode encoding (do not reorder without bumping
+/// [`FINGERPRINT_VERSION`]).
+fn op_code(op: Op) -> u16 {
+    fn cmp_code(c: Cmp) -> u16 {
+        match c {
+            Cmp::Eq => 0,
+            Cmp::Ne => 1,
+            Cmp::Lt => 2,
+            Cmp::Le => 3,
+            Cmp::Gt => 4,
+            Cmp::Ge => 5,
+        }
+    }
+    match op {
+        Op::Mov => 0,
+        Op::IAdd => 1,
+        Op::ISub => 2,
+        Op::IMul => 3,
+        Op::IMad => 4,
+        Op::IMin => 5,
+        Op::IMax => 6,
+        Op::And => 7,
+        Op::Or => 8,
+        Op::Xor => 9,
+        Op::Shl => 10,
+        Op::Shr => 11,
+        Op::FAdd => 12,
+        Op::FMul => 13,
+        Op::FFma => 14,
+        Op::Sfu => 15,
+        Op::Setp(c) => 16 + cmp_code(c), // 16..=21
+        Op::Ld(Space::Global) => 24,
+        Op::Ld(Space::Shared) => 25,
+        Op::St(Space::Global) => 26,
+        Op::St(Space::Shared) => 27,
+        Op::Bra => 28,
+        Op::Bar => 29,
+        Op::Exit => 30,
+    }
+}
+
+fn hash_inst(h: &mut Fnv128, i: &Inst) {
+    h.u16(op_code(i.op));
+    h.opt_u16(i.dst);
+    h.u16(i.dpred.map(|p| p as u16 + 1).unwrap_or(0));
+    for s in i.srcs {
+        h.opt_u16(s);
+    }
+    match i.imm {
+        Some(v) => {
+            h.byte(1);
+            h.i64(v);
+        }
+        None => h.byte(0),
+    }
+    match i.guard {
+        Some((p, pos)) => {
+            h.byte(if pos { 2 } else { 1 });
+            h.byte(p);
+        }
+        None => h.byte(0),
+    }
+    h.opt_u64(i.target.map(|t| t as u64));
+}
+
+/// Fingerprint a kernel's full content.
+pub fn of(kernel: &Kernel) -> Fingerprint {
+    let mut h = Fnv128::new();
+    h.u32(FINGERPRINT_VERSION);
+    h.str(&kernel.name);
+    h.u16(kernel.num_regs);
+    h.byte(kernel.num_preds);
+    h.u64(kernel.blocks.len() as u64);
+    for b in &kernel.blocks {
+        h.str(&b.label);
+        h.u64(b.insts.len() as u64);
+        for i in &b.insts {
+            hash_inst(&mut h, i);
+        }
+        h.u64(b.succs.len() as u64);
+        for &s in &b.succs {
+            h.u64(s as u64);
+        }
+        h.u64(b.preds.len() as u64);
+        for &p in &b.preds {
+            h.u64(p as u64);
+        }
+    }
+    Fingerprint(h.0)
+}
+
+impl Kernel {
+    /// Content fingerprint of this kernel (see the module docs for what it
+    /// covers and why).
+    pub fn fingerprint(&self) -> Fingerprint {
+        of(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parser, Cmp, KernelBuilder};
+
+    fn sample() -> Kernel {
+        let mut b = KernelBuilder::new("fp");
+        let top = b.fresh_label("top");
+        b.mov_imm(0, 0x100);
+        b.mov_imm(1, 0);
+        b.bind(top);
+        b.iadd_imm(1, 1, 1);
+        b.setp_imm(Cmp::Lt, 0, 1, 8);
+        b.bra_if(0, true, top);
+        b.st_global(0, 0, 1);
+        b.exit();
+        b.finish()
+    }
+
+    #[test]
+    fn deterministic_and_stable_within_a_process() {
+        let k = sample();
+        assert_eq!(k.fingerprint(), k.fingerprint());
+        assert_eq!(k.fingerprint(), k.clone().fingerprint());
+    }
+
+    #[test]
+    fn any_content_change_changes_the_fingerprint() {
+        let base = sample().fingerprint();
+        // Immediate change.
+        let mut k = sample();
+        k.blocks[0].insts[0].imm = Some(0x101);
+        assert_ne!(k.fingerprint(), base);
+        // Register operand change.
+        let mut k = sample();
+        k.blocks[1].insts[0].dst = Some(7);
+        k.recount_regs();
+        assert_ne!(k.fingerprint(), base);
+        // Label rename (cached kernels carry exact labels, so labels are
+        // fingerprinted too — conservative, never unsound).
+        let mut k = sample();
+        k.blocks[1].label = "renamed".into();
+        assert_ne!(k.fingerprint(), base);
+        // Guard polarity.
+        let mut k = sample();
+        let last = k.blocks[1].insts.len() - 1;
+        k.blocks[1].insts[last].guard = Some((0, false));
+        assert_ne!(k.fingerprint(), base);
+    }
+
+    #[test]
+    fn block_split_changes_the_fingerprint() {
+        let mut k = sample();
+        let before = k.fingerprint();
+        k.split_block(1, 1);
+        assert_ne!(k.fingerprint(), before, "a kernel-mutating pass must invalidate");
+    }
+
+    #[test]
+    fn structural_twins_share_the_fingerprint() {
+        let k = sample();
+        let reparsed = parser::parse(&k.display()).unwrap();
+        // The printer/parser round-trip preserves labels and structure, so
+        // the fingerprint must survive it.
+        assert!(k.structurally_eq(&reparsed));
+        assert_eq!(k.fingerprint(), reparsed.fingerprint());
+    }
+
+    #[test]
+    fn display_is_32_hex_chars() {
+        let fp = sample().fingerprint();
+        let s = fp.to_string();
+        assert_eq!(s.len(), 32);
+        assert!(s.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(format!("{:032x}", fp.as_u128()), s);
+    }
+}

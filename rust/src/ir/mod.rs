@@ -10,10 +10,12 @@ pub mod analysis;
 pub mod builder;
 pub mod cfg;
 pub mod exec;
+pub mod fingerprint;
 pub mod inst;
 pub mod parser;
 
 pub use builder::KernelBuilder;
 pub use cfg::{Block, BlockId, Kernel};
 pub use exec::{execute, ExecOutcome, Trace, TraceEntry};
+pub use fingerprint::Fingerprint;
 pub use inst::{Cmp, ExecUnit, Inst, Op, Pred, Reg, Space};

@@ -9,7 +9,9 @@
 //! * [`ir`] — a PTX-like kernel IR (the nvcc/PTX stand-in);
 //! * [`compiler`] — liveness, register-interval formation (Algorithms 1/2),
 //!   the Interval Conflict Graph + Chaitin coloring, register renumbering
-//!   (LTRF_conf), and SHRF strands;
+//!   (LTRF_conf), and SHRF strands, driven by an incremental pass manager
+//!   over fingerprinted IR with a shared analysis cache
+//!   ([`compiler::passes`]);
 //! * [`timing`] — the CACTI/NVSim stand-in: analytical register-file bank
 //!   and interconnect models, and the paper's Table-2 design points;
 //! * [`sim`] — a cycle-level GPU SM simulator (two-level warp scheduler,

@@ -37,7 +37,9 @@ Experiment commands (regenerate paper tables/figures):
   all         Everything above
 
 Tool commands:
-  compile <file.ltrf> [--regs N] [--renumber]   Compile + dump intervals
+  compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]
+              Compile + dump intervals; --explain prints the pass DAG,
+              per-pass wall time, and analysis-cache hits (cold + warm)
   run <workload> [--hierarchy BL|RFC|SHRF|LTRF|LTRF+] [--latency F]
                  [--capacity WARP_REGS] [--renumber]  Simulate one workload
   workloads   List the benchmark suite
@@ -319,11 +321,25 @@ fn main() {
                     e.winst_per_second()
                 );
             }
+            for e in &report.compile_entries {
+                println!(
+                    "{:<16} {:>10}     {:>10.3} ms  {:>8} compiles  cache {}/{} hits/misses",
+                    e.name,
+                    e.mode,
+                    e.wall_seconds * 1e3,
+                    e.compiles,
+                    e.analysis_hits,
+                    e.analysis_misses
+                );
+            }
             if let Some(s) = report.fig14_speedup() {
                 println!(
                     "fig14 matrix: parallel x{} is {s:.2}x reference wall time",
                     report.sim_threads
                 );
+            }
+            if let Some(s) = report.compile_warm_speedup() {
+                println!("compile matrix: warm analysis cache is {s:.2}x cold wall time");
             }
             let path = opt("--json").map(PathBuf::from).unwrap_or_else(|| "BENCH_sim.json".into());
             if let Err(e) = std::fs::write(&path, report.to_json()) {
@@ -349,7 +365,9 @@ fn main() {
         }
         "compile" => {
             let Some(path) = args.get(1).filter(|a| !a.starts_with("--")) else {
-                eprintln!("usage: ltrf compile <file.ltrf> [--regs N] [--renumber]");
+                eprintln!(
+                    "usage: ltrf compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]"
+                );
                 std::process::exit(2);
             };
             let n: usize = opt("--regs").and_then(|s| s.parse().ok()).unwrap_or(16);
@@ -363,7 +381,67 @@ fn main() {
             });
             let mut opts = ltrf::compiler::CompileOptions::ltrf(n);
             opts.renumber = flag("--renumber");
-            let ck = ltrf::compiler::compile(&kernel, opts);
+            if let Some(raw) = opt("--banks") {
+                match raw.parse() {
+                    Ok(b) => opts.num_banks = b,
+                    Err(_) => {
+                        eprintln!("bad --banks `{raw}` (expected a bank count)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            let mgr = ltrf::compiler::PassManager::new();
+            let (ck, trace) = match mgr.compile_traced(&kernel, opts) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("compile error: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if flag("--explain") {
+                println!(
+                    "pass DAG ({:?} mode{}):",
+                    opts.mode,
+                    if opts.renumber { " + renumber" } else { "" }
+                );
+                for (node, deps) in ltrf::compiler::passes::dag(&opts) {
+                    if deps.is_empty() {
+                        println!("  {node}");
+                    } else {
+                        println!("  {node}  <-  {}", deps.join(", "));
+                    }
+                }
+                println!(
+                    "\ncold compile of fingerprint {} ({:.1} us total):",
+                    trace.input,
+                    trace.total.as_secs_f64() * 1e6
+                );
+                println!("  {:<14} {:>12} {:>7}", "pass", "wall", "cache");
+                for p in &trace.passes {
+                    println!(
+                        "  {:<14} {:>9.1} us {:>7}",
+                        p.pass.name(),
+                        p.wall.as_secs_f64() * 1e6,
+                        if p.cached { "hit" } else { "miss" }
+                    );
+                }
+                let (_, warm) = mgr.compile_traced(&kernel, opts).expect("warm recompile");
+                println!(
+                    "warm recompile: {}/{} passes served from the analysis cache in {:.1} us",
+                    warm.cache_hits(),
+                    warm.passes.len(),
+                    warm.total.as_secs_f64() * 1e6
+                );
+                println!(
+                    "output kernel fingerprint {} ({})\n",
+                    trace.output,
+                    if trace.output == trace.input {
+                        "unchanged: no kernel-mutating pass fired"
+                    } else {
+                        "changed: splits/renumbering invalidate downstream analyses"
+                    }
+                );
+            }
             println!("{}", ck.kernel.display());
             let mut t = Table::new(
                 format!("register-intervals (N={n})"),

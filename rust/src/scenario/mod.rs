@@ -9,7 +9,8 @@
 //!    interval-count extremes, random CFGs);
 //! 2. [`oracles`] round-trips it through the `.ltrf` parser and checks
 //!    the cross-config invariants (functional equivalence under every
-//!    hierarchy, renumbering soundness, conservation laws, simulator
+//!    hierarchy, renumbering soundness, pass-manager-vs-legacy compile
+//!    equivalence incl. cache invalidation, conservation laws, simulator
 //!    backend equivalence, timing invariance, TLP monotonicity, re-run
 //!    determinism) over a config matrix run through the PR-1 engine's
 //!    point runner;

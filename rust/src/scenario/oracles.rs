@@ -8,8 +8,9 @@
 //! oracle), so a red fuzz run always indicates a real regression, not an
 //! over-eager assertion.
 
+use crate::compiler::pipeline::compile_legacy;
 use crate::compiler::renumber::bank_conflicts;
-use crate::compiler::{compile, CompileOptions, CompiledKernel};
+use crate::compiler::{compile, CompileOptions, CompiledKernel, PassManager};
 use crate::coordinator::engine::{run_kernel_point, CfgTweaks};
 use crate::coordinator::experiments::DesignUnderTest;
 use crate::ir::{execute, parser, Kernel};
@@ -45,6 +46,11 @@ pub enum OracleKind {
     /// interval conflict-free, a forced one stays within the balanced
     /// ceiling.
     RenumberInvariants,
+    /// The incremental pass manager compiles bit-identically to the legacy
+    /// single-shot pipeline across the design × latency matrix — cold and
+    /// warm-cache — and a kernel mutation invalidates every stale
+    /// analysis (warm-cache compile of the mutant equals a fresh one).
+    PassEquivalence,
     /// Every config in the matrix: the sim finishes, every resident warp
     /// finishes, and issued instructions equal the architectural streams.
     SimConservation,
@@ -64,11 +70,12 @@ pub enum OracleKind {
 }
 
 impl OracleKind {
-    pub const ALL: [OracleKind; 9] = [
+    pub const ALL: [OracleKind; 10] = [
         OracleKind::Validate,
         OracleKind::RoundTrip,
         OracleKind::ExecEquivalence,
         OracleKind::RenumberInvariants,
+        OracleKind::PassEquivalence,
         OracleKind::SimConservation,
         OracleKind::BackendEquivalence,
         OracleKind::TimingInvariance,
@@ -82,6 +89,7 @@ impl OracleKind {
             OracleKind::RoundTrip => "roundtrip",
             OracleKind::ExecEquivalence => "exec-equivalence",
             OracleKind::RenumberInvariants => "renumber-invariants",
+            OracleKind::PassEquivalence => "pass-equivalence",
             OracleKind::SimConservation => "sim-conservation",
             OracleKind::BackendEquivalence => "backend-equivalence",
             OracleKind::TimingInvariance => "timing-invariance",
@@ -176,6 +184,7 @@ pub fn run_oracle(k: &Kernel, kind: OracleKind, cs: &mut CheckStats) -> Result<(
         OracleKind::RoundTrip => oracle_roundtrip(k),
         OracleKind::ExecEquivalence => oracle_exec_equivalence(k),
         OracleKind::RenumberInvariants => oracle_renumber(k),
+        OracleKind::PassEquivalence => oracle_pass_equivalence(k),
         OracleKind::SimConservation => oracle_conservation(k, cs),
         OracleKind::BackendEquivalence => oracle_backend_equivalence(k, cs),
         OracleKind::TimingInvariance => oracle_timing_invariance(k, cs),
@@ -286,6 +295,117 @@ pub fn check_renumber_invariants(ck: &CompiledKernel) -> Result<(), String> {
                 ));
             }
         }
+    }
+    Ok(())
+}
+
+/// First field where two compiled kernels disagree (the pass-equivalence
+/// oracle's failure detail).
+fn describe_compiled_diff(a: &CompiledKernel, b: &CompiledKernel) -> String {
+    if a.kernel != b.kernel {
+        return if a.kernel.structurally_eq(&b.kernel) {
+            "compiled kernels differ in labels/metadata only".into()
+        } else {
+            format!(
+                "compiled kernel structure differs ({} vs {} blocks, {} vs {} insts)",
+                a.kernel.num_blocks(),
+                b.kernel.num_blocks(),
+                a.kernel.num_insts(),
+                b.kernel.num_insts()
+            )
+        };
+    }
+    if a.intervals != b.intervals {
+        return format!(
+            "interval analyses differ ({} vs {} intervals)",
+            a.intervals.intervals.len(),
+            b.intervals.intervals.len()
+        );
+    }
+    if a.liveness != b.liveness {
+        return "liveness facts differ".into();
+    }
+    if a.dead_bits != b.dead_bits {
+        return "dead-operand bits differ".into();
+    }
+    if a.renumbering != b.renumbering {
+        return "renumbering outcomes differ".into();
+    }
+    if a.coloring != b.coloring {
+        return "colorings differ".into();
+    }
+    "options differ".into()
+}
+
+/// Deterministic compile-visible mutation for the invalidation check:
+/// bump the first immediate; if the kernel has none, prepend a `mov` to
+/// the entry block. (The mutant is only ever *compiled*, never executed,
+/// so changing semantics — even termination — is fine.)
+fn mutate_for_invalidation(k: &Kernel) -> Kernel {
+    let mut m = k.clone();
+    for b in &mut m.blocks {
+        for i in &mut b.insts {
+            if let Some(imm) = i.imm.as_mut() {
+                *imm = imm.wrapping_add(1);
+                return m;
+            }
+        }
+    }
+    let mut mv = crate::ir::Inst::new(crate::ir::Op::Mov);
+    mv.dst = Some(0);
+    mv.imm = Some(1);
+    m.blocks[0].insts.insert(0, mv);
+    m.recount_regs();
+    m
+}
+
+fn oracle_pass_equivalence(k: &Kernel) -> Result<(), String> {
+    // One shared manager across the whole matrix: the warm-path compiles
+    // exercise exactly the cross-design-point sharing the engine relies
+    // on, so a cache-keying bug cannot hide behind fresh managers.
+    let mgr = PassManager::new();
+    for (name, dut, factor) in sim_matrix() {
+        let (_cfg, opts) = crate::coordinator::engine::point_setup(&dut, factor, CfgTweaks::NONE);
+        let legacy = compile_legacy(k, opts);
+        let cold = mgr
+            .compile(k, opts)
+            .map_err(|e| format!("{name}: pass manager rejected engine options {opts:?}: {e}"))?;
+        if cold != legacy {
+            return Err(format!(
+                "{name}: pass-manager compile diverges from legacy: {}",
+                describe_compiled_diff(&legacy, &cold)
+            ));
+        }
+        let warm = mgr.compile(k, opts).map_err(|e| format!("{name}: warm recompile: {e}"))?;
+        if warm != cold {
+            return Err(format!(
+                "{name}: warm-cache compile diverges from cold: {}",
+                describe_compiled_diff(&cold, &warm)
+            ));
+        }
+    }
+    if mgr.hits() == 0 {
+        return Err("design × latency matrix shared no analyses — cache sharing broken".into());
+    }
+    // Invalidation correctness: a mutated kernel compiled through the
+    // (now warm) manager must match a fresh compile exactly — no stale
+    // analysis keyed by the old fingerprint may survive.
+    let mutated = mutate_for_invalidation(k);
+    if mutated.fingerprint() == k.fingerprint() {
+        return Err("mutation did not change the kernel fingerprint".into());
+    }
+    let opts = CompileOptions::ltrf_conf(16);
+    let via_warm = mgr
+        .compile(&mutated, opts)
+        .map_err(|e| format!("mutant compile through warm manager: {e}"))?;
+    let via_fresh = PassManager::new()
+        .compile(&mutated, opts)
+        .map_err(|e| format!("mutant compile through fresh manager: {e}"))?;
+    if via_warm != via_fresh {
+        return Err(format!(
+            "stale analyses survived a kernel mutation: {}",
+            describe_compiled_diff(&via_fresh, &via_warm)
+        ));
     }
     Ok(())
 }

@@ -71,6 +71,37 @@ fn compile_cache_hits_for_every_shared_design_point() {
 }
 
 #[test]
+fn analysis_cache_shares_across_design_points() {
+    // The pass-manager layer below the whole-compile cache: LTRF and
+    // LTRF_conf are *distinct* (workload, options) pairs, yet they share
+    // interval formation + merge through the engine's shared analysis
+    // cache. This is the cross-design-point saving whole-compile
+    // memoization could never express.
+    let (workloads, designs, factor) = matrix();
+    let mut eng = Engine::new(2);
+    eng.plan_phase();
+    for &spec in &workloads {
+        for d in &designs {
+            eng.request(spec, d, factor);
+        }
+    }
+    eng.execute();
+    let report = eng.compile_cache().report();
+    assert_eq!(report.compile_misses, 6);
+    assert!(
+        report.analysis_hits > 0,
+        "cross-design-point sweeps must share analyses: {report:?}"
+    );
+    assert!(report.analysis_misses > 0, "some passes are genuinely computed: {report:?}");
+    // Exactly one subgraph chain shared per workload here (plain ↔ conf
+    // share interval-form + merge-reduce), so at least 2 hits each.
+    assert!(report.analysis_hits >= 2 * workloads.len() as u64, "{report:?}");
+    // The ResultSet carries the same report for drivers/CLI to render.
+    assert_eq!(eng.results().cache, report);
+    assert!(eng.results().cache.analysis_hit_rate() > 0.0);
+}
+
+#[test]
 fn figure_tables_byte_identical_across_jobs() {
     // End-to-end through a real figure driver: fig14 exercises shared
     // baselines, multiple designs, and two panels.

@@ -1,7 +1,8 @@
 //! Integration: compiler → simulator across the whole suite and all
 //! hierarchies; checks the cross-module invariants DESIGN.md §4 lists.
 
-use ltrf::compiler::{compile, CompileOptions, SubgraphMode};
+use ltrf::compiler::pipeline::compile_legacy;
+use ltrf::compiler::{compile, CompileOptions, PassManager, SubgraphMode};
 use ltrf::ir::execute;
 use ltrf::sim::{gpu, HierarchyKind, SimConfig};
 use ltrf::workloads::{gen, suite};
@@ -18,6 +19,45 @@ fn full_suite_compiles_with_valid_intervals() {
             }
         }
     }
+}
+
+/// The pass manager (through which `compile` now routes) is bit-identical
+/// to the legacy single-shot pipeline across the whole benchmark suite
+/// and every compile variant, with a shared (warm) analysis cache.
+#[test]
+fn pass_manager_matches_legacy_across_the_suite() {
+    let mgr = PassManager::new();
+    for spec in suite::suite() {
+        let kernel = gen::build(spec);
+        for opts in [
+            CompileOptions::ltrf(8),
+            CompileOptions::ltrf_conf(16),
+            CompileOptions::strands(16),
+        ] {
+            let legacy = compile_legacy(&kernel, opts);
+            let cold = mgr.compile(&kernel, opts).expect("valid options");
+            assert_eq!(cold, legacy, "{} {opts:?}: cold", spec.name);
+            let warm = mgr.compile(&kernel, opts).expect("valid options");
+            assert_eq!(warm, legacy, "{} {opts:?}: warm", spec.name);
+        }
+    }
+    assert!(mgr.hits() > 0, "warm recompiles must be served from the cache");
+}
+
+/// Traced compiles expose the cold→warm transition and a stable output
+/// fingerprint.
+#[test]
+fn compile_trace_reports_cold_then_warm() {
+    let spec = suite::workload_by_name("kmeans").unwrap();
+    let kernel = gen::build(spec);
+    let mgr = PassManager::new();
+    let (ck, cold) = mgr.compile_traced(&kernel, CompileOptions::ltrf_conf(16)).unwrap();
+    assert!(cold.passes.iter().all(|p| !p.cached));
+    assert_eq!(cold.passes.len(), 7, "interval-form, merge, icg, coloring, renumber, live, dead");
+    assert_eq!(cold.output, ck.kernel.fingerprint());
+    let (ck2, warm) = mgr.compile_traced(&kernel, CompileOptions::ltrf_conf(16)).unwrap();
+    assert_eq!(warm.cache_hits(), warm.passes.len(), "fully warm");
+    assert_eq!(ck2, ck);
 }
 
 #[test]

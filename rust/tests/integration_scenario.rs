@@ -62,7 +62,7 @@ fn fuzz_run_is_green_over_all_shapes() {
         assert_eq!(*count, 2, "shape {name}");
     }
     assert!(report.sims >= 16 * 10, "matrix sims ran ({})", report.sims);
-    assert!(report.checks == 16 * 9, "all oracles checked ({})", report.checks);
+    assert_eq!(report.checks, 16 * oracles::OracleKind::ALL.len() as u64, "all oracles checked");
 }
 
 /// The committed corpus seeds replay cleanly (parse + oracles).
@@ -124,6 +124,23 @@ fn backend_equivalence_oracle_green_on_committed_corpus() {
         oracles::run_oracle(&k, oracles::OracleKind::BackendEquivalence, &mut cs)
             .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
         assert!(cs.sims > 0);
+    }
+}
+
+/// Every committed corpus kernel passes the pass-equivalence oracle: the
+/// incremental pass manager compiles bit-identically to the legacy
+/// single-shot pipeline (cold + warm cache) across the design × latency
+/// matrix, and kernel mutation invalidates every stale analysis.
+#[test]
+fn pass_equivalence_oracle_green_on_committed_corpus() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("corpus");
+    let corpus = ltrf::scenario::corpus::load_replay_corpus(&root);
+    assert!(corpus.len() >= 3, "committed corpus seeds found");
+    for (path, text) in corpus {
+        let k = parser::parse(&text).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let mut cs = oracles::CheckStats::default();
+        oracles::run_oracle(&k, oracles::OracleKind::PassEquivalence, &mut cs)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
     }
 }
 

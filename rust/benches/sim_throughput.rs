@@ -15,13 +15,7 @@ use ltrf::workloads::{gen, suite};
 
 fn main() {
     let spec = suite::workload_by_name("gaussian").unwrap();
-    for kind in [
-        HierarchyKind::Baseline,
-        HierarchyKind::Rfc,
-        HierarchyKind::Shrf,
-        HierarchyKind::Ltrf { plus: false },
-        HierarchyKind::Ltrf { plus: true },
-    ] {
+    for kind in HierarchyKind::ALL {
         let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
         let kernel = gen::build(spec);
         let ck = compile(&kernel, gpu::compile_options(&cfg, true));

@@ -1,15 +1,18 @@
 //! Simulator-throughput trajectory: the measurement core behind
 //! `benches/sim_throughput.rs` and the `ltrf bench --json` CLI path.
 //!
-//! Three families of entries:
+//! Four families of entries:
 //!
 //! * **hot-loop throughput** — simulated-cycles/sec and
 //!   warp-instructions/sec of `gpu::run` on a single hot point, per
 //!   backend;
+//! * **per-policy hot rows** — one `policy_<NAME>` entry per design in
+//!   the registry (`coordinator::designs`): the same hot point simulated
+//!   under every registered policy, so each policy (including a newly
+//!   registered one) gets its own trajectory row in `BENCH_sim.json`;
 //! * **fig14-matrix wall time** — end-to-end wall seconds to simulate the
-//!   Fig. 14 comparison matrix (workloads × BL/RFC/LTRF/LTRF_conf on the
-//!   8×-capacity configs #6/#7) at a multi-SM configuration, per backend
-//!   and step-phase thread count;
+//!   registered design columns on the 8×-capacity configs #6/#7 at a
+//!   multi-SM configuration, per backend and step-phase thread count;
 //! * **compile throughput** — wall seconds to compile the fig14 workload
 //!   × design-point option matrix through the incremental pass manager,
 //!   cold (fresh analysis cache per iteration) vs warm (fully shared
@@ -22,8 +25,8 @@
 //! trajectory PR over PR.
 
 use crate::compiler::{CompileOptions, PassManager};
+use crate::coordinator::designs;
 use crate::coordinator::engine::{point_setup, CfgTweaks};
-use crate::coordinator::experiments::comparison_points;
 use crate::ir::Kernel;
 use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
 use crate::timing::{design_points, Tech};
@@ -230,7 +233,9 @@ fn workloads(opts: &BenchOptions) -> Vec<&'static WorkloadSpec> {
 }
 
 /// The fig14 comparison matrix at a multi-SM configuration: configs #6/#7
-/// (8× capacity), BL/RFC/LTRF/LTRF_conf columns. Multi-SM because the
+/// (8× capacity), with one column per *registered* design
+/// ([`designs::all_points`] — the figure columns plus SHRF/CARF, so every
+/// registry entry is timed and equivalence-gated). Multi-SM because the
 /// parallel backend's speedup comes from stepping SMs concurrently;
 /// single-SM points (the per-SM-IPC reproduction default) have no step
 /// phase to parallelize.
@@ -246,7 +251,7 @@ fn fig14_points(opts: &BenchOptions, num_sms: usize) -> Vec<Point> {
         let factor = design.latency();
         for spec in workloads(opts) {
             let kernel = crate::workloads::gen::build(spec);
-            for (_, mut dut) in comparison_points(design.warp_registers()) {
+            for (_, mut dut) in designs::all_points(design.warp_registers()) {
                 dut.num_sms = num_sms;
                 let (cfg, copts) = crate::coordinator::engine::point_setup(
                     &dut,
@@ -270,6 +275,43 @@ fn hot_points(num_sms: usize) -> Vec<Point> {
     let kernel = crate::workloads::gen::build(spec);
     let ck = crate::compiler::compile(&kernel, gpu::compile_options(&cfg, true));
     vec![Point { ck, cfg }]
+}
+
+/// The gaussian hot point under one registered policy at 6.3× latency.
+fn policy_point(dut: &crate::coordinator::experiments::DesignUnderTest) -> Vec<Point> {
+    let spec = suite::workload_by_name("gaussian").expect("gaussian");
+    let kernel = crate::workloads::gen::build(spec);
+    let (cfg, copts) = point_setup(dut, 6.3, CfgTweaks::NONE);
+    let ck = crate::compiler::compile(&kernel, copts);
+    vec![Point { ck, cfg }]
+}
+
+/// One trajectory row per registered policy (`policy_<NAME>`): the same
+/// hot point simulated under every design in the registry, reference
+/// backend. A newly registered policy (e.g. CARF) gets its `BENCH_sim.json`
+/// row from the registry entry alone.
+fn measure_policy_family(report: &mut BenchReport, opts: &BenchOptions) {
+    let iters = opts.iters.max(1);
+    for (name, dut) in designs::all_points(2048) {
+        let pts = policy_point(&dut);
+        let mut cycles = 0;
+        let mut insts = 0;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let (c, i, stats) = run_once(&pts, SimBackend::Reference, 1);
+            cycles = c;
+            insts = i;
+            assert_eq!(stats[0].hit_cycle_cap, 0, "policy {name} must converge");
+        }
+        report.entries.push(BenchEntry {
+            name: format!("policy_{name}"),
+            backend: SimBackend::Reference.name(),
+            sim_threads: 1,
+            wall_seconds: t0.elapsed().as_secs_f64() / iters as f64,
+            simulated_cycles: cycles,
+            instructions: insts,
+        });
+    }
 }
 
 /// Run all points under one backend variant once; returns merged totals.
@@ -344,7 +386,7 @@ fn compile_matrix(opts: &BenchOptions) -> Vec<(Arc<Kernel>, CompileOptions)> {
         }
         let factor = design.latency();
         for kernel in &kernels {
-            for (_, dut) in comparison_points(design.warp_registers()) {
+            for (_, dut) in designs::all_points(design.warp_registers()) {
                 let (_cfg, copts) = point_setup(&dut, factor, CfgTweaks::NONE);
                 pts.push((kernel.clone(), copts));
             }
@@ -431,6 +473,7 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     measure_compile_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
     measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
+    measure_policy_family(&mut report, opts);
     measure_family(&mut report, "fig14_matrix", &fig14_points(opts, num_sms), opts);
     report
 }
@@ -515,6 +558,38 @@ mod tests {
         assert!(cold.analysis_misses > 0, "cold iteration computes passes");
         assert_eq!(warm.analysis_misses, 0, "warm iteration must be all hits");
         assert!(warm.analysis_hits > 0);
+    }
+
+    #[test]
+    fn bench_matrix_enumerates_the_design_registry() {
+        // One fig14 point per (workload, registered design) on config #7
+        // in quick mode — the registry is the single source of the bench
+        // columns, so a registered policy cannot be silently unbenched.
+        let opts = BenchOptions::quick();
+        let pts = fig14_points(&opts, 2);
+        assert_eq!(pts.len(), workloads(&opts).len() * designs::REGISTRY.len());
+        for p in designs::REGISTRY {
+            assert!(
+                pts.iter().any(|pt| pt.cfg.hierarchy == p.hierarchy),
+                "{} missing from the bench matrix",
+                p.name
+            );
+        }
+    }
+
+    #[test]
+    fn policy_family_has_one_row_per_registered_design() {
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
+        measure_policy_family(&mut r, &BenchOptions::quick());
+        assert_eq!(r.entries.len(), designs::REGISTRY.len());
+        for p in designs::REGISTRY {
+            let row = r
+                .entries
+                .iter()
+                .find(|e| e.name == format!("policy_{}", p.name))
+                .unwrap_or_else(|| panic!("no bench row for {}", p.name));
+            assert!(row.instructions > 0 && row.simulated_cycles > 0, "{}", p.name);
+        }
     }
 
     #[test]

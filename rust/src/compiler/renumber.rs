@@ -35,6 +35,24 @@ impl BankMap {
     pub fn pool(self, bank: usize, num_banks: usize) -> Vec<u16> {
         (0..MAX_REGS as u16).filter(|&r| self.bank_of(r, num_banks) == bank).collect()
     }
+
+    /// Bank of warp `warp`'s copy of register `reg` — the single source
+    /// of the per-warp striping rule the simulator's bank arrays apply.
+    ///
+    /// The warp offset rotates the *bank index* (i.e. it is applied after
+    /// the register→bank map, not to the register id). A rotation is a
+    /// permutation of banks, so every working set's per-bank occupancy
+    /// multiset — and therefore its conflict count ([`bank_conflicts`]) —
+    /// is identical for every warp. That is exactly what makes the
+    /// compile-time renumbering guarantee (computed warp-agnostically at
+    /// warp 0) valid for all warps. Offsetting the register id *before*
+    /// the map would break this for [`BankMap::Block`]: `(r + w)` shifts
+    /// registers across block boundaries, changing the occupancy
+    /// multiset per warp and silently defeating renumbering.
+    #[inline]
+    pub fn bank_of_warp(self, reg: u16, warp: usize, num_banks: usize) -> usize {
+        (self.bank_of(reg, num_banks) + warp) % num_banks
+    }
 }
 
 /// Number of serialized extra bank accesses a prefetch of `ws` incurs:
@@ -207,6 +225,51 @@ L3:
         assert_eq!(BankMap::Block.bank_of(0, 4), 0);
         assert_eq!(BankMap::Block.bank_of(64, 4), 1);
         assert_eq!(BankMap::Block.pool(0, 16).len(), 16);
+    }
+
+    #[test]
+    fn warp_offset_rotates_banks_after_the_map() {
+        // Warp 0 is the plain map; other warps rotate the bank index.
+        for map in [BankMap::Interleave, BankMap::Block] {
+            for r in [0u16, 5, 64, 200] {
+                assert_eq!(map.bank_of_warp(r, 0, 16), map.bank_of(r, 16), "{map:?} r{r}");
+                assert_eq!(
+                    map.bank_of_warp(r, 3, 16),
+                    (map.bank_of(r, 16) + 3) % 16,
+                    "{map:?} r{r}"
+                );
+            }
+        }
+        // Rotation wraps: warp 17 behaves like warp 1 at 16 banks.
+        assert_eq!(
+            BankMap::Interleave.bank_of_warp(0, 17, 16),
+            BankMap::Interleave.bank_of_warp(0, 1, 16)
+        );
+    }
+
+    #[test]
+    fn warp_offset_preserves_conflict_counts_for_every_warp() {
+        // The property the composition order exists for: a working set's
+        // conflict count is warp-invariant, so the compile-time model
+        // ([`bank_conflicts`], warp-agnostic) is valid for all warps.
+        let sets = [
+            RegSet::from_iter([0u16, 1, 2, 3]),      // conflict-free (interleave)
+            RegSet::from_iter([0u16, 16, 32, 48]),   // 3 conflicts (interleave)
+            RegSet::from_iter([0u16, 1, 2, 64, 65]), // block-map collisions
+        ];
+        for map in [BankMap::Interleave, BankMap::Block] {
+            for ws in &sets {
+                let expect = bank_conflicts(ws, 16, map);
+                for warp in [0usize, 1, 7, 15, 16, 63] {
+                    let mut occ = [0usize; 16];
+                    for r in ws.iter() {
+                        occ[map.bank_of_warp(r, warp, 16)] += 1;
+                    }
+                    let got = occ.iter().max().unwrap().saturating_sub(1);
+                    assert_eq!(got, expect, "{map:?} warp {warp} ws {ws:?}");
+                }
+            }
+        }
     }
 
     #[test]

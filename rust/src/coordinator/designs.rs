@@ -1,0 +1,258 @@
+//! The design registry — the single canonical list of register-file
+//! policy comparison points (§6).
+//!
+//! Before this module, the design × latency comparison matrix was
+//! re-declared privately by the figure drivers, the scenario oracles, the
+//! golden-stats snapshot, the bench families, and the CLI; adding a
+//! policy meant editing every layer by hand. Now a policy is registered
+//! **once** here and every consumer enumerates the registry:
+//!
+//! * `coordinator::experiments::comparison_points` (figure columns),
+//! * `scenario::oracles::sim_matrix` (oracle design × latency matrix),
+//! * `scenario::snapshot::snapshot_points` (golden-stats keys),
+//! * `bench` (fig14-matrix + compile-matrix + per-policy hot rows),
+//! * the CLI (`--hierarchy <name>` lookup and the `designs` subcommand),
+//! * `Engine::design_coverage` (the `--engine-stats` registered-vs-swept
+//!   count CI greps).
+//!
+//! Registering a new policy therefore means: one `HierarchyModel` impl
+//! (+ a `model_for` arm) in `sim::hierarchy`, and one [`PolicyPoint`]
+//! entry below. Oracles, snapshots, benches, and the CLI pick it up with
+//! no further edits (see README "Authoring a hierarchy policy").
+
+use super::experiments::DesignUnderTest;
+use crate::sim::HierarchyKind;
+
+/// One registered policy comparison point: the §6 identity of a design
+/// column (hierarchy + compile flag), plus where it shows up.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyPoint {
+    /// Canonical display name; also the snapshot key segment and the
+    /// CLI `--hierarchy` spelling (case-insensitive).
+    pub name: &'static str,
+    pub hierarchy: HierarchyKind,
+    /// Compile with the §4 renumbering pass (the `_conf` flavor).
+    pub renumber: bool,
+    /// Rendered as a column of the classic comparison figures
+    /// (Fig. 14/15: BL/RFC/LTRF/LTRF_conf). Non-column policies are still
+    /// fully swept by the oracles, snapshots, and benches.
+    pub figure_column: bool,
+    /// MRF latency factors the oracle and snapshot matrices probe this
+    /// design at (1.0 = Table-3 baseline, 6.3 = config #7 DWM).
+    pub latency_factors: &'static [f64],
+    /// One-line description for the CLI `designs` listing.
+    pub blurb: &'static str,
+}
+
+impl PolicyPoint {
+    /// The design-under-test this point denotes, at baseline capacity.
+    pub fn dut(&self) -> DesignUnderTest {
+        DesignUnderTest::new(self.hierarchy, self.renumber)
+    }
+
+    /// The design-under-test at `capacity` warp-registers (Table-2
+    /// designs scale banks with capacity).
+    pub fn dut_with_capacity(&self, capacity: usize) -> DesignUnderTest {
+        self.dut().with_capacity(capacity)
+    }
+}
+
+/// The canonical registry, in figure/presentation order.
+pub const REGISTRY: &[PolicyPoint] = &[
+    PolicyPoint {
+        name: "BL",
+        hierarchy: HierarchyKind::Baseline,
+        renumber: false,
+        figure_column: true,
+        latency_factors: &[1.0],
+        blurb: "conventional non-cached register file (RF$ capacity folded in)",
+    },
+    PolicyPoint {
+        name: "RFC",
+        hierarchy: HierarchyKind::Rfc,
+        renumber: false,
+        figure_column: true,
+        latency_factors: &[1.0],
+        blurb: "hardware register-file cache, FIFO + write-back (Gebhart ISCA'11)",
+    },
+    PolicyPoint {
+        name: "SHRF",
+        hierarchy: HierarchyKind::Shrf,
+        renumber: false,
+        figure_column: false,
+        latency_factors: &[1.0],
+        blurb: "software-managed strand-scoped partitions (Gebhart MICRO'11)",
+    },
+    PolicyPoint {
+        name: "LTRF",
+        hierarchy: HierarchyKind::Ltrf { plus: true },
+        renumber: false,
+        figure_column: true,
+        latency_factors: &[1.0, 6.3],
+        blurb: "register-interval prefetching + liveness bit-vector (this paper)",
+    },
+    PolicyPoint {
+        name: "LTRF_conf",
+        hierarchy: HierarchyKind::Ltrf { plus: true },
+        renumber: true,
+        figure_column: true,
+        latency_factors: &[6.3],
+        blurb: "LTRF compiled with the §4 bank-aware register renumbering",
+    },
+    PolicyPoint {
+        name: "CARF",
+        hierarchy: HierarchyKind::Carf,
+        renumber: false,
+        figure_column: false,
+        latency_factors: &[1.0, 6.3],
+        blurb: "compiler-assisted RF cache: on-demand fill, dead-bit-directed eviction \
+                (Shoushtary et al.)",
+    },
+];
+
+/// Look a policy up by name, case-insensitively. Accepts the CLI
+/// spellings: `bl`, `rfc`, `shrf`, `ltrf`, `ltrf+` (alias of LTRF — the
+/// registered LTRF point is the full paper design incl. the liveness
+/// bit-vector), `ltrf_conf`/`ltrf-conf`, `carf`.
+pub fn by_name(name: &str) -> Option<&'static PolicyPoint> {
+    let lower = name.to_ascii_lowercase().replace('-', "_");
+    let canon = match lower.as_str() {
+        "ltrf+" => "ltrf",
+        other => other,
+    };
+    REGISTRY.iter().find(|p| p.name.to_ascii_lowercase() == canon)
+}
+
+/// The registry entry matching a `(hierarchy, renumber)` pair, if that
+/// pair is a registered comparison point (ablation flavors like
+/// `Ltrf { plus: false }` are deliberately not registered).
+pub fn find(hierarchy: HierarchyKind, renumber: bool) -> Option<&'static PolicyPoint> {
+    REGISTRY.iter().find(|p| p.hierarchy == hierarchy && p.renumber == renumber)
+}
+
+/// The §6 normalization point (BL @ 1×, 256KB + folded RF$ capacity).
+pub fn baseline() -> &'static PolicyPoint {
+    &REGISTRY[0]
+}
+
+/// The classic comparison columns (Fig. 14/15 order) at `capacity`.
+pub fn comparison_points(capacity: usize) -> Vec<(&'static str, DesignUnderTest)> {
+    REGISTRY
+        .iter()
+        .filter(|p| p.figure_column)
+        .map(|p| (p.name, p.dut_with_capacity(capacity)))
+        .collect()
+}
+
+/// Every registered policy at `capacity` — the full sweep the oracles,
+/// snapshots, and benches cover (a superset of the figure columns).
+pub fn all_points(capacity: usize) -> Vec<(&'static str, DesignUnderTest)> {
+    REGISTRY.iter().map(|p| (p.name, p.dut_with_capacity(capacity))).collect()
+}
+
+/// The design × latency matrix: every registered policy at each of its
+/// registered latency factors, labeled `NAME@FACTOR`. `warps_per_sm`
+/// shrinks the contexts for CI-budgeted consumers (the oracles use 16).
+pub fn design_latency_matrix(warps_per_sm: Option<usize>) -> Vec<(String, DesignUnderTest, f64)> {
+    let mut out = Vec::new();
+    for p in REGISTRY {
+        for &factor in p.latency_factors {
+            let mut dut = p.dut();
+            if let Some(w) = warps_per_sm {
+                dut.warps_per_sm = w;
+            }
+            out.push((format!("{}@{factor:.1}", p.name), dut, factor));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_lookup_roundtrips() {
+        let names: std::collections::HashSet<_> = REGISTRY.iter().map(|p| p.name).collect();
+        assert_eq!(names.len(), REGISTRY.len());
+        for p in REGISTRY {
+            let found = by_name(p.name).unwrap();
+            assert_eq!(found.name, p.name);
+            let lower = by_name(&p.name.to_ascii_lowercase()).unwrap();
+            assert_eq!(lower.name, p.name);
+        }
+        // CLI aliases.
+        assert_eq!(by_name("ltrf+").unwrap().name, "LTRF");
+        assert_eq!(by_name("LTRF-conf").unwrap().name, "LTRF_conf");
+        assert_eq!(by_name("carf").unwrap().name, "CARF");
+        assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn every_hierarchy_kind_under_study_is_registered() {
+        // The registry must reach every simulated policy at least once
+        // (Ltrf { plus: false } is the §3.2 ablation flavor of the LTRF
+        // point, not a separate comparison design).
+        for kind in HierarchyKind::ALL {
+            let covered = match kind {
+                HierarchyKind::Ltrf { plus: false } => {
+                    REGISTRY.iter().any(|p| matches!(p.hierarchy, HierarchyKind::Ltrf { .. }))
+                }
+                k => REGISTRY.iter().any(|p| p.hierarchy == k),
+            };
+            assert!(covered, "{} missing from the registry", kind.name());
+        }
+    }
+
+    #[test]
+    fn find_matches_registered_pairs_only() {
+        assert_eq!(find(HierarchyKind::Baseline, false).unwrap().name, "BL");
+        assert_eq!(find(HierarchyKind::Ltrf { plus: true }, false).unwrap().name, "LTRF");
+        assert_eq!(find(HierarchyKind::Ltrf { plus: true }, true).unwrap().name, "LTRF_conf");
+        assert_eq!(find(HierarchyKind::Carf, false).unwrap().name, "CARF");
+        assert!(find(HierarchyKind::Ltrf { plus: false }, false).is_none());
+        assert!(find(HierarchyKind::Baseline, true).is_none());
+    }
+
+    #[test]
+    fn comparison_points_keep_figure_order_and_columns() {
+        let pts = comparison_points(2048);
+        let names: Vec<_> = pts.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["BL", "RFC", "LTRF", "LTRF_conf"], "Fig. 14 column order");
+        let all = all_points(2048);
+        assert_eq!(all.len(), REGISTRY.len());
+        // Capacity application matches DesignUnderTest::with_capacity.
+        let big = comparison_points(16384);
+        assert_eq!(big[0].1.capacity, 16384);
+        assert_eq!(big[0].1.mrf_banks, 128);
+    }
+
+    #[test]
+    fn matrix_expands_latency_factors_in_registry_order() {
+        let m = design_latency_matrix(Some(16));
+        let labels: Vec<_> = m.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            labels,
+            [
+                "BL@1.0",
+                "RFC@1.0",
+                "SHRF@1.0",
+                "LTRF@1.0",
+                "LTRF@6.3",
+                "LTRF_conf@6.3",
+                "CARF@1.0",
+                "CARF@6.3"
+            ]
+        );
+        assert!(m.iter().all(|(_, d, _)| d.warps_per_sm == 16));
+        assert!(design_latency_matrix(None).iter().all(|(_, d, _)| d.warps_per_sm == 64));
+    }
+
+    #[test]
+    fn baseline_is_the_normalization_point() {
+        let b = baseline();
+        assert_eq!(b.name, "BL");
+        assert_eq!(b.hierarchy, HierarchyKind::Baseline);
+        assert!(!b.renumber);
+    }
+}

@@ -517,9 +517,10 @@ impl Engine {
         st
     }
 
-    /// The §6 normalization point: BL @ 1× latency, 256KB (+16KB folded).
+    /// The §6 normalization point: BL @ 1× latency, 256KB (+16KB folded),
+    /// as registered in the design registry.
     pub fn baseline_ipc(&mut self, spec: &'static WorkloadSpec) -> f64 {
-        self.stats(spec, &DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0).ipc()
+        self.stats(spec, &super::designs::baseline().dut(), 1.0).ipc()
     }
 
     /// Compile (or fetch) a kernel through the shared compile cache.
@@ -583,11 +584,27 @@ impl Engine {
         self.lookups
     }
 
+    /// Registered policies actually swept this run, vs the registry size:
+    /// `(covered, registered)`. A policy registered in
+    /// [`super::designs::REGISTRY`] but never simulated shows up as a gap
+    /// here — the CI engine-smoke grep keys on the printed ratio to catch
+    /// "registered but not swept" regressions.
+    pub fn design_coverage(&self) -> (usize, usize) {
+        let mut seen = std::collections::HashSet::new();
+        for key in self.results.map.keys() {
+            if let Some(p) = super::designs::find(key.hierarchy, key.renumber) {
+                seen.insert(p.name);
+            }
+        }
+        (seen.len(), super::designs::REGISTRY.len())
+    }
+
     /// One-line execution report (printed by the CLI after `execute`).
     pub fn summary(&self) -> String {
         let report = self.compile_cache.report();
+        let (covered, registered) = self.design_coverage();
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate)",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered",
             self.lookups,
             self.sims_run,
             report.compile_hits,
@@ -595,6 +612,8 @@ impl Engine {
             report.analysis_hits,
             report.analysis_misses,
             report.analysis_hit_rate() * 100.0,
+            covered,
+            registered,
         )
     }
 }
@@ -704,6 +723,30 @@ mod tests {
         );
         assert!(r.analysis_hit_rate() > 0.0);
         assert!(plain.renumbering.is_none() && conf.renumbering.is_some());
+    }
+
+    #[test]
+    fn design_coverage_counts_registered_policies_only() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(2);
+        assert_eq!(eng.design_coverage(), (0, crate::coordinator::designs::REGISTRY.len()));
+        eng.plan_phase();
+        // Two registered points + one unregistered ablation flavor.
+        eng.request(spec, &bl(), 1.0);
+        eng.request(spec, &crate::coordinator::designs::by_name("CARF").unwrap().dut(), 1.0);
+        eng.request(spec, &DesignUnderTest::new(HierarchyKind::Ltrf { plus: false }, false), 1.0);
+        eng.execute();
+        let (covered, registered) = eng.design_coverage();
+        assert_eq!(covered, 2, "unregistered ablation flavors must not count");
+        assert_eq!(registered, crate::coordinator::designs::REGISTRY.len());
+        assert!(eng.summary().contains(&format!("design points 2/{registered} registered")));
+        // Sweeping the whole registry closes the gap.
+        eng.plan_phase();
+        for (_, dut) in crate::coordinator::designs::all_points(2048) {
+            eng.request(spec, &dut, 1.0);
+        }
+        eng.execute();
+        assert_eq!(eng.design_coverage(), (registered, registered));
     }
 
     #[test]

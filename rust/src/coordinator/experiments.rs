@@ -144,31 +144,20 @@ impl DesignUnderTest {
     }
 }
 
-/// The §6 comparison points, in figure order. The paper's "LTRF" is the
-/// full basic design (WCB liveness bit-vector included — Fig. 12);
-/// LTRF_conf adds the §4 renumbering pass.
+/// The §6 comparison points, in figure order — a thin view over the
+/// design registry's figure columns ([`super::designs::comparison_points`];
+/// the registry is the single place a policy is declared). The paper's
+/// "LTRF" is the full basic design (WCB liveness bit-vector included —
+/// Fig. 12); LTRF_conf adds the §4 renumbering pass.
 pub fn comparison_points(capacity: usize) -> Vec<(&'static str, DesignUnderTest)> {
-    vec![
-        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(capacity)),
-        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false).with_capacity(capacity)),
-        (
-            "LTRF",
-            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)
-                .with_capacity(capacity),
-        ),
-        (
-            "LTRF_conf",
-            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
-                .with_capacity(capacity),
-        ),
-    ]
+    super::designs::comparison_points(capacity)
 }
 
 /// Baseline IPC for normalization: BL @ 1× latency, 256KB (+16KB).
 /// Standalone (uncached) variant for tests/examples; drivers use
 /// [`Engine::baseline_ipc`], which memoizes it as a shared job.
 pub fn baseline_ipc(spec: &WorkloadSpec) -> f64 {
-    DesignUnderTest::new(HierarchyKind::Baseline, false).run(spec, 1.0).ipc()
+    super::designs::baseline().dut().run(spec, 1.0).ipc()
 }
 
 // ---------------------------------------------------------------------
@@ -309,7 +298,7 @@ pub fn fig3(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "Fig 3 — IPC with an 8x register file, normalized to 256KB baseline",
         &["workload", "class", "(a) ideal 8x", "(b) TFET 8x @5.3x"],
     );
-    let big = DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(16384);
+    let big = super::designs::baseline().dut_with_capacity(16384);
     let mut ideals = Vec::new();
     let mut tfets = Vec::new();
     for spec in ctx.workloads() {
@@ -342,8 +331,8 @@ pub fn fig4(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "Fig 4 — register cache hit rate (16KB)",
         &["workload", "HW cache [49]", "SW cache [50]"],
     );
-    let rfc = DesignUnderTest::new(HierarchyKind::Rfc, false);
-    let shrf = DesignUnderTest::new(HierarchyKind::Shrf, false);
+    let rfc = super::designs::by_name("RFC").unwrap().dut();
+    let shrf = super::designs::by_name("SHRF").unwrap().dut();
     let mut hws = Vec::new();
     let mut sws = Vec::new();
     for spec in ctx.workloads() {
@@ -692,17 +681,17 @@ pub fn fig19(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["design", "1x", "2x", "3x", "4x", "5x", "6x", "8x"],
     );
     let factors = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0];
-    let mut ltrf_strand = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    // BL/RFC/SHRF come from the registry (presentation order); the two
+    // LTRF rows are the §7.6 mode ablation of the registered LTRF point.
+    let reg = |n: &str| super::designs::by_name(n).unwrap().dut();
+    let mut ltrf_strand = reg("LTRF");
     ltrf_strand.mode_override = Some(SubgraphMode::Strands);
     let designs: Vec<(&str, DesignUnderTest)> = vec![
-        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false)),
-        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false)),
-        ("SHRF", DesignUnderTest::new(HierarchyKind::Shrf, false)),
+        ("BL", reg("BL")),
+        ("RFC", reg("RFC")),
+        ("SHRF", reg("SHRF")),
         ("LTRF (strand)", ltrf_strand),
-        (
-            "LTRF (register-interval)",
-            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false),
-        ),
+        ("LTRF (register-interval)", reg("LTRF")),
     ];
     for (name, dut) in designs {
         let mut cells = vec![name.to_string()];
@@ -801,7 +790,7 @@ pub fn overheads(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     // Power: activity-weighted model (timing::power) on a representative
     // run at the baseline MRF size/technology (the §5.3 comparison).
     let spec = suite::workload_by_name("gaussian").unwrap();
-    let rep = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true);
+    let rep = super::designs::by_name("LTRF_conf").unwrap().dut();
     let st = eng.stats(spec, &rep, 1.0);
     let power = crate::timing::power::ltrf_power(&st, 1.0, Tech::HpSram).total();
     t.row(vec![
@@ -810,8 +799,7 @@ pub fn overheads(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "-23%".into(),
     ]);
     // And the headline design point: DWM at 8x capacity.
-    let rep7 = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
-        .with_capacity(16384);
+    let rep7 = super::designs::by_name("LTRF_conf").unwrap().dut_with_capacity(16384);
     let st7 = eng.stats(spec, &rep7, 6.3);
     let p7 = crate::timing::power::ltrf_power(&st7, 8.0, Tech::Dwm).total();
     t.row(vec![
@@ -1058,7 +1046,7 @@ pub fn headline(ctx: &ExperimentContext, eng: &mut Engine) -> (f64, Table) {
     let design = crate::timing::DESIGN_7_DWM;
     let factor = design.latency();
     let cap = design.warp_registers();
-    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true).with_capacity(cap);
+    let dut = super::designs::by_name("LTRF_conf").unwrap().dut_with_capacity(cap);
     let mut t = Table::new(
         format!("Headline — LTRF_conf on config #7 (DWM, 8x capacity, {factor:.1}x latency)"),
         &["workload", "baseline IPC", "LTRF_conf IPC", "speedup"],

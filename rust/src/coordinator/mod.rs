@@ -1,8 +1,10 @@
 //! Experiment coordination: the declarative parallel experiment engine
 //! (job matrix + work-stealing executor + compile/result memoization),
+//! the design registry (the canonical §6 policy comparison points),
 //! parallel sweep primitives, and the per-table/figure drivers that
 //! regenerate the paper's evaluation (§7).
 
+pub mod designs;
 pub mod engine;
 pub mod experiments;
 pub mod sweep;

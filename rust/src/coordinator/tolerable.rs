@@ -14,9 +14,10 @@ use crate::workloads::WorkloadSpec;
 /// serial early-exit scan; latency-tolerant designs plan to 8×, where the
 /// figure tops out.
 fn plan_horizon(dut: &DesignUnderTest) -> f64 {
-    match dut.hierarchy {
-        crate::sim::HierarchyKind::Baseline | crate::sim::HierarchyKind::Rfc => 4.0,
-        _ => 8.0,
+    if dut.hierarchy.latency_tolerant() {
+        8.0
+    } else {
+        4.0
     }
 }
 

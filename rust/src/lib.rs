@@ -15,13 +15,15 @@
 //! * [`timing`] — the CACTI/NVSim stand-in: analytical register-file bank
 //!   and interconnect models, and the paper's Table-2 design points;
 //! * [`sim`] — a cycle-level GPU SM simulator (two-level warp scheduler,
-//!   operand collectors, banked register files, the LTRF/RFC/SHRF register
-//!   file hierarchies, and a latency/bandwidth memory system);
+//!   operand collectors, banked register files, the pluggable
+//!   BL/RFC/SHRF/LTRF/CARF register-file policy models
+//!   ([`sim::hierarchy`]), and a latency/bandwidth memory system);
 //! * [`workloads`] — the 14-kernel synthetic benchmark suite;
 //! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   prefetch-evaluation artifact and runs it from the sweep path;
-//! * [`coordinator`] — experiment drivers regenerating every table and
-//!   figure in the paper's evaluation;
+//! * [`coordinator`] — the design registry (the canonical policy
+//!   comparison points) and experiment drivers regenerating every table
+//!   and figure in the paper's evaluation;
 //! * [`scenario`] — differential scenario engine: seeded kernel fuzzing,
 //!   cross-config oracles (including backend equivalence), failure
 //!   shrinking, and the golden-stats regression snapshot;

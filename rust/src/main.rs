@@ -3,10 +3,11 @@
 //! Every table/figure in the paper's evaluation is a subcommand; `all`
 //! regenerates the full set (EXPERIMENTS.md records the outputs).
 
+use ltrf::coordinator::designs;
 use ltrf::coordinator::engine::{run_point, two_phase, CfgTweaks, Engine};
-use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
+use ltrf::coordinator::experiments::{self as exp, ExperimentContext};
 use ltrf::report::Table;
-use ltrf::sim::{HierarchyKind, SimBackend};
+use ltrf::sim::SimBackend;
 use ltrf::workloads::suite;
 use std::path::PathBuf;
 
@@ -40,8 +41,12 @@ Tool commands:
   compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]
               Compile + dump intervals; --explain prints the pass DAG,
               per-pass wall time, and analysis-cache hits (cold + warm)
-  run <workload> [--hierarchy BL|RFC|SHRF|LTRF|LTRF+] [--latency F]
+  run <workload> [--hierarchy BL|RFC|SHRF|LTRF|LTRF_conf|CARF] [--latency F]
                  [--capacity WARP_REGS] [--renumber]  Simulate one workload
+  designs [--sweep]
+              List the design registry (every registered RF policy); with
+              --sweep, simulate one workload across all of them and print
+              IPC + traffic per policy
   workloads   List the benchmark suite
   trace <workload> [--cycles N] [--hierarchy H] [--latency F]
               Per-cycle warp-state timeline (debugging)
@@ -348,6 +353,62 @@ fn main() {
             }
             println!("wrote {}", path.display());
         }
+        "designs" => {
+            let mut t = Table::new(
+                "Design registry — the canonical §6 policy comparison points",
+                &["name", "hierarchy", "subgraphs", "compile mode", "latencies", "description"],
+            );
+            for p in designs::REGISTRY {
+                t.row(vec![
+                    p.name.into(),
+                    p.hierarchy.name().into(),
+                    if p.hierarchy.uses_subgraphs() { "yes".into() } else { "no".into() },
+                    format!(
+                        "{:?}{}",
+                        p.hierarchy.subgraph_mode(),
+                        if p.renumber { " + renumber" } else { "" }
+                    ),
+                    p.latency_factors
+                        .iter()
+                        .map(|f| format!("{f:.1}x"))
+                        .collect::<Vec<_>>()
+                        .join(" "),
+                    p.blurb.into(),
+                ]);
+            }
+            print(&t);
+            if flag("--sweep") {
+                // Sweep one workload across every registered policy so the
+                // engine's design-point coverage reaches the registry size
+                // (`--engine-stats` prints the ratio; CI greps it).
+                let spec = suite::workload_by_name("kmeans").expect("kmeans");
+                let mut s = Table::new(
+                    "Registry sweep — kmeans @ 1.0x",
+                    &["name", "IPC", "RF$ accesses", "MRF accesses", "regs moved", "power vs BL"],
+                );
+                eng.plan_phase();
+                for (_, dut) in designs::all_points(2048) {
+                    eng.request(spec, &dut, 1.0);
+                }
+                eng.execute();
+                for (name, dut) in designs::all_points(2048) {
+                    let st = eng.stats(spec, &dut, 1.0);
+                    let model = ltrf::sim::model_for(dut.hierarchy);
+                    let tr = model.traffic(&st);
+                    let power = model.power(&st, 1.0, ltrf::timing::Tech::HpSram).total();
+                    s.row(vec![
+                        name.into(),
+                        format!("{:.3}", st.ipc()),
+                        tr.cache_accesses.to_string(),
+                        tr.mrf_accesses.to_string(),
+                        tr.regs_moved.to_string(),
+                        format!("{:.2}", power),
+                    ]);
+                }
+                print(&s);
+            }
+            finish!();
+        }
         "workloads" => {
             let mut t = Table::new(
                 "Benchmark suite",
@@ -477,18 +538,15 @@ fn main() {
                 eprintln!("unknown workload `{name}` (see `ltrf workloads`)");
                 std::process::exit(1);
             };
-            let hierarchy = match opt("--hierarchy").as_deref().unwrap_or("LTRF") {
-                "BL" => HierarchyKind::Baseline,
-                "RFC" => HierarchyKind::Rfc,
-                "SHRF" => HierarchyKind::Shrf,
-                "LTRF" | "LTRF+" => HierarchyKind::Ltrf { plus: true },
-                other => {
-                    eprintln!("unknown hierarchy `{other}`");
-                    std::process::exit(1);
-                }
+            let hname = opt("--hierarchy").unwrap_or_else(|| "LTRF".into());
+            let Some(policy) = designs::by_name(&hname) else {
+                eprintln!("unknown hierarchy `{hname}` (see `ltrf designs`)");
+                std::process::exit(1);
             };
+            let hierarchy = policy.hierarchy;
             let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(1.0);
-            let mut dut = DesignUnderTest::new(hierarchy, flag("--renumber"));
+            let mut dut = policy.dut();
+            dut.renumber = policy.renumber || flag("--renumber");
             if let Some(cap) = opt("--capacity").and_then(|s| s.parse().ok()) {
                 dut = dut.with_capacity(cap);
             }
@@ -523,12 +581,11 @@ fn main() {
                 eprintln!("unknown workload `{name}`");
                 std::process::exit(1);
             };
-            let hierarchy = match opt("--hierarchy").as_deref().unwrap_or("LTRF") {
-                "BL" => HierarchyKind::Baseline,
-                "RFC" => HierarchyKind::Rfc,
-                "SHRF" => HierarchyKind::Shrf,
-                _ => HierarchyKind::Ltrf { plus: true },
-            };
+            let hierarchy = opt("--hierarchy")
+                .as_deref()
+                .and_then(designs::by_name)
+                .map(|p| p.hierarchy)
+                .unwrap_or(ltrf::sim::HierarchyKind::Ltrf { plus: true });
             let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(6.3);
             let max: u64 = opt("--cycles").and_then(|s| s.parse().ok()).unwrap_or(200);
             let cfg = ltrf::sim::SimConfig::with_hierarchy(hierarchy)

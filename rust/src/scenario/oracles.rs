@@ -14,7 +14,7 @@ use crate::compiler::{compile, CompileOptions, CompiledKernel, PassManager};
 use crate::coordinator::engine::{run_kernel_point, CfgTweaks};
 use crate::coordinator::experiments::DesignUnderTest;
 use crate::ir::{execute, parser, Kernel};
-use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
+use crate::sim::{gpu, SimBackend, SimConfig, Stats};
 use crate::util::bitset::MAX_REGS;
 use std::sync::Arc;
 
@@ -130,27 +130,14 @@ fn compile_variants() -> Vec<CompileOptions> {
     ]
 }
 
-/// The scenario simulation matrix. Small warp counts keep a full fuzz run
-/// (hundreds of seeds x this matrix) inside a CI budget while still
-/// exercising the two-level scheduler, all hierarchies, and a slow-MRF
-/// point.
-fn sim_matrix() -> Vec<(&'static str, DesignUnderTest, f64)> {
-    fn small(mut d: DesignUnderTest) -> DesignUnderTest {
-        d.warps_per_sm = 16;
-        d
-    }
-    vec![
-        ("BL@1.0", small(DesignUnderTest::new(HierarchyKind::Baseline, false)), 1.0),
-        ("RFC@1.0", small(DesignUnderTest::new(HierarchyKind::Rfc, false)), 1.0),
-        ("SHRF@1.0", small(DesignUnderTest::new(HierarchyKind::Shrf, false)), 1.0),
-        ("LTRF@1.0", small(DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)), 1.0),
-        ("LTRF@6.3", small(DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false)), 6.3),
-        (
-            "LTRF_conf@6.3",
-            small(DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)),
-            6.3,
-        ),
-    ]
+/// The scenario simulation matrix: every policy in the design registry
+/// ([`crate::coordinator::designs`]) at its registered latency factors —
+/// register a policy once and every sim-level oracle sweeps it. Small
+/// warp counts (16/SM) keep a full fuzz run (hundreds of seeds x this
+/// matrix) inside a CI budget while still exercising the two-level
+/// scheduler, all hierarchies, and the slow-MRF points.
+pub fn sim_matrix() -> Vec<(String, DesignUnderTest, f64)> {
+    crate::coordinator::designs::design_latency_matrix(Some(16))
 }
 
 /// Run one scenario point on `kernel` through the experiment engine's
@@ -452,10 +439,8 @@ fn oracle_conservation(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
 /// cross-SM ordering, on the cheapest and the most latency-stressed
 /// designs. Kept small — each point costs ~2 single-SM sims.
 fn multi_sm_points() -> Vec<(&'static str, DesignUnderTest, f64)> {
-    let mut pts = vec![
-        ("BL@1.0", DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0),
-        ("LTRF@6.3", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 6.3),
-    ];
+    let reg = |n: &str| crate::coordinator::designs::by_name(n).unwrap().dut();
+    let mut pts = vec![("BL@1.0", reg("BL"), 1.0), ("LTRF@6.3", reg("LTRF"), 6.3)];
     for p in &mut pts {
         p.1.warps_per_sm = 16;
         p.1.num_sms = 2;
@@ -521,7 +506,7 @@ fn oracle_backend_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), Str
 }
 
 fn oracle_timing_invariance(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
-    let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let mut dut = crate::coordinator::designs::by_name("LTRF").unwrap().dut();
     dut.warps_per_sm = 16;
     let (fast, _, _, _) = sim_point(k, &dut, 1.0);
     let (slow, _, _, _) = sim_point(k, &dut, 6.3);
@@ -536,7 +521,7 @@ fn oracle_timing_invariance(k: &Kernel, cs: &mut CheckStats) -> Result<(), Strin
 }
 
 fn oracle_tlp_monotonic(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
-    let mut small = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let mut small = crate::coordinator::designs::by_name("LTRF").unwrap().dut();
     small.warps_per_sm = 32;
     let mut big = small.clone();
     small.capacity = 512;
@@ -557,7 +542,7 @@ fn oracle_tlp_monotonic(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
 }
 
 fn oracle_rerun_determinism(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
-    let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true);
+    let mut dut = crate::coordinator::designs::by_name("LTRF_conf").unwrap().dut();
     dut.warps_per_sm = 16;
     let (a, _, _, _) = sim_point(k, &dut, 6.3);
     let (b, _, _, _) = sim_point(k, &dut, 6.3);
@@ -584,6 +569,32 @@ mod tests {
             assert_eq!(cs.checks, OracleKind::ALL.len() as u64);
             assert!(cs.sims > 0);
         }
+    }
+
+    #[test]
+    fn sim_matrix_enumerates_the_design_registry() {
+        // The oracle matrix is registry-driven: every registered policy
+        // appears at each of its registered latency factors, and nothing
+        // else does (no privately re-declared design list survives).
+        let m = sim_matrix();
+        let mut expect = 0;
+        for p in crate::coordinator::designs::REGISTRY {
+            for factor in p.latency_factors {
+                expect += 1;
+                assert!(
+                    m.iter().any(|(n, d, f)| {
+                        n.split('@').next() == Some(p.name)
+                            && d.hierarchy == p.hierarchy
+                            && d.renumber == p.renumber
+                            && f == factor
+                    }),
+                    "{}@{factor} missing from the oracle matrix",
+                    p.name
+                );
+            }
+        }
+        assert_eq!(m.len(), expect, "matrix carries exactly the registered points");
+        assert!(m.iter().all(|(_, d, _)| d.warps_per_sm == 16), "CI-budget warp count");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use crate::coordinator::engine::{run_point, CfgTweaks, CompileCache};
 use crate::coordinator::experiments::DesignUnderTest;
 use crate::coordinator::sweep::steal_map;
-use crate::sim::{HierarchyKind, Stats};
+use crate::sim::Stats;
 use crate::workloads::{suite, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -67,8 +67,11 @@ pub struct Snapshot {
     pub entries: BTreeMap<String, Vec<(&'static str, u64)>>,
 }
 
-/// The snapshot matrix: each suite workload under the §6 comparison
-/// designs at the latency factors the headline figures use.
+/// The snapshot matrix: each suite workload under every policy of the
+/// design registry ([`crate::coordinator::designs`]) at its registered
+/// latency factors — registering a policy automatically arms golden-stats
+/// coverage for it — plus one multi-SM LTRF point for the backend thread
+/// gate.
 pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, DesignUnderTest, f64)> {
     let workloads: Vec<&'static WorkloadSpec> = if quick {
         ["kmeans", "bfs", "gaussian", "pathfinder", "cfd"]
@@ -78,22 +81,21 @@ pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, Desig
     } else {
         suite::suite()
     };
+    let mut configs: Vec<(String, DesignUnderTest, f64)> = crate::coordinator::designs::REGISTRY
+        .iter()
+        .flat_map(|p| p.latency_factors.iter().map(|&f| (p.name.to_string(), p.dut(), f)))
+        .collect();
     // The 4-SM point exists so backend comparisons under `--sim-threads 4`
     // actually reach the threaded step phase: single-SM points clamp
-    // sim_threads to 1, which would make the CI thread gate vacuous.
+    // sim_threads to 1, which would make the CI thread gate vacuous. It is
+    // a threading-coverage point, not a design, so it lives here and not
+    // in the registry.
     let ltrf_4sm = {
-        let mut d = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        let mut d = crate::coordinator::designs::by_name("LTRF").expect("LTRF registered").dut();
         d.num_sms = 4;
         d
     };
-    let configs: Vec<(&str, DesignUnderTest, f64)> = vec![
-        ("BL", DesignUnderTest::new(HierarchyKind::Baseline, false), 1.0),
-        ("RFC", DesignUnderTest::new(HierarchyKind::Rfc, false), 1.0),
-        ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 1.0),
-        ("LTRF", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false), 6.3),
-        ("LTRF_conf", DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true), 6.3),
-        ("LTRF_4sm", ltrf_4sm, 6.3),
-    ];
+    configs.push(("LTRF_4sm".to_string(), ltrf_4sm, 6.3));
     let mut out = Vec::new();
     for spec in workloads {
         for (name, dut, factor) in &configs {
@@ -278,8 +280,23 @@ mod tests {
 
     #[test]
     fn matrix_covers_suite_and_configs() {
-        assert_eq!(snapshot_points(true).len(), 5 * 6);
-        assert_eq!(snapshot_points(false).len(), 14 * 6);
+        // Per workload: every registered (design, latency) point + the
+        // multi-SM thread-gate point.
+        let registry_points: usize = crate::coordinator::designs::REGISTRY
+            .iter()
+            .map(|p| p.latency_factors.len())
+            .sum();
+        let per_workload = registry_points + 1;
+        assert_eq!(per_workload, 9, "6 designs over 8 latency points + LTRF_4sm");
+        assert_eq!(snapshot_points(true).len(), 5 * per_workload);
+        assert_eq!(snapshot_points(false).len(), 14 * per_workload);
+        // Every registered design appears in the keys (single-source
+        // check: registering a policy arms its golden coverage).
+        let points = snapshot_points(true);
+        for p in crate::coordinator::designs::REGISTRY {
+            let tag = format!("|{}|", p.name);
+            assert!(points.iter().any(|(k, _, _, _)| k.contains(&tag)), "{} missing", p.name);
+        }
         // At least one point must be multi-SM, or the `--sim-threads`
         // backend gates never exercise the threaded step phase.
         assert!(snapshot_points(true).iter().any(|(_, _, d, _)| d.num_sms > 1));

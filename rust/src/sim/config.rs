@@ -19,9 +19,26 @@ pub enum HierarchyKind {
     /// LTRF+ liveness filtering (§3.2). (LTRF_conf is LTRF compiled with
     /// `CompileOptions::renumber = true`.)
     Ltrf { plus: bool },
+    /// Compiler-assisted register-file cache, Shoushtary et al.
+    /// (arXiv:2310.17501): no prefetch, on-demand fill, allocate on
+    /// write, liveness-directed eviction via the compiler's dead-operand
+    /// bits (the §3.2 analysis LTRF+ consumes).
+    Carf,
 }
 
 impl HierarchyKind {
+    /// Every simulated policy, in registry/presentation order. The
+    /// canonical comparison matrix (names, compile flags, latency points)
+    /// lives in `coordinator::designs`; this list only spans the enum.
+    pub const ALL: [HierarchyKind; 6] = [
+        HierarchyKind::Baseline,
+        HierarchyKind::Rfc,
+        HierarchyKind::Shrf,
+        HierarchyKind::Ltrf { plus: false },
+        HierarchyKind::Ltrf { plus: true },
+        HierarchyKind::Carf,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             HierarchyKind::Baseline => "BL",
@@ -29,6 +46,7 @@ impl HierarchyKind {
             HierarchyKind::Shrf => "SHRF",
             HierarchyKind::Ltrf { plus: false } => "LTRF",
             HierarchyKind::Ltrf { plus: true } => "LTRF+",
+            HierarchyKind::Carf => "CARF",
         }
     }
 
@@ -43,6 +61,14 @@ impl HierarchyKind {
             HierarchyKind::Shrf => SubgraphMode::Strands,
             _ => SubgraphMode::RegisterIntervals,
         }
+    }
+
+    /// Does the policy keep enough operand traffic off the MRF to
+    /// tolerate multi-cycle MRF latency (Fig. 15's high-tolerance band)?
+    /// BL/RFC collapse by 2–3×; every software-managed cache scans to the
+    /// top of the figure. Drives the tolerable-latency planning horizon.
+    pub fn latency_tolerant(self) -> bool {
+        !matches!(self, HierarchyKind::Baseline | HierarchyKind::Rfc)
     }
 }
 
@@ -298,11 +324,27 @@ mod tests {
     fn hierarchy_names_and_modes() {
         assert_eq!(HierarchyKind::Baseline.name(), "BL");
         assert_eq!(HierarchyKind::Ltrf { plus: true }.name(), "LTRF+");
+        assert_eq!(HierarchyKind::Carf.name(), "CARF");
         assert_eq!(
             HierarchyKind::Shrf.subgraph_mode(),
             crate::compiler::SubgraphMode::Strands
         );
+        assert_eq!(
+            HierarchyKind::Carf.subgraph_mode(),
+            crate::compiler::SubgraphMode::RegisterIntervals
+        );
         assert!(!HierarchyKind::Rfc.uses_subgraphs());
         assert!(HierarchyKind::Ltrf { plus: false }.uses_subgraphs());
+        assert!(!HierarchyKind::Carf.uses_subgraphs(), "CARF has no prefetch");
+        // ALL spans the enum exactly once.
+        let names: std::collections::HashSet<_> =
+            HierarchyKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), HierarchyKind::ALL.len());
+        // Latency tolerance splits BL/RFC from the software-managed caches.
+        assert!(!HierarchyKind::Baseline.latency_tolerant());
+        assert!(!HierarchyKind::Rfc.latency_tolerant());
+        for k in [HierarchyKind::Shrf, HierarchyKind::Ltrf { plus: true }, HierarchyKind::Carf] {
+            assert!(k.latency_tolerant(), "{}", k.name());
+        }
     }
 }

@@ -376,12 +376,7 @@ mod tests {
     #[test]
     fn parallel_backend_bit_identical_single_sm() {
         let spec = suite::workload_by_name("kmeans").unwrap();
-        for kind in [
-            HierarchyKind::Baseline,
-            HierarchyKind::Rfc,
-            HierarchyKind::Shrf,
-            HierarchyKind::Ltrf { plus: true },
-        ] {
+        for kind in HierarchyKind::ALL {
             let reference = run_workload(spec, &quick_cfg(kind), false);
             let par_cfg = SimConfig { backend: SimBackend::Parallel, ..quick_cfg(kind) };
             let parallel = run_workload(spec, &par_cfg, false);

@@ -1,18 +1,40 @@
-//! Register-file hierarchies under study (§6 comparison points).
+//! Register-file hierarchies under study (§6 comparison points), as
+//! pluggable policy objects.
 //!
-//! One dispatcher owns the shared timing resources (MRF banks, RF$ banks,
-//! the narrow refill crossbar) and implements the four policies:
+//! The policy space of the paper — what to cache, when to fill, what to
+//! write back — is modeled by the [`HierarchyModel`] trait; every policy
+//! is one implementation sharing the same timing resources
+//! ([`HierarchyResources`]: MRF banks, RF$ banks, the narrow refill
+//! crossbar), so bank-conflict and crossbar modeling is identical across
+//! policies by construction. The SM talks only to the [`RegHierarchy`]
+//! facade; [`model_for`] is the single `HierarchyKind` dispatch site in
+//! the simulator.
 //!
-//! * **BL** — every operand read/write goes to an MRF bank.
-//! * **RFC** — per-warp FIFO hardware cache in front of the MRF
-//!   (Gebhart ISCA'11); no prefetch, write-back victims.
-//! * **SHRF** — compiler-managed partitions scoped to strands (Gebhart
-//!   MICRO'11): on-demand fill, write-back + release at strand exit.
-//! * **LTRF / LTRF+** — this paper: the whole register-interval working
-//!   set is prefetched through the narrow crossbar at interval entry and
-//!   *every* in-interval access hits the RF$ (asserted); LTRF+ filters
-//!   dead registers out of write-back/refetch traffic using the liveness
-//!   bit-vector.
+//! Registered policies:
+//!
+//! * [`BaselineModel`] (**BL**) — every operand read/write goes to an MRF
+//!   bank.
+//! * [`RfcModel`] (**RFC**) — per-warp FIFO hardware cache in front of
+//!   the MRF (Gebhart ISCA'11); no prefetch, write-back victims.
+//! * [`ShrfModel`] (**SHRF**) — compiler-managed partitions scoped to
+//!   strands (Gebhart MICRO'11): on-demand fill, write-back + release at
+//!   strand exit.
+//! * [`LtrfModel`] (**LTRF / LTRF+**) — this paper: the whole
+//!   register-interval working set is prefetched through the narrow
+//!   crossbar at interval entry and *every* in-interval access hits the
+//!   RF$ (asserted); LTRF+ filters dead registers out of
+//!   write-back/refetch traffic using the liveness bit-vector.
+//! * [`CarfModel`] (**CARF**) — compiler-assisted register-file cache
+//!   (Shoushtary et al., arXiv:2310.17501): no prefetch, on-demand fill,
+//!   allocate on write, and liveness-directed eviction driven by the same
+//!   dead-operand bits LTRF+ consumes (dead registers are evicted first
+//!   and never written back — cf. GREENER's liveness-driven RF
+//!   management, arXiv:1709.04697).
+//!
+//! Adding a policy touches exactly three places: a model type here (or in
+//! its own module), one [`model_for`] arm, and one entry in the design
+//! registry (`coordinator::designs`) — every oracle, golden snapshot,
+//! figure driver, bench family, and the CLI picks it up from there.
 
 use super::config::{HierarchyKind, SimConfig};
 use super::regfile::{BankArray, TransferLink};
@@ -20,20 +42,9 @@ use super::stats::Stats;
 use super::warp::WarpSim;
 use crate::compiler::{BankMap, CompiledKernel};
 use crate::ir::Inst;
+use crate::timing::power::{conventional_power, ltrf_power, PowerBreakdown};
+use crate::timing::Tech;
 use crate::util::RegSet;
-
-/// The register-file hierarchy of one SM.
-#[derive(Clone, Debug)]
-pub struct RegHierarchy {
-    pub kind: HierarchyKind,
-    /// Main register file banks (single-ported, non-pipelined).
-    pub mrf: BankArray,
-    /// Register-file-cache banks (#regs-per-interval banks; a warp's
-    /// cached registers are interleaved one per bank — §5.1).
-    pub rf_cache: BankArray,
-    /// Narrow MRF→RF$ refill crossbar (§5.2).
-    pub xbar: TransferLink,
-}
 
 /// What happens when a warp is about to issue from a new block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,10 +55,37 @@ pub enum EntryAction {
     Prefetch { done_at: u64 },
 }
 
-impl RegHierarchy {
+/// Aggregate register-file traffic of a run, as one policy reports it
+/// (the `stats_contrib` hook: drivers and the CLI render per-policy
+/// traffic without matching on the policy enum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Traffic {
+    /// Accesses served by the fast level (RF$).
+    pub cache_accesses: u64,
+    /// Accesses reaching the slow level (MRF), incl. fills/write-backs.
+    pub mrf_accesses: u64,
+    /// Registers moved between the levels (prefetch + write-back).
+    pub regs_moved: u64,
+}
+
+/// The timing resources every policy shares: the banked MRF, the banked
+/// RF$, and the narrow MRF→RF$ refill crossbar (§5.1–5.2). Keeping these
+/// outside the models guarantees bank-conflict and crossbar serialization
+/// is modeled identically for every policy.
+#[derive(Clone, Debug)]
+pub struct HierarchyResources {
+    /// Main register file banks (single-ported, non-pipelined).
+    pub mrf: BankArray,
+    /// Register-file-cache banks (#regs-per-interval banks; a warp's
+    /// cached registers are interleaved one per bank — §5.1).
+    pub rf_cache: BankArray,
+    /// Narrow MRF→RF$ refill crossbar (§5.2).
+    pub xbar: TransferLink,
+}
+
+impl HierarchyResources {
     pub fn new(cfg: &SimConfig) -> Self {
-        RegHierarchy {
-            kind: cfg.hierarchy,
+        HierarchyResources {
             mrf: BankArray::new(
                 cfg.mrf_banks,
                 cfg.mrf_access_cycles,
@@ -65,197 +103,15 @@ impl RegHierarchy {
         }
     }
 
-    // ---------------------------------------------------------------
-    // Operand read path
-    // ---------------------------------------------------------------
-
-    /// Schedule the operand reads of `inst` for `warp`; returns the cycle
-    /// all operands are collected.
-    pub fn read_operands(
-        &mut self,
-        warp: &mut WarpSim,
-        inst: &Inst,
-        now: u64,
-        stats: &mut Stats,
-    ) -> u64 {
-        let mut ready = now + 1; // decode/collect minimum
-        match self.kind {
-            HierarchyKind::Baseline => {
-                for r in inst.uses() {
-                    let t = self.mrf.schedule_reg(r, warp.id, now);
-                    stats.mrf_reads += 1;
-                    ready = ready.max(t);
-                }
-            }
-            HierarchyKind::Rfc => {
-                for r in inst.uses() {
-                    if warp.rfc.contains(r) {
-                        stats.rfc_hits += 1;
-                        stats.cache_reads += 1;
-                        ready = ready.max(now + self.rf_cache.access_cycles as u64);
-                    } else {
-                        // Read misses go straight to the MRF and do NOT
-                        // allocate: the RFC caches *results* (values are
-                        // written, then read back soon) — Gebhart ISCA'11.
-                        stats.rfc_misses += 1;
-                        stats.mrf_reads += 1;
-                        let t = self.mrf.schedule_reg(r, warp.id, now);
-                        ready = ready.max(t);
-                    }
-                }
-            }
-            HierarchyKind::Shrf => {
-                for r in inst.uses() {
-                    if warp.wcb.valid.contains(r) {
-                        stats.rfc_hits += 1;
-                        stats.cache_reads += 1;
-                        let slot = warp.wcb.bank_of(r).unwrap() as usize;
-                        ready = ready.max(self.rf_cache.schedule(slot, now));
-                    } else {
-                        // On-demand fill from the MRF.
-                        stats.rfc_misses += 1;
-                        stats.mrf_reads += 1;
-                        let t = self.mrf.schedule_reg(r, warp.id, now);
-                        let arr = self.xbar.transfer(t);
-                        warp.wcb.allocate(r);
-                        ready = ready.max(arr);
-                    }
-                }
-            }
-            HierarchyKind::Ltrf { .. } => {
-                for r in inst.uses() {
-                    // The central guarantee (§3.1): every in-interval
-                    // access is serviced from the RF$.
-                    debug_assert!(
-                        warp.wcb.valid.contains(r),
-                        "LTRF service guarantee violated: r{r} not resident (warp {}, interval {:?})",
-                        warp.id,
-                        warp.wcb.current_interval
-                    );
-                    stats.cache_reads += 1;
-                    let slot = warp.wcb.bank_of(r).unwrap_or(0) as usize;
-                    ready = ready.max(self.rf_cache.schedule(slot, now));
-                }
-            }
-        }
-        ready
-    }
-
-    /// Schedule the destination write of an instruction completing at
-    /// `done`. Returns the write completion time.
-    pub fn write_dest(
-        &mut self,
-        warp: &mut WarpSim,
-        reg: u16,
-        done: u64,
-        stats: &mut Stats,
-    ) -> u64 {
-        match self.kind {
-            HierarchyKind::Baseline => {
-                stats.mrf_writes += 1;
-                self.mrf.note_write(done)
-            }
-            HierarchyKind::Rfc => {
-                stats.cache_writes += 1;
-                if warp.rfc.insert(reg, true).is_some() {
-                    // Dirty victim written back to the MRF.
-                    stats.mrf_writes += 1;
-                    self.mrf.note_write(done);
-                }
-                done + self.rf_cache.access_cycles as u64
-            }
-            HierarchyKind::Shrf | HierarchyKind::Ltrf { .. } => {
-                stats.cache_writes += 1;
-                warp.wcb.allocate(reg);
-                warp.wcb.dirty.insert(reg);
-                warp.wcb.live.insert(reg);
-                let slot = warp.wcb.bank_of(reg).unwrap_or(0) as usize;
-                let _ = slot;
-                self.rf_cache.note_write(done)
-            }
-        }
-    }
-
-    // ---------------------------------------------------------------
-    // Prefetch-subgraph transitions
-    // ---------------------------------------------------------------
-
-    /// Called when `warp` is about to issue the first instruction of a
-    /// block. Handles interval/strand transitions.
-    pub fn on_block_enter(
-        &mut self,
-        warp: &mut WarpSim,
-        ck: &CompiledKernel,
-        block: usize,
-        now: u64,
-        stats: &mut Stats,
-    ) -> EntryAction {
-        if !self.kind.uses_subgraphs() {
-            return EntryAction::Proceed;
-        }
-        let interval = ck.intervals.block_interval[block];
-        if warp.wcb.current_interval == Some(interval) {
-            return EntryAction::Proceed;
-        }
-        match self.kind {
-            HierarchyKind::Shrf => {
-                // Strand exit: write back dirty registers, release the
-                // partition, fill on demand in the new strand.
-                let dirty = warp.wcb.dirty;
-                for r in dirty.iter() {
-                    self.mrf.schedule_reg_write(r, warp.id, now);
-                    stats.mrf_writes += 1;
-                    stats.writeback_regs += 1;
-                }
-                warp.wcb.release_all();
-                warp.wcb.current_interval = Some(interval);
-                EntryAction::Proceed
-            }
-            HierarchyKind::Ltrf { plus } => {
-                // Write back displaced dirty registers…
-                let new_ws = ck.intervals.intervals[interval].working_set;
-                let mut displaced = warp.wcb.dirty.difference(&new_ws);
-                if plus {
-                    displaced = displaced.intersect(&warp.wcb.live);
-                    stats.dead_regs_skipped +=
-                        (warp.wcb.dirty.difference(&new_ws).len() - displaced.len()) as u64;
-                }
-                for r in displaced.iter() {
-                    self.mrf.schedule_reg_write(r, warp.id, now);
-                    stats.mrf_writes += 1;
-                    stats.writeback_regs += 1;
-                }
-                // …release everything outside the new working set…
-                let stale = warp.wcb.valid.difference(&new_ws);
-                for r in stale.iter() {
-                    warp.wcb.release(r);
-                }
-                // …and prefetch the registers not already resident.
-                let fetch = if plus {
-                    new_ws.difference(&warp.wcb.valid).intersect(&warp.wcb.live)
-                } else {
-                    new_ws.difference(&warp.wcb.valid)
-                };
-                // Dead registers still need RF$ space (allocation without
-                // data movement — §5.2).
-                for r in new_ws.difference(&warp.wcb.valid).iter() {
-                    warp.wcb.allocate(r);
-                }
-                warp.wcb.current_interval = Some(interval);
-                let done_at = self.run_prefetch(&fetch, warp.id, now, stats);
-                if done_at > now {
-                    EntryAction::Prefetch { done_at }
-                } else {
-                    EntryAction::Proceed
-                }
-            }
-            _ => unreachable!(),
-        }
-    }
-
     /// Move `fetch` from the MRF into the RF$ (bank-conflict-serialized
     /// reads + narrow-crossbar transfer). Returns completion time.
-    fn run_prefetch(&mut self, fetch: &RegSet, warp_id: usize, now: u64, stats: &mut Stats) -> u64 {
+    pub fn run_prefetch(
+        &mut self,
+        fetch: &RegSet,
+        warp_id: usize,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
         if fetch.is_empty() {
             return now;
         }
@@ -273,44 +129,701 @@ impl RegHierarchy {
         stats.prefetch_bank_conflicts += delta / self.mrf.occupancy_cycles.max(1) as u64;
         done
     }
+}
 
-    // ---------------------------------------------------------------
-    // Two-level scheduler hooks
-    // ---------------------------------------------------------------
+/// One register-file policy: what to cache, when to fill, what to write
+/// back. Models own no timing state — all of it lives in the shared
+/// [`HierarchyResources`] and the per-warp WCB — so a model is a pure
+/// strategy and cloning a hierarchy just re-instantiates it.
+pub trait HierarchyModel: Send {
+    /// The `HierarchyKind` this model implements.
+    fn kind(&self) -> HierarchyKind;
 
-    /// Warp descheduled on a long-latency miss (§5.2 "Warp Stall").
-    pub fn on_deactivate(&mut self, warp: &mut WarpSim, now: u64, stats: &mut Stats) {
-        match self.kind {
-            HierarchyKind::Baseline => {}
-            HierarchyKind::Rfc => {
-                for r in warp.rfc.flush() {
-                    self.mrf.schedule_reg_write(r, warp.id, now);
-                    stats.mrf_writes += 1;
-                    stats.writeback_regs += 1;
-                }
-            }
-            HierarchyKind::Shrf | HierarchyKind::Ltrf { .. } => {
-                let plus = matches!(self.kind, HierarchyKind::Ltrf { plus: true });
-                // LTRF writes back the whole dirty set; LTRF+ only the
-                // live part.
-                let mut wb = warp.wcb.dirty;
-                if plus {
-                    let dead = wb.difference(&warp.wcb.live);
-                    stats.dead_regs_skipped += dead.len() as u64;
-                    wb = wb.intersect(&warp.wcb.live);
-                }
-                for r in wb.iter() {
-                    self.mrf.schedule_reg_write(r, warp.id, now);
-                    stats.mrf_writes += 1;
-                    stats.writeback_regs += 1;
-                }
-                warp.wcb.release_all();
-            }
-        }
+    /// Schedule the operand reads of `inst` for `warp`; returns the cycle
+    /// all operands are collected.
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64;
+
+    /// Schedule the destination write of an instruction completing at
+    /// `done`. Returns the write completion time.
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64;
+
+    /// Called when `warp` is about to issue the first instruction of a
+    /// block. Handles interval/strand transitions; policies without
+    /// prefetch subgraphs just proceed.
+    fn on_block_entry(
+        &mut self,
+        _res: &mut HierarchyResources,
+        _warp: &mut WarpSim,
+        _ck: &CompiledKernel,
+        _block: usize,
+        _now: u64,
+        _stats: &mut Stats,
+    ) -> EntryAction {
+        EntryAction::Proceed
+    }
+
+    /// Warp **deactivation** hook — the warp was descheduled on a
+    /// long-latency miss (§5.2 "Warp Stall") and its RF$ contents are
+    /// about to be reclaimed; write back / flush here. NOTE despite the
+    /// name symmetry with [`HierarchyModel::on_block_entry`], this does
+    /// NOT fire per basic block: block/strand *transition* work (e.g.
+    /// SHRF's strand-exit write-back) belongs in `on_block_entry`, which
+    /// observes the interval change when the next block issues.
+    fn on_block_exit(
+        &mut self,
+        _res: &mut HierarchyResources,
+        _warp: &mut WarpSim,
+        _now: u64,
+        _stats: &mut Stats,
+    ) {
     }
 
     /// Warp re-entering the active pool. Returns the prefetch completion
     /// cycle if the warp must refetch its working set first.
+    fn on_activate(
+        &mut self,
+        _res: &mut HierarchyResources,
+        _warp: &mut WarpSim,
+        _ck: &CompiledKernel,
+        _now: u64,
+        _stats: &mut Stats,
+    ) -> Option<u64> {
+        None
+    }
+
+    /// Does the policy consume the compiler's dead-operand bits? When
+    /// true, the SM clears the WCB liveness bit of each operand at its
+    /// last use (§3.2) so the policy can skip dead traffic.
+    fn tracks_liveness(&self) -> bool {
+        false
+    }
+
+    /// The policy's traffic contribution to a run's [`Stats`].
+    fn traffic(&self, s: &Stats) -> Traffic {
+        Traffic {
+            cache_accesses: s.cache_reads + s.cache_writes,
+            mrf_accesses: s.mrf_reads + s.mrf_writes,
+            regs_moved: s.prefetch_regs + s.writeback_regs,
+        }
+    }
+
+    /// Activity-based power of a run under this policy, relative to the
+    /// baseline register file (`timing::power`).
+    fn power(&self, s: &Stats, mrf_capacity_ratio: f64, mrf_tech: Tech) -> PowerBreakdown {
+        ltrf_power(s, mrf_capacity_ratio, mrf_tech)
+    }
+}
+
+/// The single `HierarchyKind` → policy-implementation dispatch site in
+/// the simulator. Every other layer queries the trait or the design
+/// registry (`coordinator::designs`).
+pub fn model_for(kind: HierarchyKind) -> Box<dyn HierarchyModel> {
+    match kind {
+        HierarchyKind::Baseline => Box::new(BaselineModel),
+        HierarchyKind::Rfc => Box::new(RfcModel),
+        HierarchyKind::Shrf => Box::new(ShrfModel),
+        HierarchyKind::Ltrf { plus } => Box::new(LtrfModel { plus }),
+        HierarchyKind::Carf => Box::new(CarfModel),
+    }
+}
+
+// ---------------------------------------------------------------------
+// BL — conventional non-cached register file
+// ---------------------------------------------------------------------
+
+/// **BL**: every operand read/write goes to an MRF bank; no fast level.
+pub struct BaselineModel;
+
+impl HierarchyModel for BaselineModel {
+    fn kind(&self) -> HierarchyKind {
+        HierarchyKind::Baseline
+    }
+
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let mut ready = now + 1; // decode/collect minimum
+        for r in inst.uses() {
+            let t = res.mrf.schedule_reg(r, warp.id, now);
+            stats.mrf_reads += 1;
+            ready = ready.max(t);
+        }
+        ready
+    }
+
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        _warp: &mut WarpSim,
+        _reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        stats.mrf_writes += 1;
+        res.mrf.note_write(done)
+    }
+
+    fn power(&self, _s: &Stats, mrf_capacity_ratio: f64, mrf_tech: Tech) -> PowerBreakdown {
+        // No fast level: the activity split is degenerate (all-MRF), so
+        // the conventional closed form applies regardless of counts.
+        conventional_power(mrf_capacity_ratio, mrf_tech)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RFC — hardware register-file cache (Gebhart ISCA'11)
+// ---------------------------------------------------------------------
+
+/// **RFC**: per-active-warp FIFO cache; allocate on write (results are
+/// read back soon), read misses go straight to the MRF, dirty victims
+/// write back, full flush on warp deactivation.
+pub struct RfcModel;
+
+impl HierarchyModel for RfcModel {
+    fn kind(&self) -> HierarchyKind {
+        HierarchyKind::Rfc
+    }
+
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let mut ready = now + 1;
+        for r in inst.uses() {
+            if warp.rfc.contains(r) {
+                stats.rfc_hits += 1;
+                stats.cache_reads += 1;
+                ready = ready.max(now + res.rf_cache.access_cycles as u64);
+            } else {
+                // Read misses go straight to the MRF and do NOT
+                // allocate: the RFC caches *results* (values are
+                // written, then read back soon) — Gebhart ISCA'11.
+                stats.rfc_misses += 1;
+                stats.mrf_reads += 1;
+                let t = res.mrf.schedule_reg(r, warp.id, now);
+                ready = ready.max(t);
+            }
+        }
+        ready
+    }
+
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        stats.cache_writes += 1;
+        if warp.rfc.insert(reg, true).is_some() {
+            // Dirty victim written back to the MRF.
+            stats.mrf_writes += 1;
+            res.mrf.note_write(done);
+        }
+        done + res.rf_cache.access_cycles as u64
+    }
+
+    fn on_block_exit(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        now: u64,
+        stats: &mut Stats,
+    ) {
+        for r in warp.rfc.flush() {
+            res.mrf.schedule_reg_write(r, warp.id, now);
+            stats.mrf_writes += 1;
+            stats.writeback_regs += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SHRF — software-managed hierarchical RF (Gebhart MICRO'11)
+// ---------------------------------------------------------------------
+
+/// **SHRF**: compiler-managed partitions scoped to strands; on-demand
+/// fill through the crossbar, write-back + release at strand exit.
+pub struct ShrfModel;
+
+impl HierarchyModel for ShrfModel {
+    fn kind(&self) -> HierarchyKind {
+        HierarchyKind::Shrf
+    }
+
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let mut ready = now + 1;
+        for r in inst.uses() {
+            if warp.wcb.valid.contains(r) {
+                stats.rfc_hits += 1;
+                stats.cache_reads += 1;
+                let slot = warp.wcb.bank_of(r).unwrap() as usize;
+                ready = ready.max(res.rf_cache.schedule(slot, now));
+            } else {
+                // On-demand fill from the MRF.
+                stats.rfc_misses += 1;
+                stats.mrf_reads += 1;
+                let t = res.mrf.schedule_reg(r, warp.id, now);
+                let arr = res.xbar.transfer(t);
+                warp.wcb.allocate(r);
+                ready = ready.max(arr);
+            }
+        }
+        ready
+    }
+
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        write_through_wcb(res, warp, reg, done, stats)
+    }
+
+    fn on_block_entry(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        block: usize,
+        now: u64,
+        stats: &mut Stats,
+    ) -> EntryAction {
+        let interval = ck.intervals.block_interval[block];
+        if warp.wcb.current_interval == Some(interval) {
+            return EntryAction::Proceed;
+        }
+        // Strand exit: write back dirty registers, release the
+        // partition, fill on demand in the new strand.
+        let dirty = warp.wcb.dirty;
+        for r in dirty.iter() {
+            res.mrf.schedule_reg_write(r, warp.id, now);
+            stats.mrf_writes += 1;
+            stats.writeback_regs += 1;
+        }
+        warp.wcb.release_all();
+        warp.wcb.current_interval = Some(interval);
+        EntryAction::Proceed
+    }
+
+    fn on_block_exit(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        now: u64,
+        stats: &mut Stats,
+    ) {
+        // SHRF writes back the whole dirty set on deactivation.
+        writeback_and_release(res, warp, now, stats, false);
+    }
+}
+
+// ---------------------------------------------------------------------
+// LTRF / LTRF+ — software register-interval prefetching (this paper)
+// ---------------------------------------------------------------------
+
+/// **LTRF / LTRF+**: the compiled register-interval working set is
+/// prefetched at interval entry; in-interval accesses always hit the RF$.
+/// `plus` enables the §3.2 liveness filtering of prefetch/write-back
+/// traffic. (LTRF_conf is this model compiled with `renumber = true`.)
+pub struct LtrfModel {
+    pub plus: bool,
+}
+
+impl HierarchyModel for LtrfModel {
+    fn kind(&self) -> HierarchyKind {
+        HierarchyKind::Ltrf { plus: self.plus }
+    }
+
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let mut ready = now + 1;
+        for r in inst.uses() {
+            // The central guarantee (§3.1): every in-interval
+            // access is serviced from the RF$.
+            debug_assert!(
+                warp.wcb.valid.contains(r),
+                "LTRF service guarantee violated: r{r} not resident (warp {}, interval {:?})",
+                warp.id,
+                warp.wcb.current_interval
+            );
+            stats.cache_reads += 1;
+            let slot = warp.wcb.bank_of(r).unwrap_or(0) as usize;
+            ready = ready.max(res.rf_cache.schedule(slot, now));
+        }
+        ready
+    }
+
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        write_through_wcb(res, warp, reg, done, stats)
+    }
+
+    fn on_block_entry(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        block: usize,
+        now: u64,
+        stats: &mut Stats,
+    ) -> EntryAction {
+        let interval = ck.intervals.block_interval[block];
+        if warp.wcb.current_interval == Some(interval) {
+            return EntryAction::Proceed;
+        }
+        // Write back displaced dirty registers…
+        let new_ws = ck.intervals.intervals[interval].working_set;
+        let mut displaced = warp.wcb.dirty.difference(&new_ws);
+        if self.plus {
+            displaced = displaced.intersect(&warp.wcb.live);
+            stats.dead_regs_skipped +=
+                (warp.wcb.dirty.difference(&new_ws).len() - displaced.len()) as u64;
+        }
+        for r in displaced.iter() {
+            res.mrf.schedule_reg_write(r, warp.id, now);
+            stats.mrf_writes += 1;
+            stats.writeback_regs += 1;
+        }
+        // …release everything outside the new working set…
+        let stale = warp.wcb.valid.difference(&new_ws);
+        for r in stale.iter() {
+            warp.wcb.release(r);
+        }
+        // …and prefetch the registers not already resident.
+        let fetch = if self.plus {
+            new_ws.difference(&warp.wcb.valid).intersect(&warp.wcb.live)
+        } else {
+            new_ws.difference(&warp.wcb.valid)
+        };
+        // Dead registers still need RF$ space (allocation without
+        // data movement — §5.2).
+        for r in new_ws.difference(&warp.wcb.valid).iter() {
+            warp.wcb.allocate(r);
+        }
+        warp.wcb.current_interval = Some(interval);
+        let done_at = res.run_prefetch(&fetch, warp.id, now, stats);
+        if done_at > now {
+            EntryAction::Prefetch { done_at }
+        } else {
+            EntryAction::Proceed
+        }
+    }
+
+    fn on_block_exit(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        now: u64,
+        stats: &mut Stats,
+    ) {
+        // LTRF writes back the whole dirty set; LTRF+ only the live part.
+        writeback_and_release(res, warp, now, stats, self.plus);
+    }
+
+    fn on_activate(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        now: u64,
+        stats: &mut Stats,
+    ) -> Option<u64> {
+        let interval = warp.wcb.current_interval?;
+        // Refetch the working-set (live part under LTRF+) —
+        // §5.2 "Warp Stall" step 3 / working-set bit-vector.
+        // Registers already resident (an early refetch ran while
+        // the warp was pending) are not moved again.
+        let ws = ck.intervals.intervals[interval].working_set;
+        let mut fetch = ws.difference(&warp.wcb.valid);
+        if self.plus {
+            fetch = fetch.intersect(&warp.wcb.live);
+        }
+        for r in ws.iter() {
+            warp.wcb.allocate(r);
+        }
+        let done = res.run_prefetch(&fetch, warp.id, now, stats);
+        (done > now).then_some(done)
+    }
+
+    fn tracks_liveness(&self) -> bool {
+        self.plus
+    }
+}
+
+// ---------------------------------------------------------------------
+// CARF — compiler-assisted register-file cache (Shoushtary et al.)
+// ---------------------------------------------------------------------
+
+/// **CARF**: a register-file cache with *no* prefetch — operands fill the
+/// RF$ on demand through the narrow crossbar and results allocate on
+/// write — whose eviction is directed by the compiler's liveness
+/// analysis: the dead-operand bits (the same §3.2 analysis LTRF+
+/// consumes) mark each operand's last use, so dead residents are evicted
+/// first and their (stale) values are never written back. Live dirty
+/// victims write back through the MRF write port; on warp deactivation
+/// only the live dirty set is flushed.
+pub struct CarfModel;
+
+impl CarfModel {
+    /// Free one RF$ slot for an incoming register (no-op while a slot is
+    /// free). Victim selection, deterministically: the lowest-numbered
+    /// *dead* resident outside `keep`, else the lowest-numbered resident
+    /// outside `keep`. `keep` holds the registers the current access
+    /// touches, so a fill can never evict an operand of its own
+    /// instruction; since an instruction touches at most
+    /// [`crate::compiler::MIN_REGS_PER_INTERVAL`] registers and the
+    /// partition is at least that large, a victim always exists.
+    fn make_room(
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        keep: &RegSet,
+        now: u64,
+        stats: &mut Stats,
+    ) {
+        if warp.wcb.aau.available() > 0 {
+            return;
+        }
+        let evictable = warp.wcb.valid.difference(keep);
+        let dead = evictable.difference(&warp.wcb.live);
+        let victim = dead
+            .iter()
+            .next()
+            .or_else(|| evictable.iter().next())
+            .expect("CARF partition holds more registers than one instruction touches");
+        if warp.wcb.dirty.contains(victim) {
+            if warp.wcb.live.contains(victim) {
+                res.mrf.schedule_reg_write(victim, warp.id, now);
+                stats.mrf_writes += 1;
+                stats.writeback_regs += 1;
+            } else {
+                // Dead value: its last use has passed, drop it.
+                stats.dead_regs_skipped += 1;
+            }
+        }
+        warp.wcb.release(victim);
+    }
+}
+
+impl HierarchyModel for CarfModel {
+    fn kind(&self) -> HierarchyKind {
+        HierarchyKind::Carf
+    }
+
+    fn read_operands(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let keep = RegSet::from_iter(inst.touched());
+        let mut ready = now + 1;
+        for r in inst.uses() {
+            if warp.wcb.valid.contains(r) {
+                stats.rfc_hits += 1;
+                stats.cache_reads += 1;
+                let slot = warp.wcb.bank_of(r).unwrap() as usize;
+                ready = ready.max(res.rf_cache.schedule(slot, now));
+            } else {
+                // On-demand fill from the MRF (no prefetch).
+                stats.rfc_misses += 1;
+                stats.mrf_reads += 1;
+                let t = res.mrf.schedule_reg(r, warp.id, now);
+                let arr = res.xbar.transfer(t);
+                Self::make_room(res, warp, &keep, now, stats);
+                warp.wcb.allocate(r);
+                ready = ready.max(arr);
+            }
+        }
+        ready
+    }
+
+    fn write_result(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        reg: u16,
+        done: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        if !warp.wcb.valid.contains(reg) {
+            let keep = RegSet::from_iter([reg]);
+            Self::make_room(res, warp, &keep, done, stats);
+        }
+        write_through_wcb(res, warp, reg, done, stats)
+    }
+
+    fn on_block_exit(
+        &mut self,
+        res: &mut HierarchyResources,
+        warp: &mut WarpSim,
+        now: u64,
+        stats: &mut Stats,
+    ) {
+        // Deactivation flush: live dirty registers only (dead values are
+        // dropped — the compiler proved their last use has passed).
+        writeback_and_release(res, warp, now, stats, true);
+    }
+
+    fn tracks_liveness(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared WCB-backed helpers
+// ---------------------------------------------------------------------
+
+/// Result write into the WCB-managed RF$ (SHRF/LTRF/CARF share this
+/// path): allocate, mark dirty + live, complete through the cache bank.
+fn write_through_wcb(
+    res: &mut HierarchyResources,
+    warp: &mut WarpSim,
+    reg: u16,
+    done: u64,
+    stats: &mut Stats,
+) -> u64 {
+    stats.cache_writes += 1;
+    warp.wcb.allocate(reg);
+    warp.wcb.dirty.insert(reg);
+    warp.wcb.live.insert(reg);
+    res.rf_cache.note_write(done)
+}
+
+/// Deactivation flush shared by the WCB-backed policies: write back the
+/// dirty set (live part only when `liveness_filter`), then release the
+/// whole partition.
+fn writeback_and_release(
+    res: &mut HierarchyResources,
+    warp: &mut WarpSim,
+    now: u64,
+    stats: &mut Stats,
+    liveness_filter: bool,
+) {
+    let mut wb = warp.wcb.dirty;
+    if liveness_filter {
+        let dead = wb.difference(&warp.wcb.live);
+        stats.dead_regs_skipped += dead.len() as u64;
+        wb = wb.intersect(&warp.wcb.live);
+    }
+    for r in wb.iter() {
+        res.mrf.schedule_reg_write(r, warp.id, now);
+        stats.mrf_writes += 1;
+        stats.writeback_regs += 1;
+    }
+    warp.wcb.release_all();
+}
+
+// ---------------------------------------------------------------------
+// Facade
+// ---------------------------------------------------------------------
+
+/// The register-file hierarchy of one SM: the shared timing resources
+/// plus the active policy model. The SM calls only these methods; policy
+/// dispatch happens through the trait object.
+pub struct RegHierarchy {
+    pub kind: HierarchyKind,
+    /// Shared MRF/RF$/crossbar timing state.
+    pub res: HierarchyResources,
+    model: Box<dyn HierarchyModel>,
+}
+
+impl RegHierarchy {
+    pub fn new(cfg: &SimConfig) -> Self {
+        RegHierarchy {
+            kind: cfg.hierarchy,
+            res: HierarchyResources::new(cfg),
+            model: model_for(cfg.hierarchy),
+        }
+    }
+
+    /// Schedule the operand reads of `inst` for `warp`; returns the cycle
+    /// all operands are collected.
+    pub fn read_operands(
+        &mut self,
+        warp: &mut WarpSim,
+        inst: &Inst,
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        self.model.read_operands(&mut self.res, warp, inst, now, stats)
+    }
+
+    /// Schedule the destination write of an instruction completing at
+    /// `done`. Returns the write completion time.
+    pub fn write_dest(&mut self, warp: &mut WarpSim, reg: u16, done: u64, stats: &mut Stats) -> u64 {
+        self.model.write_result(&mut self.res, warp, reg, done, stats)
+    }
+
+    /// Called when `warp` is about to issue the first instruction of a
+    /// block. Handles interval/strand transitions.
+    pub fn on_block_enter(
+        &mut self,
+        warp: &mut WarpSim,
+        ck: &CompiledKernel,
+        block: usize,
+        now: u64,
+        stats: &mut Stats,
+    ) -> EntryAction {
+        self.model.on_block_entry(&mut self.res, warp, ck, block, now, stats)
+    }
+
+    /// Warp descheduled on a long-latency miss (§5.2 "Warp Stall").
+    pub fn on_deactivate(&mut self, warp: &mut WarpSim, now: u64, stats: &mut Stats) {
+        self.model.on_block_exit(&mut self.res, warp, now, stats);
+    }
+
+    /// Warp re-entering the active pool. Returns the prefetch completion
+    /// cycle if the warp must refetch its working set first. The
+    /// activation count is booked here for every policy.
     pub fn on_activate(
         &mut self,
         warp: &mut WarpSim,
@@ -319,27 +832,31 @@ impl RegHierarchy {
         stats: &mut Stats,
     ) -> Option<u64> {
         stats.activations += 1;
-        match self.kind {
-            HierarchyKind::Ltrf { plus } => {
-                let interval = warp.wcb.current_interval?;
-                // Refetch the working-set (live part under LTRF+) —
-                // §5.2 "Warp Stall" step 3 / working-set bit-vector.
-                // Registers already resident (an early refetch ran while
-                // the warp was pending) are not moved again.
-                let ws = ck.intervals.intervals[interval].working_set;
-                let mut fetch = ws.difference(&warp.wcb.valid);
-                if plus {
-                    fetch = fetch.intersect(&warp.wcb.live);
-                }
-                for r in ws.iter() {
-                    warp.wcb.allocate(r);
-                }
-                let done = self.run_prefetch(&fetch, warp.id, now, stats);
-                (done > now).then_some(done)
-            }
-            // BL/RFC/SHRF warps restart cold (RFC/SHRF refill on demand).
-            _ => None,
-        }
+        self.model.on_activate(&mut self.res, warp, ck, now, stats)
+    }
+
+    /// Whether the active policy consumes the compiler's dead-operand
+    /// bits (the SM's per-issue liveness update keys off this).
+    pub fn tracks_liveness(&self) -> bool {
+        self.model.tracks_liveness()
+    }
+
+    /// The active policy's traffic view of `stats`.
+    pub fn traffic(&self, stats: &Stats) -> Traffic {
+        self.model.traffic(stats)
+    }
+}
+
+impl Clone for RegHierarchy {
+    fn clone(&self) -> Self {
+        // Models are stateless strategies: re-instantiating is a clone.
+        RegHierarchy { kind: self.kind, res: self.res.clone(), model: model_for(self.kind) }
+    }
+}
+
+impl std::fmt::Debug for RegHierarchy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RegHierarchy").field("kind", &self.kind).field("res", &self.res).finish()
     }
 }
 
@@ -494,5 +1011,146 @@ L1:
         let _ = h.on_block_enter(&mut w, &ck, next_strand, 100, &mut st);
         assert_eq!(st.writeback_regs, 1);
         assert_eq!(w.wcb.resident(), 0);
+    }
+
+    #[test]
+    fn carf_block_entry_never_prefetches() {
+        let (mut h, mut w, ck, mut st) = setup(HierarchyKind::Carf);
+        for b in 0..ck.kernel.num_blocks() {
+            assert_eq!(h.on_block_enter(&mut w, &ck, b, 0, &mut st), EntryAction::Proceed);
+        }
+        assert_eq!(st.prefetch_ops, 0, "CARF has no prefetch");
+        assert_eq!(st.prefetch_regs, 0);
+    }
+
+    #[test]
+    fn carf_read_miss_fills_then_hits() {
+        let (mut h, mut w, _ck, mut st) = setup(HierarchyKind::Carf);
+        // First read: both operands miss and fill through the crossbar.
+        let t = h.read_operands(&mut w, &add_inst(), 0, &mut st);
+        assert_eq!(st.rfc_misses, 2);
+        assert_eq!(st.mrf_reads, 2);
+        assert!(w.wcb.valid.contains(1) && w.wcb.valid.contains(2), "fill allocates");
+        // Crossbar traversal (latency 4) is on the fill path.
+        assert!(t >= 4, "fill pays MRF + crossbar latency, got {t}");
+        // Second read: both hit the RF$, MRF untouched.
+        let _ = h.read_operands(&mut w, &add_inst(), 100, &mut st);
+        assert_eq!(st.rfc_hits, 2);
+        assert_eq!(st.mrf_reads, 2, "hits must not touch the MRF");
+        assert_eq!(st.cache_reads, 2);
+    }
+
+    #[test]
+    fn carf_eviction_prefers_dead_registers() {
+        // Partition of 4: fill it with written (dirty+live) registers,
+        // kill one, then force an eviction — the dead one must go, its
+        // value dropped rather than written back.
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Carf);
+        let mut h = RegHierarchy::new(&cfg);
+        let mut w = WarpSim::new(0, crate::ir::exec::ExecState::new(1, &[]), 4, 16);
+        let mut st = Stats::default();
+        for r in [10u16, 11, 12, 13] {
+            let _ = h.write_dest(&mut w, r, 0, &mut st);
+        }
+        assert_eq!(w.wcb.resident(), 4);
+        w.wcb.live.remove(12); // r12's last use has passed
+        let _ = h.write_dest(&mut w, 14, 10, &mut st);
+        assert!(!w.wcb.valid.contains(12), "dead register must be the victim");
+        assert!(w.wcb.valid.contains(14));
+        assert_eq!(st.dead_regs_skipped, 1, "dead dirty victim is dropped, not written back");
+        assert_eq!(st.writeback_regs, 0);
+        // Next eviction has no dead resident: a live dirty victim writes
+        // back through the MRF (lowest id outside the access: r10).
+        let _ = h.write_dest(&mut w, 15, 20, &mut st);
+        assert!(!w.wcb.valid.contains(10));
+        assert_eq!(st.writeback_regs, 1);
+        assert_eq!(st.mrf_writes, 1);
+    }
+
+    #[test]
+    fn carf_fill_never_evicts_own_operands() {
+        // Partition of 4, full of written (live+dirty) registers. A read
+        // that must fill one more register may only evict a resident the
+        // instruction does NOT touch — its own operands are protected.
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Carf);
+        let mut h = RegHierarchy::new(&cfg);
+        let mut w = WarpSim::new(0, crate::ir::exec::ExecState::new(1, &[]), 4, 16);
+        let mut st = Stats::default();
+        for r in [1u16, 2, 3, 99] {
+            let _ = h.write_dest(&mut w, r, 0, &mut st);
+        }
+        let mut i = Inst::new(Op::IAdd);
+        i.dst = Some(6);
+        i.srcs = [Some(1), Some(2), Some(5)]; // r5 not resident -> fill
+        let _ = h.read_operands(&mut w, &i, 10, &mut st);
+        assert_eq!(st.rfc_hits, 2, "resident operands hit");
+        assert_eq!(st.rfc_misses, 1, "r5 fills on demand");
+        // The victim is the lowest-id resident outside the instruction's
+        // touched set: r3 (r1/r2 are operands, r6 is the destination).
+        for r in [1u16, 2, 5, 99] {
+            assert!(w.wcb.valid.contains(r), "r{r} must survive");
+        }
+        assert!(!w.wcb.valid.contains(3), "non-operand victim");
+        // r3 was live+dirty: its eviction wrote back through the MRF.
+        assert_eq!(st.writeback_regs, 1);
+    }
+
+    #[test]
+    fn carf_deactivation_flushes_live_dirty_only() {
+        let (mut h, mut w, _ck, mut st) = setup(HierarchyKind::Carf);
+        let _ = h.write_dest(&mut w, 5, 0, &mut st);
+        let _ = h.write_dest(&mut w, 6, 0, &mut st);
+        w.wcb.live.remove(6); // dead at deactivation
+        h.on_deactivate(&mut w, 100, &mut st);
+        assert_eq!(st.writeback_regs, 1);
+        assert_eq!(st.dead_regs_skipped, 1);
+        assert_eq!(w.wcb.resident(), 0);
+        // Cold restart: no refetch (fill on demand).
+        let k = parser::parse(KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf(16));
+        assert_eq!(h.on_activate(&mut w, &ck, 200, &mut st), None);
+        assert_eq!(st.activations, 1);
+    }
+
+    #[test]
+    fn model_factory_covers_every_kind() {
+        for kind in HierarchyKind::ALL {
+            let m = model_for(kind);
+            assert_eq!(m.kind(), kind, "model_for must be kind-faithful");
+        }
+        assert!(model_for(HierarchyKind::Ltrf { plus: true }).tracks_liveness());
+        assert!(!model_for(HierarchyKind::Ltrf { plus: false }).tracks_liveness());
+        assert!(model_for(HierarchyKind::Carf).tracks_liveness());
+        assert!(!model_for(HierarchyKind::Baseline).tracks_liveness());
+    }
+
+    #[test]
+    fn traffic_hook_reports_policy_activity() {
+        let s = Stats {
+            cache_reads: 40,
+            cache_writes: 10,
+            mrf_reads: 5,
+            mrf_writes: 3,
+            prefetch_regs: 7,
+            writeback_regs: 2,
+            ..Default::default()
+        };
+        let t = model_for(HierarchyKind::Ltrf { plus: true }).traffic(&s);
+        assert_eq!(t.cache_accesses, 50);
+        assert_eq!(t.mrf_accesses, 8);
+        assert_eq!(t.regs_moved, 9);
+    }
+
+    #[test]
+    fn power_hook_baseline_vs_cached() {
+        // The BL model reports conventional power (no RF$/WCB overhead);
+        // cached policies report the activity-based LTRF breakdown.
+        let s = Stats { mrf_reads: 2_000, cache_reads: 8_000, ..Default::default() };
+        let bl = model_for(HierarchyKind::Baseline).power(&s, 1.0, Tech::HpSram);
+        assert!((bl.total() - 1.0).abs() < 1e-12, "BL at 1x HP is the baseline itself");
+        assert_eq!(bl.overhead, 0.0);
+        let carf = model_for(HierarchyKind::Carf).power(&s, 1.0, Tech::HpSram);
+        assert!(carf.overhead > 0.0, "cached policies carry the WCB/crossbar overhead");
+        assert!(carf.total() < bl.total(), "80% cache service must save power");
     }
 }

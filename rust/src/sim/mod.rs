@@ -8,10 +8,12 @@
 //! * **banked register files** ([`regfile`]): single-ported, non-pipelined
 //!   banks whose conflicts serialize accesses — the central latency
 //!   mechanism of the paper;
-//! * the **register-file hierarchies** under study ([`hierarchy`]):
-//!   BL (no cache), RFC (hardware register cache, Gebhart ISCA'11), SHRF
-//!   (compiler-managed strands, Gebhart MICRO'11), and LTRF / LTRF+ /
-//!   LTRF_conf (software register-interval prefetching, this paper);
+//! * the **register-file hierarchies** under study ([`hierarchy`]), as
+//!   pluggable [`hierarchy::HierarchyModel`] policies over shared timing
+//!   resources: BL (no cache), RFC (hardware register cache, Gebhart
+//!   ISCA'11), SHRF (compiler-managed strands, Gebhart MICRO'11), LTRF /
+//!   LTRF+ / LTRF_conf (software register-interval prefetching, this
+//!   paper), and CARF (compiler-assisted RF cache, Shoushtary et al.);
 //! * the **Warp Control Block** ([`wcb`]) and **Address Allocation Unit**
 //!   ([`alloc`]) of §5.1–5.2;
 //! * a latency/bandwidth **memory system** ([`memsys`]): L1D per SM,
@@ -43,4 +45,5 @@ pub mod wcb;
 
 pub use config::{HierarchyKind, MemConfig, SimBackend, SimConfig};
 pub use gpu::{run, run_workload};
+pub use hierarchy::{model_for, HierarchyModel, HierarchyResources, RegHierarchy, Traffic};
 pub use stats::Stats;

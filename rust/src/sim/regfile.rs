@@ -48,10 +48,13 @@ impl BankArray {
     /// Bank index of architectural register `reg` of warp `warp`.
     /// Registers are striped across banks with a per-warp offset, as in
     /// GPGPU-Sim / real GPUs: different warps' copies of the same
-    /// architectural register live in different banks.
+    /// architectural register live in different banks. The offset rule
+    /// (bank rotation *after* the register→bank map — the composition
+    /// that keeps compile-time conflict guarantees warp-invariant) is
+    /// single-sourced in [`BankMap::bank_of_warp`].
     #[inline]
     pub fn bank_of(&self, reg: u16, warp: usize) -> usize {
-        (self.map.bank_of(reg, self.busy_until.len()) + warp) % self.busy_until.len()
+        self.map.bank_of_warp(reg, warp, self.busy_until.len())
     }
 
     /// Schedule an access to `bank` that may start at `now`; returns the
@@ -228,5 +231,53 @@ mod tests {
         assert_eq!(b.bank_of(0, 17), 1);
         // Intra-warp conflict structure is preserved under the offset.
         assert_eq!(b.bank_of(0, 3), b.bank_of(16, 3));
+    }
+
+    /// Cross-check against the compiler's conflict model: for a
+    /// renumbered (LTRF_conf) kernel, the conflicts the simulator's bank
+    /// array would serialize for *any* warp equal what
+    /// `renumber::conflict_histogram`/`bank_conflicts` predicted at
+    /// compile time (which is warp-agnostic). This pins the per-warp
+    /// offset composition in [`BankMap::bank_of_warp`] to the compile
+    /// model — renumbering stays effective for warps ≠ 0.
+    #[test]
+    fn per_warp_conflicts_match_compile_time_model() {
+        use crate::compiler::renumber::bank_conflicts;
+        use crate::compiler::{compile, CompileOptions};
+        let src = r#"
+.kernel x
+  mov r0, #4096
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  add r4, r3, r2
+  add r0, r0, #4
+  add r1, r1, #1
+  setp.lt p0, r1, #8
+  @p0 bra L1
+  st.global [r0], r4
+  exit
+"#;
+        let k = crate::ir::parser::parse(src).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf_conf(8));
+        assert!(ck.renumbering.is_some());
+        let banks = ck.options.num_banks;
+        let b = BankArray::new(banks, 1, 1, ck.options.bank_map);
+        for iv in &ck.intervals.intervals {
+            let expect = bank_conflicts(&iv.working_set, banks, ck.options.bank_map);
+            for warp in [0usize, 1, 5, 23, 63] {
+                let mut occ = vec![0usize; banks];
+                for r in iv.working_set.iter() {
+                    occ[b.bank_of(r, warp)] += 1;
+                }
+                let got = occ.iter().max().copied().unwrap_or(0).saturating_sub(1);
+                assert_eq!(
+                    got, expect,
+                    "interval {} warp {warp}: simulator disagrees with compile model",
+                    iv.id
+                );
+            }
+        }
     }
 }

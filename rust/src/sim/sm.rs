@@ -8,7 +8,7 @@
 //! scheduler, the warps — is SM-local, which is what makes the step phase
 //! safe to run data-parallel across SMs.
 
-use super::config::{HierarchyKind, SimConfig};
+use super::config::SimConfig;
 use super::hierarchy::{EntryAction, RegHierarchy};
 use super::memsys::{self, MemResult, SharedMem, SmMem};
 use super::scheduler::TwoLevelScheduler;
@@ -315,7 +315,7 @@ impl<'a> SmSim<'a> {
     /// deferred path runs it from [`SmSim::commit_mem`].
     fn complete_load_miss(&mut self, wid: usize, dst: u16, t: u64) {
         self.warps[wid].inflight.push((dst, t));
-        self.hier.mrf.note_write(t);
+        self.hier.res.mrf.note_write(t);
         self.push_event(t, wid, EventKind::MemArrive(dst));
     }
 
@@ -424,8 +424,9 @@ impl<'a> SmSim<'a> {
         self.collectors_free -= 1;
         self.push_event(ready, wid, EventKind::CollectorFree);
 
-        // LTRF+ liveness bit-vector update from dead-operand bits (§3.2).
-        if matches!(self.cfg.hierarchy, HierarchyKind::Ltrf { plus: true }) {
+        // Liveness bit-vector update from the compiler's dead-operand
+        // bits (§3.2) — for every policy that consumes them (LTRF+, CARF).
+        if self.hier.tracks_liveness() {
             let dead = &self.ck.dead_bits[info.block][info.idx];
             for r in dead.iter() {
                 self.warps[wid].wcb.live.remove(r);
@@ -532,6 +533,7 @@ mod tests {
     use super::*;
     use crate::compiler::{compile, CompileOptions};
     use crate::ir::parser;
+    use crate::sim::config::HierarchyKind;
 
     const KSRC: &str = r#"
 .kernel s
@@ -590,34 +592,48 @@ L1:
     }
 
     /// The deferred port + per-cycle commit must reproduce the inline
-    /// port bit-for-bit on a single SM (the two-phase core's base case).
+    /// port bit-for-bit on a single SM (the two-phase core's base case),
+    /// for every registered policy.
     #[test]
     fn deferred_port_matches_inline_port() {
-        for kind in [
-            HierarchyKind::Baseline,
-            HierarchyKind::Rfc,
-            HierarchyKind::Shrf,
-            HierarchyKind::Ltrf { plus: false },
-            HierarchyKind::Ltrf { plus: true },
-        ] {
+        for kind in HierarchyKind::ALL {
             assert_eq!(run_one(kind), run_one_deferred(kind), "{}", kind.name());
         }
     }
 
     #[test]
     fn all_hierarchies_complete() {
-        for kind in [
-            HierarchyKind::Baseline,
-            HierarchyKind::Rfc,
-            HierarchyKind::Shrf,
-            HierarchyKind::Ltrf { plus: false },
-            HierarchyKind::Ltrf { plus: true },
-        ] {
+        for kind in HierarchyKind::ALL {
             let st = run_one(kind);
             assert_eq!(st.warps_finished, 8, "{}", kind.name());
             assert!(st.instructions > 8 * 100, "{}", kind.name());
             assert!(st.ipc() > 0.0, "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn carf_hits_after_first_touch_and_never_prefetches() {
+        let st = run_one(HierarchyKind::Carf);
+        assert_eq!(st.prefetch_ops, 0, "CARF has no prefetch machinery");
+        assert_eq!(st.prefetch_regs, 0);
+        assert!(st.rfc_hits > 0, "loop re-reads must hit the cache");
+        assert!(st.rfc_misses > 0, "first touches miss (fill on demand)");
+        // Allocate-on-read + liveness-directed eviction must not miss
+        // more than RFC's allocate-on-write FIFO on the same kernel (RFC
+        // read misses never fill, so they repeat; CARF's don't).
+        let rfc = run_one(HierarchyKind::Rfc);
+        assert!(
+            st.rfc_misses <= rfc.rfc_misses,
+            "CARF misses {} must not exceed RFC's {}",
+            st.rfc_misses,
+            rfc.rfc_misses
+        );
+        assert!(
+            st.rfc_hit_rate() >= rfc.rfc_hit_rate(),
+            "CARF {:.2} must not trail RFC {:.2}",
+            st.rfc_hit_rate(),
+            rfc.rfc_hit_rate()
+        );
     }
 
     #[test]

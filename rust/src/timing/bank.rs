@@ -87,6 +87,46 @@ mod tests {
     }
 
     #[test]
+    fn device_latency_monotone_for_bigger_bank_techs() {
+        // Every tech whose 8x characterized point is slower than its 1x
+        // point must interpolate monotonically between them. (LSTP is the
+        // documented exception: its small banks are conflict-bound, so
+        // its slope is negative by characterization.)
+        for t in [Tech::HpSram, Tech::TfetSram, Tech::Dwm] {
+            let sizes = [1.0, 2.0, 4.0, 8.0];
+            for w in sizes.windows(2) {
+                assert!(
+                    device_latency(t, w[0]) < device_latency(t, w[1]),
+                    "{t:?}: latency must grow from {}x to {}x banks",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        assert!(
+            device_latency(Tech::LstpSram, 1.0) > device_latency(Tech::LstpSram, 8.0),
+            "LSTP's characterized inversion (queueing-bound small banks) must survive"
+        );
+    }
+
+    #[test]
+    fn access_latency_pins_every_table2_row() {
+        // Full-path pinning (device + interconnect) for all 7 Table-2
+        // designs — the same numbers `RfDesign::latency()` reports, pinned
+        // here at the bank-model level so a characterization edit cannot
+        // silently shift the design points the whole evaluation keys on.
+        let paper = [1.0, 1.25, 1.5, 1.6, 2.8, 5.3, 6.3];
+        for (d, lat) in super::super::config::table2().iter().zip(paper) {
+            let got = access_latency(d.tech, d.bank_size_ratio, d.num_banks(), d.network);
+            assert!(
+                (got - lat).abs() < 0.06,
+                "cfg{}: access_latency {got} != Table-2 {lat}",
+                d.id
+            );
+        }
+    }
+
+    #[test]
     fn cycles_rounds_and_floors() {
         assert_eq!(cycles(1.0, 4), 4);
         assert_eq!(cycles(6.3, 4), 25);

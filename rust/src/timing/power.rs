@@ -42,10 +42,18 @@ impl PowerBreakdown {
 /// * `mrf_capacity_ratio` — MRF size vs 256KB (8.0 for the 2MB designs).
 /// * `mrf_tech` — the MRF cell technology (sets its power factor).
 pub fn ltrf_power(stats: &Stats, mrf_capacity_ratio: f64, mrf_tech: Tech) -> PowerBreakdown {
+    // Static power and structure overhead do not depend on activity: an
+    // idle run leaks exactly what an active one does. Shared by the
+    // zero-access path below so the idle breakdown cannot drift from the
+    // active-path formula (it used to drop the capacity/tech scaling).
+    let static_ = (1.0 - DYNAMIC_SHARE)
+        * (mrf_capacity_ratio * mrf_tech.params().power_factor + 16.0 / 256.0);
+    // WCB + crossbar + collector additions ≈ 10% of baseline static power.
+    let overhead = (1.0 - DYNAMIC_SHARE) * 0.10;
     let total_accesses =
         (stats.mrf_reads + stats.mrf_writes + stats.cache_reads + stats.cache_writes) as f64;
     if total_accesses == 0.0 {
-        return PowerBreakdown { dynamic: 0.0, static_: 1.0 - DYNAMIC_SHARE, overhead: 0.0 };
+        return PowerBreakdown { dynamic: 0.0, static_, overhead };
     }
     let mrf_share = (stats.mrf_reads + stats.mrf_writes) as f64 / total_accesses;
     let cache_share = 1.0 - mrf_share;
@@ -54,18 +62,25 @@ pub fn ltrf_power(stats: &Stats, mrf_capacity_ratio: f64, mrf_tech: Tech) -> Pow
         / Tech::HpSram.params().power_factor;
     let e_cache = access_energy(16.0 / 256.0);
     let dynamic = DYNAMIC_SHARE * (mrf_share * e_mrf + cache_share * e_cache);
-    // Static scales with capacity × technology power factor; the RF$ adds
-    // its own small share.
-    let static_ = (1.0 - DYNAMIC_SHARE)
-        * (mrf_capacity_ratio * mrf_tech.params().power_factor + 16.0 / 256.0);
-    // WCB + crossbar + collector additions ≈ 10% of baseline static power.
-    let overhead = (1.0 - DYNAMIC_SHARE) * 0.10;
     PowerBreakdown { dynamic, static_, overhead }
+}
+
+/// Power of a conventional, cache-less register file of `capacity_ratio`
+/// × 256KB: every access is an MRF access, no RF$ static share, no
+/// WCB/crossbar overhead. [`baseline_power`] is this at (1.0, HP SRAM).
+pub fn conventional_power(mrf_capacity_ratio: f64, mrf_tech: Tech) -> PowerBreakdown {
+    let e_mrf = access_energy(mrf_capacity_ratio) * mrf_tech.params().power_factor.max(0.05)
+        / Tech::HpSram.params().power_factor;
+    PowerBreakdown {
+        dynamic: DYNAMIC_SHARE * e_mrf,
+        static_: (1.0 - DYNAMIC_SHARE) * mrf_capacity_ratio * mrf_tech.params().power_factor,
+        overhead: 0.0,
+    }
 }
 
 /// Baseline power breakdown (for reference/ratio computations).
 pub fn baseline_power() -> PowerBreakdown {
-    PowerBreakdown { dynamic: DYNAMIC_SHARE, static_: 1.0 - DYNAMIC_SHARE, overhead: 0.0 }
+    conventional_power(1.0, Tech::HpSram)
 }
 
 #[cfg(test)]
@@ -85,6 +100,63 @@ mod tests {
     fn cache_accesses_are_cheap() {
         assert!(access_energy(16.0 / 256.0) < 0.3);
         assert!((access_energy(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn access_energy_monotone_in_capacity() {
+        // CACTI-style sublinear scaling: strictly increasing in capacity
+        // above the clamp floor, and sublinear (8x capacity costs < 8x).
+        let ratios = [16.0 / 256.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+        for w in ratios.windows(2) {
+            assert!(
+                access_energy(w[0]) < access_energy(w[1]),
+                "access energy must grow with capacity ({} vs {})",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(access_energy(8.0) < 8.0 * access_energy(1.0), "sublinear scaling");
+        // Tiny structures clamp at the floor rather than going to zero.
+        assert!((access_energy(1e-6) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_path_keeps_capacity_and_tech_scaling() {
+        // Regression: the zero-access early return used to report a flat
+        // `1 - DYNAMIC_SHARE` static term, dropping the MRF capacity/tech
+        // scaling (an idle 2MB DWM file leaked like a 256KB HP one). The
+        // idle breakdown must now agree with the active path's static and
+        // overhead terms for every design point.
+        for tech in Tech::ALL {
+            for ratio in [1.0, 8.0] {
+                let idle = ltrf_power(&Stats::default(), ratio, tech);
+                let active = ltrf_power(&stats(2_000, 8_000), ratio, tech);
+                assert_eq!(idle.dynamic, 0.0, "{tech:?} {ratio}");
+                assert!(
+                    (idle.static_ - active.static_).abs() < 1e-12,
+                    "{tech:?} {ratio}: idle static {} != active static {}",
+                    idle.static_,
+                    active.static_
+                );
+                assert!((idle.overhead - active.overhead).abs() < 1e-12, "{tech:?} {ratio}");
+            }
+        }
+        // The scaling itself: an idle 8x HP file leaks ~8x the baseline
+        // static share, not the flat baseline share.
+        let idle8 = ltrf_power(&Stats::default(), 8.0, Tech::HpSram);
+        assert!(idle8.static_ > (1.0 - DYNAMIC_SHARE) * 7.9, "got {}", idle8.static_);
+    }
+
+    #[test]
+    fn conventional_power_matches_baseline_at_1x_hp() {
+        let c = conventional_power(1.0, Tech::HpSram);
+        let b = baseline_power();
+        assert!((c.total() - b.total()).abs() < 1e-12);
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        assert_eq!(c.overhead, 0.0, "no WCB/crossbar on the conventional RF");
+        // 8x HP: both components scale with capacity.
+        let big = conventional_power(8.0, Tech::HpSram);
+        assert!(big.dynamic > c.dynamic && big.static_ > c.static_);
     }
 
     #[test]

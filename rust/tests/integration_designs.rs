@@ -1,0 +1,129 @@
+//! Integration: the design registry is the single source of the policy
+//! comparison matrix, and the CARF policy runs end-to-end through every
+//! layer that enumerates it (engine → oracles → snapshot → power →
+//! bench).
+
+use ltrf::coordinator::designs;
+use ltrf::coordinator::engine::{run_point, CfgTweaks, Engine};
+use ltrf::scenario::{oracles, snapshot};
+use ltrf::sim::{model_for, HierarchyKind};
+use ltrf::timing::Tech;
+use ltrf::workloads::suite;
+
+/// The acceptance criterion in test form: `oracles`, `snapshot`, and the
+/// `engine` all enumerate the one registry (the bench matrix asserts the
+/// same in `bench.rs`'s unit tests, where its private point builders are
+/// visible).
+#[test]
+fn oracles_snapshot_and_engine_enumerate_the_registry() {
+    // Oracles: one matrix row per registered (design, latency) pair.
+    let matrix = oracles::sim_matrix();
+    let expected: usize = designs::REGISTRY.iter().map(|p| p.latency_factors.len()).sum();
+    assert_eq!(matrix.len(), expected);
+    for p in designs::REGISTRY {
+        assert!(
+            matrix.iter().any(|(n, _, _)| n.split('@').next() == Some(p.name)),
+            "{} missing from the oracle matrix",
+            p.name
+        );
+    }
+
+    // Snapshot: every registered design keyed per workload.
+    let points = snapshot::snapshot_points(true);
+    for p in designs::REGISTRY {
+        let tag = format!("|{}|", p.name);
+        assert!(
+            points.iter().any(|(k, _, _, _)| k.contains(&tag)),
+            "{} missing from the snapshot matrix",
+            p.name
+        );
+    }
+
+    // Engine: sweeping the registry closes the coverage gap the
+    // `--engine-stats` summary reports (the CI smoke greps the ratio).
+    let spec = suite::workload_by_name("kmeans").unwrap();
+    let mut eng = Engine::new(2);
+    eng.plan_phase();
+    for (_, dut) in designs::all_points(2048) {
+        eng.request(spec, &dut, 1.0);
+    }
+    eng.execute();
+    let (covered, registered) = eng.design_coverage();
+    assert_eq!(registered, designs::REGISTRY.len());
+    assert_eq!(covered, registered, "a registered policy was not swept");
+    assert!(eng.summary().contains(&format!("design points {covered}/{registered} registered")));
+}
+
+/// CARF end-to-end: the engine point runner simulates it, it converges,
+/// it behaves like a cache (hits + misses, no prefetch), and its traffic
+/// and power hooks report sane numbers.
+#[test]
+fn carf_runs_end_to_end_through_the_engine() {
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    let carf = designs::by_name("carf").expect("CLI spelling resolves");
+    assert_eq!(carf.hierarchy, HierarchyKind::Carf);
+    let st = run_point(spec, &carf.dut(), 1.0, CfgTweaks::NONE, None);
+    assert!(st.warps_finished > 0, "CARF run must complete");
+    assert_eq!(st.hit_cycle_cap, 0, "CARF run must converge");
+    assert_eq!(st.prefetch_ops, 0, "CARF never prefetches");
+    assert!(st.rfc_hits > 0 && st.rfc_misses > 0, "fill-on-demand cache behavior");
+    assert!(st.cache_reads > 0 && st.mrf_reads > 0);
+
+    let model = model_for(HierarchyKind::Carf);
+    let tr = model.traffic(&st);
+    assert_eq!(tr.cache_accesses, st.cache_reads + st.cache_writes);
+    assert_eq!(tr.mrf_accesses, st.mrf_reads + st.mrf_writes);
+
+    // Liveness-directed eviction must keep CARF's MRF traffic below the
+    // conventional file's (that is the point of the policy).
+    let bl = run_point(spec, &designs::baseline().dut(), 1.0, CfgTweaks::NONE, None);
+    assert!(
+        tr.mrf_accesses < bl.mrf_reads + bl.mrf_writes,
+        "CARF must reduce MRF accesses vs BL ({} vs {})",
+        tr.mrf_accesses,
+        bl.mrf_reads + bl.mrf_writes
+    );
+}
+
+/// `PowerBreakdown::total` conservation across every registry design
+/// point: the components are non-negative, sum to the total, and the
+/// idle (zero-stats) breakdown carries the same static/overhead terms as
+/// the active one.
+#[test]
+fn power_breakdown_conserves_across_registry_points() {
+    let spec = suite::workload_by_name("kmeans").unwrap();
+    for (name, dut) in designs::all_points(2048) {
+        let st = run_point(spec, &dut, 1.0, CfgTweaks::NONE, None);
+        let model = model_for(dut.hierarchy);
+        for (ratio, tech) in [(1.0, Tech::HpSram), (8.0, Tech::Dwm)] {
+            let p = model.power(&st, ratio, tech);
+            assert!(
+                p.dynamic >= 0.0 && p.static_ >= 0.0 && p.overhead >= 0.0,
+                "{name}: negative component"
+            );
+            let sum = p.dynamic + p.static_ + p.overhead;
+            assert!((p.total() - sum).abs() < 1e-12, "{name}: total != sum of parts");
+            assert!(p.total() > 0.0, "{name}: zero power");
+            let idle = model.power(&ltrf::sim::Stats::default(), ratio, tech);
+            assert!(
+                (idle.static_ + idle.overhead - (p.static_ + p.overhead)).abs() < 1e-12,
+                "{name}: idle static power must match the active formula"
+            );
+        }
+    }
+}
+
+/// The full oracle suite holds on a CARF-heavy workload path: run every
+/// oracle on one committed-corpus-style kernel (the fuzz suite covers
+/// hundreds more in CI; this is the fast in-tree witness that the
+/// registry extension did not break an invariant).
+#[test]
+fn oracle_suite_green_with_carf_in_the_matrix() {
+    let k = ltrf::workloads::gen::build(suite::workload_by_name("kmeans").unwrap());
+    let (cs, failure) = oracles::check_kernel(&k);
+    assert!(failure.is_none(), "{failure:?}");
+    assert!(
+        cs.sims as usize >= oracles::sim_matrix().len(),
+        "the conservation oracle alone must cover the whole matrix"
+    );
+}

@@ -106,13 +106,7 @@ fn renumbering_never_increases_suite_conflicts() {
 fn every_hierarchy_completes_every_quick_workload() {
     for name in ["kmeans", "bfs", "cfd"] {
         let spec = suite::workload_by_name(name).unwrap();
-        for kind in [
-            HierarchyKind::Baseline,
-            HierarchyKind::Rfc,
-            HierarchyKind::Shrf,
-            HierarchyKind::Ltrf { plus: false },
-            HierarchyKind::Ltrf { plus: true },
-        ] {
+        for kind in HierarchyKind::ALL {
             let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(6.3).normalize_capacity();
             let st = gpu::run_workload(spec, &cfg, kind.uses_subgraphs());
             assert!(st.warps_finished > 0, "{name} on {}", kind.name());

@@ -71,6 +71,7 @@ fn prop_simulation_conservation() {
             HierarchyKind::Baseline,
             HierarchyKind::Rfc,
             HierarchyKind::Ltrf { plus: true },
+            HierarchyKind::Carf,
         ]);
         let factor = *rng.choose(&[1.0f64, 3.0, 6.3]);
         let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(factor).normalize_capacity();

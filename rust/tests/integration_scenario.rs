@@ -251,7 +251,7 @@ fn bank_flip_trips_renumber_oracle() {
 #[test]
 fn counter_perturbation_trips_snapshot_diff() {
     let golden = snapshot::capture(true, 0);
-    assert_eq!(golden.entries.len(), 30);
+    assert_eq!(golden.entries.len(), snapshot::snapshot_points(true).len());
 
     // Determinism: a second capture diffs clean.
     let again = snapshot::capture(true, 0);

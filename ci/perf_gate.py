@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the simulator-throughput trajectory.
+
+Compares a freshly measured ``BENCH_sim.json`` (produced by CI's
+perf-smoke step) against the committed baseline copy, and fails when the
+fig14-matrix warp-instruction throughput regresses past a threshold.
+
+Arming rule: the threshold only fires when the committed baseline says
+``"provenance": "measured"``. The growth container that authors this
+repo has no Rust toolchain, so the committed file may instead carry a
+hand-written estimate provenance ("seed-estimate: ..."); estimates are
+printed for context but can neither fail nor vouch for a real
+measurement. Committing the CI artifact (which `bench.rs` always stamps
+``measured``) arms the gate.
+
+A measured baseline must also carry nonzero epoch-core diagnostics
+(``epoch_commit_phases_skipped``) — a baseline "measured" with commit
+batching dead would set a dishonest bar.
+
+Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold 0.15]
+Exit 0 = pass (or disarmed), 1 = regression, 2 = usage/shape error.
+"""
+
+import json
+import sys
+
+# Rows the gate tracks: the headline trajectory number is the threaded
+# fig14 matrix, but single-thread rows are gated too so a serial-path
+# regression cannot hide behind parallel scaling.
+TRACKED = [
+    ("fig14_matrix", "parallel", None),  # None = the report's sim_threads
+    ("fig14_matrix", "parallel", 1),
+    ("fig14_matrix", "reference", 1),
+]
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf_gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def find_row(report, name, backend, threads):
+    if threads is None:
+        threads = report.get("sim_threads", 4)
+    for e in report.get("entries", []):
+        if (
+            e.get("name") == name
+            and e.get("backend") == backend
+            and e.get("sim_threads") == threads
+        ):
+            return e, threads
+    return None, threads
+
+
+def winst_per_second(entry):
+    wall = max(float(entry.get("wall_seconds", 0.0)), 1e-12)
+    return float(entry.get("instructions", 0)) / wall
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    threshold = 0.15
+    for a in argv[1:]:
+        if a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline = load(args[0])
+    current = load(args[1])
+
+    provenance = str(baseline.get("provenance", ""))
+    armed = provenance == "measured"
+
+    print(f"perf_gate: baseline {args[0]} provenance={provenance!r} " f"armed={armed}")
+    worst = None
+    for name, backend, threads in TRACKED:
+        base_row, bt = find_row(baseline, name, backend, threads)
+        cur_row, ct = find_row(current, name, backend, threads)
+        if base_row is None or cur_row is None:
+            print(f"  {name}/{backend}@{bt}t: missing row " f"(baseline={base_row is not None}, current={cur_row is not None})")
+            continue
+        base = winst_per_second(base_row)
+        cur = winst_per_second(cur_row)
+        ratio = cur / max(base, 1e-12)
+        print(f"  {name}/{backend}@{ct}t: baseline {base:,.0f} winst/s, " f"current {cur:,.0f} winst/s ({ratio:.2f}x)")
+        if worst is None or ratio < worst:
+            worst = ratio
+
+    if not armed:
+        print("perf_gate: baseline is not a committed measurement; comparison is informational only (commit the CI bench artifact to arm the gate)")
+        return 0
+
+    if baseline.get("epoch_commit_phases_skipped", 0) <= 0:
+        print("perf_gate: measured baseline reports zero epoch_commit_phases_skipped — commit batching was dead when it was captured; refusing it as a bar", file=sys.stderr)
+        return 1
+
+    if worst is None:
+        print("perf_gate: no comparable rows between baseline and current", file=sys.stderr)
+        return 1
+    if worst < 1.0 - threshold:
+        print(f"perf_gate: FAIL — fig14 throughput dropped to {worst:.2f}x of the measured baseline (threshold {1.0 - threshold:.2f}x)", file=sys.stderr)
+        return 1
+    print(f"perf_gate: OK (worst tracked ratio {worst:.2f}x, threshold {1.0 - threshold:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

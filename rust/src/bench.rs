@@ -111,6 +111,14 @@ pub struct BenchReport {
     pub sim_threads: usize,
     pub entries: Vec<BenchEntry>,
     pub compile_entries: Vec<CompileBenchEntry>,
+    /// Epoch-core diagnostics summed over every equivalence-gate
+    /// reference run: global epochs whose serial commit phase was
+    /// skipped, and event-wheel window rotations. Nonzero values prove
+    /// the event-driven core's batching was live during the runs the
+    /// timings came from (`ci/perf_gate.py` refuses a measured baseline
+    /// that claims otherwise).
+    pub epoch_commit_phases_skipped: u64,
+    pub epoch_wheel_rollovers: u64,
 }
 
 impl BenchReport {
@@ -144,10 +152,26 @@ impl BenchReport {
 
     /// Serialize as stable, machine-readable JSON (no external deps; the
     /// schema is versioned so future PRs can extend it additively).
+    ///
+    /// v3 stamps `provenance: "measured"` plus the measuring host —
+    /// this serializer only ever runs after real timed runs, so the
+    /// stamp is unconditional. The committed `BENCH_sim.json` may
+    /// instead carry a hand-written estimate provenance; the CI perf
+    /// gate (`ci/perf_gate.py`) arms its regression threshold only when
+    /// the committed baseline says `measured`, so estimates can never
+    /// fail (or vouch for) a real measurement.
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v2\",");
+        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v3\",");
+        let _ = writeln!(out, "  \"provenance\": \"measured\",");
+        let _ = writeln!(
+            out,
+            "  \"host\": {{\"os\": \"{}\", \"arch\": \"{}\", \"parallelism\": {}}},",
+            std::env::consts::OS,
+            std::env::consts::ARCH,
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
         let _ = writeln!(out, "  \"quick\": {},", self.quick);
         let _ = writeln!(out, "  \"sim_threads\": {},", self.sim_threads);
         let _ = writeln!(
@@ -155,6 +179,12 @@ impl BenchReport {
             "  \"host_parallelism\": {},",
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         );
+        let _ = writeln!(
+            out,
+            "  \"epoch_commit_phases_skipped\": {},",
+            self.epoch_commit_phases_skipped
+        );
+        let _ = writeln!(out, "  \"epoch_wheel_rollovers\": {},", self.epoch_wheel_rollovers);
         if let Some(s) = self.fig14_speedup() {
             let _ = writeln!(out, "  \"fig14_speedup_parallel_over_reference\": {:.4},", s);
         }
@@ -334,6 +364,10 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
     // Equivalence gate first (untimed; the Reference variant is the
     // baseline itself, so only the parallel variants need a pass).
     let (_, _, reference) = run_once(points, SimBackend::Reference, 1);
+    for st in &reference {
+        report.epoch_commit_phases_skipped += st.commit_phases_skipped;
+        report.epoch_wheel_rollovers += st.event_wheel_rollovers;
+    }
     for &(backend, threads) in &backend_variants(opts) {
         if backend == SimBackend::Reference {
             continue;
@@ -463,12 +497,8 @@ fn measure_compile_family(report: &mut BenchReport, opts: &BenchOptions) {
 
 /// Run the full trajectory measurement.
 pub fn run_bench(opts: &BenchOptions) -> BenchReport {
-    let mut report = BenchReport {
-        quick: opts.quick,
-        sim_threads: opts.sim_threads,
-        entries: Vec::new(),
-        compile_entries: Vec::new(),
-    };
+    let mut report =
+        BenchReport { quick: opts.quick, sim_threads: opts.sim_threads, ..Default::default() };
     let num_sms = 8;
     measure_compile_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
@@ -487,8 +517,9 @@ mod tests {
         let mut r = BenchReport {
             quick: true,
             sim_threads: 4,
-            entries: Vec::new(),
-            compile_entries: Vec::new(),
+            epoch_commit_phases_skipped: 17,
+            epoch_wheel_rollovers: 9,
+            ..Default::default()
         };
         r.entries.push(BenchEntry {
             name: "fig14_matrix".into(),
@@ -527,7 +558,11 @@ mod tests {
         let cspeed = r.compile_warm_speedup().expect("both compile entries present");
         assert!((cspeed - 4.0).abs() < 1e-9);
         let json = r.to_json();
-        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v2\""));
+        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v3\""));
+        assert!(json.contains("\"provenance\": \"measured\""));
+        assert!(json.contains("\"host\": {\"os\": "));
+        assert!(json.contains("\"epoch_commit_phases_skipped\": 17"));
+        assert!(json.contains("\"epoch_wheel_rollovers\": 9"));
         assert!(json.contains("\"fig14_speedup_parallel_over_reference\": 2.0000"));
         assert!(json.contains("\"compile_warm_speedup\": 4.0000"));
         assert!(json.contains("\"cycles_per_second\": 500.0"));
@@ -543,12 +578,7 @@ mod tests {
     #[test]
     fn compile_family_quick_mode_measures_and_gates() {
         let opts = BenchOptions::quick();
-        let mut r = BenchReport {
-            quick: true,
-            sim_threads: 1,
-            entries: Vec::new(),
-            compile_entries: Vec::new(),
-        };
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
         measure_compile_family(&mut r, &opts);
         assert_eq!(r.compile_entries.len(), 2);
         let cold = r.compile_entry("cold").unwrap();
@@ -590,6 +620,18 @@ mod tests {
                 .unwrap_or_else(|| panic!("no bench row for {}", p.name));
             assert!(row.instructions > 0 && row.simulated_cycles > 0, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn measure_family_accumulates_epoch_diagnostics() {
+        // The v3 report must carry nonzero epoch-core diagnostics from
+        // the equivalence-gate runs — the perf gate keys on them to
+        // prove commit batching was live in a measured baseline.
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
+        let opts = BenchOptions { quick: true, sim_threads: 1, iters: 1 };
+        measure_family(&mut r, "hot_loop_1sm", &hot_points(1), &opts);
+        assert!(r.epoch_commit_phases_skipped > 0, "hot point must skip clean commit phases");
+        assert!(r.epoch_wheel_rollovers > 0, "hot point runs long enough to rotate the wheel");
     }
 
     #[test]

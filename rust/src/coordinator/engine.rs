@@ -600,11 +600,21 @@ impl Engine {
     }
 
     /// One-line execution report (printed by the CLI after `execute`).
+    /// Includes the epoch-core diagnostics summed over all results: CI's
+    /// engine smoke greps `commit phases skipped [1-9]` to prove commit
+    /// batching is live (a refactor that silently stopped classifying
+    /// clean epochs would zero the counter and fail the grep).
     pub fn summary(&self) -> String {
         let report = self.compile_cache.report();
         let (covered, registered) = self.design_coverage();
+        let mut epoch_skipped = 0u64;
+        let mut wheel_rollovers = 0u64;
+        for st in self.results.map.values() {
+            epoch_skipped += st.commit_phases_skipped;
+            wheel_rollovers += st.event_wheel_rollovers;
+        }
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {})",
             self.lookups,
             self.sims_run,
             report.compile_hits,
@@ -614,6 +624,8 @@ impl Engine {
             report.analysis_hit_rate() * 100.0,
             covered,
             registered,
+            epoch_skipped,
+            wheel_rollovers,
         )
     }
 }

@@ -571,6 +571,10 @@ fn main() {
                 st.activations,
                 st.mrf_access_reduction()
             );
+            println!(
+                "  epoch core: commit phases skipped {}  wheel rollovers {}",
+                st.commit_phases_skipped, st.event_wheel_rollovers
+            );
         }
         "trace" => {
             let Some(name) = args.get(1).filter(|a| !a.starts_with("--")) else {
@@ -606,11 +610,8 @@ fn main() {
             let mut now = 0u64;
             while now < max && !sm.done() {
                 let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared));
-                let line: String = sm
-                    .warps
-                    .iter()
-                    .take(32)
-                    .map(|w| match w.state {
+                let line: String = (0..resident.min(32))
+                    .map(|w| match sm.warp_state(w) {
                         ltrf::sim::warp::WarpState::Active => 'A',
                         ltrf::sim::warp::WarpState::Prefetching { .. } => 'P',
                         ltrf::sim::warp::WarpState::Refetching { .. } => 'p',

@@ -58,6 +58,16 @@ pub fn stat_fields(s: &Stats) -> Vec<(&'static str, u64)> {
         // it cannot mask drift in any pre-existing field, and carrying it
         // makes a silently-truncated run show up as keyed drift.
         ("hit_cycle_cap", s.hit_cycle_cap),
+        // Additive in PR 6 (event-driven epoch core). Justification for
+        // blessing: both counters are new and purely diagnostic — they
+        // cannot mask drift in any pre-existing field — and carrying them
+        // in the golden (and in the backend-equivalence field diff, which
+        // shares this list) pins their backend invariance: skipped commit
+        // phases are defined by the step phase's observable shared-memory
+        // work and wheel rollovers by each SM's event sequence, so any
+        // backend- or thread-count-dependence shows up as keyed drift.
+        ("commit_phases_skipped", s.commit_phases_skipped),
+        ("event_wheel_rollovers", s.event_wheel_rollovers),
     ]
 }
 

@@ -42,6 +42,7 @@ pub mod sm;
 pub mod stats;
 pub mod warp;
 pub mod wcb;
+pub mod wheel;
 
 pub use config::{HierarchyKind, MemConfig, SimBackend, SimConfig};
 pub use gpu::{run, run_workload};

@@ -6,7 +6,9 @@
 //! working-set prefetch on the way in, overlapped with other active
 //! warps' execution).
 
-/// Active-pool bookkeeping. Warp state lives in `WarpSim`; the scheduler
+use super::warp::{WarpHot, WarpState};
+
+/// Active-pool bookkeeping. Warp state lives in [`WarpHot`]; the scheduler
 /// only tracks pool membership and the round-robin cursor.
 #[derive(Clone, Debug)]
 pub struct TwoLevelScheduler {
@@ -67,6 +69,20 @@ impl TwoLevelScheduler {
         if let Some(pos) = self.active.iter().position(|&w| w == wid) {
             self.rr = (pos + 1) % self.active.len();
         }
+    }
+
+    /// Exact minimum `next_issue` across `Active`-state pool warps
+    /// (`u64::MAX` when none) — the SM's idle-hint rescan, reading only
+    /// the packed hot arrays. Callers cache the result as a monotone
+    /// lower bound and call back in only when the cached value is due.
+    pub fn min_next_issue(&self, hot: &WarpHot) -> u64 {
+        let mut min = u64::MAX;
+        for &wid in &self.active {
+            if hot.state[wid] == WarpState::Active {
+                min = min.min(hot.next_issue[wid]);
+            }
+        }
+        min
     }
 }
 
@@ -185,6 +201,28 @@ mod tests {
         s.deactivate(99);
         assert!(s.is_active(1));
         assert_eq!(s.issue_order().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn min_next_issue_covers_active_state_pool_warps_only() {
+        let mut s = TwoLevelScheduler::new(3);
+        let mut hot = WarpHot::new(4);
+        s.activate(0);
+        s.activate(1);
+        s.activate(2);
+        hot.state[0] = WarpState::Active;
+        hot.next_issue[0] = 40;
+        hot.state[1] = WarpState::Prefetching { done_at: 5 };
+        hot.next_issue[1] = 5; // in the pool but not issuable-state: excluded
+        hot.state[2] = WarpState::Active;
+        hot.next_issue[2] = 17;
+        hot.state[3] = WarpState::Active;
+        hot.next_issue[3] = 1; // not in the pool: excluded
+        assert_eq!(s.min_next_issue(&hot), 17);
+        s.deactivate(2);
+        assert_eq!(s.min_next_issue(&hot), 40);
+        s.deactivate(0);
+        assert_eq!(s.min_next_issue(&hot), u64::MAX);
     }
 
     #[test]

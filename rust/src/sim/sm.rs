@@ -7,19 +7,33 @@
 //! other structure the SM touches — L1 tags, MSHRs, register banks, the
 //! scheduler, the warps — is SM-local, which is what makes the step phase
 //! safe to run data-parallel across SMs.
+//!
+//! Epoch-core layout (this is the simulator's hot loop):
+//!
+//! * deferred completions live in a bucketed [`EventWheel`] rather than a
+//!   binary heap — O(1) push, bitmap-scan idle hints, identical drain
+//!   order (see [`super::wheel`] for the determinism contract);
+//! * the per-warp fields the issue scan reads every cycle sit in the
+//!   struct-of-arrays [`WarpHot`], not in [`WarpSim`];
+//! * the idle skip-ahead hint combines the wheel's exact next-event time
+//!   with a cached lower bound on the active pool's `next_issue`
+//!   (`issue_min`), rescanned only when the cached value comes due. A
+//!   too-low hint costs at most an extra idle step; the hint is never
+//!   *higher* than the true next action, which is the soundness side the
+//!   skip-ahead drivers rely on (pinned by the hint-soundness property
+//!   test).
 
 use super::config::SimConfig;
 use super::hierarchy::{EntryAction, RegHierarchy};
 use super::memsys::{self, MemResult, SharedMem, SmMem};
 use super::scheduler::TwoLevelScheduler;
 use super::stats::Stats;
-use super::warp::{WarpSim, WarpState};
+use super::warp::{WarpHot, WarpSim, WarpState};
+use super::wheel::EventWheel;
 use crate::compiler::CompiledKernel;
 use crate::ir::exec::ExecState;
 use crate::ir::ExecUnit;
 use crate::workloads::gen::REG_BASE;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// Deferred completions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -71,7 +85,9 @@ pub struct SmSim<'a> {
     pub hier: RegHierarchy,
     pub mem: SmMem,
     pub stats: Stats,
-    events: BinaryHeap<Reverse<(u64, usize, EventKind)>>,
+    /// Packed per-warp hot state (issue-scan working set).
+    hot: WarpHot,
+    events: EventWheel<EventKind>,
     collectors_free: usize,
     finished: usize,
     /// Reusable issue-order buffer (avoids per-cycle allocation).
@@ -83,6 +99,17 @@ pub struct SmSim<'a> {
     /// Deferred shared-memory ops recorded this cycle (reusable arena;
     /// only populated when stepping through [`MemPort::Deferred`]).
     mem_reqs: Vec<MemOp>,
+    /// Lower bound on `min_next_issue` over the active pool; lowered when
+    /// a warp enters the `Active` state, repaired by an exact rescan when
+    /// it comes due. (Per-warp `next_issue` values only rise and pool
+    /// exits only shrink the scanned set, so the bound stays sound in
+    /// between.)
+    issue_min: u64,
+    /// Shared-level memory operations performed/recorded by the current
+    /// step — identical between ports: every global access is exactly one
+    /// inline `SharedMem` touch or one arena entry. Drives the drivers'
+    /// dirty-SM commit batching and `commit_phases_skipped`.
+    shared_ops: u32,
 }
 
 /// Per-warp load-data salt: distinct warps (and SMs) see distinct memory
@@ -120,13 +147,16 @@ impl<'a> SmSim<'a> {
             hier: RegHierarchy::new(cfg),
             mem: SmMem::new(cfg.mem),
             stats: Stats::default(),
-            events: BinaryHeap::new(),
+            hot: WarpHot::new(resident),
+            events: EventWheel::new(),
             collectors_free: cfg.operand_collectors,
             finished: 0,
             order_buf: Vec::new(),
             ready_queue: std::collections::VecDeque::new(),
             next_launch: 0,
             mem_reqs: Vec::new(),
+            issue_min: 0,
+            shared_ops: 0,
         }
     }
 
@@ -134,28 +164,48 @@ impl<'a> SmSim<'a> {
         self.finished == self.warps.len()
     }
 
+    /// Scheduling state of warp `wid` (trace/diagnostic view).
+    pub fn warp_state(&self, wid: usize) -> WarpState {
+        self.hot.state[wid]
+    }
+
+    /// True when the last step recorded deferred shared-level ops that
+    /// still await [`SmSim::commit_mem`] — the drivers' dirty-SM test.
+    pub fn has_pending_commit(&self) -> bool {
+        !self.mem_reqs.is_empty()
+    }
+
+    /// Shared-level memory operations performed by the most recent step
+    /// (inline port; the deferred port's equivalent is
+    /// [`SmSim::has_pending_commit`]).
+    pub fn shared_ops_this_step(&self) -> u32 {
+        self.shared_ops
+    }
+
     fn push_event(&mut self, t: u64, wid: usize, e: EventKind) {
-        self.events.push(Reverse((t, wid, e)));
+        self.events.push(t, wid, e);
+    }
+
+    /// A warp entered the `Active` state: fold its throttle into the
+    /// cached pool minimum.
+    fn note_activated(&mut self, wid: usize) {
+        self.issue_min = self.issue_min.min(self.hot.next_issue[wid]);
     }
 
     fn drain_events(&mut self, now: u64) {
-        while let Some(&Reverse((t, wid, e))) = self.events.peek() {
-            if t > now {
-                break;
-            }
-            self.events.pop();
+        while let Some((t, wid, e)) = self.events.pop_due(now) {
             match e {
                 EventKind::Writeback(r) => {
-                    self.warps[wid].pending.remove(r);
+                    self.hot.pending[wid].remove(r);
                     self.warps[wid].clear_writer(r);
                 }
                 EventKind::MemArrive(r) => {
-                    self.warps[wid].pending.remove(r);
-                    self.warps[wid].miss_pending.remove(r);
+                    self.hot.pending[wid].remove(r);
+                    self.hot.miss_pending[wid].remove(r);
                     self.warps[wid].clear_writer(r);
-                    let w = &self.warps[wid];
-                    if matches!(w.state, WarpState::PendingMem { .. })
-                        && (w.wait_reg == Some(r) || w.wait_reg.is_none())
+                    if matches!(self.hot.state[wid], WarpState::PendingMem { .. })
+                        && (self.warps[wid].wait_reg == Some(r)
+                            || self.warps[wid].wait_reg.is_none())
                     {
                         self.warps[wid].wait_reg = None;
                         if self.cfg.early_refetch {
@@ -167,35 +217,35 @@ impl<'a> SmSim<'a> {
                                 .on_activate(&mut self.warps[wid], self.ck, t, &mut self.stats)
                             {
                                 Some(done) => {
-                                    self.warps[wid].state = WarpState::Refetching { done_at: done };
-                                    self.events
-                                        .push(Reverse((done, wid, EventKind::PrefetchDone)));
+                                    self.hot.state[wid] = WarpState::Refetching { done_at: done };
+                                    self.events.push(done, wid, EventKind::PrefetchDone);
                                 }
                                 None => {
-                                    self.warps[wid].state = WarpState::WaitActivate;
+                                    self.hot.state[wid] = WarpState::WaitActivate;
                                     self.ready_queue.push_back(wid);
                                 }
                             }
                         } else {
-                            self.warps[wid].state = WarpState::WaitActivate;
+                            self.hot.state[wid] = WarpState::WaitActivate;
                             self.ready_queue.push_back(wid);
                         }
                     }
                 }
-                EventKind::PrefetchDone => {
-                    let w = &mut self.warps[wid];
-                    match w.state {
-                        WarpState::Prefetching { .. } => w.state = WarpState::Active,
-                        WarpState::Refetching { .. } => {
-                            w.state = WarpState::WaitActivate;
-                            self.ready_queue.push_back(wid);
-                        }
-                        _ => {}
+                EventKind::PrefetchDone => match self.hot.state[wid] {
+                    WarpState::Prefetching { .. } => {
+                        self.hot.state[wid] = WarpState::Active;
+                        self.note_activated(wid);
                     }
-                }
+                    WarpState::Refetching { .. } => {
+                        self.hot.state[wid] = WarpState::WaitActivate;
+                        self.ready_queue.push_back(wid);
+                    }
+                    _ => {}
+                },
                 EventKind::CollectorFree => self.collectors_free += 1,
             }
         }
+        self.stats.event_wheel_rollovers += self.events.take_rollovers();
     }
 
     /// Refill the active pool: returned warps first (they hold completed
@@ -205,7 +255,7 @@ impl<'a> SmSim<'a> {
         while self.sched.has_space() {
             let wid = loop {
                 match self.ready_queue.pop_front() {
-                    Some(w) if self.warps[w].state == WarpState::WaitActivate => break Some(w),
+                    Some(w) if self.hot.state[w] == WarpState::WaitActivate => break Some(w),
                     Some(_) => continue, // stale entry
                     None => break None,
                 }
@@ -213,7 +263,7 @@ impl<'a> SmSim<'a> {
             let wid = wid.or_else(|| {
                 while self.next_launch < self.warps.len() {
                     let w = self.next_launch;
-                    if self.warps[w].state == WarpState::NotStarted {
+                    if self.hot.state[w] == WarpState::NotStarted {
                         return Some(w);
                     }
                     self.next_launch += 1;
@@ -221,19 +271,20 @@ impl<'a> SmSim<'a> {
                 None
             });
             let Some(wid) = wid else { break };
-            let fresh = self.warps[wid].state == WarpState::NotStarted;
+            let fresh = self.hot.state[wid] == WarpState::NotStarted;
             if fresh {
                 self.next_launch = wid + 1;
             }
             // With early refetch the working set is already resident;
             // otherwise (ablation) the refetch runs inside the slot.
             self.sched.activate(wid);
-            self.warps[wid].state = WarpState::Active;
+            self.hot.state[wid] = WarpState::Active;
+            self.note_activated(wid);
             if !fresh && !self.cfg.early_refetch {
                 if let Some(done) =
                     self.hier.on_activate(&mut self.warps[wid], self.ck, _now, &mut self.stats)
                 {
-                    self.warps[wid].state = WarpState::Prefetching { done_at: done };
+                    self.hot.state[wid] = WarpState::Prefetching { done_at: done };
                     self.stats.prefetch_stall_cycles += done - _now;
                     self.push_event(done, wid, EventKind::PrefetchDone);
                 }
@@ -250,6 +301,7 @@ impl<'a> SmSim<'a> {
     /// instruction that records a request counts as issued, so the step
     /// returns `now + 1` and never needs the (not-yet-known) reply times.
     pub fn step(&mut self, now: u64, port: &mut MemPort) -> u64 {
+        self.shared_ops = 0;
         self.drain_events(now);
         self.fill_pool(now);
 
@@ -275,14 +327,15 @@ impl<'a> SmSim<'a> {
             return now + 1;
         }
         self.stats.stall_no_ready_warp += 1;
-        // Idle: skip to the next event (or the next issue-throttle expiry).
-        let mut hint = self.events.peek().map(|&Reverse((t, _, _))| t).unwrap_or(u64::MAX);
-        for &wid in self.sched.active() {
-            let w = &self.warps[wid];
-            if w.state == WarpState::Active && !w.exec.finished {
-                hint = hint.min(w.next_issue.max(now + 1));
-            }
+        // Idle: skip to the next event or the next issue-throttle expiry.
+        // The wheel hint is exact; the pool minimum is served from the
+        // cache unless the cached bound is due, in which case it is
+        // rescanned exactly.
+        let mut hint = self.events.next_event_hint(now);
+        if self.issue_min <= now {
+            self.issue_min = self.sched.min_next_issue(&self.hot);
         }
+        hint = hint.min(self.issue_min);
         hint.max(now + 1)
     }
 
@@ -290,6 +343,7 @@ impl<'a> SmSim<'a> {
     /// are folded into `self.stats` here, so `Stats::merge` aggregates them
     /// like every other counter (no post-merge special cases in gpu::run).
     fn access_global(&mut self, addr: u64, now: u64, shared: &mut SharedMem) -> MemResult {
+        self.shared_ops += 1;
         let r = self.mem.access_global(addr, now, shared);
         match r {
             MemResult::Hit(_) => self.stats.l1_hits += 1,
@@ -298,11 +352,18 @@ impl<'a> SmSim<'a> {
         r
     }
 
+    /// Record a deferred shared-level op (the `Deferred` port's
+    /// counterpart of [`SmSim::access_global`]'s shared touch).
+    fn record_mem_op(&mut self, op: MemOp) {
+        self.shared_ops += 1;
+        self.mem_reqs.push(op);
+    }
+
     /// Issue-time (reply-independent) bookkeeping of a load L1 miss: the
     /// scoreboard and liveness effects that do not need the arrival time.
     fn note_load_miss(&mut self, wid: usize, dst: u16) {
-        self.warps[wid].pending.insert(dst);
-        self.warps[wid].miss_pending.insert(dst);
+        self.hot.pending[wid].insert(dst);
+        self.hot.miss_pending[wid].insert(dst);
         // Returning data is written to the MRF bank (the value must
         // survive warp deactivation).
         self.stats.mrf_writes += 1;
@@ -367,9 +428,10 @@ impl<'a> SmSim<'a> {
 
     /// Attempt to issue one instruction from warp `wid`.
     fn try_issue(&mut self, wid: usize, now: u64, port: &mut MemPort) -> bool {
-        if !self.warps[wid].issuable(now) {
+        if !self.hot.issuable(wid, now) {
             return false;
         }
+        debug_assert!(!self.warps[wid].exec.finished, "Active warp with finished exec");
 
         // Prefetch-subgraph transition at block entry (LTRF/SHRF).
         let (block, idx) = (self.warps[wid].exec.block, self.warps[wid].exec.idx);
@@ -383,7 +445,7 @@ impl<'a> SmSim<'a> {
             ) {
                 EntryAction::Proceed => {}
                 EntryAction::Prefetch { done_at } => {
-                    self.warps[wid].state = WarpState::Prefetching { done_at };
+                    self.hot.state[wid] = WarpState::Prefetching { done_at };
                     self.stats.prefetch_stall_cycles += done_at - now;
                     self.push_event(done_at, wid, EventKind::PrefetchDone);
                     return false;
@@ -393,9 +455,9 @@ impl<'a> SmSim<'a> {
 
         let inst =
             self.warps[wid].exec.peek(&self.ck.kernel).expect("issuable warp has inst").clone();
-        if let Err(blocking) = self.warps[wid].deps_ready(&inst) {
+        if let Err(blocking) = self.hot.deps_ready(wid, &inst) {
             self.stats.stall_scoreboard += 1;
-            if self.warps[wid].miss_pending.contains(blocking) {
+            if self.hot.miss_pending[wid].contains(blocking) {
                 // Blocked on an outstanding L1 miss: the two-level
                 // scheduler swaps this warp out (§3.2).
                 self.deactivate_on_miss(wid, blocking, now);
@@ -403,8 +465,8 @@ impl<'a> SmSim<'a> {
                 // In-order: nothing can issue before the blocking writer
                 // completes; sleep the warp until then (pure optimization,
                 // no timing change — the warp could not issue earlier).
-                let w = &mut self.warps[wid];
-                w.next_issue = w.next_issue.max(t);
+                let ni = &mut self.hot.next_issue[wid];
+                *ni = (*ni).max(t);
             }
             return false;
         }
@@ -417,7 +479,8 @@ impl<'a> SmSim<'a> {
         let info = self.warps[wid].exec.step(&self.ck.kernel).expect("step after peek");
         self.stats.instructions += 1;
         self.warps[wid].issued += 1;
-        self.warps[wid].next_issue = now + 1;
+        self.hot.next_issue[wid] = now + 1;
+        self.issue_min = self.issue_min.min(now + 1);
 
         // Operand collection (register reads).
         let ready = self.hier.read_operands(&mut self.warps[wid], &inst, now, &mut self.stats);
@@ -435,7 +498,7 @@ impl<'a> SmSim<'a> {
 
         // Execute + complete.
         if self.warps[wid].exec.finished {
-            self.warps[wid].state = WarpState::Finished;
+            self.hot.state[wid] = WarpState::Finished;
             self.sched.deactivate(wid);
             self.finished += 1;
             self.stats.warps_finished += 1;
@@ -464,18 +527,14 @@ impl<'a> SmSim<'a> {
                         let line = memsys::line_of(addr);
                         if self.mem.probe_l1(line) {
                             self.stats.l1_hits += 1;
-                            self.mem_reqs.push(MemOp::Retire { at: ready });
+                            self.record_mem_op(MemOp::Retire { at: ready });
                             ready + self.cfg.mem.l1_hit_cycles as u64
                         } else {
                             self.stats.l1_misses += 1;
                             let dst = inst.def().expect("loads have destinations");
                             self.note_load_miss(wid, dst);
-                            self.mem_reqs.push(MemOp::Miss {
-                                wid,
-                                dst: Some(dst),
-                                line,
-                                at: ready,
-                            });
+                            let op = MemOp::Miss { wid, dst: Some(dst), line, at: ready };
+                            self.record_mem_op(op);
                             return true;
                         }
                     }
@@ -493,10 +552,10 @@ impl<'a> SmSim<'a> {
                         let line = memsys::line_of(addr);
                         if self.mem.probe_l1(line) {
                             self.stats.l1_hits += 1;
-                            self.mem_reqs.push(MemOp::Retire { at: ready });
+                            self.record_mem_op(MemOp::Retire { at: ready });
                         } else {
                             self.stats.l1_misses += 1;
-                            self.mem_reqs.push(MemOp::Miss { wid, dst: None, line, at: ready });
+                            self.record_mem_op(MemOp::Miss { wid, dst: None, line, at: ready });
                         }
                     }
                 }
@@ -509,7 +568,7 @@ impl<'a> SmSim<'a> {
         };
 
         if let Some(d) = inst.def() {
-            self.warps[wid].pending.insert(d);
+            self.hot.pending[wid].insert(d);
             let t_w = self.hier.write_dest(&mut self.warps[wid], d, done, &mut self.stats);
             self.warps[wid].inflight.push((d, t_w));
             self.push_event(t_w, wid, EventKind::Writeback(d));
@@ -520,12 +579,11 @@ impl<'a> SmSim<'a> {
     /// Warp blocked on an outstanding L1 miss: deactivate it (two-level
     /// scheduler) until the blocking register's data arrives.
     fn deactivate_on_miss(&mut self, wid: usize, blocking: u16, now: u64) {
-        self.warps[wid].state = WarpState::PendingMem { done_at: u64::MAX };
+        self.hot.state[wid] = WarpState::PendingMem { done_at: u64::MAX };
         self.warps[wid].wait_reg = Some(blocking);
         self.sched.deactivate(wid);
         self.hier.on_deactivate(&mut self.warps[wid], now, &mut self.stats);
     }
-
 }
 
 #[cfg(test)]
@@ -676,6 +734,20 @@ L1:
             plus.prefetch_regs + plus.writeback_regs
                 <= plain.prefetch_regs + plain.writeback_regs,
             "LTRF+ must not move more registers"
+        );
+    }
+
+    /// The wheel-backed SM books window rotations; a kernel long enough
+    /// to cross window boundaries must record them (and the count is part
+    /// of `Stats`, so the deferred-vs-inline test above pins its backend
+    /// invariance).
+    #[test]
+    fn long_runs_record_wheel_rollovers() {
+        let st = run_one(HierarchyKind::Baseline);
+        assert!(
+            st.event_wheel_rollovers > 0,
+            "a multi-thousand-cycle run must rotate the {}-slot wheel",
+            crate::sim::wheel::SLOTS
         );
     }
 }

@@ -56,6 +56,20 @@ pub struct Stats {
     /// scenario oracles assert this is zero, and the golden snapshot
     /// carries it so truncation shows up as keyed drift.
     pub hit_cycle_cap: u64,
+
+    // --- epoch-core diagnostics ---
+    /// Global epochs in which no SM performed (or recorded) a shared-level
+    /// memory operation, so the two-phase backends skip the serial commit
+    /// phase outright. Defined by the step phase's observable work, not by
+    /// any backend's commit mechanics, and booked at the same loop point
+    /// by every driver — which is what keeps it bit-identical between
+    /// `Reference` and `Parallel` at every thread count.
+    pub commit_phases_skipped: u64,
+    /// Event time-wheel window rotations, summed across SMs. Rotations
+    /// are a function of each SM's event push/pop sequence alone (never
+    /// of which cycles a driver polled at — see `sim::wheel`), so this
+    /// too is backend-invariant.
+    pub event_wheel_rollovers: u64,
 }
 
 impl Stats {
@@ -119,6 +133,8 @@ impl Stats {
         self.stall_collectors += o.stall_collectors;
         self.stall_no_ready_warp += o.stall_no_ready_warp;
         self.hit_cycle_cap += o.hit_cycle_cap;
+        self.commit_phases_skipped += o.commit_phases_skipped;
+        self.event_wheel_rollovers += o.event_wheel_rollovers;
     }
 }
 
@@ -177,6 +193,23 @@ mod tests {
         let b = Stats { hit_cycle_cap: 1, ..Default::default() };
         a.merge(&b);
         assert_eq!(a.hit_cycle_cap, 2);
+    }
+
+    #[test]
+    fn merge_sums_epoch_core_counters() {
+        let mut a = Stats {
+            commit_phases_skipped: 3,
+            event_wheel_rollovers: 5,
+            ..Default::default()
+        };
+        let b = Stats {
+            commit_phases_skipped: 4,
+            event_wheel_rollovers: 6,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.commit_phases_skipped, 7);
+        assert_eq!(a.event_wheel_rollovers, 11);
     }
 
     #[test]

@@ -1,4 +1,15 @@
 //! Per-warp simulation state.
+//!
+//! Split into two tiers since the epoch-core rework:
+//!
+//! * [`WarpHot`] — the four fields the issue scan and the event drain
+//!   touch every cycle (scheduling state tag, issue throttle, scoreboard
+//!   bit-vectors), held in packed per-SM arrays so the hot loop walks
+//!   contiguous cache lines instead of striding over `ExecState`-sized
+//!   [`WarpSim`] structs;
+//! * [`WarpSim`] — everything else (execution state, in-flight writer
+//!   list, WCB/RFC machinery), touched only when a warp actually issues
+//!   or changes lifecycle.
 
 use super::rfc::RfcState;
 use super::wcb::WarpControlBlock;
@@ -25,21 +36,67 @@ pub enum WarpState {
     Finished,
 }
 
-/// Everything the SM tracks per warp.
+/// Struct-of-arrays hot state for all of an SM's resident warps, indexed
+/// by warp id. One `state` tag and one `next_issue` word per warp sit in
+/// adjacent memory, so the per-cycle issue scan over the active pool and
+/// the scoreboard checks stay within a handful of cache lines.
+#[derive(Clone, Debug)]
+pub struct WarpHot {
+    /// Scheduling state tags.
+    pub state: Vec<WarpState>,
+    /// Earliest cycle each warp may issue again (1 inst/cycle/warp, or
+    /// the completion time of the register blocking an in-order
+    /// dependency).
+    pub next_issue: Vec<u64>,
+    /// Scoreboard: registers with an in-flight writer.
+    pub pending: Vec<RegSet>,
+    /// Destinations of outstanding long-latency (L1-miss) loads.
+    pub miss_pending: Vec<RegSet>,
+}
+
+impl WarpHot {
+    pub fn new(resident: usize) -> Self {
+        WarpHot {
+            state: vec![WarpState::NotStarted; resident],
+            next_issue: vec![0; resident],
+            pending: vec![RegSet::new(); resident],
+            miss_pending: vec![RegSet::new(); resident],
+        }
+    }
+
+    /// Can the scheduler consider warp `wid` this cycle? (`Active` implies
+    /// the warp has instructions left: a warp is retired from the pool in
+    /// the same issue that finishes its `ExecState`.)
+    #[inline]
+    pub fn issuable(&self, wid: usize, now: u64) -> bool {
+        self.state[wid] == WarpState::Active && self.next_issue[wid] <= now
+    }
+
+    /// Scoreboard check. `Ok(())` when all registers are ready; otherwise
+    /// the first blocking register.
+    pub fn deps_ready(&self, wid: usize, inst: &crate::ir::Inst) -> Result<(), u16> {
+        let pending = &self.pending[wid];
+        for r in inst.uses() {
+            if pending.contains(r) {
+                return Err(r);
+            }
+        }
+        if let Some(d) = inst.def() {
+            if pending.contains(d) {
+                return Err(d); // WAW on an in-flight writer
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-warp cold state: everything the SM tracks outside the hot arrays.
 #[derive(Clone, Debug)]
 pub struct WarpSim {
     pub id: usize,
     pub exec: ExecState,
-    pub state: WarpState,
-    /// Scoreboard: registers with an in-flight writer.
-    pub pending: RegSet,
-    /// Destinations of outstanding long-latency (L1-miss) loads.
-    pub miss_pending: RegSet,
     /// The register whose miss descheduled this warp.
     pub wait_reg: Option<u16>,
-    /// Earliest cycle the warp may issue again (1 inst/cycle/warp, or the
-    /// completion time of the register blocking an in-order dependency).
-    pub next_issue: u64,
     /// In-flight register writers: (register, completion cycle).
     pub inflight: Vec<(u16, u64)>,
     /// LTRF machinery (unused under BL/RFC).
@@ -70,37 +127,12 @@ impl WarpSim {
         WarpSim {
             id,
             exec,
-            state: WarpState::NotStarted,
-            pending: RegSet::new(),
-            miss_pending: RegSet::new(),
             wait_reg: None,
-            next_issue: 0,
             inflight: Vec::with_capacity(8),
             wcb: WarpControlBlock::new(partition_regs),
             rfc: RfcState::new(rfc_capacity),
             issued: 0,
         }
-    }
-
-    /// Can the scheduler consider this warp this cycle?
-    pub fn issuable(&self, now: u64) -> bool {
-        self.state == WarpState::Active && self.next_issue <= now && !self.exec.finished
-    }
-
-    /// Scoreboard check. `Ok(())` when all registers are ready; otherwise
-    /// the first blocking register.
-    pub fn deps_ready(&self, inst: &crate::ir::Inst) -> Result<(), u16> {
-        for r in inst.uses() {
-            if self.pending.contains(r) {
-                return Err(r);
-            }
-        }
-        if let Some(d) = inst.def() {
-            if self.pending.contains(d) {
-                return Err(d); // WAW on an in-flight writer
-            }
-        }
-        Ok(())
     }
 }
 
@@ -109,41 +141,49 @@ mod tests {
     use super::*;
     use crate::ir::{Inst, Op};
 
-    fn warp() -> WarpSim {
-        WarpSim::new(0, ExecState::new(0, &[]), 16, 16)
-    }
-
     #[test]
     fn not_started_warp_not_issuable() {
-        let w = warp();
-        assert!(!w.issuable(0));
+        let hot = WarpHot::new(1);
+        assert!(!hot.issuable(0, 0));
     }
 
     #[test]
     fn scoreboard_blocks_raw_and_waw() {
-        let mut w = warp();
-        w.state = WarpState::Active;
-        w.pending.insert(5);
+        let mut hot = WarpHot::new(1);
+        hot.state[0] = WarpState::Active;
+        hot.pending[0].insert(5);
         let mut raw = Inst::new(Op::IAdd);
         raw.dst = Some(1);
         raw.srcs = [Some(5), Some(2), None];
-        assert_eq!(w.deps_ready(&raw), Err(5));
+        assert_eq!(hot.deps_ready(0, &raw), Err(5));
         let mut waw = Inst::new(Op::Mov);
         waw.dst = Some(5);
         waw.imm = Some(0);
-        assert_eq!(w.deps_ready(&waw), Err(5));
+        assert_eq!(hot.deps_ready(0, &waw), Err(5));
         let mut ok = Inst::new(Op::IAdd);
         ok.dst = Some(1);
         ok.srcs = [Some(2), Some(3), None];
-        assert_eq!(w.deps_ready(&ok), Ok(()));
+        assert_eq!(hot.deps_ready(0, &ok), Ok(()));
     }
 
     #[test]
     fn issue_throttle() {
-        let mut w = warp();
-        w.state = WarpState::Active;
-        w.next_issue = 10;
-        assert!(!w.issuable(9));
-        assert!(w.issuable(10));
+        let mut hot = WarpHot::new(1);
+        hot.state[0] = WarpState::Active;
+        hot.next_issue[0] = 10;
+        assert!(!hot.issuable(0, 9));
+        assert!(hot.issuable(0, 10));
+    }
+
+    #[test]
+    fn per_warp_slots_are_independent() {
+        let mut hot = WarpHot::new(3);
+        hot.state[1] = WarpState::Active;
+        hot.pending[1].insert(7);
+        assert!(hot.issuable(1, 0));
+        assert!(!hot.issuable(0, 0));
+        assert!(!hot.issuable(2, 0));
+        assert!(!hot.pending[0].contains(7));
+        assert!(!hot.pending[2].contains(7));
     }
 }

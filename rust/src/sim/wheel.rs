@@ -1,0 +1,418 @@
+//! Bucketed time-wheel for per-SM event scheduling.
+//!
+//! Replaces the `BinaryHeap<Reverse<(t, wid, kind)>>` the SM used through
+//! PR 5. The wheel files events into `SLOTS` per-cycle buckets covering a
+//! sliding window `[base, base + SLOTS)`; events beyond the window sit in
+//! an overflow list and are refiled when the window rotates. Push is O(1),
+//! and the idle-hint query walks a 16-word occupancy bitmap instead of
+//! maintaining heap order on every insert.
+//!
+//! Determinism contract (what the backend-equivalence oracle leans on):
+//!
+//! * [`EventWheel::pop_due`] yields events in exactly the order the old
+//!   heap produced — ascending `(t, wid, payload)` — including events
+//!   pushed for the cycle currently being drained (the `MemArrive` →
+//!   `PrefetchDone` chains), which are re-merged into the sorted due list
+//!   before the next pop.
+//! * The wheel's evolution is a function of the *push/pop sequence* only,
+//!   never of which intermediate cycles a driver happened to poll at:
+//!   polls at cycles with nothing due advance the cursor and rotate the
+//!   window exactly as a single coarse poll would (`rollovers` counts one
+//!   per window rotation performed while events are pending, and the
+//!   empty-wheel realignment does not count). The
+//!   `rollovers_are_partition_invariant` test pins this, which is what
+//!   makes `Stats::event_wheel_rollovers` bit-identical across backends
+//!   that poll the same SM at different cycle subsets.
+//!
+//! Lateness bound: an event may be pushed at most one cycle in the past
+//! (`t + 1 >= cursor`, checked in debug builds) — the commit phase posts
+//! replies for the cycle that just stepped. Late events are filed at the
+//! cursor but keep their real timestamp, so they still sort (and pop)
+//! ahead of the current cycle's natives, exactly as the heap ordered them.
+
+/// Window width in cycles. Covers the common event horizon (ALU/SFU
+/// latencies, L1/LLC hits, one DRAM round trip at moderate latency
+/// factors); longer-latency events take the overflow path.
+pub const SLOTS: usize = 1024;
+const SLOT_MASK: u64 = SLOTS as u64 - 1;
+const OCC_WORDS: usize = SLOTS / 64;
+
+/// A sliding-window event queue with deterministic heap-order drain.
+#[derive(Clone, Debug)]
+pub struct EventWheel<E> {
+    buckets: Vec<Vec<(u64, usize, E)>>,
+    /// One bit per slot: bucket non-empty. The idle-hint scan and the
+    /// cursor advance walk words, not buckets.
+    occ: [u64; OCC_WORDS],
+    /// Events at or beyond `base + SLOTS`, refiled on rotation.
+    overflow: Vec<(u64, usize, E)>,
+    /// Exact min timestamp across `overflow` (`u64::MAX` when empty).
+    overflow_min: u64,
+    /// Window start; always slot-aligned (`base % SLOTS == 0`).
+    base: u64,
+    /// Next cycle not yet fully drained; `base <= cursor <= base + SLOTS`.
+    cursor: u64,
+    len: usize,
+    /// Min pending timestamp. Exact whenever it exceeds the last drained
+    /// cycle (pops can only strand it at already-drained times, which the
+    /// hint query detects and repairs by an exact bitmap rescan).
+    min_cache: u64,
+    /// Window rotations performed while events were pending.
+    rollovers: u64,
+    /// Sorted (descending) scratch holding the remainder of the cycle
+    /// currently being drained; popped from the back.
+    due: Vec<(u64, usize, E)>,
+}
+
+impl<E: Copy + Ord + std::fmt::Debug> Default for EventWheel<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Copy + Ord + std::fmt::Debug> EventWheel<E> {
+    pub fn new() -> Self {
+        EventWheel {
+            buckets: (0..SLOTS).map(|_| Vec::new()).collect(),
+            occ: [0; OCC_WORDS],
+            overflow: Vec::new(),
+            overflow_min: u64::MAX,
+            base: 0,
+            cursor: 0,
+            len: 0,
+            min_cache: u64::MAX,
+            rollovers: 0,
+            due: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `(t, wid, e)`. Events up to one cycle in the past are
+    /// accepted (commit-phase replies for the cycle that just stepped) and
+    /// drain immediately on the next poll.
+    pub fn push(&mut self, t: u64, wid: usize, e: E) {
+        debug_assert!(
+            t + 1 >= self.cursor,
+            "event at {t} scheduled before drained cycle {}",
+            self.cursor
+        );
+        self.file((t, wid, e));
+        self.len += 1;
+        self.min_cache = self.min_cache.min(t);
+    }
+
+    /// File an entry at its effective cycle `max(t, cursor)` — bucket if
+    /// inside the window, overflow otherwise. Keeps the real timestamp so
+    /// drain order matches the heap's.
+    fn file(&mut self, entry: (u64, usize, E)) {
+        let eff = entry.0.max(self.cursor);
+        if eff >= self.base + SLOTS as u64 {
+            self.overflow_min = self.overflow_min.min(entry.0);
+            self.overflow.push(entry);
+        } else {
+            // `base` is aligned and `base <= eff < base + SLOTS`, so the
+            // masked value is exactly `eff - base`.
+            let slot = (eff & SLOT_MASK) as usize;
+            self.buckets[slot].push(entry);
+            self.occ[slot >> 6] |= 1u64 << (slot & 63);
+        }
+    }
+
+    /// Pop the next event with `t <= now`, in ascending `(t, wid, e)`
+    /// order. Draining past the window rotates it; draining an empty
+    /// wheel realigns the window without counting a rotation.
+    pub fn pop_due(&mut self, now: u64) -> Option<(u64, usize, E)> {
+        loop {
+            // Merge arrivals for the cycle being drained (same-cycle
+            // chained pushes land in the cursor's bucket) into the sorted
+            // due scratch.
+            if self.cursor <= now && self.cursor < self.base + SLOTS as u64 {
+                let slot = (self.cursor & SLOT_MASK) as usize;
+                if self.occ[slot >> 6] & (1u64 << (slot & 63)) != 0 {
+                    self.due.append(&mut self.buckets[slot]);
+                    self.occ[slot >> 6] &= !(1u64 << (slot & 63));
+                    self.due.sort_unstable_by(|a, b| b.cmp(a));
+                }
+            }
+            if let Some(ev) = self.due.pop() {
+                self.len -= 1;
+                return Some(ev);
+            }
+            if self.cursor > now {
+                return None;
+            }
+            if self.len == 0 {
+                // Nothing pending anywhere: skip the window forward in one
+                // move. Not a rotation — no event's filing is affected, so
+                // the rollover counter stays backend-invariant.
+                self.cursor = now + 1;
+                self.base = self.cursor & !SLOT_MASK;
+                return None;
+            }
+            // Advance the cursor to the next occupied cycle <= now,
+            // rotating the window as often as needed to get there.
+            loop {
+                let window_end = self.base + SLOTS as u64;
+                let limit = (now + 1).min(window_end);
+                let from = (self.cursor - self.base) as usize;
+                let upto = (limit - self.base) as usize;
+                if let Some(slot) = self.first_occupied_in(from, upto) {
+                    self.cursor = self.base + slot as u64;
+                    break;
+                }
+                if limit == now + 1 {
+                    self.cursor = now + 1;
+                    return None;
+                }
+                self.rotate();
+            }
+        }
+    }
+
+    /// Advance the window one width and refile overflow events that now
+    /// fall inside it. Only called with events pending, so each rotation
+    /// is forced by the push/pop sequence itself — any driver polling the
+    /// same sequence performs the same rotations.
+    fn rotate(&mut self) {
+        debug_assert!(self.occ.iter().all(|&w| w == 0), "rotating a window with live buckets");
+        self.base += SLOTS as u64;
+        self.cursor = self.base;
+        self.rollovers += 1;
+        if self.overflow_min >= self.base + SLOTS as u64 {
+            return;
+        }
+        let pending = std::mem::take(&mut self.overflow);
+        self.overflow_min = u64::MAX;
+        for entry in pending {
+            self.file(entry);
+        }
+    }
+
+    /// First occupied slot index in `[from, upto)`, via the bitmap.
+    fn first_occupied_in(&self, from: usize, upto: usize) -> Option<usize> {
+        if from >= upto {
+            return None;
+        }
+        let mut word = from >> 6;
+        let last_word = (upto - 1) >> 6;
+        let mut bits = self.occ[word] & (!0u64 << (from & 63));
+        loop {
+            if bits != 0 {
+                let slot = (word << 6) + bits.trailing_zeros() as usize;
+                return if slot < upto { Some(slot) } else { None };
+            }
+            word += 1;
+            if word > last_word {
+                return None;
+            }
+            bits = self.occ[word];
+        }
+    }
+
+    /// Min pending timestamp (`u64::MAX` when empty) — the idle
+    /// skip-ahead hint, identical to what `heap.peek()` returned. Exact:
+    /// a cached min at an already-drained cycle is repaired by a bitmap
+    /// rescan before being reported.
+    pub fn next_event_hint(&mut self, now: u64) -> u64 {
+        debug_assert!(self.due.is_empty(), "hint queried mid-drain");
+        if self.len == 0 {
+            return u64::MAX;
+        }
+        if self.min_cache > now {
+            return self.min_cache;
+        }
+        let mut min = self.overflow_min;
+        let from = (self.cursor.max(self.base) - self.base) as usize;
+        if let Some(slot) = self.first_occupied_in(from, SLOTS) {
+            // The <=1-cycle lateness bound means no later slot can hold a
+            // smaller timestamp than this bucket's min.
+            let bucket_min =
+                self.buckets[slot].iter().map(|&(t, _, _)| t).min().expect("occupied slot");
+            min = min.min(bucket_min);
+        }
+        self.min_cache = min;
+        min
+    }
+
+    /// Drain the rotation counter (folded into `Stats` by the SM).
+    pub fn take_rollovers(&mut self) -> u64 {
+        std::mem::take(&mut self.rollovers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Drain everything due at `now` from both the wheel and a reference
+    /// heap, asserting identical sequences.
+    fn drain_both(
+        wheel: &mut EventWheel<u8>,
+        heap: &mut BinaryHeap<Reverse<(u64, usize, u8)>>,
+        now: u64,
+    ) -> usize {
+        let mut popped = 0;
+        loop {
+            let expect = match heap.peek() {
+                Some(&Reverse(ev)) if ev.0 <= now => {
+                    heap.pop();
+                    Some(ev)
+                }
+                _ => None,
+            };
+            let got = wheel.pop_due(now);
+            assert_eq!(got, expect, "drain divergence at now={now}");
+            if got.is_none() {
+                return popped;
+            }
+            popped += 1;
+        }
+    }
+
+    /// Differential test against the exact heap the wheel replaces:
+    /// random pushes (spanning the window and the overflow path) drained
+    /// at random strides must yield identical pop order and identical
+    /// idle hints.
+    #[test]
+    fn matches_binary_heap_order_and_hints() {
+        prop::check(32, 0xEE1_0001, |rng: &mut Xoshiro256| {
+            let mut wheel = EventWheel::new();
+            let mut heap: BinaryHeap<Reverse<(u64, usize, u8)>> = BinaryHeap::new();
+            let mut now = 0u64;
+            for _ in 0..200 {
+                for _ in 0..rng.below(6) {
+                    // Mix short, window-edge, and deep-overflow horizons.
+                    let dt = match rng.below(3) {
+                        0 => rng.below(30),
+                        1 => 900 + rng.below(300),
+                        _ => 2000 + rng.below(4000),
+                    };
+                    let t = now + 1 + dt;
+                    let wid = rng.below(8) as usize;
+                    let payload = rng.below(4) as u8;
+                    wheel.push(t, wid, payload);
+                    heap.push(Reverse((t, wid, payload)));
+                }
+                now += 1 + rng.below(700);
+                drain_both(&mut wheel, &mut heap, now);
+                assert_eq!(
+                    wheel.next_event_hint(now),
+                    heap.peek().map(|&Reverse((t, _, _))| t).unwrap_or(u64::MAX),
+                    "hint divergence at now={now}"
+                );
+                assert_eq!(wheel.len(), heap.len());
+            }
+        });
+    }
+
+    /// The rollover count must depend only on the push/pop sequence, not
+    /// on which intermediate cycles the driver polled at — the property
+    /// that makes `event_wheel_rollovers` identical between the reference
+    /// backend (polls every global stop) and the parallel backend (polls
+    /// only at hint cycles).
+    #[test]
+    fn rollovers_are_partition_invariant() {
+        prop::check(16, 0xEE1_0002, |rng: &mut Xoshiro256| {
+            // Script: at each logical step, some pushes then a drain time.
+            let mut script: Vec<(Vec<(u64, usize, u8)>, u64)> = Vec::new();
+            let mut t0 = 0u64;
+            for _ in 0..40 {
+                t0 += 1 + rng.below(1500);
+                let pushes = (0..rng.below(4))
+                    .map(|_| (t0 + 1 + rng.below(5000), rng.below(8) as usize, rng.below(4) as u8))
+                    .collect();
+                script.push((pushes, t0));
+            }
+            let run = |dense: bool| {
+                let mut wheel = EventWheel::new();
+                let mut pops = Vec::new();
+                let mut last = 0u64;
+                for (pushes, t) in &script {
+                    if dense {
+                        // Poll every cycle between script points.
+                        for c in last..*t {
+                            while let Some(ev) = wheel.pop_due(c) {
+                                pops.push(ev);
+                            }
+                        }
+                    }
+                    last = *t;
+                    while let Some(ev) = wheel.pop_due(*t) {
+                        pops.push(ev);
+                    }
+                    for &(t, wid, p) in pushes {
+                        wheel.push(t, wid, p);
+                    }
+                }
+                // Flush the tail so every pushed event pops.
+                while let Some(ev) = wheel.pop_due(u64::MAX - 1) {
+                    pops.push(ev);
+                }
+                (pops, wheel.take_rollovers())
+            };
+            let (coarse_pops, coarse_rolls) = run(false);
+            let (dense_pops, dense_rolls) = run(true);
+            assert_eq!(coarse_pops, dense_pops);
+            assert_eq!(coarse_rolls, dense_rolls, "rollovers must not depend on poll points");
+        });
+    }
+
+    /// Same-cycle chained pushes (the MemArrive → PrefetchDone pattern)
+    /// and one-cycle-late pushes drain in heap order.
+    #[test]
+    fn same_cycle_and_late_pushes_drain_in_heap_order() {
+        let mut w = EventWheel::new();
+        w.push(10, 3, 1u8);
+        w.push(10, 1, 0u8);
+        assert_eq!(w.pop_due(10), Some((10, 1, 0)));
+        // Chained push for the cycle being drained.
+        w.push(10, 2, 9u8);
+        // Late push (commit reply for the cycle that just stepped): keeps
+        // its timestamp, so it sorts ahead of the cycle-10 natives.
+        w.push(9, 7, 5u8);
+        assert_eq!(w.pop_due(10), Some((9, 7, 5)));
+        assert_eq!(w.pop_due(10), Some((10, 2, 9)));
+        assert_eq!(w.pop_due(10), Some((10, 3, 1)));
+        assert_eq!(w.pop_due(10), None);
+        assert!(w.is_empty());
+    }
+
+    /// Empty-wheel realignment is free; rotations with pending events are
+    /// counted once per window crossed.
+    #[test]
+    fn empty_realign_is_not_a_rollover() {
+        let mut w: EventWheel<u8> = EventWheel::new();
+        assert_eq!(w.pop_due(1_000_000), None);
+        assert_eq!(w.take_rollovers(), 0, "empty skip must not count");
+        w.push(1_000_000 + 3 * SLOTS as u64 + 5, 0, 0);
+        assert_eq!(
+            w.pop_due(1_000_000 + 4 * SLOTS as u64),
+            Some((1_000_000 + 3 * SLOTS as u64 + 5, 0, 0))
+        );
+        assert!(w.take_rollovers() >= 3, "crossing windows with a pending event must count");
+    }
+
+    /// Hints see overflow events (nothing in the window must not read as
+    /// "no events").
+    #[test]
+    fn hint_covers_overflow() {
+        let mut w: EventWheel<u8> = EventWheel::new();
+        let far = 10 * SLOTS as u64;
+        w.push(far, 0, 0);
+        assert_eq!(w.next_event_hint(0), far);
+        assert_eq!(w.pop_due(far - 1), None);
+        assert_eq!(w.next_event_hint(far - 1), far);
+        assert_eq!(w.pop_due(far), Some((far, 0, 0)));
+    }
+}

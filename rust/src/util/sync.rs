@@ -5,10 +5,26 @@
 //! simulated cycle*; at that granularity `std::sync::Barrier`'s
 //! mutex/condvar round trips would swamp the step work, so the driver
 //! uses a spinning sense-reversal barrier: arrival is one `fetch_add`,
-//! release is one generation bump, and waiters spin (yielding after a
-//! short burst so oversubscribed hosts still make progress).
+//! release is one generation bump, and waiters spin for a bounded burst
+//! before degrading to scheduler yields (and eventually short sleeps),
+//! so `--sim-threads` above the physical core count cannot livelock the
+//! thread that must release the barrier.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Pure busy-spin iterations before a waiter starts yielding its
+/// timeslice. Sized so that a well-provisioned host (one core per
+/// participant) almost never leaves the spin burst — the release
+/// typically lands within a few hundred iterations — while an
+/// oversubscribed host burns at most this much before ceding the CPU
+/// to whichever runnable thread holds the release.
+const SPIN_LIMIT: u32 = 4096;
+
+/// Yield-per-iteration attempts after the spin burst before the waiter
+/// escalates to short sleeps. Yields are cheap but can still starve the
+/// releaser when the runqueue is deep (many more waiters than cores);
+/// sleeping guarantees the OS runs someone else.
+const YIELD_LIMIT: u32 = 64;
 
 /// A reusable spinning barrier for a fixed set of participants.
 ///
@@ -28,8 +44,14 @@ impl SpinBarrier {
         SpinBarrier { parties, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
     }
 
-    /// Block (spin) until all `parties` participants have arrived. The
-    /// last arriver resets the barrier for the next round.
+    /// Block until all `parties` participants have arrived. The last
+    /// arriver resets the barrier for the next round.
+    ///
+    /// Waiting is tiered: a bounded busy-spin burst (fast path when
+    /// every participant has a core), then per-iteration `yield_now`,
+    /// then 50µs sleeps. Progress never depends on a waiter's spinning —
+    /// release is a single store by the last arriver — so the tiers only
+    /// trade latency for scheduler friendliness.
     pub fn wait(&self) {
         let gen = self.generation.load(Ordering::SeqCst);
         let arrived = self.count.fetch_add(1, Ordering::SeqCst) + 1;
@@ -38,13 +60,22 @@ impl SpinBarrier {
             self.generation.fetch_add(1, Ordering::SeqCst);
             return;
         }
-        let mut spins = 0u32;
+        let mut iters = 0u32;
         while self.generation.load(Ordering::SeqCst) == gen {
-            spins = spins.wrapping_add(1);
-            if spins % 64 == 0 {
+            iters = iters.saturating_add(1);
+            if iters <= SPIN_LIMIT {
+                // Burst tier: stay hot on this core; the occasional
+                // yield keeps a mildly oversubscribed host moving even
+                // before the burst budget runs out.
+                if iters % 64 == 0 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            } else if iters <= SPIN_LIMIT + YIELD_LIMIT {
                 std::thread::yield_now();
             } else {
-                std::hint::spin_loop();
+                std::thread::sleep(std::time::Duration::from_micros(50));
             }
         }
     }
@@ -88,5 +119,34 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn oversubscribed_reuse_across_generations() {
+        // Deliberately more threads than any CI runner has cores, so
+        // most waiters blow through the spin burst into the yield/sleep
+        // tiers every round. The barrier must still order every round:
+        // each thread's per-round contribution lands before any thread
+        // observes the round's total, across hundreds of reuses of the
+        // same barrier object (generation wrap-around of `count`).
+        const THREADS: usize = 16;
+        const ROUNDS: u64 = 300;
+        let barrier = SpinBarrier::new(THREADS);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let barrier = &barrier;
+                let total = &total;
+                s.spawn(move || {
+                    for round in 0..ROUNDS {
+                        total.fetch_add(1, Ordering::SeqCst);
+                        barrier.wait();
+                        assert_eq!(total.load(Ordering::SeqCst), (round + 1) * THREADS as u64);
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), ROUNDS * THREADS as u64);
     }
 }

@@ -60,6 +60,62 @@ fn prop_dominators_sound() {
     });
 }
 
+/// Skip-ahead hints are sound: stepping an SM at any cycle strictly
+/// before its returned hint must change nothing except the
+/// `stall_no_ready_warp` diagnostic. Proven end-to-end by running the
+/// same SM densely (stepped at every cycle, so it visits every cycle
+/// the hint said to skip) and sparsely (hint-following), on both the
+/// inline and deferred memory ports, and comparing final stats with
+/// the stall diagnostic zeroed. This is the invariant that licenses the
+/// event wheel's `next_event_hint` and the `issue_min` lower-bound
+/// cache — an over-estimated hint would show up here as diverging
+/// instruction/memory counters. It also exercises the wheel's rollover
+/// partition-invariance: the dense run polls the wheel at every cycle,
+/// the sparse run only at hints, yet `event_wheel_rollovers` must
+/// match.
+#[test]
+fn prop_skip_ahead_hints_are_sound() {
+    use ltrf::sim::memsys::SharedMem;
+    use ltrf::sim::sm::{MemPort, SmSim};
+    prop::check(10, 0x41A7, |rng| {
+        let kind = *rng.choose(&[
+            HierarchyKind::Baseline,
+            HierarchyKind::Rfc,
+            HierarchyKind::Ltrf { plus: false },
+            HierarchyKind::Ltrf { plus: true },
+        ]);
+        let factor = *rng.choose(&[1.0f64, 4.0]);
+        let cfg = SimConfig::with_hierarchy(kind).with_latency_factor(factor).normalize_capacity();
+        let kernel = gen::random_kernel(rng, 24);
+        let ck = compile(&kernel, gpu::compile_options(&cfg, false));
+        let resident = cfg.resident_warps(ck.kernel.num_regs);
+        for deferred in [false, true] {
+            let run = |dense: bool| {
+                let mut shared = SharedMem::new(cfg.mem);
+                let mut sm = SmSim::new(&cfg, &ck, resident, 0);
+                let mut now = 0u64;
+                while !sm.done() {
+                    let hint = if deferred {
+                        let h = sm.step(now, &mut MemPort::Deferred);
+                        sm.commit_mem(&mut shared);
+                        h
+                    } else {
+                        sm.step(now, &mut MemPort::Inline(&mut shared))
+                    };
+                    assert!(now < 10_000_000, "runaway simulation");
+                    now = if dense { now + 1 } else { hint.max(now + 1) };
+                }
+                let mut st = sm.stats.clone();
+                st.stall_no_ready_warp = 0;
+                (st, shared.llc_hits, shared.llc_misses)
+            };
+            let dense = run(true);
+            let sparse = run(false);
+            assert_eq!(dense, sparse, "kind={} factor={factor} deferred={deferred}", kind.name());
+        }
+    });
+}
+
 /// Simulation conservation laws: every resident warp finishes exactly
 /// once, instruction counts match the architectural stream, and cache
 /// residency is bounded by the partition size throughout.

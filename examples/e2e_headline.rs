@@ -13,7 +13,7 @@
 //! Run: `cargo run --release --example e2e_headline` (add `--quick` for
 //! the 5-workload subset). Results are recorded in EXPERIMENTS.md.
 
-use ltrf::coordinator::engine::{two_phase, Engine};
+use ltrf::coordinator::engine::Engine;
 use ltrf::coordinator::experiments::{headline, ExperimentContext};
 use ltrf::runtime::PrefetchEvaluator;
 
@@ -33,10 +33,11 @@ fn main() {
     );
 
     let t0 = std::time::Instant::now();
-    // Two-phase engine run: the headline's points (suite × {baseline,
-    // config #7}) execute as one deduplicated parallel job matrix.
+    // Ticket-API engine run: the headline driver declares its points
+    // (suite × {baseline, config #7}), executes them as one deduplicated
+    // parallel job matrix, then redeems the tickets for the table.
     let mut eng = Engine::new(ctx.jobs);
-    let (improvement, table) = two_phase(&ctx, &mut eng, headline);
+    let (improvement, table) = headline(&ctx, &mut eng);
     println!("{}", table.render());
     eprintln!("{}", eng.summary());
     println!(

@@ -6,7 +6,7 @@
 
 mod bench_util;
 use bench_util::bench;
-use ltrf::coordinator::engine::{two_phase, CfgTweaks, Engine};
+use ltrf::coordinator::engine::Engine;
 use ltrf::coordinator::experiments as exp;
 use ltrf::sim::HierarchyKind;
 use ltrf::workloads::suite;
@@ -24,7 +24,7 @@ fn matrix_points() -> Vec<(&'static ltrf::workloads::WorkloadSpec, exp::DesignUn
         let spec = suite::workload_by_name(w).unwrap();
         for d in &designs {
             for factor in [1.0, 4.0] {
-                points.push((spec, d.clone(), factor));
+                points.push((spec, *d, factor));
             }
         }
     }
@@ -35,11 +35,13 @@ fn main() {
     let ctx = exp::ExperimentContext::quick();
 
     // --- per-driver regeneration through the engine (quick context) ---
+    // Ticket-API drivers self-execute, so a bench run is one direct call
+    // on a fresh engine.
     let drv = |f: fn(&exp::ExperimentContext, &mut Engine) -> ltrf::report::Table| {
         let ctx = ctx.clone();
         move || {
             let mut eng = Engine::new(0);
-            two_phase(&ctx, &mut eng, f).rows.len() as u64
+            f(&ctx, &mut eng).rows.len() as u64
         }
     };
     bench("table1 (TLP capacity demand)", 3, drv(exp::table1));
@@ -49,18 +51,18 @@ fn main() {
     bench("fig6 (conflict distribution)", 1, drv(exp::fig6));
     bench("fig14 (overall IPC, cfgs #6/#7)", 1, || {
         let mut eng = Engine::new(0);
-        two_phase(&ctx, &mut eng, exp::fig14).iter().map(|t| t.rows.len() as u64).sum()
+        exp::fig14(&ctx, &mut eng).iter().map(|t| t.rows.len() as u64).sum()
     });
     bench("fig15 (max tolerable latency)", 1, drv(exp::fig15));
     bench("fig16 (conflicts x N)", 1, || {
         let mut eng = Engine::new(0);
-        two_phase(&ctx, &mut eng, exp::fig16).iter().map(|t| t.rows.len() as u64).sum()
+        exp::fig16(&ctx, &mut eng).iter().map(|t| t.rows.len() as u64).sum()
     });
     bench("table4 (interval lengths)", 1, drv(exp::table4));
     bench("fig19 (vs strand-based designs)", 1, drv(exp::fig19));
     bench("headline (config #7 improvement)", 1, || {
         let mut eng = Engine::new(0);
-        two_phase(&ctx, &mut eng, exp::headline).1.rows.len() as u64
+        exp::headline(&ctx, &mut eng).1.rows.len() as u64
     });
 
     // --- serial legacy path vs the parallel engine on the same matrix ---
@@ -77,15 +79,11 @@ fn main() {
         };
         bench(label, 2, || {
             let mut eng = Engine::new(jobs);
-            eng.plan_phase();
             for (s, d, f) in &points {
                 eng.request(*s, d, *f);
             }
             eng.execute();
-            points
-                .iter()
-                .map(|(s, d, f)| eng.stats_tweaked(*s, d, *f, CfgTweaks::NONE).instructions)
-                .sum::<u64>()
+            points.iter().map(|(s, d, f)| eng.point(*s, d, *f).instructions).sum::<u64>()
         });
     }
 }

@@ -16,7 +16,12 @@
 //! * **compile throughput** — wall seconds to compile the fig14 workload
 //!   × design-point option matrix through the incremental pass manager,
 //!   cold (fresh analysis cache per iteration) vs warm (fully shared
-//!   cache) — the trajectory of the PR-4 pass-manager refactor.
+//!   cache) — the trajectory of the PR-4 pass-manager refactor;
+//! * **store throughput** — wall seconds to resolve a small sweep through
+//!   the engine against a cross-run disk memo store, cold (every point
+//!   simulated, then persisted) vs warm (a fresh engine answers every
+//!   point from disk with zero simulations) — the trajectory of the memo
+//!   store.
 //!
 //! Every comparison first asserts the variants' outputs are bit-identical
 //! on the measured points — a speedup over a diverging simulator (or a
@@ -26,7 +31,8 @@
 
 use crate::compiler::{CompileOptions, PassManager};
 use crate::coordinator::designs;
-use crate::coordinator::engine::{point_setup, CfgTweaks};
+use crate::coordinator::engine::{point_setup, CfgTweaks, Engine};
+use crate::coordinator::MemoStore;
 use crate::ir::Kernel;
 use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
 use crate::timing::{design_points, Tech};
@@ -104,6 +110,23 @@ impl CompileBenchEntry {
     }
 }
 
+/// One measured memo-store configuration (`mode` is `"cold"` — empty
+/// store, every point simulated — or `"warm"` — a fresh engine resolves
+/// the same sweep entirely from disk).
+#[derive(Clone, Debug)]
+pub struct StoreBenchEntry {
+    pub name: String,
+    pub mode: &'static str,
+    /// Mean wall seconds per iteration (one iteration resolves the whole
+    /// sweep once).
+    pub wall_seconds: f64,
+    /// Simulations run during one iteration.
+    pub sims: u64,
+    /// Disk-store hits/misses booked during one iteration.
+    pub store_hits: u64,
+    pub store_misses: u64,
+}
+
 /// The full trajectory report.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -111,6 +134,7 @@ pub struct BenchReport {
     pub sim_threads: usize,
     pub entries: Vec<BenchEntry>,
     pub compile_entries: Vec<CompileBenchEntry>,
+    pub store_entries: Vec<StoreBenchEntry>,
     /// Epoch-core diagnostics summed over every equivalence-gate
     /// reference run: global epochs whose serial commit phase was
     /// skipped, and event-wheel window rotations. Nonzero values prove
@@ -147,6 +171,20 @@ impl BenchReport {
     pub fn compile_warm_speedup(&self) -> Option<f64> {
         let cold = self.compile_entry("cold")?;
         let warm = self.compile_entry("warm")?;
+        Some(cold.wall_seconds / warm.wall_seconds.max(1e-12))
+    }
+
+    /// Store-entry lookup by mode (`"cold"` / `"warm"`).
+    pub fn store_entry(&self, mode: &str) -> Option<&StoreBenchEntry> {
+        self.store_entries.iter().find(|e| e.mode == mode)
+    }
+
+    /// Warm memo-store speedup over cold (the disk-store headline: how
+    /// much resolving an identical sweep from disk saves over
+    /// re-simulating it).
+    pub fn store_warm_speedup(&self) -> Option<f64> {
+        let cold = self.store_entry("cold")?;
+        let warm = self.store_entry("warm")?;
         Some(cold.wall_seconds / warm.wall_seconds.max(1e-12))
     }
 
@@ -191,6 +229,9 @@ impl BenchReport {
         if let Some(s) = self.compile_warm_speedup() {
             let _ = writeln!(out, "  \"compile_warm_speedup\": {:.4},", s);
         }
+        if let Some(s) = self.store_warm_speedup() {
+            let _ = writeln!(out, "  \"store_warm_speedup\": {:.4},", s);
+        }
         out.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
             let comma = if i + 1 == self.entries.len() { "" } else { "," };
@@ -208,6 +249,17 @@ impl BenchReport {
                 e.cycles_per_second(),
                 e.winst_per_second(),
                 comma
+            );
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"store\": [\n");
+        for (i, e) in self.store_entries.iter().enumerate() {
+            let comma = if i + 1 == self.store_entries.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"mode\": \"{}\", \"wall_seconds\": {:.6}, \
+                 \"sims\": {}, \"store_hits\": {}, \"store_misses\": {}}}{}",
+                e.name, e.mode, e.wall_seconds, e.sims, e.store_hits, e.store_misses, comma
             );
         }
         out.push_str("  ],\n");
@@ -495,12 +547,94 @@ fn measure_compile_family(report: &mut BenchReport, opts: &BenchOptions) {
     });
 }
 
+/// Measure the `store_sweep` family: a small registry sweep resolved
+/// through the engine, cold (empty memo store: simulate everything, then
+/// persist) vs warm (a fresh engine resolves the identical sweep entirely
+/// from disk). Gated on the warm pass simulating nothing and reproducing
+/// the cold stats bit-for-bit.
+fn measure_store_family(report: &mut BenchReport, opts: &BenchOptions) {
+    let dir = std::env::temp_dir().join(format!("ltrf-bench-store-{}", std::process::id()));
+    let specs = workloads(opts);
+    let points = designs::all_points(2048);
+    let n_points = (specs.len() * points.len()) as u64;
+    let iters = opts.iters.max(1);
+
+    let run_sweep = |fresh: bool| -> (f64, Engine) {
+        if fresh {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let mut eng = Engine::new(1);
+        eng.set_store(MemoStore::open(&dir));
+        let t0 = Instant::now();
+        for &spec in &specs {
+            for (_, dut) in &points {
+                eng.request(spec, dut, 1.0);
+            }
+        }
+        eng.execute();
+        eng.flush_store().expect("bench store save");
+        (t0.elapsed().as_secs_f64(), eng)
+    };
+
+    let mut cold_wall = 0.0;
+    let mut cold = None;
+    for _ in 0..iters {
+        let (w, eng) = run_sweep(true);
+        cold_wall += w;
+        cold = Some(eng);
+    }
+    let mut cold = cold.expect("at least one cold iteration");
+    assert_eq!(cold.sims_run(), n_points, "cold store sweep simulates every point");
+    report.store_entries.push(StoreBenchEntry {
+        name: "store_sweep".into(),
+        mode: "cold",
+        wall_seconds: cold_wall / iters as f64,
+        sims: cold.sims_run(),
+        store_hits: cold.store().map(|s| s.hits()).unwrap_or(0),
+        store_misses: cold.store().map(|s| s.misses()).unwrap_or(0),
+    });
+
+    let mut warm_wall = 0.0;
+    let mut warm = None;
+    for _ in 0..iters {
+        let (w, eng) = run_sweep(false);
+        warm_wall += w;
+        warm = Some(eng);
+    }
+    let mut warm = warm.expect("at least one warm iteration");
+    // Equivalence + liveness gate: the warm engine must simulate nothing
+    // and reproduce the cold stats bit-for-bit from disk — a fast store
+    // that returns the wrong entry is not a speedup.
+    assert_eq!(warm.sims_run(), 0, "warm store sweep must resolve entirely from disk");
+    for &spec in &specs {
+        for (_, dut) in &points {
+            assert_eq!(
+                cold.point(spec, dut, 1.0),
+                warm.point(spec, dut, 1.0),
+                "store round-trip diverged on {} / {:?}",
+                spec.name,
+                dut.hierarchy
+            );
+        }
+    }
+    report.store_entries.push(StoreBenchEntry {
+        name: "store_sweep".into(),
+        mode: "warm",
+        wall_seconds: warm_wall / iters as f64,
+        sims: 0,
+        store_hits: warm.store().map(|s| s.hits()).unwrap_or(0),
+        store_misses: warm.store().map(|s| s.misses()).unwrap_or(0),
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Run the full trajectory measurement.
 pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     let mut report =
         BenchReport { quick: opts.quick, sim_threads: opts.sim_threads, ..Default::default() };
     let num_sms = 8;
     measure_compile_family(&mut report, opts);
+    measure_store_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
     measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
     measure_policy_family(&mut report, opts);
@@ -632,6 +766,21 @@ mod tests {
         measure_family(&mut r, "hot_loop_1sm", &hot_points(1), &opts);
         assert!(r.epoch_commit_phases_skipped > 0, "hot point must skip clean commit phases");
         assert!(r.epoch_wheel_rollovers > 0, "hot point runs long enough to rotate the wheel");
+    }
+
+    #[test]
+    fn store_family_cold_persists_and_warm_is_all_hits() {
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
+        measure_store_family(&mut r, &BenchOptions::quick());
+        assert_eq!(r.store_entries.len(), 2);
+        let cold = r.store_entry("cold").unwrap();
+        let warm = r.store_entry("warm").unwrap();
+        assert!(cold.sims > 0, "cold pass simulates the matrix");
+        assert_eq!(cold.store_hits, 0);
+        assert_eq!(cold.store_misses, cold.sims, "every cold lookup misses the disk");
+        assert_eq!(warm.sims, 0, "warm pass resolves entirely from disk");
+        assert_eq!(warm.store_hits, cold.sims);
+        assert_eq!(warm.store_misses, 0);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Shared CLI flag parsing for the `ltrf` binary.
+//!
+//! Every subcommand declares its accepted flags as a `&[FlagSpec]` and
+//! parses through [`parse`], so the shared knobs (`--jobs`, `--backend`,
+//! `--sim-threads`, `--json`, `--store`, ...) are defined **once** (the
+//! constants below) and behave identically everywhere they are accepted.
+//! An unknown or misspelled flag is an error that lists the subcommand's
+//! valid flags instead of being silently ignored — previously each
+//! subcommand scanned the raw argv with ad-hoc `flag()`/`opt()` closures,
+//! so `ltrf fig14 --job 8` ran happily single-threaded.
+
+/// One accepted flag: `--name` (boolean) or `--name VALUE`.
+#[derive(Clone, Copy, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    /// Placeholder shown in listings for value-taking flags (`N`, `DIR`).
+    pub value_name: &'static str,
+    pub help: &'static str,
+}
+
+/// A boolean flag (`--quick`).
+pub const fn flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: false, value_name: "", help }
+}
+
+/// A value-taking flag (`--jobs N`).
+pub const fn opt(name: &'static str, value_name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: true, value_name, help }
+}
+
+// The shared knobs. Subcommand specs include these constants so the
+// spelling and semantics cannot drift between subcommands.
+pub const QUICK: FlagSpec = flag("--quick", "5-workload subset, smaller grids");
+pub const CSV: FlagSpec = opt("--csv", "DIR", "also write each table as CSV");
+pub const SMS: FlagSpec = opt("--sms", "N", "simulated SM count (default 1)");
+pub const JOBS: FlagSpec = opt("--jobs", "N", "parallel simulation workers (0 = all cores)");
+pub const BACKEND: FlagSpec =
+    opt("--backend", "B", "simulator backend: reference | parallel (default reference)");
+pub const SIM_THREADS: FlagSpec =
+    opt("--sim-threads", "N", "step-phase threads for the parallel backend (default 1)");
+pub const JSON: FlagSpec = flag("--json", "print tables as JSON objects instead of ascii");
+pub const STORE: FlagSpec =
+    opt("--store", "DIR", "cross-run memo store: reuse previously simulated points from DIR");
+pub const ENGINE_STATS: FlagSpec =
+    flag("--engine-stats", "print job-matrix / cache statistics after the run");
+
+/// Parsed argv for one subcommand.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    /// Non-flag arguments, in order (e.g. the workload name of `run`).
+    pub positionals: Vec<String>,
+    flags: Vec<&'static str>,
+    opts: Vec<(&'static str, String)>,
+}
+
+impl Parsed {
+    /// Is the boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| *f == name)
+    }
+
+    /// Last value given for a value-taking flag (last occurrence wins).
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.iter().rev().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse a value-taking flag into `T`, diagnosing bad values by flag
+    /// name (ad-hoc `.parse().ok()` silently fell back to the default).
+    pub fn parsed_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("bad value `{raw}` for {name}")),
+        }
+    }
+}
+
+/// Render a spec as a one-line listing: `--quick, --jobs N, ...`.
+pub fn flag_listing(spec: &[FlagSpec]) -> String {
+    if spec.is_empty() {
+        return "(none)".to_string();
+    }
+    spec.iter()
+        .map(|f| {
+            if f.takes_value {
+                format!("{} {}", f.name, f.value_name)
+            } else {
+                f.name.to_string()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Parse `args` against `spec`. Unknown flags and missing values are
+/// errors naming the subcommand and listing its valid flags.
+pub fn parse(cmd: &str, args: &[String], spec: &[FlagSpec]) -> Result<Parsed, String> {
+    let mut out = Parsed::default();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if !a.starts_with("--") {
+            out.positionals.push(a.clone());
+            continue;
+        }
+        let Some(f) = spec.iter().find(|f| f.name == a.as_str()) else {
+            return Err(format!(
+                "unknown flag `{a}` for `{cmd}`; valid flags: {}",
+                flag_listing(spec)
+            ));
+        };
+        if f.takes_value {
+            let Some(v) = it.next() else {
+                return Err(format!("flag {} requires a value ({})", f.name, f.value_name));
+            };
+            out.opts.push((f.name, v.clone()));
+        } else {
+            out.flags.push(f.name);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_opts_and_positionals() {
+        let spec = [QUICK, JOBS, BACKEND];
+        let p = parse(
+            "fig14",
+            &argv(&["--quick", "kmeans", "--jobs", "4", "--backend", "parallel"]),
+            &spec,
+        )
+        .unwrap();
+        assert!(p.flag("--quick"));
+        assert!(!p.flag("--engine-stats"));
+        assert_eq!(p.opt("--jobs"), Some("4"));
+        assert_eq!(p.parsed_opt::<usize>("--jobs").unwrap(), Some(4));
+        assert_eq!(p.opt("--backend"), Some("parallel"));
+        assert_eq!(p.positionals, ["kmeans"]);
+    }
+
+    #[test]
+    fn unknown_flag_lists_the_subcommands_valid_flags() {
+        let spec = [QUICK, JOBS];
+        let err = parse("fig14", &argv(&["--job", "8"]), &spec).unwrap_err();
+        assert!(err.contains("--job"), "{err}");
+        assert!(err.contains("fig14"), "{err}");
+        assert!(err.contains("--quick") && err.contains("--jobs N"), "{err}");
+        let none = parse("workloads", &argv(&["--x"]), &[]).unwrap_err();
+        assert!(none.contains("(none)"), "{none}");
+    }
+
+    #[test]
+    fn missing_value_and_bad_value_diagnose_by_flag() {
+        let spec = [JOBS];
+        let err = parse("bench", &argv(&["--jobs"]), &spec).unwrap_err();
+        assert!(err.contains("--jobs requires a value"), "{err}");
+        let p = parse("bench", &argv(&["--jobs", "many"]), &spec).unwrap();
+        let bad = p.parsed_opt::<usize>("--jobs").unwrap_err();
+        assert!(bad.contains("many") && bad.contains("--jobs"), "{bad}");
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let spec = [JOBS];
+        let p = parse("x", &argv(&["--jobs", "1", "--jobs", "8"]), &spec).unwrap();
+        assert_eq!(p.parsed_opt::<usize>("--jobs").unwrap(), Some(8));
+    }
+}

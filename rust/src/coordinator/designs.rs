@@ -135,6 +135,12 @@ pub fn baseline() -> &'static PolicyPoint {
     &REGISTRY[0]
 }
 
+/// Canonical policy names in registry order (the sweep service's
+/// `"designs": "all"` expansion and the CLI `designs` listing).
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|p| p.name).collect()
+}
+
 /// The classic comparison columns (Fig. 14/15 order) at `capacity`.
 pub fn comparison_points(capacity: usize) -> Vec<(&'static str, DesignUnderTest)> {
     REGISTRY

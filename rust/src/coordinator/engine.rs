@@ -16,13 +16,22 @@
 //! * [`Engine`] — ties them together with the work-stealing executor in
 //!   [`super::sweep::steal_map`] and a `--jobs N` thread knob.
 //!
-//! Drivers run in two phases (see [`two_phase`]): a *planning* pass where
-//! [`Engine::stats`] registers jobs and returns placeholder zeros (table
-//! output is discarded), one parallel [`Engine::execute`], then a *render*
-//! pass where every lookup hits the `ResultSet`. Adaptive drivers (the
-//! §7.2 tolerable-latency scans) may miss points they only discover while
-//! rendering; those fall back to on-demand simulation through the same
-//! caches, so results stay identical to the serial implementation.
+//! Drivers use a typed plan-then-execute protocol: [`Engine::request`]
+//! declares a point and returns a [`JobTicket`], one parallel
+//! [`Engine::execute`] runs the deduplicated batch, and
+//! [`Engine::redeem`] / [`Engine::point`] read the stats back. There is no
+//! mode switch to hold wrong: redeeming a point that was never declared
+//! (the §7.2 tolerable-latency scans discover points adaptively) falls
+//! back to an on-demand simulation through the same caches, so results
+//! stay identical to the serial implementation. The PR-1 stateful
+//! `plan_phase`/`planning`/`stats` protocol survives one more PR as a
+//! deprecated shim over the ticket API.
+//!
+//! With a [`MemoStore`] attached ([`Engine::set_store`]), results also
+//! memoize *across* runs: `request` consults the disk store before
+//! scheduling, so a repeated sweep simulates nothing and a sweep after a
+//! compiler change re-runs only the points whose kernel fingerprints
+//! moved (see [`super::store`] for the invalidation rules).
 //!
 //! Determinism: a simulation job touches no global state — it owns its
 //! `SharedMem`, its `SmSim`s, and its per-warp RNG streams — so `Stats`
@@ -31,6 +40,7 @@
 //! integration suite asserts this).
 
 use super::experiments::DesignUnderTest;
+use super::store::MemoStore;
 use super::sweep;
 use crate::compiler::{compile, BankMap, CompileOptions, CompiledKernel, PassManager};
 use crate::sim::config::HierarchyKind;
@@ -77,6 +87,22 @@ impl CfgTweaks {
     /// snapshot CLI's `--backend`/`--sim-threads` knobs).
     pub fn with_backend(backend: SimBackend, sim_threads: usize) -> CfgTweaks {
         CfgTweaks { backend: Some(backend), sim_threads: Some(sim_threads), ..CfgTweaks::NONE }
+    }
+
+    /// Field-wise merge: every knob set in `self` wins, unset knobs fall
+    /// back to `base`. `NONE.or(base) == base`, `t.or(NONE) == t` — the
+    /// engine folds its session-default tweaks (the unified CLI
+    /// `--backend`/`--sim-threads` surface) under every request this way,
+    /// so an explicit per-request tweak always overrides the session
+    /// default.
+    pub fn or(self, base: CfgTweaks) -> CfgTweaks {
+        CfgTweaks {
+            early_refetch: self.early_refetch.or(base.early_refetch),
+            xbar_regs_per_cycle: self.xbar_regs_per_cycle.or(base.xbar_regs_per_cycle),
+            bank_map: self.bank_map.or(base.bank_map),
+            backend: self.backend.or(base.backend),
+            sim_threads: self.sim_threads.or(base.sim_threads),
+        }
     }
 
     /// Apply to a concrete simulator configuration. Must run *before*
@@ -173,6 +199,46 @@ impl JobKey {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct JobId(usize);
 
+/// A declared simulation point, returned by [`Engine::request`] and
+/// redeemed for its [`Stats`] via [`Engine::redeem`] (or directly against
+/// an executed [`ResultSet`] with [`ResultSet::redeem`]). The ticket
+/// carries the fully-resolved point identity — session-default tweaks are
+/// already folded in — so redemption cannot drift from what was declared.
+/// Redeeming a ticket that was never executed is not a misuse: it falls
+/// back to an on-demand memoized simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct JobTicket {
+    spec: &'static WorkloadSpec,
+    dut: DesignUnderTest,
+    factor: f64,
+    tweaks: CfgTweaks,
+}
+
+impl JobTicket {
+    /// The result-set key this ticket redeems against.
+    pub fn key(&self) -> JobKey {
+        JobKey::of(self.spec, &self.dut, self.factor, self.tweaks)
+    }
+
+    pub fn spec(&self) -> &'static WorkloadSpec {
+        self.spec
+    }
+
+    pub fn dut(&self) -> &DesignUnderTest {
+        &self.dut
+    }
+
+    pub fn latency_factor(&self) -> f64 {
+        self.factor
+    }
+
+    /// The resolved tweaks (explicit request tweaks merged over the
+    /// engine's session defaults).
+    pub fn tweaks(&self) -> CfgTweaks {
+        self.tweaks
+    }
+}
+
 /// The deduplicated set of declared simulation points.
 #[derive(Default)]
 pub struct JobMatrix {
@@ -198,7 +264,7 @@ impl JobMatrix {
             return JobId(i);
         }
         let i = self.jobs.len();
-        self.jobs.push(SimJob { spec, dut: dut.clone(), latency_factor, tweaks });
+        self.jobs.push(SimJob { spec, dut: *dut, latency_factor, tweaks });
         self.index.insert(key, i);
         JobId(i)
     }
@@ -213,6 +279,11 @@ impl JobMatrix {
 
     pub fn jobs(&self) -> &[SimJob] {
         &self.jobs
+    }
+
+    /// Is the point already declared (pending execution)?
+    pub fn contains(&self, key: &JobKey) -> bool {
+        self.index.contains_key(key)
     }
 }
 
@@ -235,6 +306,12 @@ pub struct CacheReport {
     pub analysis_hits: u64,
     /// Unique `(fingerprint, pass)` entries computed.
     pub analysis_misses: u64,
+    /// Points answered from the cross-run disk memo store (0 when no
+    /// store is attached).
+    pub store_hits: u64,
+    /// Store lookups that missed and had to simulate (0 when no store is
+    /// attached).
+    pub store_misses: u64,
 }
 
 impl CacheReport {
@@ -313,13 +390,17 @@ impl CompileCache {
         &self.passes
     }
 
-    /// Snapshot of both cache layers.
+    /// Snapshot of both compile-side cache layers (the disk-store counters
+    /// live on the engine, which folds them in when it refreshes
+    /// [`ResultSet::cache`]).
     pub fn report(&self) -> CacheReport {
         CacheReport {
             compile_hits: self.hits(),
             compile_misses: self.misses(),
             analysis_hits: self.passes.hits(),
             analysis_misses: self.passes.misses(),
+            store_hits: 0,
+            store_misses: 0,
         }
     }
 }
@@ -337,6 +418,13 @@ pub struct ResultSet {
 impl ResultSet {
     pub fn get(&self, key: &JobKey) -> Option<&Stats> {
         self.map.get(key)
+    }
+
+    /// Ticket lookup against the executed results (`None` = the ticket's
+    /// point has not landed here; [`Engine::redeem`] would simulate it on
+    /// demand instead).
+    pub fn redeem(&self, ticket: &JobTicket) -> Option<&Stats> {
+        self.map.get(&ticket.key())
     }
 
     pub fn insert(&mut self, key: JobKey, stats: Stats) {
@@ -425,14 +513,19 @@ pub fn run_kernel_point(
 // Engine
 // ---------------------------------------------------------------------
 
-/// The shared experiment engine: job matrix + caches + executor.
+/// The shared experiment engine: job matrix + caches + executor + an
+/// optional cross-run disk memo store.
 pub struct Engine {
     /// Worker threads for [`Engine::execute`] (0 = all cores).
     pub threads: usize,
+    /// Legacy-shim state only (`plan_phase`/`stats`); the ticket API
+    /// never reads it.
     planning: bool,
     matrix: JobMatrix,
     results: ResultSet,
     compile_cache: CompileCache,
+    store: Option<MemoStore>,
+    default_tweaks: CfgTweaks,
     sims_run: u64,
     lookups: u64,
 }
@@ -445,24 +538,64 @@ impl Engine {
             matrix: JobMatrix::new(),
             results: ResultSet::default(),
             compile_cache: CompileCache::new(),
+            store: None,
+            default_tweaks: CfgTweaks::NONE,
             sims_run: 0,
             lookups: 0,
         }
     }
 
-    /// Enter the planning phase: subsequent [`Engine::stats`] calls
-    /// register jobs and return placeholder zeros.
-    pub fn plan_phase(&mut self) {
-        self.planning = true;
+    /// Attach a disk-backed memo store: subsequent requests consult it
+    /// before scheduling, executed results are recorded back, and
+    /// [`Engine::execute`] persists it after each batch.
+    pub fn set_store(&mut self, store: MemoStore) {
+        self.store = Some(store);
+        self.refresh_cache_report();
     }
 
-    pub fn planning(&self) -> bool {
-        self.planning
+    pub fn store(&self) -> Option<&MemoStore> {
+        self.store.as_ref()
     }
 
-    /// Declare a point without needing its (placeholder) stats.
-    pub fn request(&mut self, spec: &'static WorkloadSpec, dut: &DesignUnderTest, factor: f64) {
-        self.request_tweaked(spec, dut, factor, CfgTweaks::NONE);
+    /// Persist the attached store now (no-op without a store or without
+    /// new results). `execute` already saves per batch; the CLI calls
+    /// this once more at exit to catch render-phase fallback simulations.
+    pub fn flush_store(&mut self) -> Result<(), String> {
+        match self.store.as_mut() {
+            Some(s) => s.save(),
+            None => Ok(()),
+        }
+    }
+
+    /// Session-default tweaks folded under every request/point (explicit
+    /// per-request tweaks win field-wise — see [`CfgTweaks::or`]). The
+    /// CLI routes the unified `--backend` / `--sim-threads` flags here so
+    /// every subcommand honors them identically.
+    pub fn set_default_tweaks(&mut self, tweaks: CfgTweaks) {
+        self.default_tweaks = tweaks;
+    }
+
+    /// Build the fully-resolved ticket for a point (no side effects).
+    fn ticket(
+        &self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) -> JobTicket {
+        JobTicket { spec, dut: *dut, factor, tweaks: tweaks.or(self.default_tweaks) }
+    }
+
+    /// Declare a point for the next [`Engine::execute`] batch; identical
+    /// points (and points already resolved, in memory or on disk) do not
+    /// schedule twice. Returns the ticket to redeem after execution.
+    pub fn request(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+    ) -> JobTicket {
+        self.request_tweaked(spec, dut, factor, CfgTweaks::NONE)
     }
 
     pub fn request_tweaked(
@@ -471,56 +604,87 @@ impl Engine {
         dut: &DesignUnderTest,
         factor: f64,
         tweaks: CfgTweaks,
-    ) {
-        let key = JobKey::of(spec, dut, factor, tweaks);
-        if self.results.get(&key).is_none() {
-            self.matrix.add(spec, dut, factor, tweaks);
+    ) -> JobTicket {
+        let ticket = self.ticket(spec, dut, factor, tweaks);
+        let key = ticket.key();
+        if self.results.get(&key).is_some() || self.matrix.contains(&key) {
+            return ticket;
         }
+        // Consult the disk store *before* scheduling: a stored point never
+        // enters the matrix, so a warm re-sweep schedules nothing.
+        if let Some(store) = self.store.as_mut() {
+            if let Some(st) = store.lookup(ticket.spec, &ticket.dut, ticket.factor, ticket.tweaks)
+            {
+                self.results.insert(key, st);
+                self.refresh_cache_report();
+                return ticket;
+            }
+        }
+        self.matrix.add(ticket.spec, &ticket.dut, ticket.factor, ticket.tweaks);
+        ticket
     }
 
-    /// Stats for a point. Planning: registers the job, returns zeros.
-    /// Rendering: `ResultSet` lookup, with an on-demand (cached,
-    /// memoized) simulation fallback for adaptively-discovered points.
-    pub fn stats(
+    /// Redeem a ticket for its stats. Resolution order: executed
+    /// `ResultSet` → disk store → on-demand simulation through the shared
+    /// caches (memoized into the `ResultSet` and recorded to the store,
+    /// so adaptively-discovered points cost one simulation ever).
+    pub fn redeem(&mut self, ticket: &JobTicket) -> Stats {
+        self.lookups += 1;
+        let key = ticket.key();
+        if let Some(s) = self.results.get(&key) {
+            return s.clone();
+        }
+        if let Some(store) = self.store.as_mut() {
+            if let Some(st) = store.lookup(ticket.spec, &ticket.dut, ticket.factor, ticket.tweaks)
+            {
+                self.results.insert(key, st.clone());
+                self.refresh_cache_report();
+                return st;
+            }
+        }
+        let st = run_point(
+            ticket.spec,
+            &ticket.dut,
+            ticket.factor,
+            ticket.tweaks,
+            Some(&self.compile_cache),
+        );
+        self.sims_run += 1;
+        if let Some(store) = self.store.as_mut() {
+            store.record(ticket.spec, &ticket.dut, ticket.factor, ticket.tweaks, &st);
+        }
+        self.results.insert(key, st.clone());
+        self.refresh_cache_report();
+        st
+    }
+
+    /// One-shot stats for a point (ticket + redeem). Render loops use
+    /// this: after the declare pass + `execute`, every call is a pure
+    /// `ResultSet` lookup.
+    pub fn point(
         &mut self,
         spec: &'static WorkloadSpec,
         dut: &DesignUnderTest,
         factor: f64,
     ) -> Stats {
-        self.stats_tweaked(spec, dut, factor, CfgTweaks::NONE)
+        self.point_tweaked(spec, dut, factor, CfgTweaks::NONE)
     }
 
-    pub fn stats_tweaked(
+    pub fn point_tweaked(
         &mut self,
         spec: &'static WorkloadSpec,
         dut: &DesignUnderTest,
         factor: f64,
         tweaks: CfgTweaks,
     ) -> Stats {
-        if !self.planning {
-            // Render-pass reads only: counting the planning pass too would
-            // make the dedup statistic overstate itself 2×.
-            self.lookups += 1;
-        }
-        let key = JobKey::of(spec, dut, factor, tweaks);
-        if let Some(s) = self.results.get(&key) {
-            return s.clone();
-        }
-        if self.planning {
-            self.matrix.add(spec, dut, factor, tweaks);
-            return Stats::default();
-        }
-        let st = run_point(spec, dut, factor, tweaks, Some(&self.compile_cache));
-        self.sims_run += 1;
-        self.results.insert(key, st.clone());
-        self.results.cache = self.compile_cache.report();
-        st
+        let ticket = self.ticket(spec, dut, factor, tweaks);
+        self.redeem(&ticket)
     }
 
     /// The §6 normalization point: BL @ 1× latency, 256KB (+16KB folded),
     /// as registered in the design registry.
     pub fn baseline_ipc(&mut self, spec: &'static WorkloadSpec) -> f64 {
-        self.stats(spec, &super::designs::baseline().dut(), 1.0).ipc()
+        self.point(spec, &super::designs::baseline().dut(), 1.0).ipc()
     }
 
     /// Compile (or fetch) a kernel through the shared compile cache.
@@ -553,8 +717,10 @@ impl Engine {
         self.results.len()
     }
 
-    /// Run every pending job on the work-stealing executor and fold the
-    /// stats into the `ResultSet`; ends the planning phase.
+    /// Run every pending job on the work-stealing executor, fold the
+    /// stats into the `ResultSet`, and persist them to the attached store
+    /// (if any). Points that landed in the `ResultSet` since they were
+    /// declared (on-demand redemptions) are skipped, never re-simulated.
     pub fn execute(&mut self) {
         self.planning = false;
         if self.matrix.is_empty() {
@@ -564,7 +730,8 @@ impl Engine {
         self.matrix.index.clear();
         // Longest-processing-time-first order feeds the round-robin deal
         // in steal_map; stealing mops up the estimation error.
-        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        let mut order: Vec<usize> =
+            (0..jobs.len()).filter(|&i| self.results.get(&jobs[i].key()).is_none()).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(jobs[i].cost_estimate()));
         let ordered: Vec<&SimJob> = order.iter().map(|&i| &jobs[i]).collect();
         let cache = &self.compile_cache;
@@ -573,9 +740,28 @@ impl Engine {
         });
         self.sims_run += stats.len() as u64;
         for (job, st) in ordered.iter().zip(stats) {
+            if let Some(store) = self.store.as_mut() {
+                store.record(job.spec, &job.dut, job.latency_factor, job.tweaks, &st);
+            }
             self.results.insert(job.key(), st);
         }
-        self.results.cache = self.compile_cache.report();
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.save() {
+                eprintln!("warning: memo store save failed: {e}");
+            }
+        }
+        self.refresh_cache_report();
+    }
+
+    /// Fold the compile-cache report and the store counters into
+    /// [`ResultSet::cache`] so consumers see one coherent `CacheReport`.
+    fn refresh_cache_report(&mut self) {
+        let mut report = self.compile_cache.report();
+        if let Some(store) = &self.store {
+            report.store_hits = store.hits();
+            report.store_misses = store.misses();
+        }
+        self.results.cache = report;
     }
 
     /// Point lookups served (planning placeholders + render reads); the
@@ -613,8 +799,14 @@ impl Engine {
             epoch_skipped += st.commit_phases_skipped;
             wheel_rollovers += st.event_wheel_rollovers;
         }
+        // The disk-store segment is the CI warm-smoke telemetry: a warm
+        // re-sweep must report >0 disk hits and 0 points simulated.
+        let store_part = match &self.store {
+            Some(s) => format!("disk store {} hits / {} misses", s.hits(), s.misses()),
+            None => "disk store off".to_string(),
+        };
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {})",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {}), {}",
             self.lookups,
             self.sims_run,
             report.compile_hits,
@@ -626,12 +818,67 @@ impl Engine {
             registered,
             epoch_skipped,
             wheel_rollovers,
+            store_part,
         )
+    }
+
+    // -----------------------------------------------------------------
+    // Deprecated PR-1 two-phase protocol (one-PR migration shim)
+    // -----------------------------------------------------------------
+
+    /// Enter the legacy planning phase: subsequent [`Engine::stats`]
+    /// calls register jobs and return placeholder zeros.
+    #[deprecated(note = "use the ticket API: request/execute, then point/redeem")]
+    pub fn plan_phase(&mut self) {
+        self.planning = true;
+    }
+
+    /// Legacy mode probe. New-style drivers never branch on this — they
+    /// have an explicit declare pass instead.
+    #[deprecated(note = "use the ticket API: request/execute, then point/redeem")]
+    pub fn planning(&self) -> bool {
+        self.planning
+    }
+
+    /// Legacy stats lookup. Planning: registers the job, returns zeros
+    /// (unless already resolved). Rendering: same as [`Engine::point`].
+    #[deprecated(note = "use Engine::point (or request + redeem)")]
+    #[allow(deprecated)]
+    pub fn stats(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+    ) -> Stats {
+        self.stats_tweaked(spec, dut, factor, CfgTweaks::NONE)
+    }
+
+    /// Legacy tweaked stats lookup (see [`Engine::stats`]).
+    #[deprecated(note = "use Engine::point_tweaked (or request_tweaked + redeem)")]
+    #[allow(deprecated)]
+    pub fn stats_tweaked(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) -> Stats {
+        if self.planning {
+            let ticket = self.request_tweaked(spec, dut, factor, tweaks);
+            // A store hit (or a previously-resolved point) already has
+            // real stats; everything else gets the planning placeholder.
+            return self.results.redeem(&ticket).cloned().unwrap_or_default();
+        }
+        self.point_tweaked(spec, dut, factor, tweaks)
     }
 }
 
-/// Run a driver in the two-phase protocol: plan (CSV emission disabled via
-/// a `csv_dir: None` context), execute the matrix in parallel, render.
+/// Legacy driver runner for the PR-1 two-phase protocol: plan (CSV
+/// emission disabled via a `csv_dir: None` context), execute the matrix
+/// in parallel, render. Ticket-API drivers carry their own declare pass
+/// and call `execute` themselves — just call them directly.
+#[deprecated(note = "ticket-API drivers self-execute; call the driver directly")]
+#[allow(deprecated)]
 pub fn two_phase<T>(
     ctx: &super::experiments::ExperimentContext,
     eng: &mut Engine,
@@ -671,25 +918,65 @@ mod tests {
     }
 
     #[test]
-    fn planning_registers_then_render_hits_resultset() {
+    fn request_execute_redeem_hits_resultset() {
         let spec = suite::workload_by_name("kmeans").unwrap();
         let mut eng = Engine::new(1);
-        eng.plan_phase();
-        let placeholder = eng.stats(spec, &bl(), 1.0);
-        assert_eq!(placeholder, Stats::default());
+        let ticket = eng.request(spec, &bl(), 1.0);
         assert_eq!(eng.pending(), 1);
+        assert!(eng.results().redeem(&ticket).is_none(), "not executed yet");
         eng.execute();
         assert_eq!(eng.pending(), 0);
-        let st = eng.stats(spec, &bl(), 1.0);
+        let st = eng.redeem(&ticket);
         assert!(st.instructions > 0);
-        assert_eq!(eng.sims_run(), 1, "render lookup must not re-simulate");
+        assert_eq!(eng.sims_run(), 1, "redeem must not re-simulate");
+        // point() is the one-shot form of the same lookup.
+        assert_eq!(eng.point(spec, &bl(), 1.0), st);
+        assert_eq!(eng.sims_run(), 1);
+        assert_eq!(eng.results().redeem(&ticket), Some(&st));
+    }
+
+    #[test]
+    fn redeeming_unexecuted_ticket_simulates_once_on_demand() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(1);
+        let ticket = eng.request(spec, &bl(), 1.0);
+        // No execute(): redemption falls back to an inline simulation...
+        let st = eng.redeem(&ticket);
+        assert!(st.instructions > 0);
+        assert_eq!(eng.sims_run(), 1);
+        // ...and execute() must NOT run the now-stale pending job again.
+        eng.execute();
+        assert_eq!(eng.sims_run(), 1, "execute re-ran an already-redeemed point");
+        assert_eq!(eng.redeem(&ticket), st);
+    }
+
+    #[test]
+    fn default_tweaks_fold_under_requests_and_explicit_wins() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(1);
+        eng.set_default_tweaks(CfgTweaks::with_backend(SimBackend::Parallel, 2));
+        let t = eng.request(spec, &bl(), 1.0);
+        assert_eq!(t.tweaks().backend, Some(SimBackend::Parallel));
+        assert_eq!(t.tweaks().sim_threads, Some(2));
+        // An explicit per-request knob overrides the session default.
+        let explicit = eng.request_tweaked(
+            spec,
+            &bl(),
+            1.0,
+            CfgTweaks { backend: Some(SimBackend::Reference), ..CfgTweaks::NONE },
+        );
+        assert_eq!(explicit.tweaks().backend, Some(SimBackend::Reference));
+        assert_eq!(explicit.tweaks().sim_threads, Some(2), "unset knobs inherit the default");
+        // Merge algebra: NONE is the identity on both sides.
+        let tw = CfgTweaks::with_backend(SimBackend::Parallel, 4);
+        assert_eq!(CfgTweaks::NONE.or(tw), tw);
+        assert_eq!(tw.or(CfgTweaks::NONE), tw);
     }
 
     #[test]
     fn shared_points_compile_and_simulate_once() {
         let spec = suite::workload_by_name("kmeans").unwrap();
         let mut eng = Engine::new(2);
-        eng.plan_phase();
         // Same design at two latency factors: two sims, one compile.
         eng.request(spec, &bl(), 1.0);
         eng.request(spec, &bl(), 1.0); // duplicate declaration
@@ -698,6 +985,57 @@ mod tests {
         assert_eq!(eng.sims_run(), 2);
         assert_eq!(eng.compile_cache().misses(), 1, "one unique (spec, options) pair");
         assert!(eng.compile_cache().hits() >= 1, "shared design point must hit the cache");
+    }
+
+    #[test]
+    fn store_backed_engine_is_warm_on_second_run() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "ltrf-engine-store-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = suite::workload_by_name("kmeans").unwrap();
+
+        let mut cold = Engine::new(1);
+        cold.set_store(MemoStore::open(&dir));
+        cold.request(spec, &bl(), 1.0);
+        assert_eq!(cold.pending(), 1);
+        cold.execute();
+        assert_eq!(cold.sims_run(), 1);
+        let want = cold.point(spec, &bl(), 1.0);
+        assert_eq!(cold.results().cache.store_misses, 1);
+
+        let mut warm = Engine::new(1);
+        warm.set_store(MemoStore::open(&dir));
+        warm.request(spec, &bl(), 1.0);
+        assert_eq!(warm.pending(), 0, "stored point must not schedule");
+        warm.execute();
+        assert_eq!(warm.point(spec, &bl(), 1.0), want);
+        assert_eq!(warm.sims_run(), 0, "warm run must simulate nothing");
+        assert_eq!(warm.compile_cache().misses(), 0, "warm run must compile nothing");
+        assert_eq!(warm.results().cache.store_hits, 1);
+        assert!(warm.summary().contains("disk store 1 hits / 0 misses"), "{}", warm.summary());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_two_phase_shim_still_works() {
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut eng = Engine::new(1);
+        eng.plan_phase();
+        assert!(eng.planning());
+        let placeholder = eng.stats(spec, &bl(), 1.0);
+        assert_eq!(placeholder, Stats::default());
+        assert_eq!(eng.pending(), 1);
+        eng.execute();
+        assert!(!eng.planning());
+        let st = eng.stats(spec, &bl(), 1.0);
+        assert!(st.instructions > 0);
+        assert_eq!(eng.sims_run(), 1, "render lookup must not re-simulate");
     }
 
     #[test]
@@ -742,7 +1080,6 @@ mod tests {
         let spec = suite::workload_by_name("kmeans").unwrap();
         let mut eng = Engine::new(2);
         assert_eq!(eng.design_coverage(), (0, crate::coordinator::designs::REGISTRY.len()));
-        eng.plan_phase();
         // Two registered points + one unregistered ablation flavor.
         eng.request(spec, &bl(), 1.0);
         eng.request(spec, &crate::coordinator::designs::by_name("CARF").unwrap().dut(), 1.0);
@@ -753,7 +1090,6 @@ mod tests {
         assert_eq!(registered, crate::coordinator::designs::REGISTRY.len());
         assert!(eng.summary().contains(&format!("design points 2/{registered} registered")));
         // Sweeping the whole registry closes the gap.
-        eng.plan_phase();
         for (_, dut) in crate::coordinator::designs::all_points(2048) {
             eng.request(spec, &dut, 1.0);
         }

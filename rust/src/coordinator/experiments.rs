@@ -6,14 +6,16 @@
 //! the §6 baseline: configuration #1 (256KB HP SRAM) plus the 16KB RF$
 //! capacity folded into the MRF, no register caching.
 //!
-//! Drivers are written against the [`Engine`](super::engine::Engine) in
-//! the two-phase protocol (see [`super::engine::two_phase`]): called once
-//! in the planning phase they contribute their simulation points to the
-//! shared [`JobMatrix`](super::engine::JobMatrix) (shared points — e.g.
-//! every figure's baseline column — collapse to one job), the engine runs
-//! the deduplicated matrix on the work-stealing executor, and a second
-//! call renders the tables from the [`ResultSet`](super::engine::ResultSet).
-//! No driver simulates a point directly.
+//! Drivers are written against the [`Engine`](super::engine::Engine)
+//! ticket API: an explicit declare pass `request`s every simulation point
+//! the figure needs into the shared
+//! [`JobMatrix`](super::engine::JobMatrix) (shared points — e.g. every
+//! figure's baseline column — collapse to one job, in memory or in the
+//! cross-run disk memo store), one [`Engine::execute`] runs the
+//! deduplicated batch on the work-stealing executor, and the render loop
+//! reads stats back with [`Engine::point`] — pure
+//! [`ResultSet`](super::engine::ResultSet) lookups after the batch. No
+//! driver simulates a point directly.
 
 use super::engine::{run_point, CfgTweaks, Engine};
 use super::sweep::{gmean, parallel_map};
@@ -81,8 +83,9 @@ impl ExperimentContext {
 // ---------------------------------------------------------------------
 
 /// A register-file design to simulate: hierarchy + compile flags +
-/// structural overrides.
-#[derive(Clone, Debug)]
+/// structural overrides. `Copy` — a design point is a small plain-data
+/// key, and tickets/jobs carry it by value.
+#[derive(Clone, Copy, Debug)]
 pub struct DesignUnderTest {
     pub hierarchy: HierarchyKind,
     pub renumber: bool,
@@ -299,12 +302,19 @@ pub fn fig3(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["workload", "class", "(a) ideal 8x", "(b) TFET 8x @5.3x"],
     );
     let big = super::designs::baseline().dut_with_capacity(16384);
+    let base_dut = super::designs::baseline().dut();
+    for spec in ctx.workloads() {
+        eng.request(spec, &base_dut, 1.0);
+        eng.request(spec, &big, 1.0);
+        eng.request(spec, &big, 5.3);
+    }
+    eng.execute();
     let mut ideals = Vec::new();
     let mut tfets = Vec::new();
     for spec in ctx.workloads() {
         let base = eng.baseline_ipc(spec);
-        let ideal = eng.stats(spec, &big, 1.0).ipc() / base;
-        let tfet = eng.stats(spec, &big, 5.3).ipc() / base;
+        let ideal = eng.point(spec, &big, 1.0).ipc() / base;
+        let tfet = eng.point(spec, &big, 5.3).ipc() / base;
         if spec.class == RegClass::Sensitive {
             ideals.push(ideal);
         }
@@ -333,11 +343,16 @@ pub fn fig4(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     );
     let rfc = super::designs::by_name("RFC").unwrap().dut();
     let shrf = super::designs::by_name("SHRF").unwrap().dut();
+    for spec in ctx.workloads() {
+        eng.request(spec, &rfc, 1.0);
+        eng.request(spec, &shrf, 1.0);
+    }
+    eng.execute();
     let mut hws = Vec::new();
     let mut sws = Vec::new();
     for spec in ctx.workloads() {
-        let hw = eng.stats(spec, &rfc, 1.0).rfc_hit_rate();
-        let sw = eng.stats(spec, &shrf, 1.0).rfc_hit_rate();
+        let hw = eng.point(spec, &rfc, 1.0).rfc_hit_rate();
+        let sw = eng.point(spec, &shrf, 1.0).rfc_hit_rate();
         hws.push(hw);
         sws.push(sw);
         t.row(vec![spec.name.into(), pct(hw), pct(sw)]);
@@ -378,12 +393,9 @@ fn conflict_distribution(
 }
 
 pub fn fig6(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
+    // Compile-only driver: nothing to request, renders straight from the
+    // shared compile cache.
     let headers = ["workload", "0 conflicts", "1", "2", "3+"];
-    if eng.planning() {
-        // Compile-only driver: no simulation jobs to declare, and no need
-        // to bring up the evaluator backend for the discarded pass.
-        return Table::new("Fig 6 (planning placeholder)", &headers);
-    }
     let ev = PrefetchEvaluator::load_or_reference(std::path::Path::new("artifacts"));
     let mut t = Table::new(
         format!(
@@ -401,9 +413,7 @@ pub fn fig6(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
 }
 
 pub fn fig16(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
-    if eng.planning() {
-        return Vec::new(); // compile-only driver
-    }
+    // Compile-only driver, like fig6.
     let ev = PrefetchEvaluator::load_or_reference(std::path::Path::new("artifacts"));
     let mut out = Vec::new();
     for n in [8usize, 16, 32] {
@@ -441,6 +451,26 @@ pub fn fig16(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
 // ---------------------------------------------------------------------
 
 pub fn fig14(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
+    // Declare pass: every panel's comparison columns + the shared
+    // baseline, batched into one parallel execute.
+    let base_dut = super::designs::baseline().dut();
+    for (_, design, _) in design_points() {
+        if design.tech == Tech::HpSram {
+            continue;
+        }
+        let factor = design.latency();
+        let cap = design.warp_registers();
+        let ideal_dut = DesignUnderTest::new(HierarchyKind::Baseline, false).with_capacity(cap);
+        for spec in ctx.workloads() {
+            eng.request(spec, &base_dut, 1.0);
+            for (_, dut) in &comparison_points(cap) {
+                eng.request(spec, dut, factor);
+            }
+            eng.request(spec, &ideal_dut, 1.0);
+        }
+    }
+    eng.execute();
+
     let mut out = Vec::new();
     for (cfg_name, design, _override) in design_points() {
         if design.tech == Tech::HpSram {
@@ -460,9 +490,9 @@ pub fn fig14(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
             let base = eng.baseline_ipc(spec);
             let mut vals = Vec::new();
             for (_, dut) in &points {
-                vals.push(eng.stats(spec, dut, factor).ipc() / base);
+                vals.push(eng.point(spec, dut, factor).ipc() / base);
             }
-            vals.push(eng.stats(spec, &ideal_dut, 1.0).ipc() / base);
+            vals.push(eng.point(spec, &ideal_dut, 1.0).ipc() / base);
             for (c, v) in cols.iter_mut().zip(&vals) {
                 c.push(*v);
             }
@@ -499,12 +529,18 @@ pub fn fig15(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["workload", "BL", "RFC", "LTRF", "LTRF_conf"],
     );
     let points = comparison_points(2048);
+    // Declare the full latency grid for every point; the scan then reads
+    // executed results (its early-exit just skips lookups, not sims).
+    for spec in ctx.workloads() {
+        for (_, d) in &points {
+            tolerable::plan(eng, d, spec);
+        }
+    }
+    eng.execute();
     let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
     for spec in ctx.workloads() {
-        let vals: Vec<f64> = points
-            .iter()
-            .map(|(_, d)| tolerable::max_tolerable_engine(eng, d, spec, 0.95))
-            .collect();
+        let vals: Vec<f64> =
+            points.iter().map(|(_, d)| tolerable::measure(eng, d, spec, 0.95)).collect();
         for (c, v) in cols.iter_mut().zip(&vals) {
             c.push(*v);
         }
@@ -532,10 +568,27 @@ pub fn fig17(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["design", "regs/interval", "1x", "2x", "4x", "6.3x", "8x"],
     );
     let factors = [1.0, 2.0, 4.0, 6.3, 8.0];
+    let base_dut = super::designs::baseline().dut();
+    let dut_for = |renumber: bool, n: usize| {
+        let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+        dut.regs_per_interval = n;
+        dut
+    };
     for renumber in [false, true] {
         for n in [8usize, 16, 32] {
-            let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
-            dut.regs_per_interval = n;
+            let dut = dut_for(renumber, n);
+            for spec in ctx.workloads() {
+                eng.request(spec, &base_dut, 1.0);
+                for &f in &factors {
+                    eng.request(spec, &dut, f);
+                }
+            }
+        }
+    }
+    eng.execute();
+    for renumber in [false, true] {
+        for n in [8usize, 16, 32] {
+            let dut = dut_for(renumber, n);
             let mut cells = vec![
                 if renumber { "LTRF_conf" } else { "LTRF" }.to_string(),
                 n.to_string(),
@@ -544,7 +597,7 @@ pub fn fig17(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
                 let vals: Vec<f64> = ctx
                     .workloads()
                     .into_iter()
-                    .map(|spec| eng.stats(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
+                    .map(|spec| eng.point(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
                     .collect();
                 cells.push(f2(gmean(&vals)));
             }
@@ -565,10 +618,27 @@ pub fn fig18(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         &["design", "active warps", "2x", "4x", "6.3x"],
     );
     let factors = [2.0, 4.0, 6.3];
+    let base_dut = super::designs::baseline().dut();
+    let dut_for = |renumber: bool, warps: usize| {
+        let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+        dut.active_warps = warps;
+        dut
+    };
     for renumber in [false, true] {
         for warps in [4usize, 6, 8, 12, 16] {
-            let mut dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
-            dut.active_warps = warps;
+            let dut = dut_for(renumber, warps);
+            for spec in ctx.workloads() {
+                eng.request(spec, &base_dut, 1.0);
+                for &f in &factors {
+                    eng.request(spec, &dut, f);
+                }
+            }
+        }
+    }
+    eng.execute();
+    for renumber in [false, true] {
+        for warps in [4usize, 6, 8, 12, 16] {
+            let dut = dut_for(renumber, warps);
             let mut cells = vec![
                 if renumber { "LTRF_conf" } else { "LTRF" }.to_string(),
                 warps.to_string(),
@@ -577,7 +647,7 @@ pub fn fig18(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
                 let vals: Vec<f64> = ctx
                     .workloads()
                     .into_iter()
-                    .map(|spec| eng.stats(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
+                    .map(|spec| eng.point(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
                     .collect();
                 cells.push(f2(gmean(&vals)));
             }
@@ -646,9 +716,7 @@ pub fn table4(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "Table 4 — real vs optimal register-interval dynamic length (N=16)",
         &["metric", "average", "minimum", "maximum", "real/optimal"],
     );
-    if eng.planning() {
-        return t; // functional-trace driver: no simulation jobs to declare
-    }
+    // Functional-trace driver: no simulation points, compile cache only.
     let engref: &Engine = eng;
     let all = parallel_map(ctx.workloads(), |spec| interval_lengths(engref, spec, 16));
     let stats = |per_workload: Vec<Vec<usize>>| -> (f64, f64, f64) {
@@ -693,13 +761,23 @@ pub fn fig19(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         ("LTRF (strand)", ltrf_strand),
         ("LTRF (register-interval)", reg("LTRF")),
     ];
+    let base_dut = super::designs::baseline().dut();
+    for (_, dut) in &designs {
+        for spec in ctx.workloads() {
+            eng.request(spec, &base_dut, 1.0);
+            for &f in &factors {
+                eng.request(spec, dut, f);
+            }
+        }
+    }
+    eng.execute();
     for (name, dut) in designs {
         let mut cells = vec![name.to_string()];
         for &f in &factors {
             let vals: Vec<f64> = ctx
                 .workloads()
                 .into_iter()
-                .map(|spec| eng.stats(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
+                .map(|spec| eng.point(spec, &dut, f).ipc() / eng.baseline_ipc(spec))
                 .collect();
             cells.push(f2(gmean(&vals)));
         }
@@ -718,7 +796,7 @@ pub fn fig20(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "Fig 20 — maximum tolerable MRF latency vs warps/SM (mean)",
         &["warps/SM", "BL", "LTRF"],
     );
-    for warps in [16usize, 32, 64, 128] {
+    let duts = |warps: usize| {
         let mut bl = DesignUnderTest::new(HierarchyKind::Baseline, false);
         bl.warps_per_sm = warps;
         // Keep occupancy feasible: capacity scales with the warp count so
@@ -727,12 +805,24 @@ pub fn fig20(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         let mut ltrf = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
         ltrf.warps_per_sm = warps;
         ltrf.capacity = 2048 * warps / 64;
+        (bl, ltrf)
+    };
+    for warps in [16usize, 32, 64, 128] {
+        let (bl, ltrf) = duts(warps);
+        for spec in ctx.workloads() {
+            tolerable::plan(eng, &bl, spec);
+            tolerable::plan(eng, &ltrf, spec);
+        }
+    }
+    eng.execute();
+    for warps in [16usize, 32, 64, 128] {
+        let (bl, ltrf) = duts(warps);
         let mut sum_bl = 0.0;
         let mut sum_lt = 0.0;
         let wl = ctx.workloads();
         for &spec in &wl {
-            sum_bl += tolerable::max_tolerable_engine(eng, &bl, spec, 0.95);
-            sum_lt += tolerable::max_tolerable_engine(eng, &ltrf, spec, 0.95);
+            sum_bl += tolerable::measure(eng, &bl, spec, 0.95);
+            sum_lt += tolerable::measure(eng, &ltrf, spec, 0.95);
         }
         t.row(vec![
             warps.to_string(),
@@ -750,18 +840,22 @@ pub fn fig20(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
 
 pub fn overheads(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     let mut t = Table::new("§5.3 — LTRF overheads", &["quantity", "value", "paper"]);
+    // Declare the two simulated points up front (the §5.3 power rows).
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    let rep = super::designs::by_name("LTRF_conf").unwrap().dut();
+    let rep7 = super::designs::by_name("LTRF_conf").unwrap().dut_with_capacity(16384);
+    eng.request(spec, &rep, 1.0);
+    eng.request(spec, &rep7, 6.3);
+    eng.execute();
     // Code size (mean over the suite, both encodings); compile-cache only.
-    let sizes: Vec<(f64, f64)> = if eng.planning() {
-        Vec::new()
-    } else {
-        ctx.workloads()
-            .into_iter()
-            .map(|spec| {
-                let ck = eng.compiled(spec, crate::compiler::CompileOptions::ltrf(16));
-                (ck.code_size_overhead(false), ck.code_size_overhead(true))
-            })
-            .collect()
-    };
+    let sizes: Vec<(f64, f64)> = ctx
+        .workloads()
+        .into_iter()
+        .map(|spec| {
+            let ck = eng.compiled(spec, crate::compiler::CompileOptions::ltrf(16));
+            (ck.code_size_overhead(false), ck.code_size_overhead(true))
+        })
+        .collect();
     let avg = |f: fn(&(f64, f64)) -> f64, v: &[(f64, f64)]| {
         v.iter().map(f).sum::<f64>() / v.len().max(1) as f64
     };
@@ -789,9 +883,7 @@ pub fn overheads(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     t.row(vec!["LTRF area overhead".into(), pct(area), "16%".into()]);
     // Power: activity-weighted model (timing::power) on a representative
     // run at the baseline MRF size/technology (the §5.3 comparison).
-    let spec = suite::workload_by_name("gaussian").unwrap();
-    let rep = super::designs::by_name("LTRF_conf").unwrap().dut();
-    let st = eng.stats(spec, &rep, 1.0);
+    let st = eng.point(spec, &rep, 1.0);
     let power = crate::timing::power::ltrf_power(&st, 1.0, Tech::HpSram).total();
     t.row(vec![
         "LTRF power vs baseline RF".into(),
@@ -799,8 +891,7 @@ pub fn overheads(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
         "-23%".into(),
     ]);
     // And the headline design point: DWM at 8x capacity.
-    let rep7 = super::designs::by_name("LTRF_conf").unwrap().dut_with_capacity(16384);
-    let st7 = eng.stats(spec, &rep7, 6.3);
+    let st7 = eng.point(spec, &rep7, 6.3);
     let p7 = crate::timing::power::ltrf_power(&st7, 8.0, Tech::Dwm).total();
     t.row(vec![
         "LTRF power on config #7 (DWM 2MB)".into(),
@@ -828,6 +919,42 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
     let factor = 6.3;
     let cap = 16384;
 
+    // Declare pass: every ablation's points (plus the shared baseline
+    // column) into one batch.
+    {
+        let base_dut = super::designs::baseline().dut();
+        let cfg7 =
+            DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
+        for spec in ctx.workloads() {
+            eng.request(spec, &base_dut, 1.0);
+            for early in [true, false] {
+                let tw = CfgTweaks { early_refetch: Some(early), ..CfgTweaks::NONE };
+                eng.request_tweaked(spec, &cfg7, factor, tw);
+            }
+            for width in [1u32, 2, 4, 8] {
+                let tw = CfgTweaks { xbar_regs_per_cycle: Some(width), ..CfgTweaks::NONE };
+                eng.request_tweaked(spec, &cfg7, factor, tw);
+            }
+            for map in [crate::compiler::BankMap::Interleave, crate::compiler::BankMap::Block] {
+                let tw = CfgTweaks { bank_map: Some(map), ..CfgTweaks::NONE };
+                for renumber in [false, true] {
+                    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber);
+                    eng.request_tweaked(spec, &dut, 4.0, tw);
+                }
+            }
+            for banks in [16usize, 32, 128] {
+                for renumber in [false, true] {
+                    let mut dut =
+                        DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, renumber)
+                            .with_capacity(cap);
+                    dut.mrf_banks = banks;
+                    eng.request(spec, &dut, factor);
+                }
+            }
+        }
+        eng.execute();
+    }
+
     // 1. Early refetch on/off (LTRF, config #7).
     {
         let mut t = Table::new(
@@ -842,7 +969,7 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
                 .workloads()
                 .into_iter()
                 .map(|spec| {
-                    eng.stats_tweaked(spec, &dut, factor, tw).ipc() / eng.baseline_ipc(spec)
+                    eng.point_tweaked(spec, &dut, factor, tw).ipc() / eng.baseline_ipc(spec)
                 })
                 .collect();
             t.row(vec![
@@ -869,7 +996,7 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
                 .workloads()
                 .into_iter()
                 .map(|spec| {
-                    eng.stats_tweaked(spec, &dut, factor, tw).ipc() / eng.baseline_ipc(spec)
+                    eng.point_tweaked(spec, &dut, factor, tw).ipc() / eng.baseline_ipc(spec)
                 })
                 .collect();
             t.row(vec![width.to_string(), f2(gmean(&vals))]);
@@ -893,7 +1020,7 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
                     .workloads()
                     .into_iter()
                     .map(|spec| {
-                        eng.stats_tweaked(spec, &dut, 4.0, tw).ipc() / eng.baseline_ipc(spec)
+                        eng.point_tweaked(spec, &dut, 4.0, tw).ipc() / eng.baseline_ipc(spec)
                     })
                     .collect();
                 cells.push(f2(gmean(&vals)));
@@ -919,7 +1046,7 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
                 let vals: Vec<f64> = ctx
                     .workloads()
                     .into_iter()
-                    .map(|spec| eng.stats(spec, &dut, factor).ipc() / eng.baseline_ipc(spec))
+                    .map(|spec| eng.point(spec, &dut, factor).ipc() / eng.baseline_ipc(spec))
                     .collect();
                 means.push(gmean(&vals));
             }
@@ -936,9 +1063,9 @@ pub fn ablations(ctx: &ExperimentContext, eng: &mut Engine) -> Vec<Table> {
 
     // 5. Coloring quality: balanced Chaitin vs naive round-robin
     //    renumbering (compiler-level conflict metric, 16 banks, N=16).
-    //    Compile-only; skipped in the planning pass (the round-robin
-    //    variant rewrites the kernel, so it bypasses the compile cache).
-    if !eng.planning() {
+    //    Compile-only (the round-robin variant rewrites the kernel, so it
+    //    bypasses the compile cache).
+    {
         let mut t = Table::new(
             "Ablation A5 — bank assignment policy (conflict-free prefetch fraction, N=16)",
             &["workload", "original allocation", "round-robin renumber", "Chaitin (LTRF_conf)"],
@@ -1005,11 +1132,18 @@ pub fn ltrf_plus(ctx: &ExperimentContext, eng: &mut Engine) -> Table {
     let plus_dut =
         DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false).with_capacity(cap);
     let moved = |s: &Stats| s.prefetch_regs + s.writeback_regs;
+    let base_dut = super::designs::baseline().dut();
+    for spec in ctx.workloads() {
+        eng.request(spec, &base_dut, 1.0);
+        eng.request(spec, &plain_dut, factor);
+        eng.request(spec, &plus_dut, factor);
+    }
+    eng.execute();
     let mut rows = Vec::new();
     for spec in ctx.workloads() {
         let base = eng.baseline_ipc(spec);
-        let plain = eng.stats(spec, &plain_dut, factor);
-        let plus = eng.stats(spec, &plus_dut, factor);
+        let plain = eng.point(spec, &plain_dut, factor);
+        let plus = eng.point(spec, &plus_dut, factor);
         rows.push((spec.name, moved(&plain), moved(&plus), plain.ipc() / base, plus.ipc() / base));
     }
     let mut saved_total = 0.0;
@@ -1051,10 +1185,16 @@ pub fn headline(ctx: &ExperimentContext, eng: &mut Engine) -> (f64, Table) {
         format!("Headline — LTRF_conf on config #7 (DWM, 8x capacity, {factor:.1}x latency)"),
         &["workload", "baseline IPC", "LTRF_conf IPC", "speedup"],
     );
+    let base_dut = super::designs::baseline().dut();
+    for spec in ctx.workloads() {
+        eng.request(spec, &base_dut, 1.0);
+        eng.request(spec, &dut, factor);
+    }
+    eng.execute();
     let mut speedups = Vec::new();
     for spec in ctx.workloads() {
         let base = eng.baseline_ipc(spec);
-        let ipc = eng.stats(spec, &dut, factor).ipc();
+        let ipc = eng.point(spec, &dut, factor).ipc();
         speedups.push(ipc / base);
         t.row(vec![spec.name.into(), f2(base), f2(ipc), f2(ipc / base)]);
     }
@@ -1068,10 +1208,11 @@ pub fn headline(ctx: &ExperimentContext, eng: &mut Engine) -> (f64, Table) {
 // Full regeneration (the `all` subcommand)
 // ---------------------------------------------------------------------
 
-/// Every table/figure in paper order, sharing one job matrix; returns the
-/// rendered tables and the headline improvement. Run through
-/// [`super::engine::two_phase`] so the whole evaluation executes as one
-/// deduplicated parallel matrix.
+/// Every table/figure in paper order on one shared engine; returns the
+/// rendered tables and the headline improvement. Each driver batches its
+/// own declare pass, and points shared across figures (the baseline
+/// column, repeated design points) resolve from the engine's `ResultSet`
+/// — or the cross-run disk store — without re-simulating.
 pub fn all_tables(ctx: &ExperimentContext, eng: &mut Engine) -> (Vec<Table>, f64) {
     let mut out = Vec::new();
     out.push(table1(ctx, eng));
@@ -1099,16 +1240,15 @@ pub fn all_tables(ctx: &ExperimentContext, eng: &mut Engine) -> (Vec<Table>, f64
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::two_phase;
 
     fn qctx() -> ExperimentContext {
         ExperimentContext::quick()
     }
 
-    /// Run a driver in the two-phase engine protocol on a fresh engine.
+    /// Run a self-executing ticket-API driver on a fresh engine.
     fn run2<T>(f: impl Fn(&ExperimentContext, &mut Engine) -> T) -> T {
         let mut eng = Engine::new(0);
-        two_phase(&qctx(), &mut eng, f)
+        f(&qctx(), &mut eng)
     }
 
     #[test]
@@ -1192,14 +1332,13 @@ mod tests {
     #[test]
     fn shared_baseline_simulated_once_across_figures() {
         // fig3 + fig4 + headline share the per-workload baseline column;
-        // the engine must collapse it to one job per workload.
+        // the engine must collapse it to one job per workload even though
+        // each driver runs its own declare + execute batch.
         let ctx = qctx();
         let mut eng = Engine::new(0);
-        let _ = two_phase(&ctx, &mut eng, |c, e| {
-            let _ = fig3(c, e);
-            let _ = fig4(c, e);
-            headline(c, e)
-        });
+        let _ = fig3(&ctx, &mut eng);
+        let _ = fig4(&ctx, &mut eng);
+        let _ = headline(&ctx, &mut eng);
         // Unique points: 5 baselines + fig3's 2×5 + fig4's 2×5 +
         // headline's 5 = 30 (fig3/fig4/headline each normalize against
         // the same 5 baseline jobs).

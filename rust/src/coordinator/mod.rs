@@ -1,17 +1,25 @@
 //! Experiment coordination: the declarative parallel experiment engine
-//! (job matrix + work-stealing executor + compile/result memoization),
-//! the design registry (the canonical §6 policy comparison points),
-//! parallel sweep primitives, and the per-table/figure drivers that
-//! regenerate the paper's evaluation (§7).
+//! (job matrix + work-stealing executor + compile/result memoization +
+//! ticket-based plan-then-execute API), the cross-run disk memo store,
+//! the batch sweep service behind `sweep serve`/`sweep submit`, the
+//! design registry (the canonical §6 policy comparison points), parallel
+//! sweep primitives, and the per-table/figure drivers that regenerate the
+//! paper's evaluation (§7).
 
 pub mod designs;
 pub mod engine;
 pub mod experiments;
+pub mod service;
+pub mod store;
 pub mod sweep;
 pub mod tolerable;
 
 pub use engine::{
-    run_kernel_point, two_phase, CfgTweaks, CompileCache, Engine, JobMatrix, ResultSet, SimJob,
+    run_kernel_point, CacheReport, CfgTweaks, CompileCache, Engine, JobMatrix, JobTicket,
+    ResultSet, SimJob,
 };
+#[allow(deprecated)]
+pub use engine::two_phase;
 pub use experiments::ExperimentContext;
+pub use store::MemoStore;
 pub use sweep::{parallel_map, steal_map};

@@ -1,0 +1,715 @@
+//! Batch sweep service: the `sweep serve` / `sweep submit` front end.
+//!
+//! A *sweep request* is a JSON file describing a cross-product of
+//! workloads × registered designs × latency factors (plus optional
+//! `CfgTweaks` and a capacity override). The service watches a spool
+//! directory, expands each request, consults the cross-run
+//! [`MemoStore`] before scheduling anything, runs the remaining points on
+//! the work-stealing executor with fair round-robin sharing across
+//! requests, and streams one JSONL result line per point to
+//! `<spool>/results/<request-file-stem>.jsonl`.
+//!
+//! ## Request format
+//!
+//! ```json
+//! {
+//!   "name": "fig14-smoke",
+//!   "workloads": ["kmeans", "bfs"],          // or "all" (default)
+//!   "designs": ["BL", "LTRF"],               // or "all" (default)
+//!   "latencies": [1.0, 6.3],                 // default [1.0]
+//!   "capacity": 2048,                        // warp-registers, default 2048
+//!   "tweaks": {                              // all optional
+//!     "early_refetch": true,
+//!     "xbar_regs_per_cycle": 4,
+//!     "bank_map": "interleave",              // or "block"
+//!     "backend": "parallel",                 // or "reference"
+//!     "sim_threads": 2
+//!   }
+//! }
+//! ```
+//!
+//! ## Response format (JSONL, one line per point, request order)
+//!
+//! ```json
+//! {"request":"fig14-smoke","workload":"kmeans","design":"BL","capacity":2048,
+//!  "latency":1,"tweaks":"er-.xb-.bm-.be-.st-","ipc":1.234567,"stats":{...}}
+//! ```
+//!
+//! Lines are flushed in request order as points resolve (store hits
+//! first, then simulations as they complete), so the output bytes are
+//! deterministic: identical requests produce byte-identical JSONL whether
+//! the points came from the store or from fresh simulations, at any
+//! `--jobs` count. Cache provenance is telemetry, not payload — it is
+//! printed in the per-request summary lines
+//! (`request <name>: N points (H disk hits, S simulated) ...`) and the
+//! batch cache report, mirroring `--engine-stats`.
+//!
+//! Identical points shared by concurrently-spooled requests are
+//! deduplicated: simulated once, the result line is delivered to every
+//! subscribing request. Processed request files move to `<spool>/done/`.
+
+use super::designs;
+use super::engine::{run_point, CfgTweaks, CompileCache, JobKey};
+use super::experiments::DesignUnderTest;
+use super::store::{encode_tweaks, MemoStore};
+use super::sweep::steal_for_each;
+use crate::compiler::BankMap;
+use crate::scenario::snapshot::stat_fields;
+use crate::sim::{SimBackend, Stats};
+use crate::util::json::{self, JsonValue};
+use crate::workloads::{suite, WorkloadSpec};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One expanded simulation point of a request.
+pub struct SweepPoint {
+    pub spec: &'static WorkloadSpec,
+    /// Registry name of the design column (`BL`, `LTRF`, ...).
+    pub design: &'static str,
+    pub dut: DesignUnderTest,
+    pub factor: f64,
+    pub tweaks: CfgTweaks,
+}
+
+/// A parsed and expanded sweep request.
+pub struct SweepRequest {
+    pub name: String,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Per-request outcome of one batch.
+pub struct RequestReport {
+    pub name: String,
+    pub points: usize,
+    /// Subscribed points answered from the disk store.
+    pub store_hits: u64,
+    /// Subscribed points that were simulated this batch.
+    pub simulated: u64,
+    pub output: PathBuf,
+}
+
+/// Outcome of one spool pass.
+pub struct BatchReport {
+    pub requests: Vec<RequestReport>,
+    /// Deduplicated points across the whole batch.
+    pub unique_points: usize,
+    /// Unique points actually simulated (the rest hit the store).
+    pub unique_simulated: usize,
+    pub elapsed_ms: u128,
+    /// Compile-cache + disk-store counters, `--engine-stats` style.
+    pub cache_summary: String,
+}
+
+fn valid_workloads() -> String {
+    suite::suite().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
+}
+
+fn parse_name_list<'a>(
+    v: &'a JsonValue,
+    what: &str,
+    valid: impl Fn() -> String,
+) -> Result<Vec<&'a str>, String> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| format!("\"{what}\" must be \"all\" or an array of names"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .ok_or_else(|| format!("\"{what}\" entries must be strings; valid: {}", valid()))
+        })
+        .collect()
+}
+
+fn parse_tweaks(v: &JsonValue) -> Result<CfgTweaks, String> {
+    const VALID: &str =
+        "early_refetch, xbar_regs_per_cycle, bank_map, backend, sim_threads";
+    let members = v.members().ok_or("\"tweaks\" must be an object")?;
+    let mut tw = CfgTweaks::NONE;
+    for (key, val) in members {
+        match key.as_str() {
+            "early_refetch" => {
+                tw.early_refetch =
+                    Some(val.as_bool().ok_or("\"early_refetch\" must be a boolean")?);
+            }
+            "xbar_regs_per_cycle" => {
+                let n = val.as_u64().ok_or("\"xbar_regs_per_cycle\" must be a positive integer")?;
+                if n == 0 || n > u32::MAX as u64 {
+                    return Err("\"xbar_regs_per_cycle\" out of range".into());
+                }
+                tw.xbar_regs_per_cycle = Some(n as u32);
+            }
+            "bank_map" => {
+                tw.bank_map = Some(match val.as_str() {
+                    Some("interleave") => BankMap::Interleave,
+                    Some("block") => BankMap::Block,
+                    _ => return Err("\"bank_map\" must be \"interleave\" or \"block\"".into()),
+                });
+            }
+            "backend" => {
+                tw.backend = Some(match val.as_str() {
+                    Some("reference") => SimBackend::Reference,
+                    Some("parallel") => SimBackend::Parallel,
+                    _ => return Err("\"backend\" must be \"reference\" or \"parallel\"".into()),
+                });
+            }
+            "sim_threads" => {
+                tw.sim_threads =
+                    Some(val.as_u64().ok_or("\"sim_threads\" must be an integer")? as usize);
+            }
+            other => {
+                return Err(format!("unknown tweak key {other:?}; valid keys: {VALID}"));
+            }
+        }
+    }
+    Ok(tw)
+}
+
+/// Parse and expand a request document. `fallback_name` (the spool file
+/// stem) names the request when the document does not.
+pub fn parse_request(text: &str, fallback_name: &str) -> Result<SweepRequest, String> {
+    let doc = json::parse(text)?;
+    let members = doc.members().ok_or("request must be a JSON object")?;
+    const VALID_KEYS: &str = "name, workloads, designs, latencies, capacity, tweaks";
+    for (key, _) in members {
+        if !matches!(
+            key.as_str(),
+            "name" | "workloads" | "designs" | "latencies" | "capacity" | "tweaks"
+        ) {
+            return Err(format!("unknown request key {key:?}; valid keys: {VALID_KEYS}"));
+        }
+    }
+    let name = match doc.get("name") {
+        None => fallback_name.to_string(),
+        Some(v) => v.as_str().ok_or("\"name\" must be a string")?.to_string(),
+    };
+    let workloads: Vec<&'static WorkloadSpec> = match doc.get("workloads") {
+        None => suite::suite(),
+        Some(v) if v.as_str() == Some("all") => suite::suite(),
+        Some(v) => parse_name_list(v, "workloads", valid_workloads)?
+            .into_iter()
+            .map(|n| {
+                suite::workload_by_name(n).ok_or_else(|| {
+                    format!("unknown workload {n:?}; valid: {}", valid_workloads())
+                })
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let design_names: Vec<&'static str> = match doc.get("designs") {
+        None => designs::names(),
+        Some(v) if v.as_str() == Some("all") => designs::names(),
+        Some(v) => parse_name_list(v, "designs", || designs::names().join(", "))?
+            .into_iter()
+            .map(|n| {
+                designs::by_name(n).map(|p| p.name).ok_or_else(|| {
+                    format!("unknown design {n:?}; valid: {}", designs::names().join(", "))
+                })
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let latencies: Vec<f64> = match doc.get("latencies") {
+        None => vec![1.0],
+        Some(v) => {
+            let arr = v.as_array().ok_or("\"latencies\" must be an array of numbers")?;
+            let mut out = Vec::with_capacity(arr.len());
+            for x in arr {
+                let f = x.as_f64().ok_or("\"latencies\" entries must be numbers")?;
+                if !(f >= 1.0 && f.is_finite()) {
+                    return Err(format!("latency factor {f} must be a finite number >= 1"));
+                }
+                out.push(f);
+            }
+            out
+        }
+    };
+    let capacity = match doc.get("capacity") {
+        None => 2048,
+        Some(v) => {
+            let c = v.as_u64().ok_or("\"capacity\" must be a positive integer")?;
+            if c == 0 {
+                return Err("\"capacity\" must be positive".into());
+            }
+            c as usize
+        }
+    };
+    let tweaks = match doc.get("tweaks") {
+        None => CfgTweaks::NONE,
+        Some(v) => parse_tweaks(v)?,
+    };
+    if workloads.is_empty() || design_names.is_empty() || latencies.is_empty() {
+        return Err("request expands to zero points".into());
+    }
+    let mut points = Vec::new();
+    for &spec in &workloads {
+        for dname in &design_names {
+            let point = designs::by_name(dname).expect("validated above");
+            for &factor in &latencies {
+                points.push(SweepPoint {
+                    spec,
+                    design: point.name,
+                    dut: point.dut_with_capacity(capacity),
+                    factor,
+                    tweaks,
+                });
+            }
+        }
+    }
+    Ok(SweepRequest { name, points })
+}
+
+/// Validate a request file and copy it into the spool directory.
+pub fn submit(spool: &Path, file: &Path) -> Result<String, String> {
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| format!("cannot read {}: {e}", file.display()))?;
+    let stem = file_stem(file);
+    let req = parse_request(&text, &stem)?;
+    std::fs::create_dir_all(spool)
+        .map_err(|e| format!("cannot create {}: {e}", spool.display()))?;
+    let dest = spool.join(format!("{stem}.json"));
+    std::fs::write(&dest, text).map_err(|e| format!("cannot write {}: {e}", dest.display()))?;
+    Ok(format!(
+        "submitted {}: {} points -> {}",
+        req.name,
+        req.points.len(),
+        dest.display()
+    ))
+}
+
+fn file_stem(p: &Path) -> String {
+    p.file_stem().and_then(|s| s.to_str()).unwrap_or("request").to_string()
+}
+
+/// Request files waiting in the spool, in name order (deterministic
+/// fair-share interleave).
+fn pending(spool: &Path) -> Vec<PathBuf> {
+    let Ok(rd) = std::fs::read_dir(spool) else {
+        return Vec::new();
+    };
+    let mut files: Vec<PathBuf> = rd
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// In-order JSONL emitter: lines land as points resolve, flush to the
+/// file strictly in request order so the output bytes are deterministic.
+struct Emitter {
+    path: PathBuf,
+    file: std::fs::File,
+    lines: Vec<Option<String>>,
+    cursor: usize,
+}
+
+impl Emitter {
+    fn create(path: PathBuf, points: usize) -> Result<Emitter, String> {
+        let file = std::fs::File::create(&path)
+            .map_err(|e| format!("cannot create {}: {e}", path.display()))?;
+        Ok(Emitter { path, file, lines: vec![None; points], cursor: 0 })
+    }
+
+    fn put(&mut self, idx: usize, line: String) {
+        self.lines[idx] = Some(line);
+        while let Some(Some(ready)) = self.lines.get(self.cursor) {
+            if let Err(e) = writeln!(self.file, "{ready}") {
+                eprintln!("warning: sweep result write failed for {}: {e}", self.path.display());
+            }
+            self.cursor += 1;
+        }
+    }
+}
+
+fn result_line(request: &str, p: &SweepPoint, st: &Stats) -> String {
+    let mut s = String::with_capacity(512);
+    let _ = write!(
+        s,
+        "{{\"request\":\"{}\",\"workload\":\"{}\",\"design\":\"{}\",\"capacity\":{},\"latency\":{},\"tweaks\":\"{}\",\"ipc\":{:.6},\"stats\":{{",
+        json::escape(request),
+        json::escape(p.spec.name),
+        json::escape(p.design),
+        p.dut.capacity,
+        p.factor,
+        encode_tweaks(&p.tweaks),
+        st.ipc(),
+    );
+    for (i, (name, value)) in stat_fields(st).into_iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "\"{name}\":{value}");
+    }
+    s.push_str("}}");
+    s
+}
+
+/// Process every request currently in the spool: expand, dedup across
+/// requests (fair round-robin interleave), consult the store, simulate
+/// the misses, stream JSONL, record + save the store, and move the
+/// request files to `<spool>/done/`.
+pub fn process_pending(
+    spool: &Path,
+    store_dir: Option<&Path>,
+    jobs: usize,
+) -> Result<BatchReport, String> {
+    let t0 = std::time::Instant::now();
+    let results_dir = spool.join("results");
+    let done_dir = spool.join("done");
+    for d in [spool, &results_dir, &done_dir] {
+        std::fs::create_dir_all(d).map_err(|e| format!("cannot create {}: {e}", d.display()))?;
+    }
+
+    // Parse everything in the spool; malformed files are rejected (moved
+    // to done/, diagnosed on stderr) without poisoning the batch.
+    let mut requests: Vec<(PathBuf, SweepRequest)> = Vec::new();
+    for f in pending(spool) {
+        let parsed = std::fs::read_to_string(&f)
+            .map_err(|e| format!("cannot read: {e}"))
+            .and_then(|text| parse_request(&text, &file_stem(&f)));
+        match parsed {
+            Ok(req) => requests.push((f, req)),
+            Err(e) => {
+                eprintln!("sweep: rejecting {}: {e}", f.display());
+                let _ = std::fs::rename(&f, done_dir.join(f.file_name().unwrap_or_default()));
+            }
+        }
+    }
+    if requests.is_empty() {
+        return Ok(BatchReport {
+            requests: Vec::new(),
+            unique_points: 0,
+            unique_simulated: 0,
+            elapsed_ms: t0.elapsed().as_millis(),
+            cache_summary: "idle".to_string(),
+        });
+    }
+
+    let mut emitters: Vec<Emitter> = Vec::with_capacity(requests.len());
+    for (f, req) in &requests {
+        let out = results_dir.join(format!("{}.jsonl", file_stem(f)));
+        emitters.push(Emitter::create(out, req.points.len())?);
+    }
+
+    // Deduplicate across requests with a fair round-robin interleave:
+    // point i of every request is considered before point i+1 of any, so
+    // a huge request cannot starve a small one's streaming output.
+    let mut unique: Vec<&SweepPoint> = Vec::new();
+    let mut index: HashMap<JobKey, usize> = HashMap::new();
+    let mut subscribers: Vec<Vec<(usize, usize)>> = Vec::new();
+    let longest = requests.iter().map(|(_, r)| r.points.len()).max().unwrap_or(0);
+    for i in 0..longest {
+        for (ri, (_, req)) in requests.iter().enumerate() {
+            if let Some(p) = req.points.get(i) {
+                let key = JobKey::of(p.spec, &p.dut, p.factor, p.tweaks);
+                let ui = *index.entry(key).or_insert_with(|| {
+                    unique.push(p);
+                    subscribers.push(Vec::new());
+                    unique.len() - 1
+                });
+                subscribers[ui].push((ri, i));
+            }
+        }
+    }
+
+    // Store consult before scheduling: hits stream immediately and never
+    // reach the executor.
+    let mut store = store_dir.map(MemoStore::open);
+    let mut req_hits = vec![0u64; requests.len()];
+    let mut req_sims = vec![0u64; requests.len()];
+    let mut to_run: Vec<usize> = Vec::new();
+    for (ui, p) in unique.iter().enumerate() {
+        let hit = store.as_mut().and_then(|s| s.lookup(p.spec, &p.dut, p.factor, p.tweaks));
+        match hit {
+            Some(st) => {
+                for &(ri, pi) in &subscribers[ui] {
+                    req_hits[ri] += 1;
+                    emitters[ri].put(pi, result_line(&requests[ri].1.name, p, &st));
+                }
+            }
+            None => to_run.push(ui),
+        }
+    }
+
+    // Simulate the misses on the work-stealing executor, streaming each
+    // completion to its subscribers.
+    let cache = CompileCache::new();
+    let items: Vec<&SweepPoint> = to_run.iter().map(|&ui| unique[ui]).collect();
+    let stats = steal_for_each(
+        &items,
+        jobs,
+        |p| run_point(p.spec, &p.dut, p.factor, p.tweaks, Some(&cache)),
+        |i, st| {
+            let ui = to_run[i];
+            for &(ri, pi) in &subscribers[ui] {
+                req_sims[ri] += 1;
+                emitters[ri].put(pi, result_line(&requests[ri].1.name, unique[ui], st));
+            }
+        },
+    );
+    if let Some(s) = store.as_mut() {
+        for (p, st) in items.iter().zip(&stats) {
+            s.record(p.spec, &p.dut, p.factor, p.tweaks, st);
+        }
+        if let Err(e) = s.save() {
+            eprintln!("warning: memo store save failed: {e}");
+        }
+    }
+
+    let cache_summary = format!(
+        "compile cache {} hits / {} unique compiles, {}",
+        cache.hits(),
+        cache.misses(),
+        match &store {
+            Some(s) => format!("disk store {} hits / {} misses", s.hits(), s.misses()),
+            None => "disk store off".to_string(),
+        }
+    );
+
+    let mut reports = Vec::with_capacity(requests.len());
+    for (ri, (f, req)) in requests.iter().enumerate() {
+        reports.push(RequestReport {
+            name: req.name.clone(),
+            points: req.points.len(),
+            store_hits: req_hits[ri],
+            simulated: req_sims[ri],
+            output: emitters[ri].path.clone(),
+        });
+        let _ = std::fs::rename(f, done_dir.join(f.file_name().unwrap_or_default()));
+    }
+    Ok(BatchReport {
+        requests: reports,
+        unique_points: unique.len(),
+        unique_simulated: items.len(),
+        elapsed_ms: t0.elapsed().as_millis(),
+        cache_summary,
+    })
+}
+
+/// The `sweep serve` loop: process the spool, print per-request summary
+/// + batch telemetry, then poll for new requests (or return after one
+/// pass with `once`).
+pub fn serve(
+    spool: &Path,
+    store_dir: Option<&Path>,
+    jobs: usize,
+    once: bool,
+) -> Result<(), String> {
+    loop {
+        let report = process_pending(spool, store_dir, jobs)?;
+        for r in &report.requests {
+            println!(
+                "request {}: {} points ({} disk hits, {} simulated) in {} ms -> {}",
+                r.name,
+                r.points,
+                r.store_hits,
+                r.simulated,
+                report.elapsed_ms,
+                r.output.display()
+            );
+        }
+        if !report.requests.is_empty() {
+            println!(
+                "sweep batch: {} unique points ({} simulated), {}",
+                report.unique_points, report.unique_simulated, report.cache_summary
+            );
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "ltrf-service-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn request_expands_cross_product_with_defaults() {
+        let req = parse_request(
+            r#"{"workloads":["kmeans","bfs"],"designs":["BL","LTRF"],"latencies":[1.0,6.3]}"#,
+            "fallback",
+        )
+        .unwrap();
+        assert_eq!(req.name, "fallback");
+        assert_eq!(req.points.len(), 8);
+        // Workload-major, then design, then latency.
+        assert_eq!(req.points[0].spec.name, "kmeans");
+        assert_eq!(req.points[0].design, "BL");
+        assert_eq!(req.points[0].factor, 1.0);
+        assert_eq!(req.points[1].factor, 6.3);
+        assert_eq!(req.points[2].design, "LTRF");
+        assert_eq!(req.points[4].spec.name, "bfs");
+        assert_eq!(req.points[0].dut.capacity, 2048);
+        assert_eq!(req.points[0].tweaks, CfgTweaks::NONE);
+        // Defaults: latencies -> [1.0]; "all" expands both axes.
+        let all = parse_request(r#"{"name":"full"}"#, "x").unwrap();
+        assert_eq!(all.name, "full");
+        assert_eq!(
+            all.points.len(),
+            suite::suite().len() * designs::names().len()
+        );
+    }
+
+    #[test]
+    fn request_tweaks_and_capacity_apply_to_every_point() {
+        let req = parse_request(
+            r#"{"workloads":["kmeans"],"designs":["LTRF"],"capacity":16384,
+                "tweaks":{"early_refetch":false,"bank_map":"block","backend":"parallel",
+                          "sim_threads":2,"xbar_regs_per_cycle":4}}"#,
+            "t",
+        )
+        .unwrap();
+        assert_eq!(req.points.len(), 1);
+        let p = &req.points[0];
+        assert_eq!(p.dut.capacity, 16384);
+        assert_eq!(p.dut.mrf_banks, 128, "Table-2 bank scaling must apply");
+        assert_eq!(p.tweaks.early_refetch, Some(false));
+        assert_eq!(p.tweaks.bank_map, Some(BankMap::Block));
+        assert_eq!(p.tweaks.backend, Some(SimBackend::Parallel));
+        assert_eq!(p.tweaks.sim_threads, Some(2));
+        assert_eq!(p.tweaks.xbar_regs_per_cycle, Some(4));
+        assert_eq!(encode_tweaks(&p.tweaks), "er0.xb4.bmb.bep.st2");
+    }
+
+    #[test]
+    fn request_errors_name_the_valid_values() {
+        let unknown_wl = parse_request(r#"{"workloads":["nope"]}"#, "x").unwrap_err();
+        assert!(unknown_wl.contains("unknown workload") && unknown_wl.contains("kmeans"));
+        let unknown_d = parse_request(r#"{"designs":["nope"]}"#, "x").unwrap_err();
+        assert!(unknown_d.contains("unknown design") && unknown_d.contains("LTRF_conf"));
+        let unknown_key = parse_request(r#"{"designz":["BL"]}"#, "x").unwrap_err();
+        assert!(unknown_key.contains("designz") && unknown_key.contains("valid keys"));
+        let unknown_tweak = parse_request(r#"{"tweaks":{"turbo":true}}"#, "x").unwrap_err();
+        assert!(unknown_tweak.contains("turbo") && unknown_tweak.contains("early_refetch"));
+        let bad_map =
+            parse_request(r#"{"tweaks":{"bank_map":"diagonal"}}"#, "x").unwrap_err();
+        assert!(bad_map.contains("interleave"));
+        let bad_latency = parse_request(r#"{"latencies":[0.5]}"#, "x").unwrap_err();
+        assert!(bad_latency.contains(">= 1"));
+        let not_json = parse_request("designs: [BL]", "x").unwrap_err();
+        assert!(not_json.contains("byte "), "parser errors carry a byte offset: {not_json}");
+    }
+
+    #[test]
+    fn batch_streams_results_and_second_run_is_warm_and_byte_identical() {
+        let spool = tmpdir("warm");
+        let store = tmpdir("warm-store");
+        let req = r#"{"name":"smoke","workloads":["kmeans"],"designs":["BL","LTRF"],
+                      "latencies":[1.0,2.0]}"#;
+        std::fs::write(spool.join("smoke.json"), req).unwrap();
+
+        let cold = process_pending(&spool, Some(&store), 2).unwrap();
+        assert_eq!(cold.requests.len(), 1);
+        assert_eq!(cold.requests[0].points, 4);
+        assert_eq!(cold.requests[0].store_hits, 0);
+        assert_eq!(cold.requests[0].simulated, 4);
+        assert_eq!(cold.unique_simulated, 4);
+        let out = &cold.requests[0].output;
+        let cold_bytes = std::fs::read(out).unwrap();
+        let lines: Vec<&str> =
+            std::str::from_utf8(&cold_bytes).unwrap().lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let v = json::parse(line).expect("every result line is valid JSON");
+            assert_eq!(v.get("request").and_then(JsonValue::as_str), Some("smoke"));
+            assert!(v.get("ipc").and_then(JsonValue::as_f64).unwrap() > 0.0);
+            assert!(v.get("stats").unwrap().get("instructions").unwrap().as_u64().unwrap() > 0);
+        }
+        assert!(!spool.join("smoke.json").exists(), "processed file must move to done/");
+        assert!(spool.join("done").join("smoke.json").exists());
+
+        // Re-submit the identical request: all points come from the disk
+        // store, nothing simulates, and the JSONL bytes are identical.
+        std::fs::write(spool.join("smoke.json"), req).unwrap();
+        let warm = process_pending(&spool, Some(&store), 2).unwrap();
+        assert_eq!(warm.requests[0].store_hits, 4);
+        assert_eq!(warm.requests[0].simulated, 0);
+        assert_eq!(warm.unique_simulated, 0);
+        assert!(warm.cache_summary.contains("compile cache 0 hits / 0 unique compiles"));
+        assert!(warm.cache_summary.contains("disk store 4 hits / 0 misses"));
+        assert_eq!(std::fs::read(out).unwrap(), cold_bytes, "warm JSONL must be byte-identical");
+
+        let _ = std::fs::remove_dir_all(&spool);
+        let _ = std::fs::remove_dir_all(&store);
+    }
+
+    #[test]
+    fn overlapping_requests_share_points_fairly() {
+        let spool = tmpdir("share");
+        // Both requests contain kmeans/BL@1.0; it must simulate once and
+        // stream to both outputs.
+        std::fs::write(
+            spool.join("a.json"),
+            r#"{"name":"a","workloads":["kmeans"],"designs":["BL"],"latencies":[1.0,2.0]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            spool.join("b.json"),
+            r#"{"name":"b","workloads":["kmeans"],"designs":["BL"],"latencies":[1.0]}"#,
+        )
+        .unwrap();
+        let report = process_pending(&spool, None, 1).unwrap();
+        assert_eq!(report.requests.len(), 2);
+        assert_eq!(report.unique_points, 2, "shared point must dedup");
+        assert_eq!(report.unique_simulated, 2);
+        assert_eq!(report.requests[0].simulated + report.requests[1].simulated, 3);
+        assert!(report.cache_summary.contains("disk store off"));
+        let a = std::fs::read_to_string(&report.requests[0].output).unwrap();
+        let b = std::fs::read_to_string(&report.requests[1].output).unwrap();
+        assert_eq!(a.lines().count(), 2);
+        assert_eq!(b.lines().count(), 1);
+        // The shared point's stats agree across both outputs.
+        let shared_a = json::parse(a.lines().next().unwrap()).unwrap();
+        let shared_b = json::parse(b.lines().next().unwrap()).unwrap();
+        assert_eq!(shared_a.get("stats"), shared_b.get("stats"));
+        let _ = std::fs::remove_dir_all(&spool);
+    }
+
+    #[test]
+    fn malformed_spool_files_are_rejected_not_fatal() {
+        let spool = tmpdir("reject");
+        std::fs::write(spool.join("bad.json"), "{not json").unwrap();
+        std::fs::write(
+            spool.join("good.json"),
+            r#"{"workloads":["kmeans"],"designs":["BL"]}"#,
+        )
+        .unwrap();
+        let report = process_pending(&spool, None, 1).unwrap();
+        assert_eq!(report.requests.len(), 1, "good request still processes");
+        assert_eq!(report.requests[0].points, 1);
+        assert!(spool.join("done").join("bad.json").exists(), "rejects move to done/");
+        let _ = std::fs::remove_dir_all(&spool);
+    }
+
+    #[test]
+    fn submit_validates_then_spools() {
+        let spool = tmpdir("submit");
+        let outside = tmpdir("submit-src");
+        let src = outside.join("req.json");
+        std::fs::write(&src, r#"{"workloads":["kmeans"],"designs":["BL"]}"#).unwrap();
+        let msg = submit(&spool, &src).unwrap();
+        assert!(msg.contains("1 points"), "{msg}");
+        assert!(spool.join("req.json").exists());
+        let bad = outside.join("bad.json");
+        std::fs::write(&bad, r#"{"designs":["nope"]}"#).unwrap();
+        assert!(submit(&spool, &bad).is_err());
+        assert!(!spool.join("bad.json").exists(), "invalid requests must not spool");
+        let _ = std::fs::remove_dir_all(&spool);
+        let _ = std::fs::remove_dir_all(&outside);
+    }
+}

@@ -1,0 +1,532 @@
+//! Disk-backed cross-run memo store for simulation results.
+//!
+//! The engine memoizes within a run (`ResultSet` + `CompileCache`); this
+//! store memoizes *across* runs and users: every executed point is
+//! persisted keyed by the full semantic identity of the result —
+//!
+//! `(kernel fingerprint, CompileOptions, design point, latency factor,
+//! CfgTweaks)`
+//!
+//! — so a repeated sweep re-runs nothing, and a sweep after a compiler
+//! change re-runs exactly the points whose kernel fingerprints moved.
+//!
+//! ## On-disk layout and invalidation rules
+//!
+//! One TSV file per store directory (`<dir>/memo.tsv`):
+//!
+//! ```text
+//! #ltrf-memo-store\tv=1\tfpv=1\tstats=<fnv64 of the stat-field names>
+//! <key>\tcycles=..\tinstructions=..\t...   (one line per memoized point)
+//! ```
+//!
+//! * **Whole-file invalidation** — the header pins the store schema
+//!   version, [`FINGERPRINT_VERSION`], and a signature of the `Stats`
+//!   counter schema ([`stats_schema_signature`]). If any of the three
+//!   moved since the file was written, the file is discarded wholesale on
+//!   open (treated as empty; the next save rewrites it under the new
+//!   header). A fingerprint-*encoding* change without a version bump is
+//!   caught per-entry instead: the kernel's recomputed fingerprint simply
+//!   never matches the stored key.
+//! * **Per-point invalidation** — every key component is semantic: a
+//!   compiler change moves the kernel fingerprint (re-running the whole
+//!   matrix), while a single design/latency/tweak knob change produces a
+//!   different key for exactly the affected points (the rest still hit).
+//! * **Corruption** — a malformed line (bad field set, non-numeric value,
+//!   wrong column shape) is skipped and counted, never a panic: the entry
+//!   reads as a cold miss and is rewritten by the next save.
+//!
+//! Determinism note: entries are kept in a `BTreeMap` and serialized in
+//! key order, so the file bytes are independent of execution order and
+//! thread count — byte-identical stores from `--jobs 1` and `--jobs N`.
+
+use super::engine::{point_setup, CfgTweaks};
+use super::experiments::DesignUnderTest;
+use crate::compiler::{BankMap, CompileOptions, SubgraphMode};
+use crate::ir::fingerprint::FINGERPRINT_VERSION;
+use crate::scenario::snapshot::{stat_fields, stats_from_fields};
+use crate::sim::{SimBackend, Stats};
+use crate::workloads::{gen, WorkloadSpec};
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// On-disk schema version. Bump when the key encoding or the line format
+/// changes; every existing store file is then discarded on open.
+pub const STORE_SCHEMA_VERSION: u32 = 1;
+
+/// Store file name inside the store directory.
+pub const STORE_FILE: &str = "memo.tsv";
+
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x100000001b3;
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// Signature of the `Stats` counter schema: FNV-1a/64 over the ordered
+/// [`stat_fields`] names. Adding, removing, renaming, or reordering a
+/// counter changes the signature and invalidates every store file —
+/// results serialized under a different counter set must never be
+/// half-deserialized into the current `Stats`.
+pub fn stats_schema_signature() -> u64 {
+    let names: Vec<&str> = stat_fields(&Stats::default()).into_iter().map(|(n, _)| n).collect();
+    fnv64(names.join("\n").as_bytes())
+}
+
+fn encode_mode(m: SubgraphMode) -> &'static str {
+    match m {
+        SubgraphMode::RegisterIntervals => "iv",
+        SubgraphMode::Strands => "st",
+    }
+}
+
+fn encode_bank_map(b: BankMap) -> &'static str {
+    match b {
+        BankMap::Interleave => "il",
+        BankMap::Block => "bl",
+    }
+}
+
+fn encode_opts(o: &CompileOptions) -> String {
+    format!(
+        "n{}.b{}.r{}.m{}.k{}",
+        o.max_regs_per_interval,
+        o.num_banks,
+        o.renumber as u8,
+        encode_mode(o.mode),
+        encode_bank_map(o.bank_map),
+    )
+}
+
+fn encode_dut(d: &DesignUnderTest) -> String {
+    let mo = match d.mode_override {
+        None => "-",
+        Some(m) => encode_mode(m),
+    };
+    format!(
+        "h{}.rn{}.c{}.mb{}.ri{}.aw{}.wps{}.sms{}.mo{}",
+        d.hierarchy.name(),
+        d.renumber as u8,
+        d.capacity,
+        d.mrf_banks,
+        d.regs_per_interval,
+        d.active_warps,
+        d.warps_per_sm,
+        d.num_sms,
+        mo,
+    )
+}
+
+/// Canonical tweak encoding (`-` = knob left at the design's value). Also
+/// used by the sweep service's JSONL emitter so a result line names the
+/// exact ablation flavor it was simulated under.
+pub fn encode_tweaks(t: &CfgTweaks) -> String {
+    let mut s = String::new();
+    match t.early_refetch {
+        None => s.push_str("er-"),
+        Some(v) => {
+            let _ = write!(s, "er{}", v as u8);
+        }
+    }
+    match t.xbar_regs_per_cycle {
+        None => s.push_str(".xb-"),
+        Some(v) => {
+            let _ = write!(s, ".xb{v}");
+        }
+    }
+    match t.bank_map {
+        None => s.push_str(".bm-"),
+        Some(BankMap::Interleave) => s.push_str(".bmi"),
+        Some(BankMap::Block) => s.push_str(".bmb"),
+    }
+    match t.backend {
+        None => s.push_str(".be-"),
+        Some(SimBackend::Reference) => s.push_str(".ber"),
+        Some(SimBackend::Parallel) => s.push_str(".bep"),
+    }
+    match t.sim_threads {
+        None => s.push_str(".st-"),
+        Some(v) => {
+            let _ = write!(s, ".st{v}");
+        }
+    }
+    s
+}
+
+/// The disk-backed memo store. Open it on a directory; lookups and
+/// records are in-memory against the loaded map, [`MemoStore::save`]
+/// rewrites the file (no-op when nothing changed).
+pub struct MemoStore {
+    path: PathBuf,
+    header: String,
+    entries: BTreeMap<String, Stats>,
+    /// Per-workload kernel fingerprints, computed once per open store
+    /// (`gen::build` is cheap relative to a simulation, but key lookups
+    /// should not rebuild the kernel every time).
+    fp_cache: HashMap<&'static str, String>,
+    hits: u64,
+    misses: u64,
+    dirty: bool,
+    invalidated: bool,
+    skipped_lines: u64,
+}
+
+impl MemoStore {
+    /// Open (or create empty) the store under `dir`, pinned to the
+    /// current schema/fingerprint/stats versions. Never fails: an
+    /// unreadable, stale, or corrupt file degrades to an empty store.
+    pub fn open(dir: &Path) -> MemoStore {
+        MemoStore::open_versioned(
+            dir,
+            STORE_SCHEMA_VERSION,
+            FINGERPRINT_VERSION,
+            stats_schema_signature(),
+        )
+    }
+
+    /// Version-pinning hook for the invalidation tests: open the store as
+    /// if the given store-schema / fingerprint / stats-schema versions
+    /// were current. Production callers use [`MemoStore::open`].
+    pub fn open_versioned(
+        dir: &Path,
+        store_schema: u32,
+        fingerprint_version: u32,
+        stats_signature: u64,
+    ) -> MemoStore {
+        let header = format!(
+            "#ltrf-memo-store\tv={store_schema}\tfpv={fingerprint_version}\tstats={stats_signature:016x}"
+        );
+        let mut store = MemoStore {
+            path: dir.join(STORE_FILE),
+            header,
+            entries: BTreeMap::new(),
+            fp_cache: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            dirty: false,
+            invalidated: false,
+            skipped_lines: 0,
+        };
+        store.load();
+        store
+    }
+
+    fn load(&mut self) {
+        let Ok(text) = std::fs::read_to_string(&self.path) else {
+            return; // no file yet: empty store
+        };
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(h) if h == self.header => {}
+            // Version mismatch (or not a store file at all): whole-file
+            // invalidation. The stale contents are dropped; the next save
+            // rewrites the file under the current header.
+            _ => {
+                self.invalidated = true;
+                return;
+            }
+        }
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            match parse_entry(line) {
+                Some((key, stats)) => {
+                    self.entries.insert(key.to_string(), stats);
+                }
+                None => self.skipped_lines += 1,
+            }
+        }
+    }
+
+    fn key_for(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) -> String {
+        let fp = self
+            .fp_cache
+            .entry(spec.name)
+            .or_insert_with(|| gen::build(spec).fingerprint().to_string());
+        let (_, opts) = point_setup(dut, factor, tweaks);
+        format!(
+            "{fp}|{}|{}|{:016x}|{}",
+            encode_opts(&opts),
+            encode_dut(dut),
+            factor.to_bits(),
+            encode_tweaks(&tweaks),
+        )
+    }
+
+    /// Look a point up; counts a hit or a miss.
+    pub fn lookup(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+    ) -> Option<Stats> {
+        let key = self.key_for(spec, dut, factor, tweaks);
+        match self.entries.get(&key) {
+            Some(st) => {
+                self.hits += 1;
+                Some(st.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a simulated result (in memory; [`MemoStore::save`]
+    /// persists). Re-recording an identical result does not dirty the
+    /// store.
+    pub fn record(
+        &mut self,
+        spec: &'static WorkloadSpec,
+        dut: &DesignUnderTest,
+        factor: f64,
+        tweaks: CfgTweaks,
+        stats: &Stats,
+    ) {
+        let key = self.key_for(spec, dut, factor, tweaks);
+        if self.entries.get(&key) != Some(stats) {
+            self.entries.insert(key, stats.clone());
+            self.dirty = true;
+        }
+    }
+
+    /// Rewrite the store file (header + entries in key order). No-op when
+    /// nothing changed since the last save/open.
+    pub fn save(&mut self) -> Result<(), String> {
+        if !self.dirty {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+        }
+        let mut out = String::with_capacity(128 * (1 + self.entries.len()));
+        out.push_str(&self.header);
+        out.push('\n');
+        for (key, stats) in &self.entries {
+            out.push_str(key);
+            for (name, value) in stat_fields(stats) {
+                let _ = write!(out, "\t{name}={value}");
+            }
+            out.push('\n');
+        }
+        std::fs::write(&self.path, out)
+            .map_err(|e| format!("cannot write {}: {e}", self.path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Lookups answered from disk-loaded entries.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that found no entry.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Memoized points currently held (loaded + recorded).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when an existing file was discarded wholesale because its
+    /// header versions did not match.
+    pub fn invalidated(&self) -> bool {
+        self.invalidated
+    }
+
+    /// Malformed entry lines dropped on load (each one is a cold miss).
+    pub fn skipped_lines(&self) -> u64 {
+        self.skipped_lines
+    }
+
+    /// The backing file path (`<dir>/memo.tsv`).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Parse one entry line; `None` = malformed (skip, count, never panic).
+fn parse_entry(line: &str) -> Option<(&str, Stats)> {
+    let mut parts = line.split('\t');
+    let key = parts.next()?;
+    // A key has exactly 5 `|`-separated components; anything else is a
+    // truncated or foreign line.
+    if key.split('|').count() != 5 {
+        return None;
+    }
+    let mut fields: Vec<(&str, u64)> = Vec::new();
+    for p in parts {
+        let (name, value) = p.split_once('=')?;
+        fields.push((name, value.parse().ok()?));
+    }
+    let stats = stats_from_fields(&fields).ok()?;
+    Some((key, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HierarchyKind;
+    use crate::workloads::suite;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "ltrf-store-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn bl() -> DesignUnderTest {
+        DesignUnderTest::new(HierarchyKind::Baseline, false)
+    }
+
+    fn fake_stats(seed: u64) -> Stats {
+        Stats { cycles: 100 + seed, instructions: 250 + seed, l1_hits: seed, ..Default::default() }
+    }
+
+    #[test]
+    fn roundtrip_save_and_reload() {
+        let dir = tmpdir("roundtrip");
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut store = MemoStore::open(&dir);
+        assert!(store.is_empty() && !store.invalidated());
+        assert!(store.lookup(spec, &bl(), 1.0, CfgTweaks::NONE).is_none());
+        store.record(spec, &bl(), 1.0, CfgTweaks::NONE, &fake_stats(1));
+        store.record(spec, &bl(), 6.3, CfgTweaks::NONE, &fake_stats(2));
+        store.save().unwrap();
+        assert_eq!(store.misses(), 1);
+
+        let mut back = MemoStore::open(&dir);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.lookup(spec, &bl(), 1.0, CfgTweaks::NONE), Some(fake_stats(1)));
+        assert_eq!(back.lookup(spec, &bl(), 6.3, CfgTweaks::NONE), Some(fake_stats(2)));
+        assert_eq!(back.hits(), 2);
+        assert_eq!(back.misses(), 0);
+        // Saving with no changes must not rewrite (delete the file first:
+        // an accidental rewrite would resurrect it).
+        std::fs::remove_file(back.path()).unwrap();
+        back.save().unwrap();
+        assert!(!back.path().exists());
+    }
+
+    #[test]
+    fn keys_distinguish_every_component() {
+        let dir = tmpdir("keys");
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let other = suite::workload_by_name("bfs").unwrap();
+        let mut store = MemoStore::open(&dir);
+        let base = store.key_for(spec, &bl(), 1.0, CfgTweaks::NONE);
+        assert_eq!(store.key_for(spec, &bl(), 1.0, CfgTweaks::NONE), base, "stable");
+        assert_ne!(store.key_for(other, &bl(), 1.0, CfgTweaks::NONE), base, "workload");
+        assert_ne!(store.key_for(spec, &bl(), 2.0, CfgTweaks::NONE), base, "latency");
+        let mut big = bl();
+        big.capacity = 16384;
+        assert_ne!(store.key_for(spec, &big, 1.0, CfgTweaks::NONE), base, "capacity");
+        let ltrf = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        assert_ne!(store.key_for(spec, &ltrf, 1.0, CfgTweaks::NONE), base, "hierarchy");
+        let tw = CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE };
+        assert_ne!(store.key_for(spec, &bl(), 1.0, tw), base, "tweak");
+        // Backend tweaks are keyed too (bit-identical by the equivalence
+        // oracle, but the store must not conflate the points).
+        let be = CfgTweaks::with_backend(SimBackend::Parallel, 4);
+        assert_ne!(store.key_for(spec, &bl(), 1.0, be), base, "backend");
+    }
+
+    #[test]
+    fn version_bumps_invalidate_the_whole_file() {
+        let dir = tmpdir("versions");
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut store = MemoStore::open(&dir);
+        store.record(spec, &bl(), 1.0, CfgTweaks::NONE, &fake_stats(1));
+        store.save().unwrap();
+
+        let sig = stats_schema_signature();
+        let fpv = FINGERPRINT_VERSION;
+        let sv = STORE_SCHEMA_VERSION;
+        // Same versions: warm.
+        assert_eq!(MemoStore::open_versioned(&dir, sv, fpv, sig).len(), 1);
+        // Any one version moving: cold, flagged, no panic.
+        for (s, f, g) in [(sv + 1, fpv, sig), (sv, fpv + 1, sig), (sv, fpv, sig ^ 1)] {
+            let bumped = MemoStore::open_versioned(&dir, s, f, g);
+            assert!(bumped.is_empty(), "bump ({s},{f},{g:#x}) must invalidate");
+            assert!(bumped.invalidated());
+        }
+        // The un-bumped store still reads the file (invalidation happens
+        // on open, not by rewriting the file).
+        assert_eq!(MemoStore::open(&dir).len(), 1);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_lines_are_cold_misses() {
+        let dir = tmpdir("corrupt");
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut store = MemoStore::open(&dir);
+        store.record(spec, &bl(), 1.0, CfgTweaks::NONE, &fake_stats(1));
+        store.record(spec, &bl(), 2.0, CfgTweaks::NONE, &fake_stats(2));
+        store.save().unwrap();
+
+        // Truncate the file mid-entry: the cut line drops, the rest load.
+        // (Keys sort by latency bit pattern, so the 1.0 entry is first and
+        // the 2.0 entry is the one the cut mangles.)
+        let text = std::fs::read_to_string(store.path()).unwrap();
+        std::fs::write(store.path(), &text[..text.len() - 40]).unwrap();
+        let mut truncated = MemoStore::open(&dir);
+        assert_eq!(truncated.len(), 1);
+        assert_eq!(truncated.skipped_lines(), 1);
+        assert!(truncated.lookup(spec, &bl(), 1.0, CfgTweaks::NONE).is_some());
+        assert!(truncated.lookup(spec, &bl(), 2.0, CfgTweaks::NONE).is_none());
+
+        // Garbage lines appended to the pristine file (wrong key shape,
+        // non-numeric value, wrong field set): each is skipped, the good
+        // entries still load.
+        let poisoned =
+            format!("{text}not-a-key\tcycles=1\nk|a|b|c|d\tcycles=oops\nk|a|b|c|d\tcycles=3\n");
+        std::fs::write(store.path(), poisoned).unwrap();
+        let recovered = MemoStore::open(&dir);
+        assert_eq!(recovered.len(), 2);
+        assert_eq!(recovered.skipped_lines(), 3);
+
+        // A file that is not a store at all: cold, not a panic.
+        std::fs::write(store.path(), "totally unrelated\ncontents\n").unwrap();
+        let foreign = MemoStore::open(&dir);
+        assert!(foreign.is_empty() && foreign.invalidated());
+    }
+
+    #[test]
+    fn schema_signature_tracks_field_list() {
+        // The signature is a pure function of the stat-field names; it
+        // must be stable across calls and differ from a perturbed list.
+        assert_eq!(stats_schema_signature(), stats_schema_signature());
+        let names: Vec<&str> =
+            stat_fields(&Stats::default()).into_iter().map(|(n, _)| n).collect();
+        let perturbed = fnv64(names.join("\r").as_bytes());
+        assert_ne!(stats_schema_signature(), perturbed);
+    }
+}

@@ -86,6 +86,73 @@ where
     results.into_iter().map(|r| r.expect("steal_map worker completed")).collect()
 }
 
+/// [`steal_map`] with a streaming sink: `sink(i, &r)` runs under a lock as
+/// each item completes (in completion order, not item order), so a caller
+/// can stream results out — the sweep service's JSONL emitter — while the
+/// full ordered result vector is still returned at the end. The sink must
+/// be cheap; it serializes completions.
+pub fn steal_for_each<T, R, F, S>(items: &[T], threads: usize, f: F, sink: S) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    S: FnMut(usize, &R) + Send,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = resolve_threads(threads).min(n);
+    let sink_mx = Mutex::new(sink);
+    if n <= 1 || threads == 1 {
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let r = f(t);
+                (sink_mx.lock().unwrap())(i, &r);
+                r
+            })
+            .collect();
+    }
+
+    let queues: Vec<Mutex<VecDeque<usize>>> =
+        (0..threads).map(|_| Mutex::new(VecDeque::new())).collect();
+    for i in 0..n {
+        queues[i % threads].lock().unwrap().push_back(i);
+    }
+
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let results_mx = Mutex::new(&mut results);
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let queues = &queues;
+            let results_mx = &results_mx;
+            let sink_mx = &sink_mx;
+            let f = &f;
+            s.spawn(move || loop {
+                let mut job = queues[w].lock().unwrap().pop_front();
+                if job.is_none() {
+                    for v in 0..queues.len() {
+                        if v == w {
+                            continue;
+                        }
+                        job = queues[v].lock().unwrap().pop_back();
+                        if job.is_some() {
+                            break;
+                        }
+                    }
+                }
+                let Some(i) = job else { break };
+                let r = f(&items[i]);
+                (sink_mx.lock().unwrap())(i, &r);
+                results_mx.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("steal_for_each worker completed")).collect()
+}
+
 /// Map `f` over `items` on up to `available_parallelism` threads,
 /// preserving order (compatibility shim over [`steal_map`]).
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
@@ -147,6 +214,20 @@ mod tests {
             }
         });
         assert_eq!(ys[1..], xs[1..]);
+    }
+
+    #[test]
+    fn steal_for_each_streams_every_completion_once() {
+        let xs: Vec<u64> = (0..97).collect();
+        for threads in [1usize, 4] {
+            let mut seen: Vec<(usize, u64)> = Vec::new();
+            let ys = steal_for_each(&xs, threads, |x| x + 10, |i, r| seen.push((i, *r)));
+            assert_eq!(ys, xs.iter().map(|x| x + 10).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(seen.len(), xs.len());
+            seen.sort_unstable();
+            let want: Vec<(usize, u64)> = xs.iter().map(|&x| (x as usize, x + 10)).collect();
+            assert_eq!(seen, want, "every item streamed exactly once");
+        }
     }
 
     #[test]

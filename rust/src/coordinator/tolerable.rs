@@ -44,12 +44,42 @@ pub fn max_tolerable(dut: &DesignUnderTest, spec: &WorkloadSpec, threshold: f64)
     scan(threshold, base, |f| dut.run(spec, f).ipc())
 }
 
-/// Engine-backed variant used by the figure drivers. During planning it
-/// declares the factor grid (up to [`PLAN_HORIZON`]) into the shared job
-/// matrix; during rendering it performs the exact same early-exit scan as
-/// [`max_tolerable`], reading from the `ResultSet` (grid points past the
+/// Declare pass for an engine-backed tolerable-latency scan: requests the
+/// factor grid up to the design's [`plan_horizon`] into the engine's job
+/// matrix (parallel, deduplicated, store-aware). Call before
+/// `Engine::execute`; [`measure`] then reads the scan back.
+pub fn plan(eng: &mut Engine, dut: &DesignUnderTest, spec: &'static WorkloadSpec) {
+    let horizon = plan_horizon(dut);
+    eng.request(spec, dut, 1.0);
+    for f in factor_grid().into_iter().skip(1) {
+        if f > horizon {
+            break;
+        }
+        eng.request(spec, dut, f);
+    }
+}
+
+/// Render pass: the exact same early-exit scan as [`max_tolerable`],
+/// reading from the engine's `ResultSet` (grid points past the planned
 /// horizon are simulated on demand through the engine's caches), so the
 /// result is identical to the serial implementation at any `--jobs N`.
+pub fn measure(
+    eng: &mut Engine,
+    dut: &DesignUnderTest,
+    spec: &'static WorkloadSpec,
+    threshold: f64,
+) -> f64 {
+    let base = eng.point(spec, dut, 1.0).ipc();
+    if base <= 0.0 {
+        return 1.0;
+    }
+    scan(threshold, base, |f| eng.point(spec, dut, f).ipc())
+}
+
+/// Legacy one-call variant from the stateful two-phase protocol: planning
+/// mode declares, render mode scans.
+#[deprecated(note = "use tolerable::plan before execute, then tolerable::measure")]
+#[allow(deprecated)]
 pub fn max_tolerable_engine(
     eng: &mut Engine,
     dut: &DesignUnderTest,
@@ -57,21 +87,10 @@ pub fn max_tolerable_engine(
     threshold: f64,
 ) -> f64 {
     if eng.planning() {
-        let horizon = plan_horizon(dut);
-        eng.request(spec, dut, 1.0);
-        for f in factor_grid().into_iter().skip(1) {
-            if f > horizon {
-                break;
-            }
-            eng.request(spec, dut, f);
-        }
+        plan(eng, dut, spec);
         return 1.0;
     }
-    let base = eng.stats(spec, dut, 1.0).ipc();
-    if base <= 0.0 {
-        return 1.0;
-    }
-    scan(threshold, base, |f| eng.stats(spec, dut, f).ipc())
+    measure(eng, dut, spec, threshold)
 }
 
 /// The shared grid scan: last factor within `threshold × base`, stopping

@@ -22,8 +22,14 @@
 //! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   prefetch-evaluation artifact and runs it from the sweep path;
 //! * [`coordinator`] — the design registry (the canonical policy
-//!   comparison points) and experiment drivers regenerating every table
-//!   and figure in the paper's evaluation;
+//!   comparison points), the ticket-based experiment engine with its
+//!   cross-run disk memo store, the batch sweep service, and experiment
+//!   drivers regenerating every table and figure in the paper's
+//!   evaluation;
+//! * [`cli`] — shared flag parsing for the `ltrf` binary (one definition
+//!   of `--jobs`/`--backend`/`--sim-threads`/`--json` across subcommands);
+//! * [`util`] — dependency-free helpers (strict JSON parsing for the
+//!   sweep service's request files);
 //! * [`scenario`] — differential scenario engine: seeded kernel fuzzing,
 //!   cross-config oracles (including backend equivalence), failure
 //!   shrinking, and the golden-stats regression snapshot;
@@ -31,6 +37,7 @@
 //! * [`report`] — ascii/CSV table rendering.
 
 pub mod bench;
+pub mod cli;
 pub mod compiler;
 pub mod coordinator;
 pub mod ir;

@@ -1,15 +1,20 @@
 //! `ltrf` — CLI for the LTRF reproduction.
 //!
 //! Every table/figure in the paper's evaluation is a subcommand; `all`
-//! regenerates the full set (EXPERIMENTS.md records the outputs).
+//! regenerates the full set (EXPERIMENTS.md records the outputs). Flags
+//! parse through [`ltrf::cli`]: each subcommand declares its accepted
+//! set, and the shared knobs (`--jobs`, `--backend`, `--sim-threads`,
+//! `--json`, `--store`) are single definitions that behave identically
+//! everywhere.
 
-use ltrf::coordinator::designs;
-use ltrf::coordinator::engine::{run_point, two_phase, CfgTweaks, Engine};
+use ltrf::cli;
+use ltrf::coordinator::engine::{run_point, CfgTweaks, Engine};
 use ltrf::coordinator::experiments::{self as exp, ExperimentContext};
+use ltrf::coordinator::{designs, service, MemoStore};
 use ltrf::report::Table;
 use ltrf::sim::SimBackend;
 use ltrf::workloads::suite;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
 ltrf — Latency-Tolerant Register File reproduction
@@ -36,6 +41,20 @@ Experiment commands (regenerate paper tables/figures):
   ltrfplus    LTRF vs LTRF+ liveness-filtering traffic (§3.2)
   headline    Abstract claim: LTRF_conf on config #7
   all         Everything above
+All experiment commands accept [--quick] [--csv DIR] [--sms N] [--jobs N]
+[--backend B] [--sim-threads N] [--store DIR] [--json] [--engine-stats].
+With --store DIR, simulated points persist in a cross-run memo store and
+identical reruns answer from disk without simulating.
+
+Batch sweep service:
+  sweep submit <file.json> [--spool DIR]
+              Validate a sweep-request file (workloads x designs x
+              latencies cross-product as JSON; see README) and copy it
+              into the spool
+  sweep serve [--spool DIR] [--store DIR] [--jobs N] [--once]
+              Process spooled requests on the work-stealing executor with
+              fair sharing, streaming results to <spool>/results/*.jsonl;
+              --once drains the spool and exits (CI), otherwise polls
 
 Tool commands:
   compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]
@@ -59,21 +78,686 @@ Verification commands:
   snapshot (--check | --bless) [--golden PATH] [--quick] [--jobs N]
               Golden-stats harness: --bless captures the workload x config
               counter snapshot; --check diffs the current simulator
-              against the committed golden file (keyed diff on drift)
+              against the committed golden file (exit 1 on drift, exit 3
+              while the committed golden is still empty/unarmed)
   bench [--json PATH] [--quick] [--sim-threads N] [--iters N]
               Simulator throughput trajectory: simulated-cycles/sec and
               fig14-matrix wall time for both backends, written as
               machine-readable JSON (default BENCH_sim.json)
 
-Flags:
+Shared flags:
   --quick       5-workload subset, smaller grids
   --csv DIR     also write each table as CSV
   --sms N       simulated SM count (default 1)
   --jobs N      parallel simulation workers (default: all cores)
   --backend B   simulator backend: reference | parallel (default reference)
   --sim-threads N  step-phase threads for the parallel backend (default 1)
+  --store DIR   cross-run memo store (persist + reuse simulated points)
+  --json        print tables as JSON objects instead of ascii
   --engine-stats  print job-matrix / cache statistics after a run
 ";
+
+fn die(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
+
+fn parse_or_die(cmd: &str, args: &[String], spec: &[cli::FlagSpec]) -> cli::Parsed {
+    cli::parse(cmd, args, spec).unwrap_or_else(|e| die(&e))
+}
+
+fn opt_parsed<T: std::str::FromStr>(p: &cli::Parsed, name: &str) -> Option<T> {
+    p.parsed_opt(name).unwrap_or_else(|e| die(&e))
+}
+
+fn opt_or<T: std::str::FromStr>(p: &cli::Parsed, name: &str, default: T) -> T {
+    opt_parsed(p, name).unwrap_or(default)
+}
+
+fn ctx_from(p: &cli::Parsed) -> ExperimentContext {
+    ExperimentContext {
+        quick: p.flag("--quick"),
+        csv_dir: p.opt("--csv").map(PathBuf::from),
+        num_sms: opt_or(p, "--sms", 1),
+        jobs: opt_or(p, "--jobs", 0),
+    }
+}
+
+/// Simulator-backend selection (`run` / `snapshot` / the experiment
+/// engine's default tweaks). The knobs exist so CI can diff the backends
+/// against each other; the default is the reference backend.
+fn tweaks_from(p: &cli::Parsed) -> CfgTweaks {
+    let mut tw = CfgTweaks::NONE;
+    if let Some(name) = p.opt("--backend") {
+        match SimBackend::by_name(name) {
+            Some(b) => tw.backend = Some(b),
+            None => die(&format!("unknown --backend `{name}` (expected: reference | parallel)")),
+        }
+    }
+    tw.sim_threads = opt_parsed(p, "--sim-threads");
+    tw
+}
+
+/// Engine shared by one experiment invocation: `--backend`/`--sim-threads`
+/// become its default tweaks, `--store DIR` attaches the cross-run memo
+/// store consulted before any simulation is scheduled.
+fn engine_for(p: &cli::Parsed, jobs: usize) -> Engine {
+    let mut eng = Engine::new(jobs);
+    eng.set_default_tweaks(tweaks_from(p));
+    if let Some(dir) = p.opt("--store") {
+        eng.set_store(MemoStore::open(Path::new(dir)));
+    }
+    eng
+}
+
+/// End-of-run bookkeeping: `--engine-stats` telemetry, then persist any
+/// newly simulated points into the memo store.
+fn finish(p: &cli::Parsed, eng: &mut Engine) {
+    if p.flag("--engine-stats") {
+        eprintln!("{}", eng.summary());
+    }
+    if let Err(e) = eng.flush_store() {
+        eprintln!("warning: memo store save failed: {e}");
+    }
+}
+
+fn emit(t: &Table, json: bool) {
+    if json {
+        println!("{}", t.to_json());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+const EXPERIMENT_FLAGS: &[cli::FlagSpec] = &[
+    cli::QUICK,
+    cli::CSV,
+    cli::SMS,
+    cli::JOBS,
+    cli::BACKEND,
+    cli::SIM_THREADS,
+    cli::STORE,
+    cli::JSON,
+    cli::ENGINE_STATS,
+];
+
+fn experiment(cmd: &str, rest: &[String]) {
+    let p = parse_or_die(cmd, rest, EXPERIMENT_FLAGS);
+    let ctx = ctx_from(&p);
+    let mut eng = engine_for(&p, ctx.jobs);
+    let json = p.flag("--json");
+    match cmd {
+        "table1" => emit(&exp::table1(&ctx, &mut eng), json),
+        "table2" => emit(&exp::table2_table(&ctx, &mut eng), json),
+        "fig2" => emit(&exp::fig2(&ctx, &mut eng), json),
+        "fig3" => emit(&exp::fig3(&ctx, &mut eng), json),
+        "fig4" => emit(&exp::fig4(&ctx, &mut eng), json),
+        "fig6" => emit(&exp::fig6(&ctx, &mut eng), json),
+        "fig14" => exp::fig14(&ctx, &mut eng).iter().for_each(|t| emit(t, json)),
+        "fig15" => emit(&exp::fig15(&ctx, &mut eng), json),
+        "fig16" => exp::fig16(&ctx, &mut eng).iter().for_each(|t| emit(t, json)),
+        "fig17" => emit(&exp::fig17(&ctx, &mut eng), json),
+        "fig18" => emit(&exp::fig18(&ctx, &mut eng), json),
+        "table4" => emit(&exp::table4(&ctx, &mut eng), json),
+        "fig19" => emit(&exp::fig19(&ctx, &mut eng), json),
+        "fig20" => emit(&exp::fig20(&ctx, &mut eng), json),
+        "overheads" => emit(&exp::overheads(&ctx, &mut eng), json),
+        "ablations" => exp::ablations(&ctx, &mut eng).iter().for_each(|t| emit(t, json)),
+        "ltrfplus" => emit(&exp::ltrf_plus(&ctx, &mut eng), json),
+        "headline" => {
+            let (imp, t) = exp::headline(&ctx, &mut eng);
+            emit(&t, json);
+            println!(
+                "LTRF_conf on config #7 improves mean IPC by {:.1}% (paper: 34%)",
+                imp * 100.0
+            );
+        }
+        "all" => {
+            let (tables, imp) = exp::all_tables(&ctx, &mut eng);
+            tables.iter().for_each(|t| emit(t, json));
+            println!("Headline: +{:.1}% mean IPC (paper: +34%)", imp * 100.0);
+        }
+        _ => unreachable!("experiment dispatch covers every listed command"),
+    }
+    finish(&p, &mut eng);
+}
+
+fn sweep_cmd(rest: &[String]) {
+    const SPOOL: cli::FlagSpec =
+        cli::opt("--spool", "DIR", "request spool directory (default sweeps)");
+    const ONCE: cli::FlagSpec = cli::flag("--once", "drain the spool once and exit");
+    let usage = "usage: ltrf sweep (serve [--spool DIR] [--store DIR] [--jobs N] [--once] \
+                 | submit <file.json> [--spool DIR])";
+    let Some(sub) = rest.first().map(|s| s.as_str()) else { die(usage) };
+    match sub {
+        "serve" => {
+            let p = parse_or_die(
+                "sweep serve",
+                &rest[1..],
+                &[SPOOL, cli::STORE, cli::JOBS, ONCE],
+            );
+            let spool = PathBuf::from(p.opt("--spool").unwrap_or("sweeps"));
+            let store = p.opt("--store").map(PathBuf::from);
+            let jobs = opt_or(&p, "--jobs", 0usize);
+            if let Err(e) = service::serve(&spool, store.as_deref(), jobs, p.flag("--once")) {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        }
+        "submit" => {
+            let p = parse_or_die("sweep submit", &rest[1..], &[SPOOL]);
+            let Some(file) = p.positionals.first() else {
+                die("usage: ltrf sweep submit <file.json> [--spool DIR]")
+            };
+            let spool = PathBuf::from(p.opt("--spool").unwrap_or("sweeps"));
+            match service::submit(&spool, Path::new(file)) {
+                Ok(msg) => println!("{msg}"),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        other => die(&format!("unknown sweep subcommand `{other}`\n{usage}")),
+    }
+}
+
+fn fuzz_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "fuzz",
+        rest,
+        &[
+            cli::opt("--seed-range", "A..B", "seed range (default 0..200)"),
+            cli::opt("--corpus", "DIR", "scenario corpus directory"),
+            cli::JOBS,
+            cli::opt("--shrink-budget", "N", "max shrink iterations per failure"),
+        ],
+    );
+    let range = p.opt("--seed-range").unwrap_or("0..200").to_string();
+    let Some((a, b)) = range.split_once("..") else {
+        die(&format!("bad --seed-range `{range}` (expected A..B)"));
+    };
+    let (Ok(seed_start), Ok(seed_end)) = (a.parse::<u64>(), b.parse::<u64>()) else {
+        die(&format!("bad --seed-range `{range}` (expected A..B)"));
+    };
+    if seed_end <= seed_start {
+        die(&format!("empty --seed-range `{range}`"));
+    }
+    let fuzz_opts = ltrf::scenario::FuzzOptions {
+        seed_start,
+        seed_end,
+        jobs: opt_or(&p, "--jobs", 0),
+        corpus_dir: p.opt("--corpus").map(PathBuf::from).unwrap_or_else(|| "corpus".into()),
+        shrink_budget: opt_or(&p, "--shrink-budget", 400),
+        ..Default::default()
+    };
+    let report = ltrf::scenario::run_fuzz(&fuzz_opts);
+    println!("{}", report.summary());
+    if !report.ok() {
+        for f in &report.failures {
+            eprintln!("\nFAIL [{}] {}", f.oracle, f.detail);
+            if let Some(seed) = f.seed {
+                eprintln!("  seed: {seed}");
+            }
+            if let Some(src) = &f.source {
+                eprintln!("  source: {}", src.display());
+            }
+            match &f.repro_path {
+                Some(p) => eprintln!("  shrunken repro: {}", p.display()),
+                None => eprintln!("  minimized repro:\n{}", f.minimized),
+            }
+        }
+        std::process::exit(1);
+    }
+}
+
+fn snapshot_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "snapshot",
+        rest,
+        &[
+            cli::flag("--check", "diff the simulator against the golden file"),
+            cli::flag("--bless", "capture and write the golden file"),
+            cli::opt("--golden", "PATH", "golden stats file (default corpus/golden/stats.tsv)"),
+            cli::QUICK,
+            cli::JOBS,
+            cli::BACKEND,
+            cli::SIM_THREADS,
+        ],
+    );
+    let quick = p.flag("--quick");
+    let jobs = opt_or(&p, "--jobs", 0usize);
+    let backend_tweaks = tweaks_from(&p);
+    let golden = p
+        .opt("--golden")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(ltrf::scenario::snapshot::GOLDEN_PATH));
+    if p.flag("--bless") {
+        let snap = ltrf::scenario::snapshot::capture_tweaked(quick, jobs, backend_tweaks);
+        if let Err(e) = snap.save(&golden) {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+        println!("blessed {} keys into {}", snap.entries.len(), golden.display());
+    } else if p.flag("--check") {
+        // Exit code contract: 0 = match, 1 = drift (or unreadable golden),
+        // 3 = the golden is missing/unarmed. CI treats 3 as "bootstrap
+        // pending" on the first run after a schema change and anything
+        // else as a hard failure.
+        if !golden.exists() {
+            eprintln!(
+                "snapshot UNARMED: {} does not exist — run `ltrf snapshot --bless` and \
+                 commit it",
+                golden.display()
+            );
+            std::process::exit(3);
+        }
+        let gold = match ltrf::scenario::snapshot::Snapshot::load(&golden) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("{e}\nrun `ltrf snapshot --bless` to recreate the golden file");
+                std::process::exit(1);
+            }
+        };
+        if gold.is_empty() {
+            eprintln!(
+                "snapshot UNARMED: {} has no entries — bless and commit it to arm the \
+                 drift gate",
+                golden.display()
+            );
+            std::process::exit(3);
+        }
+        let current = ltrf::scenario::snapshot::capture_tweaked(quick, jobs, backend_tweaks);
+        let diffs = gold.diff_against(&current);
+        if diffs.is_empty() {
+            println!("snapshot OK: {} keys match {}", current.entries.len(), golden.display());
+        } else {
+            eprintln!("snapshot DRIFT against {}:", golden.display());
+            for d in &diffs {
+                eprintln!("  {d}");
+            }
+            eprintln!("{} diffs; if intended, re-bless with `ltrf snapshot --bless`", diffs.len());
+            std::process::exit(1);
+        }
+    } else {
+        die("usage: ltrf snapshot (--check | --bless) [--golden PATH] [--quick]");
+    }
+}
+
+fn bench_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "bench",
+        rest,
+        &[
+            cli::opt("--json", "PATH", "output path (default BENCH_sim.json)"),
+            cli::QUICK,
+            cli::SIM_THREADS,
+            cli::opt("--iters", "N", "measurement iterations per entry"),
+        ],
+    );
+    let quick = p.flag("--quick");
+    let sim_threads = opt_or(&p, "--sim-threads", 4usize);
+    let iters = opt_or(&p, "--iters", if quick { 1 } else { 3 });
+    let opts = ltrf::bench::BenchOptions { quick, sim_threads, iters };
+    let report = ltrf::bench::run_bench(&opts);
+    for e in &report.entries {
+        println!(
+            "{:<16} {:>10} x{:<2} {:>10.3} ms  {:>14.0} cycles/s  {:>12.0} winst/s",
+            e.name,
+            e.backend,
+            e.sim_threads,
+            e.wall_seconds * 1e3,
+            e.cycles_per_second(),
+            e.winst_per_second()
+        );
+    }
+    for e in &report.compile_entries {
+        println!(
+            "{:<16} {:>10}     {:>10.3} ms  {:>8} compiles  cache {}/{} hits/misses",
+            e.name,
+            e.mode,
+            e.wall_seconds * 1e3,
+            e.compiles,
+            e.analysis_hits,
+            e.analysis_misses
+        );
+    }
+    for e in &report.store_entries {
+        println!(
+            "{:<16} {:>10}     {:>10.3} ms  {:>8} sims  store {}/{} hits/misses",
+            e.name, e.mode, e.wall_seconds * 1e3, e.sims, e.store_hits, e.store_misses
+        );
+    }
+    if let Some(s) = report.fig14_speedup() {
+        println!("fig14 matrix: parallel x{} is {s:.2}x reference wall time", report.sim_threads);
+    }
+    if let Some(s) = report.compile_warm_speedup() {
+        println!("compile matrix: warm analysis cache is {s:.2}x cold wall time");
+    }
+    if let Some(s) = report.store_warm_speedup() {
+        println!("store matrix: warm memo store is {s:.2}x cold wall time");
+    }
+    let path = p.opt("--json").map(PathBuf::from).unwrap_or_else(|| "BENCH_sim.json".into());
+    if let Err(e) = std::fs::write(&path, report.to_json()) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
+    }
+    println!("wrote {}", path.display());
+}
+
+fn designs_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "designs",
+        rest,
+        &[
+            cli::flag("--sweep", "simulate one workload across every registered policy"),
+            cli::JOBS,
+            cli::BACKEND,
+            cli::SIM_THREADS,
+            cli::STORE,
+            cli::JSON,
+            cli::ENGINE_STATS,
+        ],
+    );
+    let json = p.flag("--json");
+    let mut eng = engine_for(&p, opt_or(&p, "--jobs", 0));
+    let mut t = Table::new(
+        "Design registry — the canonical §6 policy comparison points",
+        &["name", "hierarchy", "subgraphs", "compile mode", "latencies", "description"],
+    );
+    for pt in designs::REGISTRY {
+        t.row(vec![
+            pt.name.into(),
+            pt.hierarchy.name().into(),
+            if pt.hierarchy.uses_subgraphs() { "yes".into() } else { "no".into() },
+            format!(
+                "{:?}{}",
+                pt.hierarchy.subgraph_mode(),
+                if pt.renumber { " + renumber" } else { "" }
+            ),
+            pt.latency_factors.iter().map(|f| format!("{f:.1}x")).collect::<Vec<_>>().join(" "),
+            pt.blurb.into(),
+        ]);
+    }
+    emit(&t, json);
+    if p.flag("--sweep") {
+        // Sweep one workload across every registered policy so the
+        // engine's design-point coverage reaches the registry size
+        // (`--engine-stats` prints the ratio; CI greps it).
+        let spec = suite::workload_by_name("kmeans").expect("kmeans");
+        let mut s = Table::new(
+            "Registry sweep — kmeans @ 1.0x",
+            &["name", "IPC", "RF$ accesses", "MRF accesses", "regs moved", "power vs BL"],
+        );
+        for (_, dut) in designs::all_points(2048) {
+            eng.request(spec, &dut, 1.0);
+        }
+        eng.execute();
+        for (name, dut) in designs::all_points(2048) {
+            let st = eng.point(spec, &dut, 1.0);
+            let model = ltrf::sim::model_for(dut.hierarchy);
+            let tr = model.traffic(&st);
+            let power = model.power(&st, 1.0, ltrf::timing::Tech::HpSram).total();
+            s.row(vec![
+                name.into(),
+                format!("{:.3}", st.ipc()),
+                tr.cache_accesses.to_string(),
+                tr.mrf_accesses.to_string(),
+                tr.regs_moved.to_string(),
+                format!("{:.2}", power),
+            ]);
+        }
+        emit(&s, json);
+    }
+    finish(&p, &mut eng);
+}
+
+fn workloads_cmd(rest: &[String]) {
+    let p = parse_or_die("workloads", rest, &[cli::JSON]);
+    let mut t = Table::new(
+        "Benchmark suite",
+        &["name", "class", "regs/thread (Maxwell)", "regs/thread (Fermi)"],
+    );
+    for w in suite::suite() {
+        t.row(vec![
+            w.name.into(),
+            format!("{:?}", w.class),
+            w.regs_maxwell.to_string(),
+            w.regs_fermi.to_string(),
+        ]);
+    }
+    emit(&t, p.flag("--json"));
+}
+
+fn compile_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "compile",
+        rest,
+        &[
+            cli::opt("--regs", "N", "registers per interval (default 16)"),
+            cli::opt("--banks", "N", "register-file bank count"),
+            cli::flag("--renumber", "apply the §4 bank-aware renumbering pass"),
+            cli::flag("--explain", "print the pass DAG, timings, and cache hits"),
+        ],
+    );
+    let Some(path) = p.positionals.first() else {
+        die("usage: ltrf compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]");
+    };
+    let n: usize = opt_or(&p, "--regs", 16);
+    let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(1);
+    });
+    let kernel = ltrf::ir::parser::parse(&src).unwrap_or_else(|e| {
+        eprintln!("parse error: {e:#}");
+        std::process::exit(1);
+    });
+    let mut opts = ltrf::compiler::CompileOptions::ltrf(n);
+    opts.renumber = p.flag("--renumber");
+    if let Some(b) = opt_parsed(&p, "--banks") {
+        opts.num_banks = b;
+    }
+    let mgr = ltrf::compiler::PassManager::new();
+    let (ck, trace) = match mgr.compile_traced(&kernel, opts) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("compile error: {e}");
+            std::process::exit(1);
+        }
+    };
+    if p.flag("--explain") {
+        println!(
+            "pass DAG ({:?} mode{}):",
+            opts.mode,
+            if opts.renumber { " + renumber" } else { "" }
+        );
+        for (node, deps) in ltrf::compiler::passes::dag(&opts) {
+            if deps.is_empty() {
+                println!("  {node}");
+            } else {
+                println!("  {node}  <-  {}", deps.join(", "));
+            }
+        }
+        println!(
+            "\ncold compile of fingerprint {} ({:.1} us total):",
+            trace.input,
+            trace.total.as_secs_f64() * 1e6
+        );
+        println!("  {:<14} {:>12} {:>7}", "pass", "wall", "cache");
+        for tp in &trace.passes {
+            println!(
+                "  {:<14} {:>9.1} us {:>7}",
+                tp.pass.name(),
+                tp.wall.as_secs_f64() * 1e6,
+                if tp.cached { "hit" } else { "miss" }
+            );
+        }
+        let (_, warm) = mgr.compile_traced(&kernel, opts).expect("warm recompile");
+        println!(
+            "warm recompile: {}/{} passes served from the analysis cache in {:.1} us",
+            warm.cache_hits(),
+            warm.passes.len(),
+            warm.total.as_secs_f64() * 1e6
+        );
+        println!(
+            "output kernel fingerprint {} ({})\n",
+            trace.output,
+            if trace.output == trace.input {
+                "unchanged: no kernel-mutating pass fired"
+            } else {
+                "changed: splits/renumbering invalidate downstream analyses"
+            }
+        );
+    }
+    println!("{}", ck.kernel.display());
+    let mut t = Table::new(
+        format!("register-intervals (N={n})"),
+        &["interval", "header", "blocks", "working set", "bank conflicts"],
+    );
+    for iv in &ck.intervals.intervals {
+        t.row(vec![
+            iv.id.to_string(),
+            ck.kernel.blocks[iv.header].label.clone(),
+            iv.blocks.len().to_string(),
+            format!("{:?}", iv.working_set),
+            ltrf::compiler::renumber::bank_conflicts(
+                &iv.working_set,
+                opts.num_banks,
+                opts.bank_map,
+            )
+            .to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "code-size overhead: {:.1}% (bit-vectors), conflict-free prefetches: {:.0}%",
+        ck.code_size_overhead(false) * 100.0,
+        ck.conflict_free_fraction() * 100.0
+    );
+}
+
+fn run_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "run",
+        rest,
+        &[
+            cli::opt("--hierarchy", "H", "policy name from the design registry (default LTRF)"),
+            cli::opt("--latency", "F", "MRF latency factor (default 1.0)"),
+            cli::opt("--capacity", "N", "RF capacity in warp-registers (default 2048)"),
+            cli::flag("--renumber", "compile with the §4 renumbering pass"),
+            cli::SMS,
+            cli::BACKEND,
+            cli::SIM_THREADS,
+        ],
+    );
+    let Some(name) = p.positionals.first() else {
+        die("usage: ltrf run <workload> [flags]");
+    };
+    let Some(spec) = suite::workload_by_name(name) else {
+        eprintln!("unknown workload `{name}` (see `ltrf workloads`)");
+        std::process::exit(1);
+    };
+    let hname = p.opt("--hierarchy").unwrap_or("LTRF");
+    let Some(policy) = designs::by_name(hname) else {
+        eprintln!("unknown hierarchy `{hname}` (see `ltrf designs`)");
+        std::process::exit(1);
+    };
+    let hierarchy = policy.hierarchy;
+    let factor: f64 = opt_or(&p, "--latency", 1.0);
+    let mut dut = policy.dut();
+    dut.renumber = policy.renumber || p.flag("--renumber");
+    if let Some(cap) = opt_parsed(&p, "--capacity") {
+        dut = dut.with_capacity(cap);
+    }
+    dut.num_sms = opt_or(&p, "--sms", 1);
+    let st = run_point(spec, &dut, factor, tweaks_from(&p), None);
+    println!(
+        "{name} on {} @ {factor}x: IPC {:.3} ({} insts / {} cycles)",
+        hierarchy.name(),
+        st.ipc(),
+        st.instructions,
+        st.cycles
+    );
+    if st.hit_cycle_cap != 0 {
+        println!("  WARNING: truncated at the max_cycles cap — not a converged result");
+    }
+    println!(
+        "  L1 hit {:.1}%  RFC hit {:.1}%  prefetches {} ({} regs)  activations {}  MRF acc reduction {:.1}x",
+        st.l1_hit_rate() * 100.0,
+        st.rfc_hit_rate() * 100.0,
+        st.prefetch_ops,
+        st.prefetch_regs,
+        st.activations,
+        st.mrf_access_reduction()
+    );
+    println!(
+        "  epoch core: commit phases skipped {}  wheel rollovers {}",
+        st.commit_phases_skipped, st.event_wheel_rollovers
+    );
+}
+
+fn trace_cmd(rest: &[String]) {
+    let p = parse_or_die(
+        "trace",
+        rest,
+        &[
+            cli::opt("--cycles", "N", "max cycles to trace (default 200)"),
+            cli::opt("--hierarchy", "H", "policy name from the design registry"),
+            cli::opt("--latency", "F", "MRF latency factor (default 6.3)"),
+        ],
+    );
+    let Some(name) = p.positionals.first() else {
+        die("usage: ltrf trace <workload> [--cycles N]");
+    };
+    let Some(spec) = suite::workload_by_name(name) else {
+        eprintln!("unknown workload `{name}`");
+        std::process::exit(1);
+    };
+    let hierarchy = p
+        .opt("--hierarchy")
+        .and_then(designs::by_name)
+        .map(|pt| pt.hierarchy)
+        .unwrap_or(ltrf::sim::HierarchyKind::Ltrf { plus: true });
+    let factor: f64 = opt_or(&p, "--latency", 6.3);
+    let max: u64 = opt_or(&p, "--cycles", 200);
+    let cfg = ltrf::sim::SimConfig::with_hierarchy(hierarchy)
+        .with_latency_factor(factor)
+        .normalize_capacity();
+    let kernel = ltrf::workloads::gen::build(spec);
+    let ck = ltrf::compiler::compile(&kernel, ltrf::sim::gpu::compile_options(&cfg, true));
+    let resident = cfg.resident_warps(ck.kernel.num_regs);
+    let mut shared = ltrf::sim::memsys::SharedMem::new(cfg.mem);
+    let mut sm = ltrf::sim::sm::SmSim::new(&cfg, &ck, resident, 0);
+    println!(
+        "trace: {name} on {} @{factor}x, {resident} resident warps (A=active P=prefetch M=mem W=wait .=not started F=finished)",
+        hierarchy.name()
+    );
+    let mut now = 0u64;
+    while now < max && !sm.done() {
+        let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared));
+        let line: String = (0..resident.min(32))
+            .map(|w| match sm.warp_state(w) {
+                ltrf::sim::warp::WarpState::Active => 'A',
+                ltrf::sim::warp::WarpState::Prefetching { .. } => 'P',
+                ltrf::sim::warp::WarpState::Refetching { .. } => 'p',
+                ltrf::sim::warp::WarpState::PendingMem { .. } => 'M',
+                ltrf::sim::warp::WarpState::WaitActivate => 'W',
+                ltrf::sim::warp::WarpState::NotStarted => '.',
+                ltrf::sim::warp::WarpState::Finished => 'F',
+            })
+            .collect();
+        println!(
+            "{now:>6} [{line}] issued={} prefetches={}",
+            sm.stats.instructions, sm.stats.prefetch_ops
+        );
+        now = hint.max(now + 1);
+    }
+    println!(
+        "\n{} instructions in {now} cycles (IPC {:.3})",
+        sm.stats.instructions,
+        sm.stats.instructions as f64 / now.max(1) as f64
+    );
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -81,558 +765,21 @@ fn main() {
         eprint!("{USAGE}");
         std::process::exit(2);
     }
-    let cmd = args[0].as_str();
-    let flag = |name: &str| args.iter().any(|a| a == name);
-    let opt = |name: &str| -> Option<String> {
-        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
-    };
-
-    let ctx = ExperimentContext {
-        quick: flag("--quick"),
-        csv_dir: opt("--csv").map(PathBuf::from),
-        num_sms: opt("--sms").and_then(|s| s.parse().ok()).unwrap_or(1),
-        jobs: opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(0),
-    };
-
-    // Simulator-backend selection (`run` / `snapshot` / `bench`). The
-    // experiment drivers always use the default backend; the knobs exist
-    // so CI can diff the backends against each other.
-    let backend_tweaks = {
-        let mut tw = CfgTweaks::NONE;
-        if let Some(name) = opt("--backend") {
-            match SimBackend::by_name(&name) {
-                Some(b) => tw.backend = Some(b),
-                None => {
-                    eprintln!("unknown --backend `{name}` (expected: reference | parallel)");
-                    std::process::exit(2);
-                }
-            }
-        }
-        tw.sim_threads = opt("--sim-threads").and_then(|s| s.parse().ok());
-        tw
-    };
-
-    let print = |t: &Table| println!("{}", t.render());
-    let print_all = |ts: &[Table]| ts.iter().for_each(|t| println!("{}", t.render()));
-
-    // Every experiment command shares one engine: figures declare their
-    // simulation points into its job matrix (planning pass), the matrix
-    // runs deduplicated on the work-stealing executor, then the figures
-    // render from the result set.
-    let mut eng = Engine::new(ctx.jobs);
-    let engine_stats = flag("--engine-stats");
-
-    macro_rules! finish {
-        () => {
-            if engine_stats {
-                eprintln!("{}", eng.summary());
-            }
-        };
-    }
-
-    match cmd {
-        "table1" => {
-            print(&two_phase(&ctx, &mut eng, exp::table1));
-            finish!();
-        }
-        "table2" => {
-            print(&two_phase(&ctx, &mut eng, exp::table2_table));
-            finish!();
-        }
-        "fig2" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig2));
-            finish!();
-        }
-        "fig3" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig3));
-            finish!();
-        }
-        "fig4" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig4));
-            finish!();
-        }
-        "fig6" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig6));
-            finish!();
-        }
-        "fig14" => {
-            print_all(&two_phase(&ctx, &mut eng, exp::fig14));
-            finish!();
-        }
-        "fig15" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig15));
-            finish!();
-        }
-        "fig16" => {
-            print_all(&two_phase(&ctx, &mut eng, exp::fig16));
-            finish!();
-        }
-        "fig17" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig17));
-            finish!();
-        }
-        "fig18" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig18));
-            finish!();
-        }
-        "table4" => {
-            print(&two_phase(&ctx, &mut eng, exp::table4));
-            finish!();
-        }
-        "fig19" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig19));
-            finish!();
-        }
-        "fig20" => {
-            print(&two_phase(&ctx, &mut eng, exp::fig20));
-            finish!();
-        }
-        "overheads" => {
-            print(&two_phase(&ctx, &mut eng, exp::overheads));
-            finish!();
-        }
-        "ablations" => {
-            print_all(&two_phase(&ctx, &mut eng, exp::ablations));
-            finish!();
-        }
-        "ltrfplus" => {
-            print(&two_phase(&ctx, &mut eng, exp::ltrf_plus));
-            finish!();
-        }
-        "headline" => {
-            let (imp, t) = two_phase(&ctx, &mut eng, exp::headline);
-            print(&t);
-            println!(
-                "LTRF_conf on config #7 improves mean IPC by {:.1}% (paper: 34%)",
-                imp * 100.0
-            );
-            finish!();
-        }
-        "all" => {
-            let (tables, imp) = two_phase(&ctx, &mut eng, exp::all_tables);
-            print_all(&tables);
-            println!("Headline: +{:.1}% mean IPC (paper: +34%)", imp * 100.0);
-            finish!();
-        }
-        "fuzz" => {
-            let range = opt("--seed-range").unwrap_or_else(|| "0..200".into());
-            let Some((a, b)) = range.split_once("..") else {
-                eprintln!("bad --seed-range `{range}` (expected A..B)");
-                std::process::exit(2);
-            };
-            let (Ok(seed_start), Ok(seed_end)) = (a.parse::<u64>(), b.parse::<u64>()) else {
-                eprintln!("bad --seed-range `{range}` (expected A..B)");
-                std::process::exit(2);
-            };
-            if seed_end <= seed_start {
-                eprintln!("empty --seed-range `{range}`");
-                std::process::exit(2);
-            }
-            let fuzz_opts = ltrf::scenario::FuzzOptions {
-                seed_start,
-                seed_end,
-                jobs: ctx.jobs,
-                corpus_dir: opt("--corpus").map(PathBuf::from).unwrap_or_else(|| "corpus".into()),
-                shrink_budget: opt("--shrink-budget").and_then(|s| s.parse().ok()).unwrap_or(400),
-                ..Default::default()
-            };
-            let report = ltrf::scenario::run_fuzz(&fuzz_opts);
-            println!("{}", report.summary());
-            if !report.ok() {
-                for f in &report.failures {
-                    eprintln!("\nFAIL [{}] {}", f.oracle, f.detail);
-                    if let Some(seed) = f.seed {
-                        eprintln!("  seed: {seed}");
-                    }
-                    if let Some(src) = &f.source {
-                        eprintln!("  source: {}", src.display());
-                    }
-                    match &f.repro_path {
-                        Some(p) => eprintln!("  shrunken repro: {}", p.display()),
-                        None => eprintln!("  minimized repro:\n{}", f.minimized),
-                    }
-                }
-                std::process::exit(1);
-            }
-        }
-        "snapshot" => {
-            let golden = opt("--golden")
-                .map(PathBuf::from)
-                .unwrap_or_else(|| PathBuf::from(ltrf::scenario::snapshot::GOLDEN_PATH));
-            if flag("--bless") {
-                let snap =
-                    ltrf::scenario::snapshot::capture_tweaked(ctx.quick, ctx.jobs, backend_tweaks);
-                if let Err(e) = snap.save(&golden) {
-                    eprintln!("{e}");
-                    std::process::exit(1);
-                }
-                println!("blessed {} keys into {}", snap.entries.len(), golden.display());
-            } else if flag("--check") {
-                let gold = match ltrf::scenario::snapshot::Snapshot::load(&golden) {
-                    Ok(g) => g,
-                    Err(e) => {
-                        eprintln!("{e}\nrun `ltrf snapshot --bless` to create the golden file");
-                        std::process::exit(1);
-                    }
-                };
-                if gold.is_empty() {
-                    println!(
-                        "snapshot: {} has no entries yet — capture skipped (bless and commit \
-                         it to arm the drift gate)",
-                        golden.display()
-                    );
-                    return;
-                }
-                let current =
-                    ltrf::scenario::snapshot::capture_tweaked(ctx.quick, ctx.jobs, backend_tweaks);
-                let diffs = gold.diff_against(&current);
-                if diffs.is_empty() {
-                    println!(
-                        "snapshot OK: {} keys match {}",
-                        current.entries.len(),
-                        golden.display()
-                    );
-                } else {
-                    eprintln!("snapshot DRIFT against {}:", golden.display());
-                    for d in &diffs {
-                        eprintln!("  {d}");
-                    }
-                    eprintln!(
-                        "{} diffs; if intended, re-bless with `ltrf snapshot --bless`",
-                        diffs.len()
-                    );
-                    std::process::exit(1);
-                }
-            } else {
-                eprintln!("usage: ltrf snapshot (--check | --bless) [--golden PATH] [--quick]");
-                std::process::exit(2);
-            }
-        }
-        "bench" => {
-            let sim_threads = opt("--sim-threads").and_then(|s| s.parse().ok()).unwrap_or(4);
-            let iters = opt("--iters")
-                .and_then(|s| s.parse().ok())
-                .unwrap_or(if ctx.quick { 1 } else { 3 });
-            let opts = ltrf::bench::BenchOptions { quick: ctx.quick, sim_threads, iters };
-            let report = ltrf::bench::run_bench(&opts);
-            for e in &report.entries {
-                println!(
-                    "{:<16} {:>10} x{:<2} {:>10.3} ms  {:>14.0} cycles/s  {:>12.0} winst/s",
-                    e.name,
-                    e.backend,
-                    e.sim_threads,
-                    e.wall_seconds * 1e3,
-                    e.cycles_per_second(),
-                    e.winst_per_second()
-                );
-            }
-            for e in &report.compile_entries {
-                println!(
-                    "{:<16} {:>10}     {:>10.3} ms  {:>8} compiles  cache {}/{} hits/misses",
-                    e.name,
-                    e.mode,
-                    e.wall_seconds * 1e3,
-                    e.compiles,
-                    e.analysis_hits,
-                    e.analysis_misses
-                );
-            }
-            if let Some(s) = report.fig14_speedup() {
-                println!(
-                    "fig14 matrix: parallel x{} is {s:.2}x reference wall time",
-                    report.sim_threads
-                );
-            }
-            if let Some(s) = report.compile_warm_speedup() {
-                println!("compile matrix: warm analysis cache is {s:.2}x cold wall time");
-            }
-            let path = opt("--json").map(PathBuf::from).unwrap_or_else(|| "BENCH_sim.json".into());
-            if let Err(e) = std::fs::write(&path, report.to_json()) {
-                eprintln!("cannot write {}: {e}", path.display());
-                std::process::exit(1);
-            }
-            println!("wrote {}", path.display());
-        }
-        "designs" => {
-            let mut t = Table::new(
-                "Design registry — the canonical §6 policy comparison points",
-                &["name", "hierarchy", "subgraphs", "compile mode", "latencies", "description"],
-            );
-            for p in designs::REGISTRY {
-                t.row(vec![
-                    p.name.into(),
-                    p.hierarchy.name().into(),
-                    if p.hierarchy.uses_subgraphs() { "yes".into() } else { "no".into() },
-                    format!(
-                        "{:?}{}",
-                        p.hierarchy.subgraph_mode(),
-                        if p.renumber { " + renumber" } else { "" }
-                    ),
-                    p.latency_factors
-                        .iter()
-                        .map(|f| format!("{f:.1}x"))
-                        .collect::<Vec<_>>()
-                        .join(" "),
-                    p.blurb.into(),
-                ]);
-            }
-            print(&t);
-            if flag("--sweep") {
-                // Sweep one workload across every registered policy so the
-                // engine's design-point coverage reaches the registry size
-                // (`--engine-stats` prints the ratio; CI greps it).
-                let spec = suite::workload_by_name("kmeans").expect("kmeans");
-                let mut s = Table::new(
-                    "Registry sweep — kmeans @ 1.0x",
-                    &["name", "IPC", "RF$ accesses", "MRF accesses", "regs moved", "power vs BL"],
-                );
-                eng.plan_phase();
-                for (_, dut) in designs::all_points(2048) {
-                    eng.request(spec, &dut, 1.0);
-                }
-                eng.execute();
-                for (name, dut) in designs::all_points(2048) {
-                    let st = eng.stats(spec, &dut, 1.0);
-                    let model = ltrf::sim::model_for(dut.hierarchy);
-                    let tr = model.traffic(&st);
-                    let power = model.power(&st, 1.0, ltrf::timing::Tech::HpSram).total();
-                    s.row(vec![
-                        name.into(),
-                        format!("{:.3}", st.ipc()),
-                        tr.cache_accesses.to_string(),
-                        tr.mrf_accesses.to_string(),
-                        tr.regs_moved.to_string(),
-                        format!("{:.2}", power),
-                    ]);
-                }
-                print(&s);
-            }
-            finish!();
-        }
-        "workloads" => {
-            let mut t = Table::new(
-                "Benchmark suite",
-                &["name", "class", "regs/thread (Maxwell)", "regs/thread (Fermi)"],
-            );
-            for w in suite::suite() {
-                t.row(vec![
-                    w.name.into(),
-                    format!("{:?}", w.class),
-                    w.regs_maxwell.to_string(),
-                    w.regs_fermi.to_string(),
-                ]);
-            }
-            print(&t);
-        }
-        "compile" => {
-            let Some(path) = args.get(1).filter(|a| !a.starts_with("--")) else {
-                eprintln!(
-                    "usage: ltrf compile <file.ltrf> [--regs N] [--banks N] [--renumber] [--explain]"
-                );
-                std::process::exit(2);
-            };
-            let n: usize = opt("--regs").and_then(|s| s.parse().ok()).unwrap_or(16);
-            let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
-                eprintln!("cannot read {path}: {e}");
-                std::process::exit(1);
-            });
-            let kernel = ltrf::ir::parser::parse(&src).unwrap_or_else(|e| {
-                eprintln!("parse error: {e:#}");
-                std::process::exit(1);
-            });
-            let mut opts = ltrf::compiler::CompileOptions::ltrf(n);
-            opts.renumber = flag("--renumber");
-            if let Some(raw) = opt("--banks") {
-                match raw.parse() {
-                    Ok(b) => opts.num_banks = b,
-                    Err(_) => {
-                        eprintln!("bad --banks `{raw}` (expected a bank count)");
-                        std::process::exit(2);
-                    }
-                }
-            }
-            let mgr = ltrf::compiler::PassManager::new();
-            let (ck, trace) = match mgr.compile_traced(&kernel, opts) {
-                Ok(x) => x,
-                Err(e) => {
-                    eprintln!("compile error: {e}");
-                    std::process::exit(1);
-                }
-            };
-            if flag("--explain") {
-                println!(
-                    "pass DAG ({:?} mode{}):",
-                    opts.mode,
-                    if opts.renumber { " + renumber" } else { "" }
-                );
-                for (node, deps) in ltrf::compiler::passes::dag(&opts) {
-                    if deps.is_empty() {
-                        println!("  {node}");
-                    } else {
-                        println!("  {node}  <-  {}", deps.join(", "));
-                    }
-                }
-                println!(
-                    "\ncold compile of fingerprint {} ({:.1} us total):",
-                    trace.input,
-                    trace.total.as_secs_f64() * 1e6
-                );
-                println!("  {:<14} {:>12} {:>7}", "pass", "wall", "cache");
-                for p in &trace.passes {
-                    println!(
-                        "  {:<14} {:>9.1} us {:>7}",
-                        p.pass.name(),
-                        p.wall.as_secs_f64() * 1e6,
-                        if p.cached { "hit" } else { "miss" }
-                    );
-                }
-                let (_, warm) = mgr.compile_traced(&kernel, opts).expect("warm recompile");
-                println!(
-                    "warm recompile: {}/{} passes served from the analysis cache in {:.1} us",
-                    warm.cache_hits(),
-                    warm.passes.len(),
-                    warm.total.as_secs_f64() * 1e6
-                );
-                println!(
-                    "output kernel fingerprint {} ({})\n",
-                    trace.output,
-                    if trace.output == trace.input {
-                        "unchanged: no kernel-mutating pass fired"
-                    } else {
-                        "changed: splits/renumbering invalidate downstream analyses"
-                    }
-                );
-            }
-            println!("{}", ck.kernel.display());
-            let mut t = Table::new(
-                format!("register-intervals (N={n})"),
-                &["interval", "header", "blocks", "working set", "bank conflicts"],
-            );
-            for iv in &ck.intervals.intervals {
-                t.row(vec![
-                    iv.id.to_string(),
-                    ck.kernel.blocks[iv.header].label.clone(),
-                    iv.blocks.len().to_string(),
-                    format!("{:?}", iv.working_set),
-                    ltrf::compiler::renumber::bank_conflicts(
-                        &iv.working_set,
-                        opts.num_banks,
-                        opts.bank_map,
-                    )
-                    .to_string(),
-                ]);
-            }
-            print(&t);
-            println!(
-                "code-size overhead: {:.1}% (bit-vectors), conflict-free prefetches: {:.0}%",
-                ck.code_size_overhead(false) * 100.0,
-                ck.conflict_free_fraction() * 100.0
-            );
-        }
-        "run" => {
-            let Some(name) = args.get(1).filter(|a| !a.starts_with("--")) else {
-                eprintln!("usage: ltrf run <workload> [flags]");
-                std::process::exit(2);
-            };
-            let Some(spec) = suite::workload_by_name(name) else {
-                eprintln!("unknown workload `{name}` (see `ltrf workloads`)");
-                std::process::exit(1);
-            };
-            let hname = opt("--hierarchy").unwrap_or_else(|| "LTRF".into());
-            let Some(policy) = designs::by_name(&hname) else {
-                eprintln!("unknown hierarchy `{hname}` (see `ltrf designs`)");
-                std::process::exit(1);
-            };
-            let hierarchy = policy.hierarchy;
-            let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(1.0);
-            let mut dut = policy.dut();
-            dut.renumber = policy.renumber || flag("--renumber");
-            if let Some(cap) = opt("--capacity").and_then(|s| s.parse().ok()) {
-                dut = dut.with_capacity(cap);
-            }
-            dut.num_sms = ctx.num_sms;
-            let st = run_point(spec, &dut, factor, backend_tweaks, None);
-            println!(
-                "{name} on {} @ {factor}x: IPC {:.3} ({} insts / {} cycles)",
-                hierarchy.name(),
-                st.ipc(),
-                st.instructions,
-                st.cycles
-            );
-            if st.hit_cycle_cap != 0 {
-                println!("  WARNING: truncated at the max_cycles cap — not a converged result");
-            }
-            println!(
-                "  L1 hit {:.1}%  RFC hit {:.1}%  prefetches {} ({} regs)  activations {}  MRF acc reduction {:.1}x",
-                st.l1_hit_rate() * 100.0,
-                st.rfc_hit_rate() * 100.0,
-                st.prefetch_ops,
-                st.prefetch_regs,
-                st.activations,
-                st.mrf_access_reduction()
-            );
-            println!(
-                "  epoch core: commit phases skipped {}  wheel rollovers {}",
-                st.commit_phases_skipped, st.event_wheel_rollovers
-            );
-        }
-        "trace" => {
-            let Some(name) = args.get(1).filter(|a| !a.starts_with("--")) else {
-                eprintln!("usage: ltrf trace <workload> [--cycles N]");
-                std::process::exit(2);
-            };
-            let Some(spec) = suite::workload_by_name(name) else {
-                eprintln!("unknown workload `{name}`");
-                std::process::exit(1);
-            };
-            let hierarchy = opt("--hierarchy")
-                .as_deref()
-                .and_then(designs::by_name)
-                .map(|p| p.hierarchy)
-                .unwrap_or(ltrf::sim::HierarchyKind::Ltrf { plus: true });
-            let factor: f64 = opt("--latency").and_then(|s| s.parse().ok()).unwrap_or(6.3);
-            let max: u64 = opt("--cycles").and_then(|s| s.parse().ok()).unwrap_or(200);
-            let cfg = ltrf::sim::SimConfig::with_hierarchy(hierarchy)
-                .with_latency_factor(factor)
-                .normalize_capacity();
-            let kernel = ltrf::workloads::gen::build(spec);
-            let ck = ltrf::compiler::compile(
-                &kernel,
-                ltrf::sim::gpu::compile_options(&cfg, true),
-            );
-            let resident = cfg.resident_warps(ck.kernel.num_regs);
-            let mut shared = ltrf::sim::memsys::SharedMem::new(cfg.mem);
-            let mut sm = ltrf::sim::sm::SmSim::new(&cfg, &ck, resident, 0);
-            println!(
-                "trace: {name} on {} @{factor}x, {resident} resident warps (A=active P=prefetch M=mem W=wait .=not started F=finished)",
-                hierarchy.name()
-            );
-            let mut now = 0u64;
-            while now < max && !sm.done() {
-                let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared));
-                let line: String = (0..resident.min(32))
-                    .map(|w| match sm.warp_state(w) {
-                        ltrf::sim::warp::WarpState::Active => 'A',
-                        ltrf::sim::warp::WarpState::Prefetching { .. } => 'P',
-                        ltrf::sim::warp::WarpState::Refetching { .. } => 'p',
-                        ltrf::sim::warp::WarpState::PendingMem { .. } => 'M',
-                        ltrf::sim::warp::WarpState::WaitActivate => 'W',
-                        ltrf::sim::warp::WarpState::NotStarted => '.',
-                        ltrf::sim::warp::WarpState::Finished => 'F',
-                    })
-                    .collect();
-                println!(
-                    "{now:>6} [{line}] issued={} prefetches={}",
-                    sm.stats.instructions, sm.stats.prefetch_ops
-                );
-                now = hint.max(now + 1);
-            }
-            println!(
-                "\n{} instructions in {now} cycles (IPC {:.3})",
-                sm.stats.instructions,
-                sm.stats.instructions as f64 / now.max(1) as f64
-            );
-        }
+    let cmd = args[0].clone();
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "table1" | "table2" | "fig2" | "fig3" | "fig4" | "fig6" | "fig14" | "fig15" | "fig16"
+        | "fig17" | "fig18" | "table4" | "fig19" | "fig20" | "overheads" | "ablations"
+        | "ltrfplus" | "headline" | "all" => experiment(cmd.as_str(), rest),
+        "sweep" => sweep_cmd(rest),
+        "fuzz" => fuzz_cmd(rest),
+        "snapshot" => snapshot_cmd(rest),
+        "bench" => bench_cmd(rest),
+        "designs" => designs_cmd(rest),
+        "workloads" => workloads_cmd(rest),
+        "compile" => compile_cmd(rest),
+        "run" => run_cmd(rest),
+        "trace" => trace_cmd(rest),
         "--help" | "-h" | "help" => print!("{USAGE}"),
         other => {
             eprintln!("unknown command `{other}`\n");

@@ -78,6 +78,23 @@ impl Table {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())
     }
+
+    /// Render as one JSON object (`--json` on the table subcommands):
+    /// `{"title": ..., "headers": [...], "rows": [[...], ...]}`.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| format!("\"{}\"", crate::util::json::escape(s));
+        let list = |cells: &[String]| {
+            let inner = cells.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",");
+            format!("[{inner}]")
+        };
+        let rows = self.rows.iter().map(|r| list(r)).collect::<Vec<_>>().join(",");
+        format!(
+            "{{\"title\":{},\"headers\":{},\"rows\":[{}]}}",
+            esc(&self.title),
+            list(&self.headers),
+            rows
+        )
+    }
 }
 
 /// Format helpers shared by experiment drivers.
@@ -111,6 +128,18 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_strict_parser() {
+        let mut t = Table::new("ti\"tle", &["a", "b"]);
+        t.row(vec!["x,y".into(), "line\nbreak".into()]);
+        let v = crate::util::json::parse(&t.to_json()).expect("to_json emits valid JSON");
+        assert_eq!(v.get("title").and_then(|x| x.as_str()), Some("ti\"tle"));
+        let rows = v.get("rows").and_then(|x| x.as_array()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let cells = rows[0].as_array().unwrap();
+        assert_eq!(cells[1].as_str(), Some("line\nbreak"));
     }
 
     #[test]

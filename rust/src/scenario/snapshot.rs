@@ -71,6 +71,66 @@ pub fn stat_fields(s: &Stats) -> Vec<(&'static str, u64)> {
     ]
 }
 
+/// Mutable access to a named counter — the write-side dual of
+/// [`stat_fields`], used by the memo store to deserialize entries. A field
+/// added to `Stats` must be added to both lists in the same PR (the
+/// store's on-disk stats-schema signature is derived from [`stat_fields`],
+/// so a one-sided addition invalidates every store file rather than
+/// silently round-tripping zeros).
+pub fn stats_field_mut<'a>(s: &'a mut Stats, name: &str) -> Option<&'a mut u64> {
+    Some(match name {
+        "cycles" => &mut s.cycles,
+        "instructions" => &mut s.instructions,
+        "warps_finished" => &mut s.warps_finished,
+        "mrf_reads" => &mut s.mrf_reads,
+        "mrf_writes" => &mut s.mrf_writes,
+        "cache_reads" => &mut s.cache_reads,
+        "cache_writes" => &mut s.cache_writes,
+        "rfc_hits" => &mut s.rfc_hits,
+        "rfc_misses" => &mut s.rfc_misses,
+        "prefetch_ops" => &mut s.prefetch_ops,
+        "prefetch_regs" => &mut s.prefetch_regs,
+        "prefetch_stall_cycles" => &mut s.prefetch_stall_cycles,
+        "prefetch_bank_conflicts" => &mut s.prefetch_bank_conflicts,
+        "activations" => &mut s.activations,
+        "writeback_regs" => &mut s.writeback_regs,
+        "dead_regs_skipped" => &mut s.dead_regs_skipped,
+        "l1_hits" => &mut s.l1_hits,
+        "l1_misses" => &mut s.l1_misses,
+        "llc_hits" => &mut s.llc_hits,
+        "llc_misses" => &mut s.llc_misses,
+        "stall_scoreboard" => &mut s.stall_scoreboard,
+        "stall_collectors" => &mut s.stall_collectors,
+        "stall_no_ready_warp" => &mut s.stall_no_ready_warp,
+        "hit_cycle_cap" => &mut s.hit_cycle_cap,
+        "commit_phases_skipped" => &mut s.commit_phases_skipped,
+        "event_wheel_rollovers" => &mut s.event_wheel_rollovers,
+        _ => return None,
+    })
+}
+
+/// Rebuild a `Stats` from named counters. Strict: every [`stat_fields`]
+/// counter must appear exactly once and unknown names are rejected — a
+/// store entry written under a different stats schema must surface as
+/// corrupt (cold miss), never deserialize with silently-zeroed fields.
+pub fn stats_from_fields(fields: &[(&str, u64)]) -> Result<Stats, String> {
+    let expected = stat_fields(&Stats::default()).len();
+    let mut st = Stats::default();
+    let mut seen = std::collections::HashSet::new();
+    for (name, value) in fields {
+        let slot =
+            stats_field_mut(&mut st, name).ok_or_else(|| format!("unknown field `{name}`"))?;
+        *slot = *value;
+        if !seen.insert(*name) {
+            return Err(format!("duplicate field `{name}`"));
+        }
+    }
+    if seen.len() != expected {
+        return Err(format!("expected {expected} fields, got {}", seen.len()));
+    }
+    Ok(st)
+}
+
 /// A captured or parsed snapshot, keyed `workload|design|latency`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Snapshot {
@@ -109,12 +169,7 @@ pub fn snapshot_points(quick: bool) -> Vec<(String, &'static WorkloadSpec, Desig
     let mut out = Vec::new();
     for spec in workloads {
         for (name, dut, factor) in &configs {
-            out.push((
-                format!("{}|{}|{:.1}", spec.name, name, factor),
-                spec,
-                dut.clone(),
-                *factor,
-            ));
+            out.push((format!("{}|{}|{:.1}", spec.name, name, factor), spec, *dut, *factor));
         }
     }
     out
@@ -286,6 +341,26 @@ mod tests {
         let diffs = golden.diff_against(&tiny_snapshot());
         assert_eq!(diffs.len(), 1);
         assert!(diffs[0].contains("missing from golden"));
+    }
+
+    #[test]
+    fn stats_fields_roundtrip_every_counter() {
+        // Give every counter a distinct value so a swapped arm in
+        // stats_field_mut could not cancel out in the comparison.
+        let mut st = Stats::default();
+        for (i, (name, _)) in stat_fields(&Stats::default()).iter().enumerate() {
+            *stats_field_mut(&mut st, name).unwrap() = 1000 + i as u64;
+        }
+        let fields = stat_fields(&st);
+        let values: std::collections::HashSet<u64> = fields.iter().map(|&(_, v)| v).collect();
+        assert_eq!(values.len(), fields.len(), "distinct probe values");
+        assert_eq!(stats_from_fields(&fields).unwrap(), st);
+        // Strictness: missing, duplicated, and unknown fields are errors.
+        assert!(stats_from_fields(&fields[1..]).is_err(), "missing field must fail");
+        let mut dup = fields.clone();
+        dup[0] = fields[1];
+        assert!(stats_from_fields(&dup).is_err(), "duplicate field must fail");
+        assert!(stats_field_mut(&mut st, "no_such_counter").is_none());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! helpers instead of pulling `bitvec`/`rand`/`proptest`.
 
 pub mod bitset;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod sync;

@@ -43,7 +43,6 @@ fn oracles_snapshot_and_engine_enumerate_the_registry() {
     // `--engine-stats` summary reports (the CI smoke greps the ratio).
     let spec = suite::workload_by_name("kmeans").unwrap();
     let mut eng = Engine::new(2);
-    eng.plan_phase();
     for (_, dut) in designs::all_points(2048) {
         eng.request(spec, &dut, 1.0);
     }

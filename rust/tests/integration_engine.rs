@@ -1,4 +1,4 @@
-//! Integration: the declarative parallel experiment engine.
+//! Integration: the declarative parallel experiment engine (ticket API).
 //!
 //! The paper-regeneration contract: a figure's numbers may not depend on
 //! how the job matrix is executed. `--jobs 1` and `--jobs 8` must produce
@@ -6,7 +6,7 @@
 //! once, and each unique `(workload, CompileOptions)` pair must be
 //! compiled exactly once per run (with cache hits for every share).
 
-use ltrf::coordinator::engine::{two_phase, CfgTweaks, Engine};
+use ltrf::coordinator::engine::{CfgTweaks, Engine, JobTicket};
 use ltrf::coordinator::experiments::{self as exp, DesignUnderTest, ExperimentContext};
 use ltrf::sim::{HierarchyKind, Stats};
 use ltrf::workloads::{suite, WorkloadSpec};
@@ -29,19 +29,14 @@ fn matrix() -> (Vec<&'static WorkloadSpec>, Vec<DesignUnderTest>, f64) {
 fn run_matrix(threads: usize) -> (Vec<Stats>, u64, u64, u64) {
     let (workloads, designs, factor) = matrix();
     let mut eng = Engine::new(threads);
-    eng.plan_phase();
+    let mut tickets: Vec<JobTicket> = Vec::new();
     for &spec in &workloads {
         for d in &designs {
-            eng.request(spec, d, factor);
+            tickets.push(eng.request(spec, d, factor));
         }
     }
     eng.execute();
-    let mut out = Vec::new();
-    for &spec in &workloads {
-        for d in &designs {
-            out.push(eng.stats(spec, d, factor));
-        }
-    }
+    let out: Vec<Stats> = tickets.iter().map(|t| eng.redeem(t)).collect();
     (out, eng.sims_run(), eng.compile_cache().hits(), eng.compile_cache().misses())
 }
 
@@ -79,7 +74,6 @@ fn analysis_cache_shares_across_design_points() {
     // memoization could never express.
     let (workloads, designs, factor) = matrix();
     let mut eng = Engine::new(2);
-    eng.plan_phase();
     for &spec in &workloads {
         for d in &designs {
             eng.request(spec, d, factor);
@@ -104,11 +98,12 @@ fn analysis_cache_shares_across_design_points() {
 #[test]
 fn figure_tables_byte_identical_across_jobs() {
     // End-to-end through a real figure driver: fig14 exercises shared
-    // baselines, multiple designs, and two panels.
+    // baselines, multiple designs, and two panels. Ticket-API drivers
+    // declare + execute + render internally.
     let render = |threads: usize| -> String {
         let ctx = ExperimentContext { jobs: threads, ..ExperimentContext::quick() };
         let mut eng = Engine::new(threads);
-        let tables = two_phase(&ctx, &mut eng, exp::fig14);
+        let tables = exp::fig14(&ctx, &mut eng);
         tables.iter().map(|t| t.render()).collect::<Vec<_>>().join("\n")
     };
     let one = render(1);
@@ -122,9 +117,8 @@ fn tweaked_jobs_are_distinct_points() {
     let spec = suite::workload_by_name("kmeans").unwrap();
     let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
     let mut eng = Engine::new(2);
-    eng.plan_phase();
-    eng.request_tweaked(spec, &dut, 4.0, CfgTweaks::NONE);
-    eng.request_tweaked(
+    let t_on = eng.request_tweaked(spec, &dut, 4.0, CfgTweaks::NONE);
+    let t_off = eng.request_tweaked(
         spec,
         &dut,
         4.0,
@@ -132,37 +126,57 @@ fn tweaked_jobs_are_distinct_points() {
     );
     eng.execute();
     assert_eq!(eng.sims_run(), 2);
-    let on = eng.stats_tweaked(spec, &dut, 4.0, CfgTweaks::NONE);
-    let off = eng.stats_tweaked(
-        spec,
-        &dut,
-        4.0,
-        CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE },
-    );
+    let on = eng.redeem(&t_on);
+    let off = eng.redeem(&t_off);
     // §3.2: overlapping the refetch with execution must not hurt.
     assert!(on.ipc() >= off.ipc() * 0.95, "early refetch regressed: {} vs {}", on.ipc(), off.ipc());
     assert!(on.instructions > 0 && off.instructions > 0);
 }
 
 #[test]
-fn render_phase_fallback_matches_planned_run() {
-    // A point never declared during planning (the adaptive tolerable-
-    // latency scans hit this path) must come out identical to a planned
-    // one.
+fn undeclared_point_falls_back_and_matches_declared_run() {
+    // A point never declared before execute (the adaptive tolerable-
+    // latency scans hit this path) must come out identical to a declared
+    // one: `point` falls back to an on-demand simulation through the
+    // same caches.
     let spec = suite::workload_by_name("gaussian").unwrap();
     let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
-    let planned = {
+    let declared = {
         let mut eng = Engine::new(2);
-        eng.plan_phase();
-        eng.request(spec, &dut, 6.3);
+        let t = eng.request(spec, &dut, 6.3);
         eng.execute();
-        eng.stats(spec, &dut, 6.3)
+        eng.redeem(&t)
     };
     let fallback = {
         let mut eng = Engine::new(2);
-        eng.plan_phase();
         eng.execute(); // empty matrix
-        eng.stats(spec, &dut, 6.3) // on-demand
+        eng.point(spec, &dut, 6.3) // on-demand
     };
-    assert_eq!(planned, fallback);
+    assert_eq!(declared, fallback);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shim_matches_the_ticket_api() {
+    // The PR-1 `plan_phase`/`planning`/`stats` protocol survives exactly
+    // one PR as a shim; until it is deleted it must agree with the ticket
+    // API bit-for-bit.
+    let spec = suite::workload_by_name("kmeans").unwrap();
+    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+    let legacy = {
+        let mut eng = Engine::new(1);
+        eng.plan_phase();
+        assert!(eng.planning());
+        let placeholder = eng.stats(spec, &dut, 4.0);
+        assert_eq!(placeholder, Stats::default(), "planning-phase stats are placeholders");
+        eng.execute();
+        eng.stats(spec, &dut, 4.0)
+    };
+    let ticket = {
+        let mut eng = Engine::new(1);
+        let t = eng.request(spec, &dut, 4.0);
+        eng.execute();
+        eng.redeem(&t)
+    };
+    assert_eq!(legacy, ticket);
 }

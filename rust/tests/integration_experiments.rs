@@ -109,7 +109,7 @@ fn fig3_tfet_offsets_capacity_gains() {
 #[test]
 fn table4_real_close_to_optimal() {
     let mut eng = ltrf::coordinator::Engine::new(0);
-    let t = ltrf::coordinator::two_phase(&ctx(), &mut eng, exp::table4);
+    let t = exp::table4(&ctx(), &mut eng);
     let ratio: f64 = t.rows[0][4].trim_end_matches('%').parse().unwrap();
     // Paper: real ≈ 89% of optimal. Our generated loops fit a partition
     // more often than real CUDA (whole loops become one interval, so

@@ -1,0 +1,175 @@
+//! Integration: the cross-run disk memo store behind the engine.
+//!
+//! Pins the acceptance criteria for the store: a repeated identical sweep
+//! performs zero compiles and zero simulations and leaves the store file
+//! byte-identical; a `FINGERPRINT_VERSION` / store-schema / stats-schema
+//! bump re-runs the whole matrix; a single knob change re-runs exactly
+//! the affected points; a corrupted or truncated store file degrades to
+//! cold misses on the damaged entries — never a panic, never wrong stats.
+
+use ltrf::coordinator::designs;
+use ltrf::coordinator::engine::{CfgTweaks, Engine};
+use ltrf::coordinator::experiments::DesignUnderTest;
+use ltrf::coordinator::store::{stats_schema_signature, MemoStore, STORE_SCHEMA_VERSION};
+use ltrf::ir::fingerprint::FINGERPRINT_VERSION;
+use ltrf::sim::Stats;
+use ltrf::workloads::{suite, WorkloadSpec};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "ltrf-it-store-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::SeqCst)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+type Point = (&'static WorkloadSpec, DesignUnderTest, f64);
+
+/// `workloads × first N registry designs × factors` — the registry order
+/// starts BL, RFC, so `n_designs = 2` covers two distinct hierarchies.
+fn points(workloads: &[&str], n_designs: usize, factors: &[f64]) -> Vec<Point> {
+    let mut out = Vec::new();
+    for name in workloads {
+        let spec = suite::workload_by_name(name).unwrap();
+        for (_, dut) in designs::all_points(2048).into_iter().take(n_designs) {
+            for &f in factors {
+                out.push((spec, dut, f));
+            }
+        }
+    }
+    out
+}
+
+/// Declare + execute + redeem `pts` against an engine fronted by `store`,
+/// then flush the store to disk.
+fn sweep_with(store: MemoStore, pts: &[Point], jobs: usize) -> (Vec<Stats>, Engine) {
+    let mut eng = Engine::new(jobs);
+    eng.set_store(store);
+    let mut tickets = Vec::new();
+    for &(spec, dut, f) in pts {
+        tickets.push(eng.request_tweaked(spec, &dut, f, CfgTweaks::NONE));
+    }
+    eng.execute();
+    let mut stats = Vec::new();
+    for t in &tickets {
+        stats.push(eng.redeem(t));
+    }
+    eng.flush_store().unwrap();
+    (stats, eng)
+}
+
+#[test]
+fn repeated_sweep_is_free_and_byte_identical() {
+    let dir = tmpdir("warm");
+    let pts = points(&["kmeans", "bfs"], 2, &[1.0, 4.0]);
+    let (cold_stats, cold_eng) = sweep_with(MemoStore::open(&dir), &pts, 4);
+    assert_eq!(cold_eng.sims_run(), pts.len() as u64);
+    assert!(cold_eng.compile_cache().misses() > 0, "cold run really compiled");
+    let store_path = dir.join(ltrf::coordinator::store::STORE_FILE);
+    let file_cold = std::fs::read(&store_path).unwrap();
+
+    let (warm_stats, warm_eng) = sweep_with(MemoStore::open(&dir), &pts, 4);
+    assert_eq!(warm_eng.sims_run(), 0, "repeated identical sweep must simulate nothing");
+    assert_eq!(warm_eng.compile_cache().misses(), 0, "...and compile nothing");
+    assert_eq!(warm_eng.store().unwrap().hits(), pts.len() as u64);
+    assert_eq!(cold_stats, warm_stats, "disk round-trip must not change a single stat");
+    let file_warm = std::fs::read(&store_path).unwrap();
+    assert_eq!(file_cold, file_warm, "an all-hit sweep must leave the file byte-identical");
+}
+
+#[test]
+fn version_bumps_re_run_the_whole_matrix() {
+    let dir = tmpdir("bumps");
+    let pts = points(&["kmeans"], 2, &[1.0]);
+    let (_, cold) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert_eq!(cold.sims_run(), pts.len() as u64);
+
+    let (sv, fpv, sig) = (STORE_SCHEMA_VERSION, FINGERPRINT_VERSION, stats_schema_signature());
+    // A store-schema change, a compiler release that moves the kernel
+    // fingerprint version, or a Stats counter-set change: each one must
+    // discard the file wholesale and re-simulate every point.
+    for (s, f, g) in [(sv + 1, fpv, sig), (sv, fpv + 1, sig), (sv, fpv, sig ^ 1)] {
+        // Rebuild the on-current-versions store first (the previous bump
+        // case left the file under *its* header), so each case starts
+        // from a file that is warm for the current versions.
+        let (_, _warm) = sweep_with(MemoStore::open(&dir), &pts, 2);
+
+        let bumped = MemoStore::open_versioned(&dir, s, f, g);
+        assert!(bumped.invalidated(), "bump ({s},{f},{g:#x}) must invalidate the file");
+        let (_, re) = sweep_with(bumped, &pts, 2);
+        assert_eq!(re.sims_run(), pts.len() as u64, "bump ({s},{f},{g:#x}) must re-run all");
+    }
+}
+
+#[test]
+fn single_knob_change_re_runs_only_the_affected_points() {
+    let dir = tmpdir("knob");
+    let pts = points(&["kmeans", "bfs"], 2, &[1.0, 4.0]);
+    let (_, cold) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert_eq!(cold.sims_run(), pts.len() as u64);
+
+    // Re-declare the identical matrix plus two changed points: one tweak
+    // knob (early_refetch off) and one new latency factor. Exactly those
+    // two simulate; everything else hits the store.
+    let (spec0, dut0, f0) = pts[0];
+    let mut eng = Engine::new(2);
+    eng.set_store(MemoStore::open(&dir));
+    for &(spec, dut, f) in &pts {
+        eng.request_tweaked(spec, &dut, f, CfgTweaks::NONE);
+    }
+    let tweak = CfgTweaks { early_refetch: Some(false), ..CfgTweaks::NONE };
+    eng.request_tweaked(spec0, &dut0, f0, tweak);
+    eng.request_tweaked(spec0, &dut0, 6.3, CfgTweaks::NONE);
+    eng.execute();
+    assert_eq!(eng.sims_run(), 2, "only the changed points may simulate");
+    assert_eq!(eng.store().unwrap().hits(), pts.len() as u64);
+    assert_eq!(eng.store().unwrap().misses(), 2);
+    eng.flush_store().unwrap();
+
+    // Third run with the enlarged matrix: now fully warm.
+    let mut again = Engine::new(2);
+    again.set_store(MemoStore::open(&dir));
+    for &(spec, dut, f) in &pts {
+        again.request_tweaked(spec, &dut, f, CfgTweaks::NONE);
+    }
+    again.request_tweaked(spec0, &dut0, f0, tweak);
+    again.request_tweaked(spec0, &dut0, 6.3, CfgTweaks::NONE);
+    again.execute();
+    assert_eq!(again.sims_run(), 0, "the changed points are memoized after one run");
+    assert_eq!(again.store().unwrap().hits(), pts.len() as u64 + 2);
+}
+
+#[test]
+fn corrupted_store_degrades_to_cold_misses_through_the_engine() {
+    let dir = tmpdir("corrupt");
+    let pts = points(&["kmeans"], 2, &[1.0]);
+    let (cold_stats, cold) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert_eq!(cold.sims_run(), 2);
+    let store_path = dir.join(ltrf::coordinator::store::STORE_FILE);
+
+    // Truncate mid-entry: the damaged line is a cold miss (re-simulated,
+    // identical stats); the intact entry still hits. Never a panic.
+    let text = std::fs::read_to_string(&store_path).unwrap();
+    std::fs::write(&store_path, &text[..text.len() - 40]).unwrap();
+    let (trunc_stats, trunc) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert_eq!(trunc.sims_run(), 1, "exactly the mangled entry re-simulates");
+    assert_eq!(trunc.store().unwrap().skipped_lines(), 1);
+    assert_eq!(trunc.store().unwrap().hits(), 1);
+    assert_eq!(cold_stats, trunc_stats, "recovery must reproduce the stats bit-for-bit");
+
+    // Overwrite with a file that is not a store at all: whole-file cold,
+    // the sweep re-runs everything and heals the file.
+    std::fs::write(&store_path, "totally unrelated\ncontents\n").unwrap();
+    let (foreign_stats, foreign) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert!(foreign.store().unwrap().invalidated());
+    assert_eq!(foreign.sims_run(), 2);
+    assert_eq!(cold_stats, foreign_stats);
+    let (healed_stats, healed) = sweep_with(MemoStore::open(&dir), &pts, 2);
+    assert_eq!(healed.sims_run(), 0, "the re-run must have rewritten a valid file");
+    assert_eq!(cold_stats, healed_stats);
+}

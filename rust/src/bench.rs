@@ -21,7 +21,11 @@
 //!   the engine against a cross-run disk memo store, cold (every point
 //!   simulated, then persisted) vs warm (a fresh engine answers every
 //!   point from disk with zero simulations) — the trajectory of the memo
-//!   store.
+//!   store;
+//! * **frontier search** — wall seconds for a small Pareto-frontier
+//!   search (`coordinator::frontier`) against the memo store, cold vs
+//!   warm; the warm pass must simulate nothing (scan tails included) and
+//!   reproduce the cold frontier byte-for-byte.
 //!
 //! Every comparison first asserts the variants' outputs are bit-identical
 //! on the measured points — a speedup over a diverging simulator (or a
@@ -32,6 +36,7 @@
 use crate::compiler::{CompileOptions, PassManager};
 use crate::coordinator::designs;
 use crate::coordinator::engine::{point_setup, CfgTweaks, Engine};
+use crate::coordinator::frontier::{self, FrontierSpace};
 use crate::coordinator::MemoStore;
 use crate::ir::Kernel;
 use crate::sim::{gpu, HierarchyKind, SimBackend, SimConfig, Stats};
@@ -127,6 +132,25 @@ pub struct StoreBenchEntry {
     pub store_misses: u64,
 }
 
+/// One measured frontier-search configuration (`mode` is `"cold"` —
+/// empty memo store — or `"warm"` — a fresh engine re-searches the same
+/// space entirely from disk).
+#[derive(Clone, Debug)]
+pub struct FrontierBenchEntry {
+    pub name: String,
+    pub mode: &'static str,
+    /// Mean wall seconds per iteration (one iteration runs the whole
+    /// search once).
+    pub wall_seconds: f64,
+    /// Simulations run during one iteration.
+    pub sims: u64,
+    /// Points surviving the dominance prune.
+    pub frontier_points: u64,
+    /// Disk-store hits/misses booked during one iteration.
+    pub store_hits: u64,
+    pub store_misses: u64,
+}
+
 /// The full trajectory report.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -135,6 +159,7 @@ pub struct BenchReport {
     pub entries: Vec<BenchEntry>,
     pub compile_entries: Vec<CompileBenchEntry>,
     pub store_entries: Vec<StoreBenchEntry>,
+    pub frontier_entries: Vec<FrontierBenchEntry>,
     /// Epoch-core diagnostics summed over every equivalence-gate
     /// reference run: global epochs whose serial commit phase was
     /// skipped, and event-wheel window rotations. Nonzero values prove
@@ -188,6 +213,19 @@ impl BenchReport {
         Some(cold.wall_seconds / warm.wall_seconds.max(1e-12))
     }
 
+    /// Frontier-entry lookup by mode (`"cold"` / `"warm"`).
+    pub fn frontier_entry(&self, mode: &str) -> Option<&FrontierBenchEntry> {
+        self.frontier_entries.iter().find(|e| e.mode == mode)
+    }
+
+    /// Warm frontier-search speedup over cold (the auto-tuner headline:
+    /// a re-search over a populated store simulates nothing).
+    pub fn frontier_warm_speedup(&self) -> Option<f64> {
+        let cold = self.frontier_entry("cold")?;
+        let warm = self.frontier_entry("warm")?;
+        Some(cold.wall_seconds / warm.wall_seconds.max(1e-12))
+    }
+
     /// Serialize as stable, machine-readable JSON (no external deps; the
     /// schema is versioned so future PRs can extend it additively).
     ///
@@ -232,6 +270,9 @@ impl BenchReport {
         if let Some(s) = self.store_warm_speedup() {
             let _ = writeln!(out, "  \"store_warm_speedup\": {:.4},", s);
         }
+        if let Some(s) = self.frontier_warm_speedup() {
+            let _ = writeln!(out, "  \"frontier_warm_speedup\": {:.4},", s);
+        }
         out.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
             let comma = if i + 1 == self.entries.len() { "" } else { "," };
@@ -260,6 +301,25 @@ impl BenchReport {
                 "    {{\"name\": \"{}\", \"mode\": \"{}\", \"wall_seconds\": {:.6}, \
                  \"sims\": {}, \"store_hits\": {}, \"store_misses\": {}}}{}",
                 e.name, e.mode, e.wall_seconds, e.sims, e.store_hits, e.store_misses, comma
+            );
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"frontier\": [\n");
+        for (i, e) in self.frontier_entries.iter().enumerate() {
+            let comma = if i + 1 == self.frontier_entries.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"mode\": \"{}\", \"wall_seconds\": {:.6}, \
+                 \"sims\": {}, \"frontier_points\": {}, \"store_hits\": {}, \
+                 \"store_misses\": {}}}{}",
+                e.name,
+                e.mode,
+                e.wall_seconds,
+                e.sims,
+                e.frontier_points,
+                e.store_hits,
+                e.store_misses,
+                comma
             );
         }
         out.push_str("  ],\n");
@@ -628,6 +688,85 @@ fn measure_store_family(report: &mut BenchReport, opts: &BenchOptions) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The small search space the `frontier_search` family times: one
+/// workload, baseline capacity only — every registered design still gets
+/// its full tolerable-latency scan.
+fn frontier_bench_space() -> FrontierSpace {
+    let mut space = FrontierSpace::new(true);
+    space.workloads.truncate(1);
+    space.capacities = vec![2048];
+    space
+}
+
+/// Measure the `frontier_search` family: the Pareto-frontier auto-tuner
+/// against the memo store, cold (every scanned point simulated, then
+/// persisted — on-demand scan tails included) vs warm (a fresh engine
+/// re-searches the same space entirely from disk). Gated on the warm
+/// pass simulating nothing and rendering the identical frontier.
+fn measure_frontier_family(report: &mut BenchReport, opts: &BenchOptions) {
+    let dir = std::env::temp_dir().join(format!("ltrf-bench-frontier-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let space = frontier_bench_space();
+    let iters = opts.iters.max(1);
+
+    let run_search = |fresh: bool| -> (f64, Engine, frontier::FrontierReport) {
+        if fresh {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let mut eng = Engine::new(1);
+        eng.set_store(MemoStore::open(&dir));
+        let t0 = Instant::now();
+        let rep = frontier::search(&mut eng, &space);
+        eng.flush_store().expect("bench frontier store save");
+        (t0.elapsed().as_secs_f64(), eng, rep)
+    };
+
+    let mut cold_wall = 0.0;
+    let mut cold = None;
+    for _ in 0..iters {
+        let (w, eng, rep) = run_search(true);
+        cold_wall += w;
+        cold = Some((eng, rep));
+    }
+    let (cold_eng, cold_rep) = cold.expect("at least one cold iteration");
+    assert!(cold_eng.sims_run() > 0, "cold frontier search simulates its scans");
+    report.frontier_entries.push(FrontierBenchEntry {
+        name: "frontier_search".into(),
+        mode: "cold",
+        wall_seconds: cold_wall / iters as f64,
+        sims: cold_eng.sims_run(),
+        frontier_points: cold_rep.frontier().len() as u64,
+        store_hits: cold_eng.store().map(|s| s.hits()).unwrap_or(0),
+        store_misses: cold_eng.store().map(|s| s.misses()).unwrap_or(0),
+    });
+
+    let mut warm_wall = 0.0;
+    let mut warm = None;
+    for _ in 0..iters {
+        let (w, eng, rep) = run_search(false);
+        warm_wall += w;
+        warm = Some((eng, rep));
+    }
+    let (warm_eng, warm_rep) = warm.expect("at least one warm iteration");
+    // Equivalence + liveness gate: zero simulations (the cold pass
+    // persisted even the on-demand scan tails) and a byte-identical
+    // frontier — a fast search that finds a different frontier is wrong.
+    assert_eq!(warm_eng.sims_run(), 0, "warm frontier search must resolve from disk");
+    let render =
+        |r: &frontier::FrontierReport| r.tables().iter().map(|t| t.render()).collect::<String>();
+    assert_eq!(render(&cold_rep), render(&warm_rep), "cold/warm frontiers diverged");
+    report.frontier_entries.push(FrontierBenchEntry {
+        name: "frontier_search".into(),
+        mode: "warm",
+        wall_seconds: warm_wall / iters as f64,
+        sims: 0,
+        frontier_points: warm_rep.frontier().len() as u64,
+        store_hits: warm_eng.store().map(|s| s.hits()).unwrap_or(0),
+        store_misses: warm_eng.store().map(|s| s.misses()).unwrap_or(0),
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Run the full trajectory measurement.
 pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     let mut report =
@@ -635,6 +774,7 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     let num_sms = 8;
     measure_compile_family(&mut report, opts);
     measure_store_family(&mut report, opts);
+    measure_frontier_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
     measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
     measure_policy_family(&mut report, opts);
@@ -687,10 +827,30 @@ mod tests {
             analysis_hits: 100,
             analysis_misses: 0,
         });
+        r.frontier_entries.push(FrontierBenchEntry {
+            name: "frontier_search".into(),
+            mode: "cold",
+            wall_seconds: 0.8,
+            sims: 60,
+            frontier_points: 3,
+            store_hits: 0,
+            store_misses: 60,
+        });
+        r.frontier_entries.push(FrontierBenchEntry {
+            name: "frontier_search".into(),
+            mode: "warm",
+            wall_seconds: 0.1,
+            sims: 0,
+            frontier_points: 3,
+            store_hits: 60,
+            store_misses: 0,
+        });
         let speedup = r.fig14_speedup().expect("both entries present");
         assert!((speedup - 2.0).abs() < 1e-9);
         let cspeed = r.compile_warm_speedup().expect("both compile entries present");
         assert!((cspeed - 4.0).abs() < 1e-9);
+        let fspeed = r.frontier_warm_speedup().expect("both frontier entries present");
+        assert!((fspeed - 8.0).abs() < 1e-9);
         let json = r.to_json();
         assert!(json.contains("\"schema\": \"ltrf-bench-sim/v3\""));
         assert!(json.contains("\"provenance\": \"measured\""));
@@ -702,11 +862,20 @@ mod tests {
         assert!(json.contains("\"cycles_per_second\": 500.0"));
         assert!(json.contains("\"mode\": \"warm\""));
         assert!(json.contains("\"analysis_misses\": 90"));
+        assert!(json.contains("\"frontier_warm_speedup\": 8.0000"));
+        assert!(json.contains("\"frontier_points\": 3"));
+        // Array order: entries, store, frontier, compile (compile last).
+        let idx = |needle: &str| json.find(needle).unwrap_or_else(|| panic!("missing {needle}"));
+        assert!(idx("\"entries\": [") < idx("\"store\": ["));
+        assert!(idx("\"store\": [") < idx("\"frontier\": ["));
+        assert!(idx("\"frontier\": [") < idx("\"compile\": ["));
         assert!(json.ends_with("]\n}\n"));
         assert_eq!(r.entry("fig14_matrix", "reference", 1).unwrap().instructions, 500);
         assert!(r.entry("fig14_matrix", "reference", 9).is_none());
         assert_eq!(r.compile_entry("cold").unwrap().compiles, 40);
         assert!(r.compile_entry("lukewarm").is_none());
+        assert_eq!(r.frontier_entry("warm").unwrap().store_hits, 60);
+        assert!(r.frontier_entry("lukewarm").is_none());
     }
 
     #[test]
@@ -781,6 +950,26 @@ mod tests {
         assert_eq!(warm.sims, 0, "warm pass resolves entirely from disk");
         assert_eq!(warm.store_hits, cold.sims);
         assert_eq!(warm.store_misses, 0);
+    }
+
+    #[test]
+    fn frontier_family_cold_persists_and_warm_simulates_nothing() {
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
+        measure_frontier_family(&mut r, &BenchOptions::quick());
+        assert_eq!(r.frontier_entries.len(), 2);
+        let cold = r.frontier_entry("cold").unwrap();
+        let warm = r.frontier_entry("warm").unwrap();
+        assert!(cold.sims > 0, "cold search simulates its scans");
+        assert_eq!(cold.store_hits, 0);
+        assert!(
+            cold.store_misses >= cold.sims,
+            "every cold point consulted the disk before simulating"
+        );
+        assert_eq!(warm.sims, 0, "warm search resolves entirely from disk");
+        assert_eq!(warm.store_misses, 0);
+        assert!(warm.store_hits > 0);
+        assert_eq!(cold.frontier_points, warm.frontier_points);
+        assert!(r.frontier_warm_speedup().is_some());
     }
 
     #[test]

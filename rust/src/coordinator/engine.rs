@@ -23,9 +23,7 @@
 //! mode switch to hold wrong: redeeming a point that was never declared
 //! (the §7.2 tolerable-latency scans discover points adaptively) falls
 //! back to an on-demand simulation through the same caches, so results
-//! stay identical to the serial implementation. The PR-1 stateful
-//! `plan_phase`/`planning`/`stats` protocol survives one more PR as a
-//! deprecated shim over the ticket API.
+//! stay identical to the serial implementation.
 //!
 //! With a [`MemoStore`] attached ([`Engine::set_store`]), results also
 //! memoize *across* runs: `request` consults the disk store before
@@ -518,9 +516,6 @@ pub fn run_kernel_point(
 pub struct Engine {
     /// Worker threads for [`Engine::execute`] (0 = all cores).
     pub threads: usize,
-    /// Legacy-shim state only (`plan_phase`/`stats`); the ticket API
-    /// never reads it.
-    planning: bool,
     matrix: JobMatrix,
     results: ResultSet,
     compile_cache: CompileCache,
@@ -534,7 +529,6 @@ impl Engine {
     pub fn new(threads: usize) -> Self {
         Engine {
             threads,
-            planning: false,
             matrix: JobMatrix::new(),
             results: ResultSet::default(),
             compile_cache: CompileCache::new(),
@@ -722,7 +716,6 @@ impl Engine {
     /// (if any). Points that landed in the `ResultSet` since they were
     /// declared (on-demand redemptions) are skipped, never re-simulated.
     pub fn execute(&mut self) {
-        self.planning = false;
         if self.matrix.is_empty() {
             return;
         }
@@ -821,74 +814,6 @@ impl Engine {
             store_part,
         )
     }
-
-    // -----------------------------------------------------------------
-    // Deprecated PR-1 two-phase protocol (one-PR migration shim)
-    // -----------------------------------------------------------------
-
-    /// Enter the legacy planning phase: subsequent [`Engine::stats`]
-    /// calls register jobs and return placeholder zeros.
-    #[deprecated(note = "use the ticket API: request/execute, then point/redeem")]
-    pub fn plan_phase(&mut self) {
-        self.planning = true;
-    }
-
-    /// Legacy mode probe. New-style drivers never branch on this — they
-    /// have an explicit declare pass instead.
-    #[deprecated(note = "use the ticket API: request/execute, then point/redeem")]
-    pub fn planning(&self) -> bool {
-        self.planning
-    }
-
-    /// Legacy stats lookup. Planning: registers the job, returns zeros
-    /// (unless already resolved). Rendering: same as [`Engine::point`].
-    #[deprecated(note = "use Engine::point (or request + redeem)")]
-    #[allow(deprecated)]
-    pub fn stats(
-        &mut self,
-        spec: &'static WorkloadSpec,
-        dut: &DesignUnderTest,
-        factor: f64,
-    ) -> Stats {
-        self.stats_tweaked(spec, dut, factor, CfgTweaks::NONE)
-    }
-
-    /// Legacy tweaked stats lookup (see [`Engine::stats`]).
-    #[deprecated(note = "use Engine::point_tweaked (or request_tweaked + redeem)")]
-    #[allow(deprecated)]
-    pub fn stats_tweaked(
-        &mut self,
-        spec: &'static WorkloadSpec,
-        dut: &DesignUnderTest,
-        factor: f64,
-        tweaks: CfgTweaks,
-    ) -> Stats {
-        if self.planning {
-            let ticket = self.request_tweaked(spec, dut, factor, tweaks);
-            // A store hit (or a previously-resolved point) already has
-            // real stats; everything else gets the planning placeholder.
-            return self.results.redeem(&ticket).cloned().unwrap_or_default();
-        }
-        self.point_tweaked(spec, dut, factor, tweaks)
-    }
-}
-
-/// Legacy driver runner for the PR-1 two-phase protocol: plan (CSV
-/// emission disabled via a `csv_dir: None` context), execute the matrix
-/// in parallel, render. Ticket-API drivers carry their own declare pass
-/// and call `execute` themselves — just call them directly.
-#[deprecated(note = "ticket-API drivers self-execute; call the driver directly")]
-#[allow(deprecated)]
-pub fn two_phase<T>(
-    ctx: &super::experiments::ExperimentContext,
-    eng: &mut Engine,
-    f: impl Fn(&super::experiments::ExperimentContext, &mut Engine) -> T,
-) -> T {
-    eng.plan_phase();
-    let plan_ctx = super::experiments::ExperimentContext { csv_dir: None, ..ctx.clone() };
-    let _ = f(&plan_ctx, eng);
-    eng.execute();
-    f(ctx, eng)
 }
 
 #[cfg(test)]
@@ -1019,23 +944,6 @@ mod tests {
         assert_eq!(warm.results().cache.store_hits, 1);
         assert!(warm.summary().contains("disk store 1 hits / 0 misses"), "{}", warm.summary());
         let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_two_phase_shim_still_works() {
-        let spec = suite::workload_by_name("kmeans").unwrap();
-        let mut eng = Engine::new(1);
-        eng.plan_phase();
-        assert!(eng.planning());
-        let placeholder = eng.stats(spec, &bl(), 1.0);
-        assert_eq!(placeholder, Stats::default());
-        assert_eq!(eng.pending(), 1);
-        eng.execute();
-        assert!(!eng.planning());
-        let st = eng.stats(spec, &bl(), 1.0);
-        assert!(st.instructions > 0);
-        assert_eq!(eng.sims_run(), 1, "render lookup must not re-simulate");
     }
 
     #[test]

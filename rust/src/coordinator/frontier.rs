@@ -1,0 +1,487 @@
+//! Pareto-frontier auto-tuner over the design space (ROADMAP item 4).
+//!
+//! The paper's headline result (8× MRF capacity at +34% performance) is
+//! one hand-picked operating point; this driver *searches* for such
+//! points instead. It walks the registry × latency-factor × capacity ×
+//! bank-count space adaptively:
+//!
+//! * every candidate `(design, capacity, banks)` is probed with the exact
+//!   early-exit tolerable-latency scan from [`super::tolerable`] — the
+//!   grid up to the design's plan horizon is declared up front
+//!   ([`tolerable::plan`]), executed as one deduplicated parallel batch,
+//!   and the scan tail past the horizon falls back to on-demand points;
+//! * every probe goes through the ticket API ([`Engine::request`] /
+//!   [`Engine::execute`] / redeem via [`Engine::point`]), so with a
+//!   [`MemoStore`](super::MemoStore) attached a revisited point is free —
+//!   a warm re-search simulates nothing;
+//! * each candidate is then scored on three axes — geomean IPC at its
+//!   maximum tolerable latency (higher is better), activity-based
+//!   [`PowerBreakdown::total`](crate::timing::PowerBreakdown::total)
+//!   relative to the baseline RF (lower is better), and MRF capacity
+//!   (higher is better) — and dominated candidates are pruned.
+//!
+//! Determinism: `Stats` are a pure function of the job key, candidates
+//! live in a `BTreeMap` keyed `(registry index, capacity, banks)`, and
+//! the dominance pass breaks exact ties by that key order (earlier
+//! registry entries win) — so the emitted frontier is byte-identical
+//! across `--jobs 1` vs `--jobs N` and across cold vs warm store runs.
+//!
+//! The sweep service composes as a front end: [`emit_requests`] writes
+//! one `sweep submit`-ready request file per `(design, capacity)` pair
+//! covering the same declared grid, so a spooled `sweep serve --store`
+//! pass pre-warms the store a frontier search then reads.
+
+use super::designs::{self, PolicyPoint};
+use super::engine::Engine;
+use super::experiments::DesignUnderTest;
+use super::tolerable;
+use crate::report::table::{f1, f2, f3};
+use crate::report::Table;
+use crate::sim::{model_for, HierarchyModel as _};
+use crate::timing::Tech;
+use crate::util::json::escape;
+use crate::workloads::{suite, WorkloadSpec};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Baseline MRF capacity in warp-registers (2048 = 256KB, Table 1).
+const BASE_CAPACITY: usize = 2048;
+
+/// The searched axes. Designs always come from the registry
+/// ([`designs::REGISTRY`]); the space adds the per-design capacity and
+/// bank-count variants and the IPC-retention threshold of the
+/// tolerable-latency scan.
+#[derive(Clone, Debug)]
+pub struct FrontierSpace {
+    /// Workloads scored per candidate (IPC is their geomean).
+    pub workloads: Vec<&'static WorkloadSpec>,
+    /// MRF capacities probed, in warp-registers.
+    pub capacities: Vec<usize>,
+    /// Extra MRF bank counts probed per `(design, capacity)` on top of
+    /// the design's Table-2 scaling (empty = the scaled default only).
+    pub banks: Vec<usize>,
+    /// Tolerable-latency IPC retention threshold (§7.2 uses 0.95).
+    pub threshold: f64,
+}
+
+impl FrontierSpace {
+    /// The default search space; `quick` shrinks both axes for CI.
+    pub fn new(quick: bool) -> FrontierSpace {
+        let names: &[&str] = if quick {
+            &["kmeans", "gaussian", "pathfinder"]
+        } else {
+            &["kmeans", "bfs", "gaussian", "pathfinder", "cfd"]
+        };
+        FrontierSpace {
+            workloads: names
+                .iter()
+                .map(|n| suite::workload_by_name(n).expect("frontier workload"))
+                .collect(),
+            capacities: if quick {
+                vec![BASE_CAPACITY, 8 * BASE_CAPACITY]
+            } else {
+                vec![BASE_CAPACITY, 2 * BASE_CAPACITY, 4 * BASE_CAPACITY, 8 * BASE_CAPACITY]
+            },
+            banks: Vec::new(),
+            threshold: 0.95,
+        }
+    }
+
+    /// Table-2 cell technology for a capacity: files up to 2× stay
+    /// HP SRAM; larger files use DWM, the only Table-2 cell that fits the
+    /// power budget at 4–8× (the paper's configs #6/#7).
+    pub fn tech_for(&self, capacity: usize) -> Tech {
+        if capacity <= 2 * BASE_CAPACITY {
+            Tech::HpSram
+        } else {
+            Tech::Dwm
+        }
+    }
+
+    /// The candidate `(registry index, capacity, banks)` keys with their
+    /// designs-under-test, deduplicated and in deterministic `BTreeMap`
+    /// order. A `banks` override equal to the design's Table-2 scaling
+    /// collapses into the default candidate.
+    fn candidates(&self) -> BTreeMap<(usize, usize, usize), DesignUnderTest> {
+        let mut out = BTreeMap::new();
+        for (idx, point) in designs::REGISTRY.iter().enumerate() {
+            for &cap in &self.capacities {
+                let dut = point.dut_with_capacity(cap);
+                out.insert((idx, cap, dut.mrf_banks), dut);
+                for &banks in &self.banks {
+                    let mut v = dut;
+                    v.mrf_banks = banks;
+                    out.entry((idx, cap, banks)).or_insert(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One scored candidate of the search.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    /// Registry name of the design column.
+    pub design: &'static str,
+    /// Position in [`designs::REGISTRY`] (the deterministic tie-break).
+    pub registry_index: usize,
+    /// MRF capacity in warp-registers.
+    pub capacity: usize,
+    pub mrf_banks: usize,
+    /// Maximum tolerable MRF latency factor: the largest grid factor at
+    /// which *every* workload retains `threshold` of its 1× IPC.
+    pub tolerable_factor: f64,
+    /// Geomean IPC across the workloads at [`tolerable_factor`].
+    ///
+    /// [`tolerable_factor`]: FrontierPoint::tolerable_factor
+    pub ipc: f64,
+    /// Mean activity-based power vs the baseline RF at that factor.
+    pub power: f64,
+    /// Survived the dominance prune.
+    pub on_frontier: bool,
+}
+
+/// The search outcome: every scored candidate (deterministic key order)
+/// with its frontier membership.
+#[derive(Clone, Debug)]
+pub struct FrontierReport {
+    pub points: Vec<FrontierPoint>,
+    pub threshold: f64,
+    /// Workload names the IPC/power columns aggregate over.
+    pub workloads: Vec<&'static str>,
+}
+
+/// `a` dominates `b`: no worse on every axis (IPC ↑, power ↓,
+/// capacity ↑) and strictly better on at least one.
+fn dominates(a: &FrontierPoint, b: &FrontierPoint) -> bool {
+    a.ipc >= b.ipc
+        && a.power <= b.power
+        && a.capacity >= b.capacity
+        && (a.ipc > b.ipc || a.power < b.power || a.capacity > b.capacity)
+}
+
+/// Mark the non-dominated subset. Exact ties on all three axes keep the
+/// earliest point in key order (registry order, then capacity, then
+/// banks), so the frontier never depends on float comparison order or
+/// thread scheduling.
+fn prune(points: &mut [FrontierPoint]) {
+    for j in 0..points.len() {
+        let dominated = points.iter().enumerate().any(|(i, a)| {
+            if i == j {
+                return false;
+            }
+            let b = &points[j];
+            dominates(a, b)
+                && (i < j || a.ipc != b.ipc || a.power != b.power || a.capacity != b.capacity)
+        });
+        points[j].on_frontier = !dominated;
+    }
+}
+
+/// Run the frontier search on an engine. One declare pass covers every
+/// candidate's plan grid, one [`Engine::execute`] resolves the batch
+/// (store-first), and the per-candidate scans then read the results back
+/// (on-demand tails included — those persist to the store too).
+pub fn search(eng: &mut Engine, space: &FrontierSpace) -> FrontierReport {
+    let candidates = space.candidates();
+    for dut in candidates.values() {
+        for &spec in &space.workloads {
+            tolerable::plan(eng, dut, spec);
+        }
+    }
+    eng.execute();
+
+    let mut points = Vec::with_capacity(candidates.len());
+    for (&(idx, cap, banks), dut) in &candidates {
+        // The design's tolerable factor is the largest every workload
+        // sustains; each per-workload scan is the §7.2 early-exit walk.
+        let mut factor = f64::INFINITY;
+        for &spec in &space.workloads {
+            factor = factor.min(tolerable::measure(eng, dut, spec, space.threshold));
+        }
+        // Score at the operating point. Every factor the min ranged over
+        // was probed by each workload's ascending scan, so these reads
+        // are pure ResultSet lookups — no new simulations.
+        let ratio = cap as f64 / BASE_CAPACITY as f64;
+        let tech = space.tech_for(cap);
+        let model = model_for(dut.hierarchy);
+        let mut ipcs = Vec::with_capacity(space.workloads.len());
+        let mut power_sum = 0.0;
+        for &spec in &space.workloads {
+            let st = eng.point(spec, dut, factor);
+            ipcs.push(st.ipc());
+            power_sum += model.power(&st, ratio, tech).total();
+        }
+        points.push(FrontierPoint {
+            design: designs::REGISTRY[idx].name,
+            registry_index: idx,
+            capacity: cap,
+            mrf_banks: banks,
+            tolerable_factor: factor,
+            ipc: super::sweep::gmean(&ipcs),
+            power: power_sum / space.workloads.len() as f64,
+            on_frontier: false,
+        });
+    }
+    prune(&mut points);
+    FrontierReport {
+        points,
+        threshold: space.threshold,
+        workloads: space.workloads.iter().map(|w| w.name).collect(),
+    }
+}
+
+impl FrontierReport {
+    /// The non-dominated points, in key order.
+    pub fn frontier(&self) -> Vec<&FrontierPoint> {
+        self.points.iter().filter(|p| p.on_frontier).collect()
+    }
+
+    /// One-line outcome for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "frontier: {} candidates scored over {{{}}}, {} on the Pareto frontier \
+             (threshold {:.0}%)",
+            self.points.len(),
+            self.workloads.join(", "),
+            self.frontier().len(),
+            self.threshold * 100.0
+        )
+    }
+
+    fn point_row(p: &FrontierPoint) -> Vec<String> {
+        vec![
+            p.design.to_string(),
+            p.capacity.to_string(),
+            format!("{}KB", p.capacity / 8),
+            p.mrf_banks.to_string(),
+            f1(p.tolerable_factor),
+            f3(p.ipc),
+            f2(p.power),
+        ]
+    }
+
+    /// The frontier tables: the Pareto set first, then every scored
+    /// candidate with its membership column. Both use the same row shape
+    /// so the CSV outputs line up.
+    pub fn tables(&self) -> Vec<Table> {
+        const COLS: &[&str] = &[
+            "design",
+            "capacity (warp-regs)",
+            "capacity",
+            "banks",
+            "tolerable latency",
+            "IPC",
+            "power vs BL",
+        ];
+        let mut front = Table::new(
+            format!(
+                "Pareto frontier — IPC vs power vs capacity (threshold {:.0}%)",
+                self.threshold * 100.0
+            ),
+            COLS,
+        );
+        for p in self.frontier() {
+            front.row(Self::point_row(p));
+        }
+        let mut all = Table::new(
+            format!("Frontier candidates — {} scored points", self.points.len()),
+            &[COLS, &["frontier"]].concat(),
+        );
+        for p in &self.points {
+            let mut row = Self::point_row(p);
+            row.push(if p.on_frontier { "yes" } else { "-" }.to_string());
+            all.row(row);
+        }
+        vec![front, all]
+    }
+}
+
+/// Serialize a latency grid as a JSON array literal.
+fn json_factors(grid: &[f64]) -> String {
+    let cells: Vec<String> = grid.iter().map(|f| format!("{f:.1}")).collect();
+    format!("[{}]", cells.join(", "))
+}
+
+/// The request document for one `(design, capacity)` pair: the same
+/// workloads and declared latency grid [`search`] would plan, in the
+/// sweep service's request schema.
+fn request_doc(space: &FrontierSpace, point: &PolicyPoint, capacity: usize) -> String {
+    let dut = point.dut_with_capacity(capacity);
+    let workloads: Vec<String> =
+        space.workloads.iter().map(|w| format!("\"{}\"", escape(w.name))).collect();
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"name\": \"frontier-{}-c{}\",", point.name, capacity);
+    let _ = writeln!(out, "  \"workloads\": [{}],", workloads.join(", "));
+    let _ = writeln!(out, "  \"designs\": [\"{}\"],", escape(point.name));
+    let _ = writeln!(out, "  \"latencies\": {},", json_factors(&tolerable::plan_grid(&dut)));
+    let _ = writeln!(out, "  \"capacity\": {capacity}");
+    out.push_str("}\n");
+    out
+}
+
+/// The sweep-service front end: write one `sweep submit`-ready request
+/// file per `(registered design, capacity)` into `dir` and return the
+/// paths (deterministic registry × capacity order). Spooling them through
+/// `sweep serve --store DIR` pre-warms the store with the search's entire
+/// declared grid. Bank-count variants are not expressible in the request
+/// schema (requests carry capacity only), so [`FrontierSpace::banks`]
+/// overrides are covered by the live search, not the spool.
+pub fn emit_requests(space: &FrontierSpace, dir: &Path) -> Result<Vec<PathBuf>, String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    let mut out = Vec::new();
+    for point in designs::REGISTRY {
+        for &cap in &space.capacities {
+            let path = dir.join(format!("frontier-{}-c{cap}.json", point.name));
+            std::fs::write(&path, request_doc(space, point, cap))
+                .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+            out.push(path);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(idx: usize, cap: usize, ipc: f64, power: f64) -> FrontierPoint {
+        FrontierPoint {
+            design: designs::REGISTRY[idx].name,
+            registry_index: idx,
+            capacity: cap,
+            mrf_banks: 16,
+            tolerable_factor: 1.0,
+            ipc,
+            power,
+            on_frontier: false,
+        }
+    }
+
+    #[test]
+    fn prune_keeps_the_nondominated_set() {
+        // a: high IPC / high power; b: low IPC / low power; c: dominated
+        // by a on every axis.
+        let mut points =
+            vec![pt(0, 2048, 0.9, 1.0), pt(1, 2048, 0.5, 0.4), pt(2, 2048, 0.8, 1.0)];
+        prune(&mut points);
+        assert!(points[0].on_frontier);
+        assert!(points[1].on_frontier);
+        assert!(!points[2].on_frontier, "strictly worse IPC at equal power/capacity");
+    }
+
+    #[test]
+    fn prune_breaks_exact_ties_by_key_order() {
+        // Identical scores: only the earlier registry entry survives.
+        let mut points = vec![pt(0, 2048, 0.7, 0.9), pt(3, 2048, 0.7, 0.9)];
+        prune(&mut points);
+        assert!(points[0].on_frontier);
+        assert!(!points[1].on_frontier);
+        // Symmetric input order must give the symmetric answer.
+        let mut flipped = vec![pt(3, 2048, 0.7, 0.9), pt(0, 2048, 0.7, 0.9)];
+        // Key order is positional here (the report stores BTreeMap
+        // order), so the first element wins in both cases.
+        prune(&mut flipped);
+        assert!(flipped[0].on_frontier);
+        assert!(!flipped[1].on_frontier);
+    }
+
+    #[test]
+    fn prune_capacity_axis_counts() {
+        // Same IPC and power at a larger capacity dominates.
+        let mut points = vec![pt(0, 16384, 0.7, 0.9), pt(0, 2048, 0.7, 0.9)];
+        prune(&mut points);
+        assert!(points[0].on_frontier);
+        assert!(!points[1].on_frontier, "smaller file with no other edge is dominated");
+    }
+
+    #[test]
+    fn candidates_are_deterministic_and_deduplicated() {
+        let mut space = FrontierSpace::new(true);
+        // 16 banks equals the Table-2 scaling at 2048 — must collapse.
+        space.banks = vec![16, 32];
+        let c = space.candidates();
+        let keys: Vec<_> = c.keys().copied().collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "BTreeMap iteration is key-ordered");
+        // Per design: 2048 with banks {16, 32} and 16384 with {128, 16, 32}.
+        assert_eq!(c.len(), designs::REGISTRY.len() * 5);
+        assert!(c.contains_key(&(0, 2048, 16)));
+        assert!(!c.values().any(|d| d.capacity == 2048 && d.mrf_banks == 128));
+    }
+
+    #[test]
+    fn tech_assignment_matches_table2() {
+        let space = FrontierSpace::new(false);
+        assert_eq!(space.tech_for(2048), Tech::HpSram);
+        assert_eq!(space.tech_for(4096), Tech::HpSram);
+        assert_eq!(space.tech_for(8192), Tech::Dwm);
+        assert_eq!(space.tech_for(16384), Tech::Dwm);
+    }
+
+    #[test]
+    fn request_docs_parse_through_the_sweep_service() {
+        let space = FrontierSpace::new(true);
+        for point in designs::REGISTRY {
+            for &cap in &space.capacities {
+                let doc = request_doc(&space, point, cap);
+                let req = super::super::service::parse_request(&doc, "fallback")
+                    .unwrap_or_else(|e| panic!("{} request invalid: {e}\n{doc}", point.name));
+                assert_eq!(req.name, format!("frontier-{}-c{cap}", point.name));
+                let grid = tolerable::plan_grid(&point.dut_with_capacity(cap));
+                assert_eq!(
+                    req.points.len(),
+                    space.workloads.len() * grid.len(),
+                    "one point per workload x declared factor"
+                );
+                assert!(req.points.iter().all(|p| p.dut.capacity == cap));
+            }
+        }
+    }
+
+    #[test]
+    fn emit_requests_writes_one_file_per_design_capacity() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "ltrf-frontier-req-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::SeqCst)
+        ));
+        let space = FrontierSpace::new(true);
+        let files = emit_requests(&space, &dir).expect("emit");
+        assert_eq!(files.len(), designs::REGISTRY.len() * space.capacities.len());
+        for f in &files {
+            let text = std::fs::read_to_string(f).expect("request file");
+            super::super::service::parse_request(&text, "x").expect("spoolable request");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quick_search_emits_a_deterministic_frontier() {
+        let mut space = FrontierSpace::new(true);
+        // Keep the unit-test budget small; the integration suite covers
+        // the full quick space.
+        space.workloads.truncate(1);
+        space.capacities = vec![2048];
+        let run = |jobs: usize| {
+            let mut eng = Engine::new(jobs);
+            let r = search(&mut eng, &space);
+            (r.tables().iter().map(Table::render).collect::<Vec<_>>().join("\n"), r)
+        };
+        let (text1, r1) = run(1);
+        let (text4, _) = run(4);
+        assert_eq!(text1, text4, "--jobs must not change the frontier");
+        assert_eq!(r1.points.len(), designs::REGISTRY.len());
+        assert!(!r1.frontier().is_empty(), "something must survive the prune");
+        assert!(r1.points.iter().all(|p| p.ipc > 0.0 && p.power > 0.0));
+        assert!(r1.points.iter().all(|p| p.tolerable_factor >= 1.0));
+        assert!(text1.contains("Pareto frontier"));
+        assert!(r1.summary().contains("on the Pareto frontier"));
+    }
+}

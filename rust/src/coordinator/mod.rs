@@ -9,6 +9,7 @@
 pub mod designs;
 pub mod engine;
 pub mod experiments;
+pub mod frontier;
 pub mod service;
 pub mod store;
 pub mod sweep;
@@ -18,8 +19,7 @@ pub use engine::{
     run_kernel_point, CacheReport, CfgTweaks, CompileCache, Engine, JobMatrix, JobTicket,
     ResultSet, SimJob,
 };
-#[allow(deprecated)]
-pub use engine::two_phase;
 pub use experiments::ExperimentContext;
+pub use frontier::{FrontierPoint, FrontierReport, FrontierSpace};
 pub use store::MemoStore;
 pub use sweep::{parallel_map, steal_map};

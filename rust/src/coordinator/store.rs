@@ -520,6 +520,65 @@ mod tests {
     }
 
     #[test]
+    fn encoders_emit_the_documented_stable_strings() {
+        // The key encoding IS the on-disk schema: any drift in these
+        // strings silently colds every existing store (or worse, aliases
+        // distinct points), so the expected values are pinned verbatim.
+        // Changing an encoder requires bumping STORE_SCHEMA_VERSION.
+        let opts = CompileOptions::default();
+        assert_eq!(encode_opts(&opts), "n16.b16.r0.miv.kil");
+        let conf = CompileOptions {
+            max_regs_per_interval: 32,
+            num_banks: 128,
+            renumber: true,
+            mode: SubgraphMode::Strands,
+            bank_map: BankMap::Block,
+        };
+        assert_eq!(encode_opts(&conf), "n32.b128.r1.mst.kbl");
+
+        assert_eq!(encode_dut(&bl()), "hBL.rn0.c2048.mb16.ri16.aw8.wps64.sms1.mo-");
+        let mut big = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, true)
+            .with_capacity(16384);
+        big.num_sms = 4;
+        big.mode_override = Some(SubgraphMode::Strands);
+        assert_eq!(encode_dut(&big), "hLTRF+.rn1.c16384.mb128.ri16.aw8.wps64.sms4.most");
+
+        assert_eq!(encode_tweaks(&CfgTweaks::NONE), "er-.xb-.bm-.be-.st-");
+        let tw = CfgTweaks {
+            early_refetch: Some(true),
+            xbar_regs_per_cycle: Some(8),
+            bank_map: Some(BankMap::Interleave),
+            backend: Some(SimBackend::Parallel),
+            sim_threads: Some(4),
+        };
+        assert_eq!(encode_tweaks(&tw), "er1.xb8.bmi.bep.st4");
+        let tw_off = CfgTweaks {
+            early_refetch: Some(false),
+            bank_map: Some(BankMap::Block),
+            backend: Some(SimBackend::Reference),
+            ..CfgTweaks::NONE
+        };
+        assert_eq!(encode_tweaks(&tw_off), "er0.xb-.bmb.ber.st-");
+    }
+
+    #[test]
+    fn key_shape_is_five_pipe_components_with_hex_factor_bits() {
+        let dir = tmpdir("keyshape");
+        let spec = suite::workload_by_name("kmeans").unwrap();
+        let mut store = MemoStore::open(&dir);
+        let key = store.key_for(spec, &bl(), 6.3, CfgTweaks::NONE);
+        let parts: Vec<&str> = key.split('|').collect();
+        assert_eq!(parts.len(), 5, "fp|opts|dut|factor|tweaks: {key}");
+        assert_eq!(parts[2], encode_dut(&bl()));
+        assert_eq!(parts[3], format!("{:016x}", 6.3f64.to_bits()));
+        assert_eq!(parts[4], encode_tweaks(&CfgTweaks::NONE));
+        // The factor is keyed by bit pattern, not display rounding:
+        // nearby floats stay distinct points.
+        let near = store.key_for(spec, &bl(), 6.3 + f64::EPSILON * 8.0, CfgTweaks::NONE);
+        assert_ne!(key, near);
+    }
+
+    #[test]
     fn schema_signature_tracks_field_list() {
         // The signature is a pure function of the stat-field names; it
         // must be stable across calls and differ from a perturbed list.

@@ -44,17 +44,22 @@ pub fn max_tolerable(dut: &DesignUnderTest, spec: &WorkloadSpec, threshold: f64)
     scan(threshold, base, |f| dut.run(spec, f).ipc())
 }
 
+/// The factors a declare pass pre-registers for one design: the grid up
+/// to the design's [`plan_horizon`] (1.0 included). [`plan`] requests
+/// exactly this set; the frontier driver's sweep-service front end
+/// (`frontier::emit_requests`) serializes it into request files, so a
+/// spooled pre-warm covers the same points a live scan would declare.
+pub fn plan_grid(dut: &DesignUnderTest) -> Vec<f64> {
+    let horizon = plan_horizon(dut);
+    factor_grid().into_iter().take_while(|&f| f <= horizon).collect()
+}
+
 /// Declare pass for an engine-backed tolerable-latency scan: requests the
 /// factor grid up to the design's [`plan_horizon`] into the engine's job
 /// matrix (parallel, deduplicated, store-aware). Call before
 /// `Engine::execute`; [`measure`] then reads the scan back.
 pub fn plan(eng: &mut Engine, dut: &DesignUnderTest, spec: &'static WorkloadSpec) {
-    let horizon = plan_horizon(dut);
-    eng.request(spec, dut, 1.0);
-    for f in factor_grid().into_iter().skip(1) {
-        if f > horizon {
-            break;
-        }
+    for f in plan_grid(dut) {
         eng.request(spec, dut, f);
     }
 }
@@ -74,23 +79,6 @@ pub fn measure(
         return 1.0;
     }
     scan(threshold, base, |f| eng.point(spec, dut, f).ipc())
-}
-
-/// Legacy one-call variant from the stateful two-phase protocol: planning
-/// mode declares, render mode scans.
-#[deprecated(note = "use tolerable::plan before execute, then tolerable::measure")]
-#[allow(deprecated)]
-pub fn max_tolerable_engine(
-    eng: &mut Engine,
-    dut: &DesignUnderTest,
-    spec: &'static WorkloadSpec,
-    threshold: f64,
-) -> f64 {
-    if eng.planning() {
-        plan(eng, dut, spec);
-        return 1.0;
-    }
-    measure(eng, dut, spec, threshold)
 }
 
 /// The shared grid scan: last factor within `threshold × base`, stopping
@@ -124,6 +112,18 @@ mod tests {
         assert_eq!(g[0], 1.0);
         assert!(g.windows(2).all(|w| w[0] < w[1]));
         assert!(*g.last().unwrap() <= 16.0);
+    }
+
+    #[test]
+    fn plan_grid_is_a_horizon_bounded_prefix() {
+        let bl = DesignUnderTest::new(HierarchyKind::Baseline, false);
+        let ltrf = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
+        let short = plan_grid(&bl);
+        let long = plan_grid(&ltrf);
+        assert_eq!(short[0], 1.0);
+        assert_eq!(*short.last().unwrap(), 4.0, "low-tolerance designs plan to 4x");
+        assert_eq!(*long.last().unwrap(), 8.0, "latency-tolerant designs plan to 8x");
+        assert_eq!(&long[..short.len()], &short[..], "grids are prefixes of one ladder");
     }
 
     #[test]

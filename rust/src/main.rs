@@ -10,7 +10,7 @@
 use ltrf::cli;
 use ltrf::coordinator::engine::{run_point, CfgTweaks, Engine};
 use ltrf::coordinator::experiments::{self as exp, ExperimentContext};
-use ltrf::coordinator::{designs, service, MemoStore};
+use ltrf::coordinator::{designs, frontier, service, MemoStore};
 use ltrf::report::Table;
 use ltrf::sim::SimBackend;
 use ltrf::workloads::suite;
@@ -45,6 +45,18 @@ All experiment commands accept [--quick] [--csv DIR] [--sms N] [--jobs N]
 [--backend B] [--sim-threads N] [--store DIR] [--json] [--engine-stats].
 With --store DIR, simulated points persist in a cross-run memo store and
 identical reruns answer from disk without simulating.
+
+Auto-tuner:
+  frontier [--quick] [--capacities LIST] [--banks LIST] [--threshold F]
+           [--emit-requests DIR]
+              Pareto-frontier search over the design registry x latency x
+              capacity x bank-count space. Scores every candidate at its
+              maximum tolerable latency and prints the non-dominated set
+              on IPC (up) vs power (down) vs capacity (up); accepts the
+              shared experiment flags, so --store makes re-searches free.
+              With --emit-requests DIR, write sweep-service request files
+              covering the search grid (pre-warm via `sweep serve`) and
+              exit without searching.
 
 Batch sweep service:
   sweep submit <file.json> [--spool DIR]
@@ -222,6 +234,90 @@ fn experiment(cmd: &str, rest: &[String]) {
     finish(&p, &mut eng);
 }
 
+/// Parse a comma-separated positive-integer list flag.
+fn usize_list(p: &cli::Parsed, name: &str) -> Option<Vec<usize>> {
+    p.opt(name).map(|raw| {
+        raw.split(',')
+            .map(|s| match s.trim().parse::<usize>() {
+                Ok(n) if n > 0 => n,
+                _ => die(&format!("{name} expects positive integers, got `{s}`")),
+            })
+            .collect()
+    })
+}
+
+fn frontier_cmd(rest: &[String]) {
+    const CAPACITIES: cli::FlagSpec = cli::opt(
+        "--capacities",
+        "LIST",
+        "MRF capacities probed, warp-regs (default 2048,4096,8192,16384)",
+    );
+    const BANKS: cli::FlagSpec =
+        cli::opt("--banks", "LIST", "extra MRF bank counts probed per design point");
+    const THRESHOLD: cli::FlagSpec =
+        cli::opt("--threshold", "F", "IPC retention threshold (default 0.95)");
+    const EMIT_REQUESTS: cli::FlagSpec = cli::opt(
+        "--emit-requests",
+        "DIR",
+        "write sweep-service request files covering the search grid and exit",
+    );
+    let p = parse_or_die(
+        "frontier",
+        rest,
+        &[
+            cli::QUICK,
+            cli::CSV,
+            cli::JOBS,
+            cli::BACKEND,
+            cli::SIM_THREADS,
+            cli::STORE,
+            cli::JSON,
+            cli::ENGINE_STATS,
+            CAPACITIES,
+            BANKS,
+            THRESHOLD,
+            EMIT_REQUESTS,
+        ],
+    );
+    let mut space = frontier::FrontierSpace::new(p.flag("--quick"));
+    if let Some(caps) = usize_list(&p, "--capacities") {
+        space.capacities = caps;
+    }
+    if let Some(banks) = usize_list(&p, "--banks") {
+        space.banks = banks;
+    }
+    if let Some(t) = opt_parsed::<f64>(&p, "--threshold") {
+        if !t.is_finite() || t <= 0.0 || t > 1.0 {
+            die(&format!("--threshold must be in (0, 1], got {t}"));
+        }
+        space.threshold = t;
+    }
+    if let Some(dir) = p.opt("--emit-requests") {
+        let files = frontier::emit_requests(&space, Path::new(dir)).unwrap_or_else(|e| die(&e));
+        println!("frontier: wrote {} sweep request files to {dir}", files.len());
+        for f in &files {
+            println!("  {}", f.display());
+        }
+        return;
+    }
+    let mut eng = engine_for(&p, opt_or(&p, "--jobs", 0));
+    let report = frontier::search(&mut eng, &space);
+    let json = p.flag("--json");
+    let tables = report.tables();
+    for t in &tables {
+        emit(t, json);
+    }
+    if let Some(dir) = p.opt("--csv") {
+        let dir = PathBuf::from(dir);
+        for (t, name) in tables.iter().zip(["frontier", "frontier_candidates"]) {
+            t.write_csv(&dir, name)
+                .unwrap_or_else(|e| die(&format!("cannot write {name}.csv: {e}")));
+        }
+    }
+    println!("{}", report.summary());
+    finish(&p, &mut eng);
+}
+
 fn sweep_cmd(rest: &[String]) {
     const SPOOL: cli::FlagSpec =
         cli::opt("--spool", "DIR", "request spool directory (default sweeps)");
@@ -340,44 +436,16 @@ fn snapshot_cmd(rest: &[String]) {
         }
         println!("blessed {} keys into {}", snap.entries.len(), golden.display());
     } else if p.flag("--check") {
-        // Exit code contract: 0 = match, 1 = drift (or unreadable golden),
-        // 3 = the golden is missing/unarmed. CI treats 3 as "bootstrap
-        // pending" on the first run after a schema change and anything
-        // else as a hard failure.
-        if !golden.exists() {
-            eprintln!(
-                "snapshot UNARMED: {} does not exist — run `ltrf snapshot --bless` and \
-                 commit it",
-                golden.display()
-            );
-            std::process::exit(3);
-        }
-        let gold = match ltrf::scenario::snapshot::Snapshot::load(&golden) {
-            Ok(g) => g,
-            Err(e) => {
-                eprintln!("{e}\nrun `ltrf snapshot --bless` to recreate the golden file");
-                std::process::exit(1);
-            }
-        };
-        if gold.is_empty() {
-            eprintln!(
-                "snapshot UNARMED: {} has no entries — bless and commit it to arm the \
-                 drift gate",
-                golden.display()
-            );
-            std::process::exit(3);
-        }
-        let current = ltrf::scenario::snapshot::capture_tweaked(quick, jobs, backend_tweaks);
-        let diffs = gold.diff_against(&current);
-        if diffs.is_empty() {
-            println!("snapshot OK: {} keys match {}", current.entries.len(), golden.display());
+        // Exit code contract (tested in `scenario::snapshot`): 0 = match,
+        // 1 = drift (or unreadable golden), 3 = missing/unarmed golden.
+        let out = ltrf::scenario::snapshot::check_golden(&golden, || {
+            ltrf::scenario::snapshot::capture_tweaked(quick, jobs, backend_tweaks)
+        });
+        if out.exit_code == 0 {
+            println!("{}", out.message);
         } else {
-            eprintln!("snapshot DRIFT against {}:", golden.display());
-            for d in &diffs {
-                eprintln!("  {d}");
-            }
-            eprintln!("{} diffs; if intended, re-bless with `ltrf snapshot --bless`", diffs.len());
-            std::process::exit(1);
+            eprintln!("{}", out.message);
+            std::process::exit(out.exit_code);
         }
     } else {
         die("usage: ltrf snapshot (--check | --bless) [--golden PATH] [--quick]");
@@ -428,6 +496,18 @@ fn bench_cmd(rest: &[String]) {
             e.name, e.mode, e.wall_seconds * 1e3, e.sims, e.store_hits, e.store_misses
         );
     }
+    for e in &report.frontier_entries {
+        println!(
+            "{:<16} {:>10}     {:>10.3} ms  {:>8} sims  {} frontier points  store {}/{} hits/misses",
+            e.name,
+            e.mode,
+            e.wall_seconds * 1e3,
+            e.sims,
+            e.frontier_points,
+            e.store_hits,
+            e.store_misses
+        );
+    }
     if let Some(s) = report.fig14_speedup() {
         println!("fig14 matrix: parallel x{} is {s:.2}x reference wall time", report.sim_threads);
     }
@@ -436,6 +516,9 @@ fn bench_cmd(rest: &[String]) {
     }
     if let Some(s) = report.store_warm_speedup() {
         println!("store matrix: warm memo store is {s:.2}x cold wall time");
+    }
+    if let Some(s) = report.frontier_warm_speedup() {
+        println!("frontier search: warm memo store is {s:.2}x cold wall time");
     }
     let path = p.opt("--json").map(PathBuf::from).unwrap_or_else(|| "BENCH_sim.json".into());
     if let Err(e) = std::fs::write(&path, report.to_json()) {
@@ -771,6 +854,7 @@ fn main() {
         "table1" | "table2" | "fig2" | "fig3" | "fig4" | "fig6" | "fig14" | "fig15" | "fig16"
         | "fig17" | "fig18" | "table4" | "fig19" | "fig20" | "overheads" | "ablations"
         | "ltrfplus" | "headline" | "all" => experiment(cmd.as_str(), rest),
+        "frontier" => frontier_cmd(rest),
         "sweep" => sweep_cmd(rest),
         "fuzz" => fuzz_cmd(rest),
         "snapshot" => snapshot_cmd(rest),

@@ -98,8 +98,16 @@ impl Table {
 }
 
 /// Format helpers shared by experiment drivers.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
 }
 
 pub fn pct(x: f64) -> String {
@@ -140,6 +148,14 @@ mod tests {
         assert_eq!(rows.len(), 1);
         let cells = rows[0].as_array().unwrap();
         assert_eq!(cells[1].as_str(), Some("line\nbreak"));
+    }
+
+    #[test]
+    fn format_helpers_are_fixed_width() {
+        assert_eq!(f1(6.34), "6.3");
+        assert_eq!(f2(1.0), "1.00");
+        assert_eq!(f3(0.12349), "0.123");
+        assert_eq!(pct(0.341), "34.1%");
     }
 
     #[test]

@@ -293,6 +293,77 @@ impl Snapshot {
     }
 }
 
+/// Outcome of a golden-file check, decoupled from the process exit so
+/// the `snapshot --check` contract is testable in-process.
+#[derive(Clone, Debug)]
+pub struct CheckOutcome {
+    /// The CLI exit code: 0 = match, 1 = drift (or unreadable golden),
+    /// 3 = the golden file is missing/unarmed.
+    pub exit_code: i32,
+    /// Human-readable report (stdout on 0, stderr otherwise).
+    pub message: String,
+}
+
+/// The `snapshot --check` decision procedure. `capture` produces the
+/// current snapshot and is only invoked once the golden file exists,
+/// parses, and is armed — an unarmed check must not pay for a capture.
+/// CI treats exit 3 as "bootstrap pending" after a schema change and
+/// anything nonzero else as a hard failure.
+pub fn check_golden(golden: &Path, capture: impl FnOnce() -> Snapshot) -> CheckOutcome {
+    if !golden.exists() {
+        return CheckOutcome {
+            exit_code: 3,
+            message: format!(
+                "snapshot UNARMED: {} does not exist — run `ltrf snapshot --bless` and \
+                 commit it",
+                golden.display()
+            ),
+        };
+    }
+    let gold = match Snapshot::load(golden) {
+        Ok(g) => g,
+        Err(e) => {
+            return CheckOutcome {
+                exit_code: 1,
+                message: format!("{e}\nrun `ltrf snapshot --bless` to recreate the golden file"),
+            }
+        }
+    };
+    if gold.is_empty() {
+        return CheckOutcome {
+            exit_code: 3,
+            message: format!(
+                "snapshot UNARMED: {} has no entries — bless and commit it to arm the \
+                 drift gate",
+                golden.display()
+            ),
+        };
+    }
+    let current = capture();
+    let diffs = gold.diff_against(&current);
+    if diffs.is_empty() {
+        CheckOutcome {
+            exit_code: 0,
+            message: format!(
+                "snapshot OK: {} keys match {}",
+                current.entries.len(),
+                golden.display()
+            ),
+        }
+    } else {
+        let mut message = format!("snapshot DRIFT against {}:\n", golden.display());
+        for d in &diffs {
+            let _ = writeln!(message, "  {d}");
+        }
+        let _ = write!(
+            message,
+            "{} diffs; if intended, re-bless with `ltrf snapshot --bless`",
+            diffs.len()
+        );
+        CheckOutcome { exit_code: 1, message }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,5 +460,63 @@ mod tests {
         let points = snapshot_points(false);
         let keys: std::collections::HashSet<_> = points.iter().map(|p| p.0.clone()).collect();
         assert_eq!(keys.len(), points.len());
+    }
+
+    /// A unique temp path for the check-contract tests.
+    fn tmp_golden(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ltrf-snap-check-{}-{tag}.tsv", std::process::id()))
+    }
+
+    #[test]
+    fn check_contract_missing_golden_is_unarmed_without_capturing() {
+        let path = tmp_golden("missing");
+        let _ = std::fs::remove_file(&path);
+        let out = check_golden(&path, || panic!("unarmed check must not capture"));
+        assert_eq!(out.exit_code, 3);
+        assert!(out.message.contains("UNARMED"), "{}", out.message);
+    }
+
+    #[test]
+    fn check_contract_unreadable_golden_is_a_hard_failure_without_capturing() {
+        let path = tmp_golden("corrupt");
+        std::fs::write(&path, "not\ta\tsnapshot\n").unwrap();
+        let out = check_golden(&path, || panic!("unparseable golden must not capture"));
+        assert_eq!(out.exit_code, 1);
+        assert!(out.message.contains("--bless"), "{}", out.message);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn check_contract_empty_golden_is_unarmed_without_capturing() {
+        let path = tmp_golden("empty");
+        Snapshot::default().save(&path).unwrap();
+        let out = check_golden(&path, || panic!("empty golden must not capture"));
+        assert_eq!(out.exit_code, 3);
+        assert!(out.message.contains("no entries"), "{}", out.message);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn check_contract_match_is_zero_and_drift_is_one() {
+        let path = tmp_golden("armed");
+        tiny_snapshot().save(&path).unwrap();
+        let ok = check_golden(&path, tiny_snapshot);
+        assert_eq!(ok.exit_code, 0);
+        assert!(ok.message.contains("snapshot OK: 1 keys"), "{}", ok.message);
+
+        let drift = check_golden(&path, || {
+            let mut cur = tiny_snapshot();
+            for f in cur.entries.get_mut("kmeans|BL|1.0").unwrap() {
+                if f.0 == "cycles" {
+                    f.1 += 7;
+                }
+            }
+            cur
+        });
+        assert_eq!(drift.exit_code, 1);
+        assert!(drift.message.contains("DRIFT"), "{}", drift.message);
+        assert!(drift.message.contains("cycles 100 -> 107"), "{}", drift.message);
+        assert!(drift.message.contains("1 diffs"), "{}", drift.message);
+        let _ = std::fs::remove_file(&path);
     }
 }

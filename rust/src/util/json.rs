@@ -49,8 +49,11 @@ impl JsonValue {
     /// Numeric member as an exact unsigned integer (rejects fractions and
     /// negatives rather than truncating them silently).
     pub fn as_u64(&self) -> Option<u64> {
+        // `u64::MAX as f64` rounds *up* to 2^64 exactly, so the bound must
+        // be strict: an inclusive compare accepts 18446744073709551616.0,
+        // which `as u64` then saturates to u64::MAX.
         match self {
-            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < u64::MAX as f64 => {
                 Some(*n as u64)
             }
             _ => None,
@@ -376,6 +379,17 @@ mod tests {
         assert_eq!(parse("7").unwrap().as_u64(), Some(7));
         assert_eq!(parse("7.5").unwrap().as_u64(), None);
         assert_eq!(parse("-7").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn as_u64_rejects_the_two_pow_64_boundary() {
+        // 2^64 is exactly representable as f64 (it is `u64::MAX as f64`
+        // after the cast rounds up); `as u64` would saturate it to
+        // u64::MAX, so it must be rejected, not silently clamped.
+        assert_eq!(parse("18446744073709551616").unwrap().as_u64(), None);
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+        // The largest f64 strictly below 2^64 still converts exactly.
+        assert_eq!(parse("18446744073709549568").unwrap().as_u64(), Some(18446744073709549568));
     }
 
     #[test]

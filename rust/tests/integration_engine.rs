@@ -154,29 +154,3 @@ fn undeclared_point_falls_back_and_matches_declared_run() {
     };
     assert_eq!(declared, fallback);
 }
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_shim_matches_the_ticket_api() {
-    // The PR-1 `plan_phase`/`planning`/`stats` protocol survives exactly
-    // one PR as a shim; until it is deleted it must agree with the ticket
-    // API bit-for-bit.
-    let spec = suite::workload_by_name("kmeans").unwrap();
-    let dut = DesignUnderTest::new(HierarchyKind::Ltrf { plus: true }, false);
-    let legacy = {
-        let mut eng = Engine::new(1);
-        eng.plan_phase();
-        assert!(eng.planning());
-        let placeholder = eng.stats(spec, &dut, 4.0);
-        assert_eq!(placeholder, Stats::default(), "planning-phase stats are placeholders");
-        eng.execute();
-        eng.stats(spec, &dut, 4.0)
-    };
-    let ticket = {
-        let mut eng = Engine::new(1);
-        let t = eng.request(spec, &dut, 4.0);
-        eng.execute();
-        eng.redeem(&t)
-    };
-    assert_eq!(legacy, ticket);
-}

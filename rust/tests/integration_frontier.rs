@@ -1,0 +1,135 @@
+//! Integration: the Pareto-frontier auto-tuner (`coordinator::frontier`).
+//!
+//! Pins the acceptance criteria of the frontier driver: the emitted
+//! Pareto set is byte-identical across `--jobs 1` vs `--jobs 8` and
+//! across cold vs warm memo store (a warm re-search simulates nothing,
+//! on-demand scan tails included); every scored candidate sources its
+//! design from the registry; and the sweep-service front end emits
+//! request files a `sweep serve` pass accepts verbatim.
+
+use ltrf::coordinator::engine::Engine;
+use ltrf::coordinator::frontier::{self, FrontierSpace};
+use ltrf::coordinator::{designs, service, MemoStore};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "ltrf-it-frontier-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::SeqCst)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A small space that still spans two capacities (so the capacity axis
+/// of the dominance prune is live) without the full quick workload set.
+fn small_space() -> FrontierSpace {
+    let mut space = FrontierSpace::new(true);
+    space.workloads.truncate(2); // kmeans, gaussian
+    space.capacities = vec![2048, 4096];
+    space
+}
+
+fn render(report: &frontier::FrontierReport) -> String {
+    let mut out: String = report.tables().iter().map(|t| t.render()).collect();
+    out.push_str(&report.summary());
+    out
+}
+
+#[test]
+fn frontier_is_byte_identical_across_jobs() {
+    let space = small_space();
+    let run = |jobs: usize| {
+        let mut eng = Engine::new(jobs);
+        render(&frontier::search(&mut eng, &space))
+    };
+    let one = run(1);
+    let eight = run(8);
+    assert_eq!(one, eight, "--jobs must not change the frontier output");
+    assert!(one.contains("Pareto frontier"));
+}
+
+#[test]
+fn warm_search_simulates_nothing_and_reproduces_the_frontier() {
+    let dir = tmpdir("warm");
+    let space = small_space();
+    let run = |jobs: usize| {
+        let mut eng = Engine::new(jobs);
+        eng.set_store(MemoStore::open(&dir));
+        let report = frontier::search(&mut eng, &space);
+        eng.flush_store().unwrap();
+        (render(&report), eng)
+    };
+    let (cold_text, cold_eng) = run(1);
+    assert!(cold_eng.sims_run() > 0, "cold search simulates its scans");
+
+    // Warm pass at a different job count: cold vs warm AND jobs
+    // determinism in one comparison, exactly like the CI smoke.
+    let (warm_text, warm_eng) = run(8);
+    assert_eq!(
+        warm_eng.sims_run(),
+        0,
+        "a warm re-search must answer every point (scan tails included) from disk"
+    );
+    assert!(warm_eng.store().unwrap().hits() > 0);
+    assert_eq!(warm_eng.store().unwrap().misses(), 0);
+    assert_eq!(cold_text, warm_text, "cold and warm frontiers must be byte-identical");
+}
+
+#[test]
+fn every_candidate_sources_the_registry_and_scores_are_sane() {
+    let space = small_space();
+    let mut eng = Engine::new(4);
+    let report = frontier::search(&mut eng, &space);
+
+    assert_eq!(report.points.len(), designs::REGISTRY.len() * space.capacities.len());
+    let frontier_pts = report.frontier();
+    assert!(!frontier_pts.is_empty(), "some candidate must survive the prune");
+    for p in &report.points {
+        assert_eq!(designs::REGISTRY[p.registry_index].name, p.design, "registry-sourced");
+        assert!(space.capacities.contains(&p.capacity));
+        assert!(p.tolerable_factor >= 1.0);
+        assert!(p.ipc > 0.0 && p.power > 0.0);
+    }
+    // Dominance sanity: no frontier point may dominate another frontier
+    // point on all three axes strictly.
+    for a in &frontier_pts {
+        for b in &frontier_pts {
+            assert!(
+                !(a.ipc > b.ipc && a.power < b.power && a.capacity > b.capacity),
+                "{}-c{} strictly dominates {}-c{} yet both are on the frontier",
+                a.design,
+                a.capacity,
+                b.design,
+                b.capacity
+            );
+        }
+    }
+    // The report's workload names come from the space.
+    assert_eq!(report.workloads.len(), space.workloads.len());
+}
+
+#[test]
+fn emitted_requests_spool_through_the_sweep_service() {
+    let spool = tmpdir("spool");
+    let reqdir = tmpdir("requests");
+    let space = small_space();
+    let files = frontier::emit_requests(&space, &reqdir).unwrap();
+    assert_eq!(files.len(), designs::REGISTRY.len() * space.capacities.len());
+
+    // Every emitted file passes `sweep submit` validation and expands to
+    // a non-empty point set under its own name.
+    for f in &files {
+        let msg = service::submit(&spool, f).unwrap();
+        let stem = f.file_stem().unwrap().to_str().unwrap();
+        assert!(msg.contains(&format!("submitted {stem}:")), "{msg}");
+        let spooled = spool.join(format!("{stem}.json"));
+        let text = std::fs::read_to_string(&spooled).unwrap();
+        let req = service::parse_request(&text, stem).unwrap();
+        assert_eq!(req.name, stem);
+        assert!(!req.points.is_empty());
+    }
+}

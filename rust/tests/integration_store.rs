@@ -145,6 +145,59 @@ fn single_knob_change_re_runs_only_the_affected_points() {
 }
 
 #[test]
+fn on_demand_fallbacks_past_the_plan_horizon_persist_to_the_store() {
+    // The adaptive tolerable-latency scans walk past `tolerable::plan`'s
+    // declared horizon (4x for BL-class designs, 8x for latency-tolerant
+    // ones); those tail points resolve on demand through
+    // `Engine::redeem`'s fallback path. Regression pin: the fallback path
+    // must record into the memo store exactly like executed batch points,
+    // so a second scan over the same design simulates nothing — horizon
+    // tail included.
+    let dir = tmpdir("fallback");
+    let spec = suite::workload_by_name("gaussian").unwrap();
+    let dut = DesignUnderTest::new(ltrf::sim::HierarchyKind::Ltrf { plus: true }, false);
+    let horizon = *ltrf::coordinator::tolerable::plan_grid(&dut).last().unwrap();
+
+    // One grid point strictly past the horizon: whether or not the
+    // early-exit scan reaches it on its own, probing it goes through the
+    // on-demand fallback (it was never declared).
+    let tail_factor = horizon + 0.5;
+
+    let scan = |dir: &PathBuf| -> ((f64, Stats), Engine) {
+        let mut eng = Engine::new(2);
+        eng.set_store(MemoStore::open(dir));
+        ltrf::coordinator::tolerable::plan(&mut eng, &dut, spec);
+        eng.execute();
+        let t = ltrf::coordinator::tolerable::measure(&mut eng, &dut, spec, 0.95);
+        let tail = eng.point(spec, &dut, tail_factor);
+        eng.flush_store().unwrap();
+        ((t, tail), eng)
+    };
+
+    let (cold_out, cold_eng) = scan(&dir);
+    let declared = ltrf::coordinator::tolerable::plan_grid(&dut).len() as u64;
+    assert!(
+        cold_eng.sims_run() > declared,
+        "the past-horizon point must have cost a fallback simulation \
+         ({} sims vs {declared} declared) or this test pins nothing",
+        cold_eng.sims_run()
+    );
+    // The flushed file holds the on-demand tail, not just the executed
+    // batch: a brand-new store resolves the past-horizon point from disk.
+    let mut on_disk = MemoStore::open(&dir);
+    assert!(
+        on_disk.lookup(spec, &dut, tail_factor, CfgTweaks::NONE).is_some(),
+        "the past-horizon fallback point must be in the store file"
+    );
+
+    // Second scan, fresh engine, same directory: zero simulations —
+    // every point (declared grid AND fallback tail) answers from disk.
+    let (warm_out, warm_eng) = scan(&dir);
+    assert_eq!(warm_eng.sims_run(), 0, "fallback points must persist across runs");
+    assert_eq!(cold_out, warm_out, "scan outcome must round-trip through the store");
+}
+
+#[test]
 fn corrupted_store_degrades_to_cold_misses_through_the_engine() {
     let dir = tmpdir("corrupt");
     let pts = points(&["kmeans"], 2, &[1.0]);

@@ -2,8 +2,16 @@
 """Perf-regression gate for the simulator-throughput trajectory.
 
 Compares a freshly measured ``BENCH_sim.json`` (produced by CI's
-perf-smoke step) against the committed baseline copy, and fails when the
-fig14-matrix warp-instruction throughput regresses past a threshold.
+perf-smoke step) against the committed baseline copy, and fails when any
+tracked family regresses past a threshold:
+
+* ``fig14`` rows — warp-instruction throughput (higher is better);
+* ``replay`` rows — the replay hot loop and its dense twin, also by
+  winst/s, so the interval-replay engine's headline win cannot silently
+  erode;
+* ``store`` / ``frontier`` / ``compile`` families — wall seconds (lower
+  is better), with an absolute slack floor so millisecond-scale warm
+  rows do not flap on runner noise.
 
 Arming rule: the threshold only fires when the committed baseline says
 ``"provenance": "measured"``. The growth container that authors this
@@ -14,24 +22,45 @@ measurement. Committing the CI artifact (which `bench.rs` always stamps
 ``measured``) arms the gate.
 
 A measured baseline must also carry nonzero epoch-core diagnostics
-(``epoch_commit_phases_skipped``) — a baseline "measured" with commit
-batching dead would set a dishonest bar.
+(``epoch_commit_phases_skipped``) and nonzero interval-replay
+diagnostics (``epoch_replay_fast_forwards``) — a baseline "measured"
+with commit batching or the replay engine dead would set a dishonest
+bar.
 
-Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold 0.15]
+Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold=0.15]
 Exit 0 = pass (or disarmed), 1 = regression, 2 = usage/shape error.
 """
 
 import json
 import sys
 
-# Rows the gate tracks: the headline trajectory number is the threaded
-# fig14 matrix, but single-thread rows are gated too so a serial-path
-# regression cannot hide behind parallel scaling.
+# Throughput rows the gate tracks (higher winst/s is better): the
+# headline trajectory number is the threaded fig14 matrix, but
+# single-thread rows are gated too so a serial-path regression cannot
+# hide behind parallel scaling, and the replay pair so the interval
+# engine's fast-forward win stays honest relative to its dense twin.
 TRACKED = [
     ("fig14_matrix", "parallel", None),  # None = the report's sim_threads
     ("fig14_matrix", "parallel", 1),
     ("fig14_matrix", "reference", 1),
+    ("replay_hot_loop", "reference", 1),
+    ("replay_hot_loop_dense", "reference", 1),
 ]
+
+# Wall-seconds families (lower is better): (report key, row name, mode).
+# Warm rows are a handful of milliseconds in quick mode, so a relative
+# threshold alone would flap on runner noise; a row only fails when it
+# is BOTH >threshold slower and more than WALL_SLACK_SECONDS slower in
+# absolute terms.
+WALL_FAMILIES = [
+    ("store", "store_sweep", "cold"),
+    ("store", "store_sweep", "warm"),
+    ("frontier", "frontier_search", "cold"),
+    ("frontier", "frontier_search", "warm"),
+    ("compile", "compile_throughput", "cold"),
+    ("compile", "compile_throughput", "warm"),
+]
+WALL_SLACK_SECONDS = 0.05
 
 
 def load(path):
@@ -56,6 +85,13 @@ def find_row(report, name, backend, threads):
     return None, threads
 
 
+def find_family_row(report, family, name, mode):
+    for e in report.get(family, []):
+        if e.get("name") == name and e.get("mode") == mode:
+            return e
+    return None
+
+
 def winst_per_second(entry):
     wall = max(float(entry.get("wall_seconds", 0.0)), 1e-12)
     return float(entry.get("instructions", 0)) / wall
@@ -78,18 +114,38 @@ def main(argv):
 
     print(f"perf_gate: baseline {args[0]} provenance={provenance!r} " f"armed={armed}")
     worst = None
+    compared = 0
     for name, backend, threads in TRACKED:
         base_row, bt = find_row(baseline, name, backend, threads)
         cur_row, ct = find_row(current, name, backend, threads)
         if base_row is None or cur_row is None:
+            # Pre-v4 baselines have no replay rows; that only disarms the
+            # replay pair, never the fig14 trajectory.
             print(f"  {name}/{backend}@{bt}t: missing row " f"(baseline={base_row is not None}, current={cur_row is not None})")
             continue
         base = winst_per_second(base_row)
         cur = winst_per_second(cur_row)
         ratio = cur / max(base, 1e-12)
+        compared += 1
         print(f"  {name}/{backend}@{ct}t: baseline {base:,.0f} winst/s, " f"current {cur:,.0f} winst/s ({ratio:.2f}x)")
         if worst is None or ratio < worst:
             worst = ratio
+
+    wall_fail = []
+    for family, name, mode in WALL_FAMILIES:
+        base_row = find_family_row(baseline, family, name, mode)
+        cur_row = find_family_row(current, family, name, mode)
+        if base_row is None or cur_row is None:
+            print(f"  {family}/{name}/{mode}: missing row " f"(baseline={base_row is not None}, current={cur_row is not None})")
+            continue
+        base = float(base_row.get("wall_seconds", 0.0))
+        cur = float(cur_row.get("wall_seconds", 0.0))
+        ratio = cur / max(base, 1e-12)
+        compared += 1
+        slow = cur > base * (1.0 + threshold) and cur - base > WALL_SLACK_SECONDS
+        print(f"  {family}/{name}/{mode}: baseline {base * 1e3:.2f} ms, " f"current {cur * 1e3:.2f} ms ({ratio:.2f}x wall{', SLOW' if slow else ''})")
+        if slow:
+            wall_fail.append(f"{family}/{name}/{mode} {ratio:.2f}x wall")
 
     if not armed:
         print("perf_gate: baseline is not a committed measurement; comparison is informational only (commit the CI bench artifact to arm the gate)")
@@ -99,13 +155,20 @@ def main(argv):
         print("perf_gate: measured baseline reports zero epoch_commit_phases_skipped — commit batching was dead when it was captured; refusing it as a bar", file=sys.stderr)
         return 1
 
-    if worst is None:
+    if baseline.get("epoch_replay_fast_forwards", 0) <= 0:
+        print("perf_gate: measured baseline reports zero epoch_replay_fast_forwards — the interval-replay engine was dead when it was captured; refusing it as a bar", file=sys.stderr)
+        return 1
+
+    if compared == 0:
         print("perf_gate: no comparable rows between baseline and current", file=sys.stderr)
         return 1
-    if worst < 1.0 - threshold:
-        print(f"perf_gate: FAIL — fig14 throughput dropped to {worst:.2f}x of the measured baseline (threshold {1.0 - threshold:.2f}x)", file=sys.stderr)
+    if wall_fail:
+        print(f"perf_gate: FAIL — wall-time families regressed past {threshold:.0%} (+{WALL_SLACK_SECONDS * 1e3:.0f} ms slack): {'; '.join(wall_fail)}", file=sys.stderr)
         return 1
-    print(f"perf_gate: OK (worst tracked ratio {worst:.2f}x, threshold {1.0 - threshold:.2f}x)")
+    if worst is not None and worst < 1.0 - threshold:
+        print(f"perf_gate: FAIL — tracked throughput dropped to {worst:.2f}x of the measured baseline (threshold {1.0 - threshold:.2f}x)", file=sys.stderr)
+        return 1
+    print(f"perf_gate: OK ({compared} rows; worst throughput ratio " f"{worst:.2f}x, threshold {1.0 - threshold:.2f}x)" if worst is not None else f"perf_gate: OK ({compared} wall rows within threshold)")
     return 0
 
 

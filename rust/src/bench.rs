@@ -25,7 +25,12 @@
 //! * **frontier search** — wall seconds for a small Pareto-frontier
 //!   search (`coordinator::frontier`) against the memo store, cold vs
 //!   warm; the warm pass must simulate nothing (scan tails included) and
-//!   reproduce the cold frontier byte-for-byte.
+//!   reproduce the cold frontier byte-for-byte;
+//! * **replay hot loop** — the interval steady-state replay engine's
+//!   deterministic trigger (a memory-quiescent ALU loop run by a solo
+//!   warp; every suite workload loads inside its loops, so replay never
+//!   fires on the other families), replay-on vs dense, gated on the
+//!   stats being bit-identical modulo the two replay diagnostics.
 //!
 //! Every comparison first asserts the variants' outputs are bit-identical
 //! on the measured points — a speedup over a diverging simulator (or a
@@ -168,6 +173,12 @@ pub struct BenchReport {
     /// that claims otherwise).
     pub epoch_commit_phases_skipped: u64,
     pub epoch_wheel_rollovers: u64,
+    /// Replay-engine diagnostics from the replay family's equivalence-gate
+    /// run (plus any other reference run that happened to fast-forward).
+    /// Nonzero values prove the interval replay engine was live; the perf
+    /// gate refuses a measured baseline claiming otherwise.
+    pub epoch_replay_fast_forwards: u64,
+    pub epoch_replay_cycles_saved: u64,
 }
 
 impl BenchReport {
@@ -184,6 +195,15 @@ impl BenchReport {
         let reference = self.entry("fig14_matrix", "reference", 1)?;
         let parallel = self.entry("fig14_matrix", "parallel", self.sim_threads)?;
         Some(reference.wall_seconds / parallel.wall_seconds.max(1e-12))
+    }
+
+    /// Wall-time speedup of the replay-enabled hot loop over its dense
+    /// twin (the interval-replay headline: same simulated interval, the
+    /// steady-state iterations fast-forwarded instead of re-stepped).
+    pub fn replay_speedup(&self) -> Option<f64> {
+        let on = self.entry("replay_hot_loop", "reference", 1)?;
+        let dense = self.entry("replay_hot_loop_dense", "reference", 1)?;
+        Some(dense.wall_seconds / on.wall_seconds.max(1e-12))
     }
 
     /// Compile-entry lookup by mode (`"cold"` / `"warm"`).
@@ -236,10 +256,14 @@ impl BenchReport {
     /// gate (`ci/perf_gate.py`) arms its regression threshold only when
     /// the committed baseline says `measured`, so estimates can never
     /// fail (or vouch for) a real measurement.
+    ///
+    /// v4 adds the replay family (`replay_hot_loop` /
+    /// `replay_hot_loop_dense` entries, `replay_speedup_over_dense`) and
+    /// the top-level replay-engine liveness counters.
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v3\",");
+        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v4\",");
         let _ = writeln!(out, "  \"provenance\": \"measured\",");
         let _ = writeln!(
             out,
@@ -261,8 +285,21 @@ impl BenchReport {
             self.epoch_commit_phases_skipped
         );
         let _ = writeln!(out, "  \"epoch_wheel_rollovers\": {},", self.epoch_wheel_rollovers);
+        let _ = writeln!(
+            out,
+            "  \"epoch_replay_fast_forwards\": {},",
+            self.epoch_replay_fast_forwards
+        );
+        let _ = writeln!(
+            out,
+            "  \"epoch_replay_cycles_saved\": {},",
+            self.epoch_replay_cycles_saved
+        );
         if let Some(s) = self.fig14_speedup() {
             let _ = writeln!(out, "  \"fig14_speedup_parallel_over_reference\": {:.4},", s);
+        }
+        if let Some(s) = self.replay_speedup() {
+            let _ = writeln!(out, "  \"replay_speedup_over_dense\": {:.4},", s);
         }
         if let Some(s) = self.compile_warm_speedup() {
             let _ = writeln!(out, "  \"compile_warm_speedup\": {:.4},", s);
@@ -479,6 +516,8 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
     for st in &reference {
         report.epoch_commit_phases_skipped += st.commit_phases_skipped;
         report.epoch_wheel_rollovers += st.event_wheel_rollovers;
+        report.epoch_replay_fast_forwards += st.replay_fast_forwards;
+        report.epoch_replay_cycles_saved += st.replay_cycles_saved;
     }
     for &(backend, threads) in &backend_variants(opts) {
         if backend == SimBackend::Reference {
@@ -509,6 +548,86 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
             backend: backend.name(),
             sim_threads: threads,
             wall_seconds: wall,
+            simulated_cycles: cycles,
+            instructions: insts,
+        });
+    }
+}
+
+/// The replay family's kernel + config: a memory-quiescent ALU loop run
+/// by a solo warp (`warps_per_sm: 1` clamps residency), the interval
+/// replay engine's deterministic trigger. `trip` scales the steady state
+/// the engine gets to fast-forward.
+fn replay_points(replay: bool, trip: u32) -> Vec<Point> {
+    let src = format!(
+        "
+.kernel replay_hot
+  mov r0, #0
+  mov r1, #7
+L1:
+  add r2, r0, r1
+  add r3, r2, r1
+  add r4, r3, r2
+  add r0, r0, #1
+  setp.lt p0, r0, #{trip}
+  @p0 bra L1
+  st.global [r0], r4
+  exit
+"
+    );
+    let kernel = crate::ir::parser::parse(&src).expect("replay bench kernel parses");
+    let cfg = SimConfig {
+        warps_per_sm: 1,
+        replay,
+        ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
+    };
+    let ck = crate::compiler::compile(&kernel, gpu::compile_options(&cfg, false));
+    vec![Point { ck, cfg }]
+}
+
+/// Measure the replay family: the same hot loop with the interval replay
+/// engine on (`replay_hot_loop`) and off (`replay_hot_loop_dense`),
+/// reference backend — the replay engine is a *serial* hot-loop
+/// optimization, so thread scaling is the other families' story. Gated
+/// on the two runs being bit-identical modulo the two replay diagnostics
+/// (the in-bench form of the replay-equivalence oracle), and on the
+/// engine actually fast-forwarding — a "speedup" from an engine that
+/// never fired would be measurement noise.
+fn measure_replay_family(report: &mut BenchReport, opts: &BenchOptions) {
+    let trip: u32 = if opts.quick { 50_000 } else { 200_000 };
+    let on_pts = replay_points(true, trip);
+    let off_pts = replay_points(false, trip);
+    // Equivalence + liveness gate (untimed).
+    let (_, _, on_stats) = run_once(&on_pts, SimBackend::Reference, 1);
+    let (_, _, off_stats) = run_once(&off_pts, SimBackend::Reference, 1);
+    assert!(
+        on_stats[0].replay_fast_forwards > 0,
+        "replay must fire on its own bench kernel"
+    );
+    assert_eq!(off_stats[0].replay_fast_forwards, 0, "dense run must not book replay work");
+    if let Some(diff) =
+        crate::scenario::oracles::replay_masked_diff(&on_stats[0], &off_stats[0])
+    {
+        panic!("bench refuses to time a diverging replay engine: {diff}");
+    }
+    report.epoch_replay_fast_forwards += on_stats[0].replay_fast_forwards;
+    report.epoch_replay_cycles_saved += on_stats[0].replay_cycles_saved;
+    // Timed rows.
+    let iters = opts.iters.max(1);
+    for (name, pts) in [("replay_hot_loop", &on_pts), ("replay_hot_loop_dense", &off_pts)] {
+        let mut cycles = 0;
+        let mut insts = 0;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let (c, i, _) = run_once(pts, SimBackend::Reference, 1);
+            cycles = c;
+            insts = i;
+        }
+        report.entries.push(BenchEntry {
+            name: name.to_string(),
+            backend: SimBackend::Reference.name(),
+            sim_threads: 1,
+            wall_seconds: t0.elapsed().as_secs_f64() / iters as f64,
             simulated_cycles: cycles,
             instructions: insts,
         });
@@ -777,6 +896,7 @@ pub fn run_bench(opts: &BenchOptions) -> BenchReport {
     measure_frontier_family(&mut report, opts);
     measure_family(&mut report, "hot_loop_1sm", &hot_points(1), opts);
     measure_family(&mut report, "hot_loop_8sm", &hot_points(num_sms), opts);
+    measure_replay_family(&mut report, opts);
     measure_policy_family(&mut report, opts);
     measure_family(&mut report, "fig14_matrix", &fig14_points(opts, num_sms), opts);
     report
@@ -793,6 +913,8 @@ mod tests {
             sim_threads: 4,
             epoch_commit_phases_skipped: 17,
             epoch_wheel_rollovers: 9,
+            epoch_replay_fast_forwards: 23,
+            epoch_replay_cycles_saved: 4600,
             ..Default::default()
         };
         r.entries.push(BenchEntry {
@@ -810,6 +932,22 @@ mod tests {
             wall_seconds: 1.0,
             simulated_cycles: 1000,
             instructions: 500,
+        });
+        r.entries.push(BenchEntry {
+            name: "replay_hot_loop".into(),
+            backend: "reference",
+            sim_threads: 1,
+            wall_seconds: 0.2,
+            simulated_cycles: 4000,
+            instructions: 2000,
+        });
+        r.entries.push(BenchEntry {
+            name: "replay_hot_loop_dense".into(),
+            backend: "reference",
+            sim_threads: 1,
+            wall_seconds: 1.0,
+            simulated_cycles: 4000,
+            instructions: 2000,
         });
         r.compile_entries.push(CompileBenchEntry {
             name: "compile_throughput".into(),
@@ -847,17 +985,22 @@ mod tests {
         });
         let speedup = r.fig14_speedup().expect("both entries present");
         assert!((speedup - 2.0).abs() < 1e-9);
+        let rspeed = r.replay_speedup().expect("both replay entries present");
+        assert!((rspeed - 5.0).abs() < 1e-9);
         let cspeed = r.compile_warm_speedup().expect("both compile entries present");
         assert!((cspeed - 4.0).abs() < 1e-9);
         let fspeed = r.frontier_warm_speedup().expect("both frontier entries present");
         assert!((fspeed - 8.0).abs() < 1e-9);
         let json = r.to_json();
-        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v3\""));
+        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v4\""));
         assert!(json.contains("\"provenance\": \"measured\""));
         assert!(json.contains("\"host\": {\"os\": "));
         assert!(json.contains("\"epoch_commit_phases_skipped\": 17"));
         assert!(json.contains("\"epoch_wheel_rollovers\": 9"));
+        assert!(json.contains("\"epoch_replay_fast_forwards\": 23"));
+        assert!(json.contains("\"epoch_replay_cycles_saved\": 4600"));
         assert!(json.contains("\"fig14_speedup_parallel_over_reference\": 2.0000"));
+        assert!(json.contains("\"replay_speedup_over_dense\": 5.0000"));
         assert!(json.contains("\"compile_warm_speedup\": 4.0000"));
         assert!(json.contains("\"cycles_per_second\": 500.0"));
         assert!(json.contains("\"mode\": \"warm\""));
@@ -926,8 +1069,26 @@ mod tests {
     }
 
     #[test]
+    fn replay_family_fires_equivalence_gated_and_fast() {
+        // The replay family must (a) actually trip the replay engine,
+        // (b) pass its own masked equivalence gate (it panics otherwise),
+        // and (c) produce both trajectory rows — the measured-baseline
+        // liveness the perf gate keys on.
+        let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
+        let opts = BenchOptions { quick: true, sim_threads: 1, iters: 1 };
+        measure_replay_family(&mut r, &opts);
+        assert!(r.epoch_replay_fast_forwards > 0, "replay engine never fired");
+        assert!(r.epoch_replay_cycles_saved > 0, "fast-forwards claimed no cycles");
+        let on = r.entry("replay_hot_loop", "reference", 1).expect("replay-on row");
+        let dense = r.entry("replay_hot_loop_dense", "reference", 1).expect("dense row");
+        assert_eq!(on.simulated_cycles, dense.simulated_cycles, "same simulated interval");
+        assert_eq!(on.instructions, dense.instructions, "same warp-instruction work");
+        assert!(r.replay_speedup().is_some());
+    }
+
+    #[test]
     fn measure_family_accumulates_epoch_diagnostics() {
-        // The v3 report must carry nonzero epoch-core diagnostics from
+        // The report must carry nonzero epoch-core diagnostics from
         // the equivalence-gate runs — the perf gate keys on them to
         // prove commit batching was live in a measured baseline.
         let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };

@@ -70,6 +70,10 @@ pub struct CfgTweaks {
     /// 1 inside engine jobs (jobs are already parallel at job
     /// granularity; nesting is opt-in via `--sim-threads`).
     pub sim_threads: Option<usize>,
+    /// Interval steady-state replay toggle (`SimConfig::replay`). Part of
+    /// the job key so the replay-equivalence oracle's dense rerun never
+    /// dedups against the replay-enabled result.
+    pub replay: Option<bool>,
 }
 
 impl CfgTweaks {
@@ -79,6 +83,7 @@ impl CfgTweaks {
         bank_map: None,
         backend: None,
         sim_threads: None,
+        replay: None,
     };
 
     /// Backend/thread selection only (the equivalence oracle and the
@@ -100,6 +105,7 @@ impl CfgTweaks {
             bank_map: self.bank_map.or(base.bank_map),
             backend: self.backend.or(base.backend),
             sim_threads: self.sim_threads.or(base.sim_threads),
+            replay: self.replay.or(base.replay),
         }
     }
 
@@ -121,6 +127,9 @@ impl CfgTweaks {
         }
         if let Some(v) = self.sim_threads {
             cfg.sim_threads = v;
+        }
+        if let Some(v) = self.replay {
+            cfg.replay = v;
         }
     }
 }
@@ -788,9 +797,13 @@ impl Engine {
         let (covered, registered) = self.design_coverage();
         let mut epoch_skipped = 0u64;
         let mut wheel_rollovers = 0u64;
+        let mut replay_ffs = 0u64;
+        let mut replay_saved = 0u64;
         for st in self.results.map.values() {
             epoch_skipped += st.commit_phases_skipped;
             wheel_rollovers += st.event_wheel_rollovers;
+            replay_ffs += st.replay_fast_forwards;
+            replay_saved += st.replay_cycles_saved;
         }
         // The disk-store segment is the CI warm-smoke telemetry: a warm
         // re-sweep must report >0 disk hits and 0 points simulated.
@@ -799,7 +812,7 @@ impl Engine {
             None => "disk store off".to_string(),
         };
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {}), {}",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {}), replay fast-forwards {} (cycles saved {}), {}",
             self.lookups,
             self.sims_run,
             report.compile_hits,
@@ -811,6 +824,8 @@ impl Engine {
             registered,
             epoch_skipped,
             wheel_rollovers,
+            replay_ffs,
+            replay_saved,
             store_part,
         )
     }

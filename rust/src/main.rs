@@ -511,6 +511,12 @@ fn bench_cmd(rest: &[String]) {
     if let Some(s) = report.fig14_speedup() {
         println!("fig14 matrix: parallel x{} is {s:.2}x reference wall time", report.sim_threads);
     }
+    if let Some(s) = report.replay_speedup() {
+        println!(
+            "replay hot loop: interval replay is {s:.2}x dense wall time (replay fast-forwards {}, cycles saved {})",
+            report.epoch_replay_fast_forwards, report.epoch_replay_cycles_saved
+        );
+    }
     if let Some(s) = report.compile_warm_speedup() {
         println!("compile matrix: warm analysis cache is {s:.2}x cold wall time");
     }
@@ -774,8 +780,11 @@ fn run_cmd(rest: &[String]) {
         st.mrf_access_reduction()
     );
     println!(
-        "  epoch core: commit phases skipped {}  wheel rollovers {}",
-        st.commit_phases_skipped, st.event_wheel_rollovers
+        "  epoch core: commit phases skipped {}  wheel rollovers {}  replay fast-forwards {} (cycles saved {})",
+        st.commit_phases_skipped,
+        st.event_wheel_rollovers,
+        st.replay_fast_forwards,
+        st.replay_cycles_saved
     );
 }
 

@@ -58,6 +58,13 @@ pub enum OracleKind {
     /// `Reference` on every matrix point (field-for-field), including
     /// multi-SM points with the threaded step phase at 1 and 4 workers.
     BackendEquivalence,
+    /// Interval steady-state replay is an invisible optimization: a
+    /// replay-enabled run produces bit-identical `Stats` to a dense
+    /// (`replay: false`) run on every matrix point — field-for-field via
+    /// the snapshot schema, masking only the two replay diagnostics,
+    /// which are *defined* to differ — including multi-SM points at 1
+    /// and 4 step threads.
+    ReplayEquivalence,
     /// MRF latency changes timing only: architectural work (instructions,
     /// finished warps) is bit-identical across latency factors.
     TimingInvariance,
@@ -70,7 +77,7 @@ pub enum OracleKind {
 }
 
 impl OracleKind {
-    pub const ALL: [OracleKind; 10] = [
+    pub const ALL: [OracleKind; 11] = [
         OracleKind::Validate,
         OracleKind::RoundTrip,
         OracleKind::ExecEquivalence,
@@ -78,6 +85,7 @@ impl OracleKind {
         OracleKind::PassEquivalence,
         OracleKind::SimConservation,
         OracleKind::BackendEquivalence,
+        OracleKind::ReplayEquivalence,
         OracleKind::TimingInvariance,
         OracleKind::TlpMonotonic,
         OracleKind::RerunDeterminism,
@@ -92,6 +100,7 @@ impl OracleKind {
             OracleKind::PassEquivalence => "pass-equivalence",
             OracleKind::SimConservation => "sim-conservation",
             OracleKind::BackendEquivalence => "backend-equivalence",
+            OracleKind::ReplayEquivalence => "replay-equivalence",
             OracleKind::TimingInvariance => "timing-invariance",
             OracleKind::TlpMonotonic => "tlp-monotonic",
             OracleKind::RerunDeterminism => "rerun-determinism",
@@ -174,6 +183,7 @@ pub fn run_oracle(k: &Kernel, kind: OracleKind, cs: &mut CheckStats) -> Result<(
         OracleKind::PassEquivalence => oracle_pass_equivalence(k),
         OracleKind::SimConservation => oracle_conservation(k, cs),
         OracleKind::BackendEquivalence => oracle_backend_equivalence(k, cs),
+        OracleKind::ReplayEquivalence => oracle_replay_equivalence(k, cs),
         OracleKind::TimingInvariance => oracle_timing_invariance(k, cs),
         OracleKind::TlpMonotonic => oracle_tlp_monotonic(k, cs),
         OracleKind::RerunDeterminism => oracle_rerun_determinism(k, cs),
@@ -498,6 +508,77 @@ fn oracle_backend_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), Str
                     "{name} x{} SMs, {threads} sim-threads: Parallel diverges: {}",
                     cfg.num_sms,
                     stats_field_diff(&reference, &parallel)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The counters the replay-equivalence oracle masks. The two replay
+/// diagnostics are *defined* to differ between a replay-on and a dense
+/// run (they count the optimization's own work); every other field in
+/// the snapshot schema must be bit-identical. Public so the integration
+/// suite can prove a deliberately stale replay cell trips the masked
+/// comparison (the teeth behind this masking choice).
+pub const REPLAY_DIAGNOSTICS: [&'static str; 2] =
+    ["replay_fast_forwards", "replay_cycles_saved"];
+
+/// Field-for-field diff of two `Stats` with the replay diagnostics
+/// masked; `None` means equivalent.
+pub fn replay_masked_diff(on: &Stats, off: &Stats) -> Option<String> {
+    let fa = super::snapshot::stat_fields(on);
+    let fb = super::snapshot::stat_fields(off);
+    let diffs: Vec<String> = fa
+        .iter()
+        .zip(&fb)
+        .filter(|((name, _), _)| !REPLAY_DIAGNOSTICS.contains(name))
+        .filter(|((_, a), (_, b))| a != b)
+        .map(|(&(name, a), &(_, b))| format!("{name} {a} vs {b}"))
+        .collect();
+    if diffs.is_empty() {
+        None
+    } else {
+        Some(diffs.join(", "))
+    }
+}
+
+fn oracle_replay_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
+    let dense_tweaks = CfgTweaks { replay: Some(false), ..CfgTweaks::NONE };
+    // Single-SM: the full matrix, both runs through the engine's point
+    // runner so the oracle also covers the `CfgTweaks::replay` plumbing —
+    // a dense rerun that still books replay work means the tweak never
+    // reached the config (or deduped against the replay-on point).
+    for (name, dut, factor) in sim_matrix() {
+        let (on, _, _) = run_kernel_point(k, &dut, factor, CfgTweaks::NONE, Some(CYCLE_CAP));
+        let (off, _, _) = run_kernel_point(k, &dut, factor, dense_tweaks, Some(CYCLE_CAP));
+        cs.sims += 2;
+        if off.replay_fast_forwards != 0 || off.replay_cycles_saved != 0 {
+            return Err(format!(
+                "{name}: dense run booked replay work — `replay: Some(false)` not applied"
+            ));
+        }
+        if let Some(diff) = replay_masked_diff(&on, &off) {
+            return Err(format!("{name}: replay-on diverges from dense: {diff}"));
+        }
+    }
+    // Multi-SM at 1 and 4 step threads: solo mode arms only once the
+    // second-to-last SM finishes, so the dense comparison here covers the
+    // drivers' arming points and the elided-epoch folding in `finish`.
+    for (name, dut, factor) in multi_sm_points() {
+        let (on, _, ck, cfg) = sim_point(k, &dut, factor);
+        cs.sims += 1;
+        for threads in [1usize, 4] {
+            let mut off_cfg = cfg;
+            off_cfg.backend = SimBackend::Parallel;
+            off_cfg.sim_threads = threads;
+            off_cfg.replay = false;
+            let off = gpu::run(&ck, &off_cfg);
+            cs.sims += 1;
+            if let Some(diff) = replay_masked_diff(&on, &off) {
+                return Err(format!(
+                    "{name} x{} SMs, {threads} sim-threads: dense diverges from replay-on: {diff}",
+                    cfg.num_sms
                 ));
             }
         }

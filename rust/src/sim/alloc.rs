@@ -9,7 +9,8 @@
 use std::collections::VecDeque;
 
 /// FIFO allocator over `capacity` slots (bank indices / warp offsets).
-#[derive(Clone, Debug)]
+/// `PartialEq` feeds the replay engine's WCB fingerprint comparison.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct AddressAllocationUnit {
     unused: VecDeque<u8>,
     occupied_count: usize,

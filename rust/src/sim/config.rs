@@ -194,6 +194,13 @@ pub struct SimConfig {
     /// returns, before the warp re-enters the active pool (§3.2). Ablation
     /// knob; disabling it serializes refetch with pool occupancy.
     pub early_refetch: bool,
+    /// Interval steady-state replay: when a warp is the sole active warp
+    /// on its SM with no pending writebacks/misses and no wheel event in
+    /// range, fast-forward repeated loop iterations from a recorded
+    /// replay cell instead of dense stepping (see `sim::sm`). Stats are
+    /// bit-identical either way except the two `replay_*` diagnostic
+    /// counters — enforced by the replay-equivalence oracle.
+    pub replay: bool,
     /// Safety valve for runaway simulations.
     pub max_cycles: u64,
     /// Multi-SM stepping strategy (see [`SimBackend`]).
@@ -227,6 +234,7 @@ impl Default for SimConfig {
             hierarchy: HierarchyKind::Baseline,
             bank_map: BankMap::Interleave,
             early_refetch: true,
+            replay: true,
             max_cycles: 30_000_000,
             backend: SimBackend::Reference,
             sim_threads: 1,

@@ -37,7 +37,7 @@
 //! figure driver, bench family, and the CLI picks it up from there.
 
 use super::config::{HierarchyKind, SimConfig};
-use super::regfile::{BankArray, TransferLink};
+use super::regfile::{BankArray, ReadBatch, TransferLink};
 use super::stats::Stats;
 use super::warp::WarpSim;
 use crate::compiler::{BankMap, CompiledKernel};
@@ -81,6 +81,12 @@ pub struct HierarchyResources {
     pub rf_cache: BankArray,
     /// Narrow MRF→RF$ refill crossbar (§5.2).
     pub xbar: TransferLink,
+    /// Reusable scratch for per-issue-cycle batched bank arbitration
+    /// (`BankArray::schedule_read_batch`): every `read_operands`
+    /// implementation and the prefetch path collect the cycle's reads
+    /// here and resolve them in one pass instead of walking
+    /// `schedule_reg` per operand.
+    pub read_batch: ReadBatch,
 }
 
 impl HierarchyResources {
@@ -100,6 +106,7 @@ impl HierarchyResources {
                 BankMap::Interleave,
             ),
             xbar: TransferLink::new(cfg.xbar_regs_per_cycle, cfg.xbar_latency),
+            read_batch: ReadBatch::new(),
         }
     }
 
@@ -118,15 +125,25 @@ impl HierarchyResources {
         stats.prefetch_ops += 1;
         stats.prefetch_regs += fetch.len() as u64;
         let conflicts_before = self.mrf.conflict_cycles;
-        let mut done = now;
+        self.read_batch.clear();
         for r in fetch.iter() {
-            let t = self.mrf.schedule_reg(r, warp_id, now);
+            self.read_batch.push(self.mrf.bank_of(r, warp_id));
             stats.mrf_reads += 1;
-            let arr = self.xbar.transfer(t);
+        }
+        self.mrf.schedule_read_batch(&mut self.read_batch, now);
+        let mut done = now;
+        for i in 0..self.read_batch.len() {
+            let arr = self.xbar.transfer(self.read_batch.time(i));
             done = done.max(arr);
         }
+        // Book this prefetch's raw conflict-cycle delta. (This used to be
+        // divided by `occupancy_cycles`, which is a *per-access* constant,
+        // not a normalizer for the cumulative delta — the counter decayed
+        // toward zero as runs progressed instead of counting each
+        // prefetch's serialization. Pinned by
+        // `back_to_back_prefetches_book_identical_conflicts` below.)
         let delta = self.mrf.conflict_cycles - conflicts_before;
-        stats.prefetch_bank_conflicts += delta / self.mrf.occupancy_cycles.max(1) as u64;
+        stats.prefetch_bank_conflicts += delta;
         done
     }
 }
@@ -262,10 +279,14 @@ impl HierarchyModel for BaselineModel {
         stats: &mut Stats,
     ) -> u64 {
         let mut ready = now + 1; // decode/collect minimum
+        res.read_batch.clear();
         for r in inst.uses() {
-            let t = res.mrf.schedule_reg(r, warp.id, now);
+            res.read_batch.push(res.mrf.bank_of(r, warp.id));
             stats.mrf_reads += 1;
-            ready = ready.max(t);
+        }
+        res.mrf.schedule_read_batch(&mut res.read_batch, now);
+        for i in 0..res.read_batch.len() {
+            ready = ready.max(res.read_batch.time(i));
         }
         ready
     }
@@ -312,6 +333,7 @@ impl HierarchyModel for RfcModel {
         stats: &mut Stats,
     ) -> u64 {
         let mut ready = now + 1;
+        res.read_batch.clear();
         for r in inst.uses() {
             if warp.rfc.contains(r) {
                 stats.rfc_hits += 1;
@@ -323,9 +345,12 @@ impl HierarchyModel for RfcModel {
                 // written, then read back soon) — Gebhart ISCA'11.
                 stats.rfc_misses += 1;
                 stats.mrf_reads += 1;
-                let t = res.mrf.schedule_reg(r, warp.id, now);
-                ready = ready.max(t);
+                res.read_batch.push(res.mrf.bank_of(r, warp.id));
             }
+        }
+        res.mrf.schedule_read_batch(&mut res.read_batch, now);
+        for i in 0..res.read_batch.len() {
+            ready = ready.max(res.read_batch.time(i));
         }
         ready
     }
@@ -384,6 +409,7 @@ impl HierarchyModel for ShrfModel {
         stats: &mut Stats,
     ) -> u64 {
         let mut ready = now + 1;
+        res.read_batch.clear();
         for r in inst.uses() {
             if warp.wcb.valid.contains(r) {
                 stats.rfc_hits += 1;
@@ -391,14 +417,21 @@ impl HierarchyModel for ShrfModel {
                 let slot = warp.wcb.bank_of(r).unwrap() as usize;
                 ready = ready.max(res.rf_cache.schedule(slot, now));
             } else {
-                // On-demand fill from the MRF.
+                // On-demand fill from the MRF. The allocation happens at
+                // classification time (so a repeated operand hits, as in
+                // the per-operand chain); only the MRF bank timing is
+                // deferred to the batched resolver — `schedule_reg` never
+                // observed WCB state, so the split is invisible.
                 stats.rfc_misses += 1;
                 stats.mrf_reads += 1;
-                let t = res.mrf.schedule_reg(r, warp.id, now);
-                let arr = res.xbar.transfer(t);
+                res.read_batch.push(res.mrf.bank_of(r, warp.id));
                 warp.wcb.allocate(r);
-                ready = ready.max(arr);
             }
+        }
+        res.mrf.schedule_read_batch(&mut res.read_batch, now);
+        for i in 0..res.read_batch.len() {
+            let arr = res.xbar.transfer(res.read_batch.time(i));
+            ready = ready.max(arr);
         }
         ready
     }
@@ -478,6 +511,7 @@ impl HierarchyModel for LtrfModel {
         stats: &mut Stats,
     ) -> u64 {
         let mut ready = now + 1;
+        res.read_batch.clear();
         for r in inst.uses() {
             // The central guarantee (§3.1): every in-interval
             // access is serviced from the RF$.
@@ -488,8 +522,13 @@ impl HierarchyModel for LtrfModel {
                 warp.wcb.current_interval
             );
             stats.cache_reads += 1;
-            let slot = warp.wcb.bank_of(r).unwrap_or(0) as usize;
-            ready = ready.max(res.rf_cache.schedule(slot, now));
+            res.read_batch.push(warp.wcb.bank_of(r).unwrap_or(0) as usize);
+        }
+        // All in-interval reads hit the RF$, so the whole instruction is
+        // one cache-bank batch — the hottest read path in the matrix.
+        res.rf_cache.schedule_read_batch(&mut res.read_batch, now);
+        for i in 0..res.read_batch.len() {
+            ready = ready.max(res.read_batch.time(i));
         }
         ready
     }
@@ -666,6 +705,7 @@ impl HierarchyModel for CarfModel {
     ) -> u64 {
         let keep = RegSet::from_iter(inst.touched());
         let mut ready = now + 1;
+        res.read_batch.clear();
         for r in inst.uses() {
             if warp.wcb.valid.contains(r) {
                 stats.rfc_hits += 1;
@@ -673,15 +713,22 @@ impl HierarchyModel for CarfModel {
                 let slot = warp.wcb.bank_of(r).unwrap() as usize;
                 ready = ready.max(res.rf_cache.schedule(slot, now));
             } else {
-                // On-demand fill from the MRF (no prefetch).
+                // On-demand fill from the MRF (no prefetch). Eviction +
+                // allocation run at classification time in operand order
+                // (make_room reads WCB state and uses the MRF *write*
+                // port, disjoint from the batched read timeline); only
+                // the MRF read timing is deferred to the batch resolver.
                 stats.rfc_misses += 1;
                 stats.mrf_reads += 1;
-                let t = res.mrf.schedule_reg(r, warp.id, now);
-                let arr = res.xbar.transfer(t);
+                res.read_batch.push(res.mrf.bank_of(r, warp.id));
                 Self::make_room(res, warp, &keep, now, stats);
                 warp.wcb.allocate(r);
-                ready = ready.max(arr);
             }
+        }
+        res.mrf.schedule_read_batch(&mut res.read_batch, now);
+        for i in 0..res.read_batch.len() {
+            let arr = res.xbar.transfer(res.read_batch.time(i));
+            ready = ready.max(arr);
         }
         ready
     }
@@ -1110,6 +1157,33 @@ L1:
         let ck = compile(&k, CompileOptions::ltrf(16));
         assert_eq!(h.on_activate(&mut w, &ck, 200, &mut st), None);
         assert_eq!(st.activations, 1);
+    }
+
+    #[test]
+    fn back_to_back_prefetches_book_identical_conflicts() {
+        // Two identical prefetches from drained bank state must book
+        // identical — and *raw-cycle* — conflict counts. (Regression: the
+        // delta used to be divided by `occupancy_cycles`, deflating the
+        // counter on non-pipelined banks.)
+        let mut cfg = SimConfig::default();
+        cfg.mrf_banks = 2;
+        cfg.mrf_access_cycles = 4;
+        cfg.mrf_occupancy_cycles = 4; // non-pipelined
+        let mut res = HierarchyResources::new(&cfg);
+        let mut st = Stats::default();
+        // r0 and r2 share bank 0 for warp 0 (2-bank interleave): the
+        // second read queues a full 4-cycle occupancy behind the first.
+        let fetch = RegSet::from_iter([0u16, 2]);
+        let _ = res.run_prefetch(&fetch, 0, 0, &mut st);
+        let first = st.prefetch_bank_conflicts;
+        assert_eq!(first, 4, "raw conflict cycles, not delta/occupancy");
+        // Far enough out that bank and crossbar state have drained.
+        let _ = res.run_prefetch(&fetch, 0, 1000, &mut st);
+        assert_eq!(
+            st.prefetch_bank_conflicts - first,
+            first,
+            "identical prefetch must book an identical conflict count"
+        );
     }
 
     #[test]

@@ -102,6 +102,126 @@ impl BankArray {
     pub fn free_at(&self, bank: usize) -> u64 {
         self.busy_until[bank]
     }
+
+    /// Read-port timeline relative to `base`: per-bank
+    /// `busy_until.saturating_sub(base)`. Values at or before `base`
+    /// clamp to 0, which is behaviorally lossless — every future access
+    /// starts at `max(busy, now)` with `now >= base`, so all such values
+    /// are interchangeable. Feeds the replay engine's entry-state
+    /// fingerprint and end-state capture.
+    pub fn read_times_rel(&self, base: u64) -> Vec<u64> {
+        self.busy_until.iter().map(|&t| t.saturating_sub(base)).collect()
+    }
+
+    /// Write-port timeline relative to `base` (see [`Self::read_times_rel`]).
+    pub fn write_times_rel(&self, base: u64) -> Vec<u64> {
+        self.write_busy_until.iter().map(|&t| t.saturating_sub(base)).collect()
+    }
+
+    /// Overwrite one bank's read-port busy-until time (replay fast-forward
+    /// applies a recorded iteration's end-state timeline).
+    pub fn set_read_time(&mut self, bank: usize, t: u64) {
+        self.busy_until[bank] = t;
+    }
+
+    /// Overwrite one bank's write-port busy-until time.
+    pub fn set_write_time(&mut self, bank: usize, t: u64) {
+        self.write_busy_until[bank] = t;
+    }
+
+    /// Resolve a whole issue-cycle's read set in one pass (the batched
+    /// arbitration path). Every request in `batch` starts at `now`; the
+    /// resolver reproduces the sequential [`BankArray::schedule`] chain
+    /// bit-exactly — same per-request ready times (in push order), same
+    /// `conflict_cycles`/`accesses` bookkeeping, same final bank
+    /// timeline — while writing each touched bank's busy-until entry
+    /// once, walking the u64 occupancy bitmask words instead of the
+    /// whole bank array. Pinned against the sequential chain by the
+    /// `batched_reads_*` tests below.
+    pub fn schedule_read_batch(&mut self, batch: &mut ReadBatch, now: u64) {
+        batch.times.clear();
+        if batch.banks.is_empty() {
+            return;
+        }
+        let n = self.busy_until.len();
+        if batch.cursor.len() < n {
+            batch.cursor.resize(n, 0);
+            batch.touched.resize((n + 63) / 64, 0);
+        }
+        for &b in &batch.banks {
+            let b = b as usize;
+            let (w, bit) = (b >> 6, 1u64 << (b & 63));
+            if batch.touched[w] & bit == 0 {
+                batch.touched[w] |= bit;
+                batch.cursor[b] = self.busy_until[b].max(now);
+            }
+            let start = batch.cursor[b];
+            self.conflict_cycles += start - now;
+            batch.cursor[b] = start + self.occupancy_cycles as u64;
+            batch.times.push(start + self.access_cycles as u64);
+        }
+        self.accesses += batch.banks.len() as u64;
+        // Commit the advanced cursors back to the bank timeline: one
+        // pass per occupancy word, visiting only touched banks.
+        for w in 0..batch.touched.len() {
+            let mut bits = std::mem::take(&mut batch.touched[w]);
+            while bits != 0 {
+                let bank = (w << 6) | bits.trailing_zeros() as usize;
+                self.busy_until[bank] = batch.cursor[bank];
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+/// Reusable scratch for a per-issue-cycle batched read resolution
+/// against one [`BankArray`] (see [`BankArray::schedule_read_batch`]).
+/// `HierarchyModel::read_operands` implementations collect the bank of
+/// every MRF-bound operand read in push order, resolve the whole batch
+/// in one call, then consume the per-request ready times — instead of
+/// walking `schedule_reg` once per operand. Buffers are reused across
+/// batches (and across arrays of different bank counts), so the steady
+/// state allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct ReadBatch {
+    /// Bank index per request, in push (operand) order.
+    banks: Vec<u16>,
+    /// Data-ready cycle per request, filled by `schedule_read_batch`.
+    times: Vec<u64>,
+    /// Per-bank batch cursor (lazily initialized via `touched`).
+    cursor: Vec<u64>,
+    /// u64 occupancy bitmask words: which banks this batch touches.
+    touched: Vec<u64>,
+}
+
+impl ReadBatch {
+    pub fn new() -> Self {
+        ReadBatch::default()
+    }
+
+    /// Start a fresh batch (buffers retained).
+    pub fn clear(&mut self) {
+        self.banks.clear();
+        self.times.clear();
+    }
+
+    /// Queue a read against `bank`.
+    pub fn push(&mut self, bank: usize) {
+        self.banks.push(bank as u16);
+    }
+
+    pub fn len(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banks.is_empty()
+    }
+
+    /// Data-ready cycle of request `i` (valid after `schedule_read_batch`).
+    pub fn time(&self, i: usize) -> u64 {
+        self.times[i]
+    }
 }
 
 /// A rate-limited transfer resource (the MRF→RF$ crossbar of §5.2):
@@ -129,6 +249,19 @@ impl TransferLink {
         let slot = self.next_slot.max(ready_slot);
         self.next_slot = slot + 1;
         slot / self.regs_per_cycle as u64 + self.latency as u64
+    }
+
+    /// Link occupancy relative to cycle `base`, in transfer slots
+    /// (`next_slot - base * rate`, clamped at 0 — transfers never start
+    /// before their `ready` cycle, so slots at or before `base`'s are
+    /// interchangeable). Replay fingerprint/end-state capture.
+    pub fn slot_rel(&self, base: u64) -> u64 {
+        self.next_slot.saturating_sub(base * self.regs_per_cycle as u64)
+    }
+
+    /// Restore the link occupancy to `rel` slots past cycle `base`.
+    pub fn set_slot_rel(&mut self, base: u64, rel: u64) {
+        self.next_slot = base * self.regs_per_cycle as u64 + rel;
     }
 }
 
@@ -231,6 +364,97 @@ mod tests {
         assert_eq!(b.bank_of(0, 17), 1);
         // Intra-warp conflict structure is preserved under the offset.
         assert_eq!(b.bank_of(0, 3), b.bank_of(16, 3));
+    }
+
+    /// The batched resolver must be indistinguishable from the
+    /// sequential `schedule` chain: same per-request ready times, same
+    /// `conflict_cycles`/`accesses`, same final per-bank timeline.
+    fn assert_batch_matches_sequential(
+        mut seq: BankArray,
+        mut bat: BankArray,
+        requests: &[(usize, u64)],
+    ) {
+        let mut batch = ReadBatch::new();
+        let mut i = 0;
+        while i < requests.len() {
+            let now = requests[i].1;
+            let mut j = i;
+            batch.clear();
+            while j < requests.len() && requests[j].1 == now {
+                batch.push(requests[j].0);
+                j += 1;
+            }
+            let seq_times: Vec<u64> =
+                requests[i..j].iter().map(|&(b, _)| seq.schedule(b, now)).collect();
+            bat.schedule_read_batch(&mut batch, now);
+            let bat_times: Vec<u64> = (0..batch.len()).map(|k| batch.time(k)).collect();
+            assert_eq!(seq_times, bat_times, "ready times diverge at batch starting {i}");
+            i = j;
+        }
+        assert_eq!(seq.conflict_cycles, bat.conflict_cycles);
+        assert_eq!(seq.accesses, bat.accesses);
+        for b in 0..seq.num_banks() {
+            assert_eq!(seq.free_at(b), bat.free_at(b), "bank {b} timeline diverges");
+        }
+    }
+
+    #[test]
+    fn batched_reads_match_sequential_chain() {
+        // Conflict-heavy mix: repeats, distinct banks, non-pipelined.
+        let mk = || BankArray::new(4, 10, 10, BankMap::Interleave);
+        assert_batch_matches_sequential(
+            mk(),
+            mk(),
+            &[(0, 0), (0, 0), (1, 0), (3, 0), (0, 5), (2, 5), (2, 5), (2, 5), (1, 100)],
+        );
+    }
+
+    #[test]
+    fn batched_reads_match_sequential_pipelined() {
+        // Occupancy 1 < latency 2 (pipelined SRAM) plus a pre-existing
+        // busy bank from an earlier non-batched access.
+        let mk = || {
+            let mut b = BankArray::new(2, 2, 1, BankMap::Interleave);
+            b.schedule(0, 0);
+            b
+        };
+        assert_batch_matches_sequential(
+            mk(),
+            mk(),
+            &[(0, 0), (1, 0), (0, 0), (0, 1), (1, 1), (0, 50)],
+        );
+    }
+
+    #[test]
+    fn batched_reads_reuse_scratch_across_arrays() {
+        // One ReadBatch serves arrays of different bank counts (the
+        // hierarchy reuses a single scratch for MRF and RF$ batches).
+        let mut wide = BankArray::new(128, 3, 3, BankMap::Interleave);
+        let mut narrow = BankArray::new(2, 1, 1, BankMap::Interleave);
+        let mut batch = ReadBatch::new();
+        batch.clear();
+        batch.push(127);
+        batch.push(127);
+        wide.schedule_read_batch(&mut batch, 10);
+        assert_eq!((batch.time(0), batch.time(1)), (13, 16));
+        assert_eq!(wide.conflict_cycles, 3);
+        batch.clear();
+        batch.push(0);
+        batch.push(1);
+        narrow.schedule_read_batch(&mut batch, 0);
+        assert_eq!((batch.time(0), batch.time(1)), (1, 1));
+        assert_eq!(narrow.conflict_cycles, 0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut b = BankArray::new(4, 2, 1, BankMap::Interleave);
+        let mut batch = ReadBatch::new();
+        batch.clear();
+        b.schedule_read_batch(&mut batch, 7);
+        assert_eq!(b.accesses, 0);
+        assert_eq!(b.conflict_cycles, 0);
+        assert!(batch.is_empty());
     }
 
     /// Cross-check against the compiler's conflict model: for a

@@ -8,7 +8,8 @@
 use std::collections::VecDeque;
 
 /// One warp's RFC partition.
-#[derive(Clone, Debug)]
+// `PartialEq` feeds the replay engine's entry-state fingerprint.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RfcState {
     /// FIFO of (register, dirty).
     slots: VecDeque<(u16, bool)>,

@@ -21,18 +21,27 @@
 //!   too-low hint costs at most an extra idle step; the hint is never
 //!   *higher* than the true next action, which is the soundness side the
 //!   skip-ahead drivers rely on (pinned by the hint-soundness property
-//!   test).
+//!   test);
+//! * when a single warp on the only live SM iterates a memory-quiescent
+//!   backward-branching block, the interval steady-state [`ReplayEngine`]
+//!   records one dense iteration and fast-forwards every following one in
+//!   O(#issues) instead of stepping it cycle by cycle (toggleable via
+//!   `SimConfig::replay`; bit-invariant on every counter except its own
+//!   two diagnostics, which the replay-equivalence oracle pins).
 
 use super::config::SimConfig;
 use super::hierarchy::{EntryAction, RegHierarchy};
 use super::memsys::{self, MemResult, SharedMem, SmMem};
+use super::rfc::RfcState;
 use super::scheduler::TwoLevelScheduler;
 use super::stats::Stats;
 use super::warp::{WarpHot, WarpSim, WarpState};
+use super::wcb::WarpControlBlock;
 use super::wheel::EventWheel;
 use crate::compiler::CompiledKernel;
 use crate::ir::exec::ExecState;
 use crate::ir::ExecUnit;
+use crate::util::RegSet;
 use crate::workloads::gen::REG_BASE;
 
 /// Deferred completions.
@@ -77,6 +86,162 @@ pub enum MemOp {
     Miss { wid: usize, dst: Option<u16>, line: u64, at: u64 },
 }
 
+// ---------------------------------------------------------------------
+// Interval steady-state replay (the serial hot-loop fast path).
+//
+// Once the run has drained to a single live warp on a single live SM,
+// every iteration of a backward-branching block whose body touches no
+// global/shared memory is a pure function of SM-local timing state. The
+// engine fingerprints the state at a loop-head boundary, records one
+// dense iteration (per-issue times, stats delta, bank/crossbar end
+// timelines), and — when two consecutive boundaries carry the identical
+// fingerprint, i.e. the loop reached its timing steady state — arms a
+// replay cell that fast-forwards each subsequent iteration in O(#issues)
+// instead of stepping every cycle. The quiescence class is conservative:
+// any memory issue, prefetch, warp-lifecycle change, or out-of-band
+// dense issue drops the recording/cell and the SM falls back to dense
+// stepping, so replay can change nothing observable except
+// `Stats::replay_fast_forwards` / `Stats::replay_cycles_saved`.
+
+/// Entry-state fingerprint of the sole live warp at a replay boundary.
+/// All times are relative to the boundary cycle and captured after the
+/// event drain, so every recorded time is strictly positive. The warp's
+/// `ExecState` (registers/predicates) is deliberately absent: it changes
+/// every iteration and is instead verified per-replay by the clone-walk
+/// in [`SmSim::try_replay`].
+#[derive(Clone, Debug, PartialEq)]
+struct ReplayFp {
+    block: usize,
+    /// Scoreboard of in-flight writers.
+    pending: RegSet,
+    collectors_free: usize,
+    /// In-flight writer list: (register, completion rel to boundary).
+    inflight: Vec<(u16, u64)>,
+    /// Pending wheel events: (due rel to boundary, wid, kind), sorted.
+    wheel: Vec<(u64, usize, EventKind)>,
+    /// Bank read/write-port busy timelines rel to the boundary.
+    mrf_read: Vec<u64>,
+    mrf_write: Vec<u64>,
+    rfc_read: Vec<u64>,
+    rfc_write: Vec<u64>,
+    /// Refill-crossbar occupancy rel to the boundary.
+    xbar: u64,
+    /// Full LTRF/CARF warp-control-block state (residency, liveness,
+    /// dirty bits, allocator queue, current interval).
+    wcb: WarpControlBlock,
+    /// Full RFC cache state (FIFO contents + dirty bits).
+    rfc: RfcState,
+}
+
+/// One issue recorded during the replayed iteration (times rel to the
+/// iteration's entry boundary).
+#[derive(Clone, Copy, Debug)]
+struct ReplaySlot {
+    block: u32,
+    idx: u32,
+    rel_issue: u64,
+    rel_ready: u64,
+    /// Destination write: (register, writeback completion rel to entry).
+    def: Option<(u16, u64)>,
+}
+
+/// An in-progress recording of one dense loop iteration.
+struct Recording {
+    f0: ReplayFp,
+    entry: u64,
+    stats_base: Stats,
+    /// (accesses, conflict_cycles) bases of the MRF / RF$ bank arrays
+    /// (these live outside `Stats`, so the cell carries their deltas).
+    mrf_base: (u64, u64),
+    rfc_base: (u64, u64),
+    /// Polls spent on this iteration so far (the entry poll included).
+    polls: u64,
+    slots: Vec<ReplaySlot>,
+    issued_any: bool,
+}
+
+/// A proven-steady iteration: everything needed to fast-forward one loop
+/// trip without stepping it.
+struct ReplayCell {
+    block: usize,
+    /// The steady entry fingerprint (debug-assert anchor; the release
+    /// path relies on the steady-state induction instead — see
+    /// [`SmSim::try_replay`]).
+    f0: ReplayFp,
+    delta_cycle: u64,
+    polls: u64,
+    /// Stats booked by one dense iteration (`event_wheel_rollovers`
+    /// zeroed: rollovers keep being booked live by the replay drains,
+    /// and the wheel's partition invariance makes the totals exact).
+    dstats: Stats,
+    slots: Vec<ReplaySlot>,
+    /// Sparse non-zero bank-timeline end state, rel to the exit boundary
+    /// (steady state ⇒ identical to the entry timelines).
+    mrf_read_end: Vec<(u16, u64)>,
+    mrf_write_end: Vec<(u16, u64)>,
+    rfc_read_end: Vec<(u16, u64)>,
+    rfc_write_end: Vec<(u16, u64)>,
+    xbar_end: u64,
+    /// Bank-array (accesses, conflict_cycles) deltas of one iteration.
+    mrf_d: (u64, u64),
+    rfc_d: (u64, u64),
+    /// Test hook: this cell was deliberately corrupted (see
+    /// [`SmSim::poison_replay_cells_for_test`]).
+    poisoned: bool,
+}
+
+enum ReplayState {
+    Idle,
+    Recording(Box<Recording>),
+    Armed(Box<ReplayCell>),
+}
+
+/// Replay machinery hanging off one SM.
+struct ReplayEngine {
+    state: ReplayState,
+    /// Set by the driver once this SM is the only one still stepping.
+    /// Replay is gated on solo because a fast-forward changes the global
+    /// epoch set, which is observable as soon as any *other* SM books
+    /// per-epoch state.
+    solo: bool,
+    /// Cached id of the single unfinished warp.
+    sole_wid: Option<usize>,
+    /// Fast-forward horizon: polls strictly before this cycle are no-ops
+    /// (only reachable from drivers that poll past a returned hint).
+    ff_until: u64,
+    /// Idle polls elided by fast-forwards. The drivers fold this into
+    /// `commit_phases_skipped`: every elided epoch was provably
+    /// commit-free (the quiescence class admits no shared-level work,
+    /// and done SMs book nothing).
+    elided_polls: u64,
+    /// Reusable clone target for the per-replay exec walk.
+    scratch_exec: Option<ExecState>,
+    /// Test hook: corrupt every cell built from now on.
+    poison: bool,
+}
+
+impl ReplayEngine {
+    fn new() -> Self {
+        ReplayEngine {
+            state: ReplayState::Idle,
+            solo: false,
+            sole_wid: None,
+            ff_until: 0,
+            elided_polls: 0,
+            scratch_exec: None,
+            poison: false,
+        }
+    }
+
+    /// The quiescence class was violated: drop any recording or armed
+    /// cell unconditionally.
+    fn abort(&mut self) {
+        if !matches!(self.state, ReplayState::Idle) {
+            self.state = ReplayState::Idle;
+        }
+    }
+}
+
 pub struct SmSim<'a> {
     pub cfg: &'a SimConfig,
     pub ck: &'a CompiledKernel,
@@ -110,6 +275,8 @@ pub struct SmSim<'a> {
     /// inline `SharedMem` touch or one arena entry. Drives the drivers'
     /// dirty-SM commit batching and `commit_phases_skipped`.
     shared_ops: u32,
+    /// Interval steady-state replay engine (solo-tail fast path).
+    replay: ReplayEngine,
 }
 
 /// Per-warp load-data salt: distinct warps (and SMs) see distinct memory
@@ -157,6 +324,7 @@ impl<'a> SmSim<'a> {
             mem_reqs: Vec::new(),
             issue_min: 0,
             shared_ops: 0,
+            replay: ReplayEngine::new(),
         }
     }
 
@@ -302,8 +470,22 @@ impl<'a> SmSim<'a> {
     /// returns `now + 1` and never needs the (not-yet-known) reply times.
     pub fn step(&mut self, now: u64, port: &mut MemPort) -> u64 {
         self.shared_ops = 0;
+        if now < self.replay.ff_until {
+            // A driver polling every cycle (instead of following the
+            // returned hint) landed inside a fast-forwarded span. Nothing
+            // can happen before `ff_until`, and this poll is real, not
+            // elided — give one elided credit back so the driver's own
+            // per-epoch accounting stays exact.
+            self.replay.elided_polls = self.replay.elided_polls.saturating_sub(1);
+            return self.replay.ff_until;
+        }
         self.drain_events(now);
         self.fill_pool(now);
+        if self.cfg.replay && self.replay.solo {
+            if let Some(hint) = self.replay_poll(now) {
+                return hint;
+            }
+        }
 
         let mut issued = 0usize;
         self.order_buf.clear();
@@ -445,6 +627,7 @@ impl<'a> SmSim<'a> {
             ) {
                 EntryAction::Proceed => {}
                 EntryAction::Prefetch { done_at } => {
+                    self.replay.abort();
                     self.hot.state[wid] = WarpState::Prefetching { done_at };
                     self.stats.prefetch_stall_cycles += done_at - now;
                     self.push_event(done_at, wid, EventKind::PrefetchDone);
@@ -460,6 +643,7 @@ impl<'a> SmSim<'a> {
             if self.hot.miss_pending[wid].contains(blocking) {
                 // Blocked on an outstanding L1 miss: the two-level
                 // scheduler swaps this warp out (§3.2).
+                self.replay.abort();
                 self.deactivate_on_miss(wid, blocking, now);
             } else if let Some(t) = self.warps[wid].writer_done(blocking) {
                 // In-order: nothing can issue before the blocking writer
@@ -498,6 +682,7 @@ impl<'a> SmSim<'a> {
 
         // Execute + complete.
         if self.warps[wid].exec.finished {
+            self.replay.abort();
             self.hot.state[wid] = WarpState::Finished;
             self.sched.deactivate(wid);
             self.finished += 1;
@@ -508,6 +693,9 @@ impl<'a> SmSim<'a> {
         let is_load = inst.op.is_load();
         let done = match inst.op.unit() {
             ExecUnit::MemGlobal if is_load => {
+                // Global memory leaves the replayable quiescence class
+                // (L1/MSHR/LLC state is not fingerprinted).
+                self.replay.abort();
                 let addr = info.mem_addr.unwrap_or(0);
                 match port {
                     MemPort::Inline(shared) => match self.access_global(addr, ready, shared) {
@@ -543,6 +731,7 @@ impl<'a> SmSim<'a> {
             ExecUnit::MemGlobal => {
                 // Store: posted write; consumes memory bandwidth but the
                 // warp does not wait (and never deactivates).
+                self.replay.abort();
                 let addr = info.mem_addr.unwrap_or(0);
                 match port {
                     MemPort::Inline(shared) => {
@@ -561,18 +750,24 @@ impl<'a> SmSim<'a> {
                 }
                 ready + 1
             }
-            ExecUnit::MemShared => self.mem.access_shared(ready),
+            ExecUnit::MemShared => {
+                self.replay.abort();
+                self.mem.access_shared(ready)
+            }
             ExecUnit::Sfu => ready + self.cfg.sfu_cycles as u64,
             ExecUnit::Alu => ready + self.cfg.alu_cycles as u64,
             ExecUnit::Ctrl => ready + 1,
         };
 
+        let mut def_rec = None;
         if let Some(d) = inst.def() {
             self.hot.pending[wid].insert(d);
             let t_w = self.hier.write_dest(&mut self.warps[wid], d, done, &mut self.stats);
             self.warps[wid].inflight.push((d, t_w));
             self.push_event(t_w, wid, EventKind::Writeback(d));
+            def_rec = Some((d, t_w));
         }
+        self.note_issue(info.block, info.idx, now, ready, def_rec);
         true
     }
 
@@ -583,6 +778,327 @@ impl<'a> SmSim<'a> {
         self.warps[wid].wait_reg = Some(blocking);
         self.sched.deactivate(wid);
         self.hier.on_deactivate(&mut self.warps[wid], now, &mut self.stats);
+    }
+
+    // -----------------------------------------------------------------
+    // Interval steady-state replay
+    // -----------------------------------------------------------------
+
+    /// Arm the replay engine: the driver promises this SM is the only one
+    /// still stepping (monotone for the rest of the run). All drivers
+    /// check at the same point of the epoch loop, so the arming epoch —
+    /// and therefore every replay decision — is backend-invariant.
+    pub fn set_solo(&mut self) {
+        self.replay.solo = true;
+    }
+
+    /// Idle polls elided by replay fast-forwards. The drivers fold this
+    /// into `commit_phases_skipped` at the end of a run: every elided
+    /// epoch was provably commit-free (the quiescence class admits no
+    /// shared-level memory work, and done SMs book nothing).
+    pub fn elided_polls(&self) -> u64 {
+        self.replay.elided_polls
+    }
+
+    /// Test hook: corrupt every replay cell built from now on — a stale
+    /// entry fingerprint plus an observable one-off stats skew. Exists so
+    /// the replay-equivalence oracle's integration test can prove the
+    /// oracle trips on a bad cell; never called outside tests.
+    #[doc(hidden)]
+    pub fn poison_replay_cells_for_test(&mut self) {
+        self.replay.poison = true;
+    }
+
+    /// Replay boundary processing: runs once per poll while this SM is
+    /// solo, after the event drain and pool fill, before the issue loop.
+    /// Returns a skip-ahead hint when an iteration was fast-forwarded
+    /// (the caller then skips the dense issue loop entirely).
+    fn replay_poll(&mut self, now: u64) -> Option<u64> {
+        // Exactly one unfinished warp, with its id cached.
+        if self.finished + 1 != self.warps.len() {
+            return None;
+        }
+        let wid = match self.replay.sole_wid {
+            Some(w) if self.hot.state[w] != WarpState::Finished => w,
+            _ => {
+                let w =
+                    (0..self.warps.len()).find(|&w| self.hot.state[w] != WarpState::Finished)?;
+                self.replay.sole_wid = Some(w);
+                w
+            }
+        };
+        // A boundary is a poll where the warp is at a block head with no
+        // timing debt: issuable exactly now (`next_issue == now` makes
+        // the fast-forward exit `next_issue = entry + Δ` correct by
+        // construction), nothing miss-pending, no uncommitted deferred
+        // ops. Anything else is a mid-iteration poll.
+        let exec = &self.warps[wid].exec;
+        let boundary = !exec.finished
+            && exec.idx == 0
+            && self.hot.next_issue[wid] == now
+            && self.hot.issuable(wid, now)
+            && self.hot.miss_pending[wid].is_empty()
+            && self.mem_reqs.is_empty();
+        let block = exec.block;
+
+        match std::mem::replace(&mut self.replay.state, ReplayState::Idle) {
+            ReplayState::Idle => {
+                if boundary {
+                    self.start_recording(wid, now);
+                }
+                None
+            }
+            ReplayState::Recording(mut rec) => {
+                if !boundary {
+                    rec.polls += 1;
+                    self.replay.state = ReplayState::Recording(rec);
+                    return None;
+                }
+                let f1 = self.fingerprint(wid, now);
+                if rec.issued_any && f1 == rec.f0 {
+                    // Two consecutive boundaries with identical state:
+                    // the loop is timing-steady. Arm the cell and treat
+                    // this very boundary as the first replay opportunity.
+                    let cell = self.build_cell(*rec, f1, now);
+                    self.replay.state = ReplayState::Armed(Box::new(cell));
+                    return self.try_replay(wid, now);
+                }
+                // Warm-up (state still converging), an idle span, or a
+                // different block: restart from this boundary, reusing
+                // the fingerprint just computed.
+                self.start_recording_with(now, f1);
+                None
+            }
+            ReplayState::Armed(cell) => {
+                if boundary {
+                    if block == cell.block {
+                        self.replay.state = ReplayState::Armed(cell);
+                        return self.try_replay(wid, now);
+                    }
+                    // A different loop: the cell is stale — drop it and
+                    // record the new block instead.
+                    self.start_recording(wid, now);
+                    return None;
+                }
+                self.replay.state = ReplayState::Armed(cell);
+                None
+            }
+        }
+    }
+
+    /// Capture the entry-state fingerprint at a boundary (all times rel
+    /// to `now`; the drain already ran, so every pending time is > now).
+    fn fingerprint(&self, wid: usize, now: u64) -> ReplayFp {
+        let w = &self.warps[wid];
+        let mut wheel = Vec::new();
+        self.events.collect_pending(&mut wheel);
+        for ev in &mut wheel {
+            debug_assert!(ev.0 > now, "boundary fingerprint saw a due event");
+            ev.0 -= now;
+        }
+        ReplayFp {
+            block: w.exec.block,
+            pending: self.hot.pending[wid],
+            collectors_free: self.collectors_free,
+            inflight: w.inflight.iter().map(|&(r, t)| (r, t.saturating_sub(now))).collect(),
+            wheel,
+            mrf_read: self.hier.res.mrf.read_times_rel(now),
+            mrf_write: self.hier.res.mrf.write_times_rel(now),
+            rfc_read: self.hier.res.rf_cache.read_times_rel(now),
+            rfc_write: self.hier.res.rf_cache.write_times_rel(now),
+            xbar: self.hier.res.xbar.slot_rel(now),
+            wcb: w.wcb.clone(),
+            rfc: w.rfc.clone(),
+        }
+        // The scheduler's rotation state is deliberately absent: with a
+        // single active warp, `issue_order` is invariant under it.
+    }
+
+    fn start_recording(&mut self, wid: usize, now: u64) {
+        let f0 = self.fingerprint(wid, now);
+        self.start_recording_with(now, f0);
+    }
+
+    fn start_recording_with(&mut self, now: u64, f0: ReplayFp) {
+        let mrf = &self.hier.res.mrf;
+        let rfc = &self.hier.res.rf_cache;
+        self.replay.state = ReplayState::Recording(Box::new(Recording {
+            f0,
+            entry: now,
+            stats_base: self.stats.clone(),
+            mrf_base: (mrf.accesses, mrf.conflict_cycles),
+            rfc_base: (rfc.accesses, rfc.conflict_cycles),
+            polls: 1,
+            slots: Vec::new(),
+            issued_any: false,
+        }));
+    }
+
+    /// Freeze a completed recording (entry fingerprint `f1 == f0` just
+    /// proved) into an armed replay cell.
+    fn build_cell(&mut self, rec: Recording, f1: ReplayFp, now: u64) -> ReplayCell {
+        let mut dstats = self.stats.delta(&rec.stats_base);
+        // Rollovers are booked live by the replay-path drains (the wheel
+        // counts them partition-invariantly), not from the cell.
+        dstats.event_wheel_rollovers = 0;
+        let sparse = |v: &[u64]| -> Vec<(u16, u64)> {
+            v.iter().enumerate().filter(|&(_, &r)| r > 0).map(|(b, &r)| (b as u16, r)).collect()
+        };
+        let mrf = &self.hier.res.mrf;
+        let rfc = &self.hier.res.rf_cache;
+        let mut cell = ReplayCell {
+            block: f1.block,
+            delta_cycle: now - rec.entry,
+            polls: rec.polls,
+            dstats,
+            slots: rec.slots,
+            mrf_read_end: sparse(&f1.mrf_read),
+            mrf_write_end: sparse(&f1.mrf_write),
+            rfc_read_end: sparse(&f1.rfc_read),
+            rfc_write_end: sparse(&f1.rfc_write),
+            xbar_end: f1.xbar,
+            mrf_d: (mrf.accesses - rec.mrf_base.0, mrf.conflict_cycles - rec.mrf_base.1),
+            rfc_d: (rfc.accesses - rec.rfc_base.0, rfc.conflict_cycles - rec.rfc_base.1),
+            f0: f1,
+            poisoned: false,
+        };
+        if self.replay.poison {
+            // Deliberately stale entry fingerprint + an oracle-visible
+            // counter skew; the debug-assert below skips poisoned cells
+            // so release and debug builds diverge identically.
+            cell.poisoned = true;
+            cell.f0.pending.insert(0);
+            cell.dstats.instructions += 1;
+        }
+        cell
+    }
+
+    /// Attempt one fast-forward from an armed boundary. On success the
+    /// SM state advances to the exit boundary `now + Δ` and the cell
+    /// re-arms; on any mismatch the state is already Idle and the caller
+    /// falls back to dense stepping (the warp untouched).
+    ///
+    /// Release-mode soundness rests on an induction, not a re-check of
+    /// the fingerprint: a cell is built at a boundary whose state equals
+    /// `f0`, every successful replay reproduces the recorded dense end
+    /// state (hence `f0` again, relative to the new boundary), and any
+    /// dense issue while armed drops the cell (`note_issue`) — so every
+    /// boundary that reaches this function carries state `f0`. The
+    /// clone-walk below is the one per-replay check that genuinely
+    /// varies: the register-dependent control path must retrace the
+    /// recorded issue sequence and land back at the loop head (the final
+    /// trip's predicate flip fails it, exiting the loop densely).
+    fn try_replay(&mut self, wid: usize, now: u64) -> Option<u64> {
+        let ReplayState::Armed(cell) =
+            std::mem::replace(&mut self.replay.state, ReplayState::Idle)
+        else {
+            unreachable!("try_replay outside Armed");
+        };
+        debug_assert_eq!(self.hot.next_issue[wid], now, "replay boundary with timing debt");
+        #[cfg(debug_assertions)]
+        if !cell.poisoned {
+            assert!(
+                self.fingerprint(wid, now) == cell.f0,
+                "replay entry fingerprint drifted from the recorded cell"
+            );
+        }
+        let mut scratch =
+            self.replay.scratch_exec.take().unwrap_or_else(|| self.warps[wid].exec.clone());
+        scratch.clone_from(&self.warps[wid].exec);
+        let mut ok = true;
+        for slot in &cell.slots {
+            match scratch.step(&self.ck.kernel) {
+                Some(info)
+                    if info.block == slot.block as usize && info.idx == slot.idx as usize => {}
+                _ => {
+                    ok = false;
+                    break;
+                }
+            }
+            if scratch.finished {
+                ok = false;
+                break;
+            }
+        }
+        ok = ok && !scratch.finished && scratch.block == cell.block && scratch.idx == 0;
+        if !ok {
+            self.replay.scratch_exec = Some(scratch);
+            return None;
+        }
+        // Commit: swap the walked exec in, then re-enact the recorded
+        // iteration's timing side effects.
+        std::mem::swap(&mut self.warps[wid].exec, &mut scratch);
+        self.replay.scratch_exec = Some(scratch);
+
+        let e2 = now + cell.delta_cycle;
+        for slot in &cell.slots {
+            // Drain strictly in dense order before re-enacting each
+            // issue: an event due before this issue (e.g. the writeback
+            // of the same destination register, under WAW) must clear
+            // the scoreboard first, exactly as dense stepping would.
+            self.drain_events(now + slot.rel_issue);
+            self.collectors_free -= 1;
+            self.push_event(now + slot.rel_ready, wid, EventKind::CollectorFree);
+            if let Some((d, rel_w)) = slot.def {
+                self.hot.pending[wid].insert(d);
+                self.warps[wid].inflight.push((d, now + rel_w));
+                self.push_event(now + rel_w, wid, EventKind::Writeback(d));
+            }
+        }
+        for &(b, r) in &cell.mrf_read_end {
+            self.hier.res.mrf.set_read_time(b as usize, e2 + r);
+        }
+        for &(b, r) in &cell.mrf_write_end {
+            self.hier.res.mrf.set_write_time(b as usize, e2 + r);
+        }
+        for &(b, r) in &cell.rfc_read_end {
+            self.hier.res.rf_cache.set_read_time(b as usize, e2 + r);
+        }
+        for &(b, r) in &cell.rfc_write_end {
+            self.hier.res.rf_cache.set_write_time(b as usize, e2 + r);
+        }
+        self.hier.res.xbar.set_slot_rel(e2, cell.xbar_end);
+        self.hier.res.mrf.accesses += cell.mrf_d.0;
+        self.hier.res.mrf.conflict_cycles += cell.mrf_d.1;
+        self.hier.res.rf_cache.accesses += cell.rfc_d.0;
+        self.hier.res.rf_cache.conflict_cycles += cell.rfc_d.1;
+        self.stats.apply_delta(&cell.dstats);
+        self.stats.replay_fast_forwards += 1;
+        self.stats.replay_cycles_saved += cell.delta_cycle;
+        self.replay.elided_polls += cell.polls.saturating_sub(1);
+        self.warps[wid].issued += cell.slots.len() as u64;
+        self.hot.next_issue[wid] = e2;
+        self.issue_min = self.issue_min.min(e2);
+        self.replay.ff_until = e2;
+        self.replay.state = ReplayState::Armed(cell);
+        Some(e2)
+    }
+
+    /// Record a completed dense issue into an active recording — and
+    /// drop an armed cell if a dense issue slips in under it (the
+    /// steady-state induction only holds while none intervenes).
+    fn note_issue(
+        &mut self,
+        block: usize,
+        idx: usize,
+        now: u64,
+        ready: u64,
+        def: Option<(u16, u64)>,
+    ) {
+        match &mut self.replay.state {
+            ReplayState::Recording(rec) => {
+                rec.issued_any = true;
+                rec.slots.push(ReplaySlot {
+                    block: block as u32,
+                    idx: idx as u32,
+                    rel_issue: now - rec.entry,
+                    rel_ready: ready - rec.entry,
+                    def: def.map(|(d, t)| (d, t - rec.entry)),
+                });
+            }
+            ReplayState::Armed(_) => self.replay.state = ReplayState::Idle,
+            ReplayState::Idle => {}
+        }
     }
 }
 
@@ -748,6 +1264,106 @@ L1:
             st.event_wheel_rollovers > 0,
             "a multi-thousand-cycle run must rotate the {}-slot wheel",
             crate::sim::wheel::SLOTS
+        );
+    }
+
+    /// A memory-quiescent loop: every iteration is pure ALU work, so a
+    /// solo warp reaches the replay engine's steady state. (The suite's
+    /// generated workloads all load inside their loops, which keeps
+    /// replay out of the recorded class there by design — this kernel is
+    /// the deterministic trigger.)
+    const ALU_KSRC: &str = r#"
+.kernel a
+  mov r0, #0
+  mov r1, #7
+L1:
+  add r2, r0, r1
+  add r3, r2, r1
+  add r4, r3, r2
+  add r0, r0, #1
+  setp.lt p0, r0, #400
+  @p0 bra L1
+  st.global [r0], r4
+  exit
+"#;
+
+    fn run_alu(kind: HierarchyKind, replay: bool, poison: bool) -> Stats {
+        let k = parser::parse(ALU_KSRC).unwrap();
+        let opts = CompileOptions { mode: kind.subgraph_mode(), ..CompileOptions::ltrf(16) };
+        let ck = compile(&k, opts);
+        let cfg = SimConfig { replay, ..SimConfig::with_hierarchy(kind) };
+        let mut shared = SharedMem::new(cfg.mem);
+        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
+        sm.set_solo();
+        if poison {
+            sm.poison_replay_cells_for_test();
+        }
+        let mut now = 0;
+        while !sm.done() && now < 1_000_000 {
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            now = hint.max(now + 1).min(1_000_000);
+        }
+        let mut st = sm.stats.clone();
+        st.cycles = now;
+        st
+    }
+
+    /// The replay engine must actually fire on a solo pure-ALU loop —
+    /// for every registered policy — and claim the cycles it skipped.
+    #[test]
+    fn replay_fast_forwards_solo_alu_loop() {
+        for kind in HierarchyKind::ALL {
+            let st = run_alu(kind, true, false);
+            assert!(st.replay_fast_forwards > 0, "{} never fast-forwarded", kind.name());
+            assert!(st.replay_cycles_saved > 0, "{} saved no cycles", kind.name());
+            assert_eq!(st.warps_finished, 1, "{}", kind.name());
+        }
+    }
+
+    /// Replay-on and replay-off runs must agree on every counter except
+    /// the two replay diagnostics — the SM-level core of the
+    /// replay-equivalence oracle.
+    #[test]
+    fn replay_is_stats_invariant_modulo_diagnostics() {
+        for kind in HierarchyKind::ALL {
+            let on = run_alu(kind, true, false);
+            let mut off = run_alu(kind, false, false);
+            assert_eq!(off.replay_fast_forwards, 0, "{}", kind.name());
+            assert_eq!(off.replay_cycles_saved, 0, "{}", kind.name());
+            off.replay_fast_forwards = on.replay_fast_forwards;
+            off.replay_cycles_saved = on.replay_cycles_saved;
+            assert_eq!(on, off, "{} diverged under replay", kind.name());
+        }
+    }
+
+    /// Replay must stay silent when the SM is not flagged solo, even on
+    /// a perfectly replayable kernel (the multi-SM gating contract).
+    #[test]
+    fn replay_requires_solo_flag() {
+        let k = parser::parse(ALU_KSRC).unwrap();
+        let ck = compile(&k, CompileOptions::ltrf(16));
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Baseline);
+        let mut shared = SharedMem::new(cfg.mem);
+        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
+        let mut now = 0;
+        while !sm.done() && now < 1_000_000 {
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            now = hint.max(now + 1).min(1_000_000);
+        }
+        assert_eq!(sm.stats.replay_fast_forwards, 0);
+    }
+
+    /// A deliberately corrupted (stale-fingerprint) replay cell must make
+    /// the run diverge from dense stepping on an oracle-visible counter —
+    /// the teeth behind the replay-equivalence oracle's masking choice.
+    #[test]
+    fn poisoned_replay_cell_diverges_from_dense() {
+        let poisoned = run_alu(HierarchyKind::Baseline, true, true);
+        let dense = run_alu(HierarchyKind::Baseline, false, false);
+        assert!(poisoned.replay_fast_forwards > 0, "poisoned run must still fast-forward");
+        assert_ne!(
+            poisoned.instructions, dense.instructions,
+            "a stale cell must skew an oracle-visible counter"
         );
     }
 }

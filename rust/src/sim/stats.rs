@@ -70,6 +70,18 @@ pub struct Stats {
     /// of which cycles a driver polled at — see `sim::wheel`), so this
     /// too is backend-invariant.
     pub event_wheel_rollovers: u64,
+
+    // --- interval steady-state replay diagnostics (see `sim::sm`) ---
+    /// Loop iterations served from a recorded replay cell instead of
+    /// dense stepping. Booked in per-SM stats at the SM's own issue loop,
+    /// so it is backend/thread-invariant; it is the only counter (with
+    /// `replay_cycles_saved`) allowed to differ between replay-on and
+    /// replay-off runs — everything else must stay bit-identical, which
+    /// the replay-equivalence oracle enforces.
+    pub replay_fast_forwards: u64,
+    /// Simulated cycles covered by fast-forwarded iterations (the cycles
+    /// dense stepping would have walked one by one).
+    pub replay_cycles_saved: u64,
 }
 
 impl Stats {
@@ -107,6 +119,29 @@ impl Stats {
         (total_reads + self.cache_writes) as f64 / (self.mrf_reads + self.mrf_writes) as f64
     }
 
+    /// Field-wise counter delta `self - base` (wrapping). The replay
+    /// engine captures one loop iteration's stat contribution as
+    /// `stats_at_exit.delta(&stats_at_entry)` and re-applies it per
+    /// fast-forwarded iteration via [`Stats::apply_delta`]. All fields are
+    /// monotone counters during a run, so the subtraction never actually
+    /// wraps; `wrapping_sub` just makes the helper total.
+    pub fn delta(&self, base: &Stats) -> Stats {
+        let (a, b) = (field_values(self), field_values(base));
+        let mut d = Stats::default();
+        for (i, f) in delta_fields(&mut d).into_iter().enumerate() {
+            *f = a[i].wrapping_sub(b[i]);
+        }
+        d
+    }
+
+    /// Add a [`Stats::delta`] capture into `self`, field-wise.
+    pub fn apply_delta(&mut self, d: &Stats) {
+        let vals = field_values(d);
+        for (i, f) in delta_fields(self).into_iter().enumerate() {
+            *f = f.wrapping_add(vals[i]);
+        }
+    }
+
     /// Merge counters from another SM / run shard.
     pub fn merge(&mut self, o: &Stats) {
         self.cycles = self.cycles.max(o.cycles);
@@ -135,7 +170,82 @@ impl Stats {
         self.hit_cycle_cap += o.hit_cycle_cap;
         self.commit_phases_skipped += o.commit_phases_skipped;
         self.event_wheel_rollovers += o.event_wheel_rollovers;
+        self.replay_fast_forwards += o.replay_fast_forwards;
+        self.replay_cycles_saved += o.replay_cycles_saved;
     }
+}
+
+/// Every counter field of a [`Stats`], by mutable reference, in
+/// declaration order. Exhaustive destructuring makes adding a field
+/// without extending this list a compile error, keeping
+/// [`Stats::delta`]/[`Stats::apply_delta`] total over the struct.
+fn delta_fields(s: &mut Stats) -> [&mut u64; 28] {
+    let Stats {
+        cycles,
+        instructions,
+        warps_finished,
+        mrf_reads,
+        mrf_writes,
+        cache_reads,
+        cache_writes,
+        rfc_hits,
+        rfc_misses,
+        prefetch_ops,
+        prefetch_regs,
+        prefetch_stall_cycles,
+        prefetch_bank_conflicts,
+        activations,
+        writeback_regs,
+        dead_regs_skipped,
+        l1_hits,
+        l1_misses,
+        llc_hits,
+        llc_misses,
+        stall_scoreboard,
+        stall_collectors,
+        stall_no_ready_warp,
+        hit_cycle_cap,
+        commit_phases_skipped,
+        event_wheel_rollovers,
+        replay_fast_forwards,
+        replay_cycles_saved,
+    } = s;
+    [
+        cycles,
+        instructions,
+        warps_finished,
+        mrf_reads,
+        mrf_writes,
+        cache_reads,
+        cache_writes,
+        rfc_hits,
+        rfc_misses,
+        prefetch_ops,
+        prefetch_regs,
+        prefetch_stall_cycles,
+        prefetch_bank_conflicts,
+        activations,
+        writeback_regs,
+        dead_regs_skipped,
+        l1_hits,
+        l1_misses,
+        llc_hits,
+        llc_misses,
+        stall_scoreboard,
+        stall_collectors,
+        stall_no_ready_warp,
+        hit_cycle_cap,
+        commit_phases_skipped,
+        event_wheel_rollovers,
+        replay_fast_forwards,
+        replay_cycles_saved,
+    ]
+}
+
+/// Counter values in the same order as [`delta_fields`].
+fn field_values(s: &Stats) -> [u64; 28] {
+    let mut c = s.clone();
+    delta_fields(&mut c).map(|f| *f)
 }
 
 #[cfg(test)]
@@ -210,6 +320,42 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.commit_phases_skipped, 7);
         assert_eq!(a.event_wheel_rollovers, 11);
+    }
+
+    #[test]
+    fn delta_and_apply_roundtrip() {
+        let base = Stats { instructions: 100, stall_scoreboard: 7, ..Default::default() };
+        let end = Stats {
+            instructions: 150,
+            stall_scoreboard: 9,
+            event_wheel_rollovers: 2,
+            ..Default::default()
+        };
+        let d = end.delta(&base);
+        assert_eq!(d.instructions, 50);
+        assert_eq!(d.stall_scoreboard, 2);
+        assert_eq!(d.event_wheel_rollovers, 2);
+        assert_eq!(d.cycles, 0);
+        let mut replayed = base.clone();
+        replayed.apply_delta(&d);
+        assert_eq!(replayed, end, "apply(delta) must reconstruct the endpoint exactly");
+    }
+
+    #[test]
+    fn merge_sums_replay_counters() {
+        let mut a = Stats {
+            replay_fast_forwards: 2,
+            replay_cycles_saved: 100,
+            ..Default::default()
+        };
+        let b = Stats {
+            replay_fast_forwards: 3,
+            replay_cycles_saved: 250,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.replay_fast_forwards, 5);
+        assert_eq!(a.replay_cycles_saved, 350);
     }
 
     #[test]

@@ -9,7 +9,9 @@ use crate::util::RegSet;
 
 const INVALID: u8 = 0xFF;
 
-#[derive(Clone, Debug)]
+// `PartialEq`/`Eq` let the replay engine compare a warp's whole WCB
+// between two loop-boundary snapshots (entry-state fingerprinting).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WarpControlBlock {
     /// RF$ bank number per architectural register (`INVALID` = not cached).
     addr_table: [u8; 256],

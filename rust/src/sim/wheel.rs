@@ -245,6 +245,27 @@ impl<E: Copy + Ord + std::fmt::Debug> EventWheel<E> {
     pub fn take_rollovers(&mut self) -> u64 {
         std::mem::take(&mut self.rollovers)
     }
+
+    /// Append every pending event to `out`, sorted ascending `(t, wid, e)`
+    /// — the replay engine's entry-state fingerprint of the wheel. Walks
+    /// only occupied slots (via the bitmap) plus the overflow list. Must
+    /// not be called mid-drain; the fingerprint is taken after the
+    /// boundary poll's `drain_events`, where the due scratch is empty.
+    pub fn collect_pending(&self, out: &mut Vec<(u64, usize, E)>) {
+        debug_assert!(self.due.is_empty(), "pending events collected mid-drain");
+        out.clear();
+        out.reserve(self.len);
+        for w in 0..OCC_WORDS {
+            let mut bits = self.occ[w];
+            while bits != 0 {
+                let slot = (w << 6) | bits.trailing_zeros() as usize;
+                out.extend_from_slice(&self.buckets[slot]);
+                bits &= bits - 1;
+            }
+        }
+        out.extend_from_slice(&self.overflow);
+        out.sort_unstable();
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +422,23 @@ mod tests {
             Some((1_000_000 + 3 * SLOTS as u64 + 5, 0, 0))
         );
         assert!(w.take_rollovers() >= 3, "crossing windows with a pending event must count");
+    }
+
+    /// `collect_pending` must see every event — bucketed and overflow —
+    /// in sorted order, without disturbing the wheel.
+    #[test]
+    fn collect_pending_is_sorted_and_complete() {
+        let mut w: EventWheel<u8> = EventWheel::new();
+        let far = 5 * SLOTS as u64 + 7;
+        w.push(far, 1, 2); // overflow path
+        w.push(12, 3, 1);
+        w.push(12, 0, 0);
+        w.push(900, 2, 3);
+        let mut out = Vec::new();
+        w.collect_pending(&mut out);
+        assert_eq!(out, vec![(12, 0, 0), (12, 3, 1), (900, 2, 3), (far, 1, 2)]);
+        assert_eq!(w.len(), 4, "collection must not consume events");
+        assert_eq!(w.pop_due(12), Some((12, 0, 0)));
     }
 
     /// Hints see overflow events (nothing in the window must not read as

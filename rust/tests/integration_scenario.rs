@@ -144,6 +144,92 @@ fn pass_equivalence_oracle_green_on_committed_corpus() {
     }
 }
 
+/// Every committed corpus kernel passes the replay-equivalence oracle:
+/// a replay-enabled run is bit-identical to a dense (`replay: false`)
+/// run field-for-field across the design × latency matrix, masking only
+/// the two replay diagnostics (CI additionally runs this over the fuzz
+/// seeds via `fuzz`).
+#[test]
+fn replay_equivalence_oracle_green_on_committed_corpus() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("corpus");
+    let corpus = ltrf::scenario::corpus::load_replay_corpus(&root);
+    assert!(corpus.len() >= 3, "committed corpus seeds found");
+    for (path, text) in corpus {
+        let k = parser::parse(&text).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let mut cs = oracles::CheckStats::default();
+        oracles::run_oracle(&k, oracles::OracleKind::ReplayEquivalence, &mut cs)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(cs.sims > 0);
+    }
+}
+
+/// The replay-equivalence oracle's masked comparison has teeth: a
+/// deliberately stale (poisoned-fingerprint) replay cell skews a
+/// *masked-visible* counter, so `replay_masked_diff` flags the run
+/// against its dense twin. This is the integration-level proof that the
+/// oracle's masking choice (exactly the two replay diagnostics, nothing
+/// else) cannot hide a real replay soundness bug.
+#[test]
+fn stale_replay_cell_trips_masked_oracle_comparison() {
+    use ltrf::sim::memsys::SharedMem;
+    use ltrf::sim::sm::{MemPort, SmSim};
+    use ltrf::sim::{HierarchyKind, SimConfig};
+    // The deterministic replay trigger: a memory-quiescent loop run by a
+    // solo warp (suite workloads load inside their loops, so they never
+    // enter the replay engine's recorded class).
+    let src = "
+.kernel a
+  mov r0, #0
+  mov r1, #7
+L1:
+  add r2, r0, r1
+  add r3, r2, r1
+  add r4, r3, r2
+  add r0, r0, #1
+  setp.lt p0, r0, #400
+  @p0 bra L1
+  st.global [r0], r4
+  exit
+";
+    let k = parser::parse(src).expect("ALU loop parses");
+    let run = |replay: bool, poison: bool| {
+        let cfg = SimConfig { replay, ..SimConfig::with_hierarchy(HierarchyKind::Baseline) };
+        let ck = compile(&k, CompileOptions::ltrf(16));
+        let mut shared = SharedMem::new(cfg.mem);
+        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
+        sm.set_solo();
+        if poison {
+            sm.poison_replay_cells_for_test();
+        }
+        let mut now = 0;
+        while !sm.done() && now < 1_000_000 {
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            now = hint.max(now + 1).min(1_000_000);
+        }
+        let mut st = sm.stats.clone();
+        st.cycles = now;
+        st
+    };
+    let dense = run(false, false);
+    // Sound replay: masked comparison sees no difference.
+    let sound = run(true, false);
+    assert!(sound.replay_fast_forwards > 0, "replay must fire for the test to mean anything");
+    assert_eq!(
+        oracles::replay_masked_diff(&sound, &dense),
+        None,
+        "sound replay must be invisible to the masked comparison"
+    );
+    // Stale cell: the masked comparison must flag it.
+    let stale = run(true, true);
+    assert!(stale.replay_fast_forwards > 0, "poisoned cells must still replay");
+    let diff = oracles::replay_masked_diff(&stale, &dense);
+    assert!(diff.is_some(), "a stale replay cell must trip the masked oracle comparison");
+    assert!(
+        diff.as_deref().unwrap_or("").contains("instructions"),
+        "the poison skews the instruction counter: {diff:?}"
+    );
+}
+
 /// The golden-snapshot matrix (full workload suite × design × latency in
 /// CI; the quick subset here) serializes byte-identically under both
 /// backends — the in-process version of the CI `--backend parallel` gate.

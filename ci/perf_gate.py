@@ -22,10 +22,11 @@ measurement. Committing the CI artifact (which `bench.rs` always stamps
 ``measured``) arms the gate.
 
 A measured baseline must also carry nonzero epoch-core diagnostics
-(``epoch_commit_phases_skipped``) and nonzero interval-replay
-diagnostics (``epoch_replay_fast_forwards``) — a baseline "measured"
-with commit batching or the replay engine dead would set a dishonest
-bar.
+(``epoch_commit_phases_skipped``), nonzero interval-replay diagnostics
+(``epoch_replay_fast_forwards``), and nonzero ensemble-replay
+diagnostics (``epoch_replay_ensemble_fast_forwards``) — a baseline
+"measured" with commit batching, the replay engine, or its multi-warp
+ensemble path dead would set a dishonest bar.
 
 Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold=0.15]
 Exit 0 = pass (or disarmed), 1 = regression, 2 = usage/shape error.
@@ -45,6 +46,8 @@ TRACKED = [
     ("fig14_matrix", "reference", 1),
     ("replay_hot_loop", "reference", 1),
     ("replay_hot_loop_dense", "reference", 1),
+    ("replay_hot_loop_mw", "reference", 1),
+    ("replay_hot_loop_mw_dense", "reference", 1),
 ]
 
 # Wall-seconds families (lower is better): (report key, row name, mode).
@@ -119,8 +122,9 @@ def main(argv):
         base_row, bt = find_row(baseline, name, backend, threads)
         cur_row, ct = find_row(current, name, backend, threads)
         if base_row is None or cur_row is None:
-            # Pre-v4 baselines have no replay rows; that only disarms the
-            # replay pair, never the fig14 trajectory.
+            # Pre-v4 baselines have no replay rows and pre-v5 no mw
+            # (ensemble) rows; a missing pair only disarms itself, never
+            # the fig14 trajectory.
             print(f"  {name}/{backend}@{bt}t: missing row " f"(baseline={base_row is not None}, current={cur_row is not None})")
             continue
         base = winst_per_second(base_row)
@@ -157,6 +161,10 @@ def main(argv):
 
     if baseline.get("epoch_replay_fast_forwards", 0) <= 0:
         print("perf_gate: measured baseline reports zero epoch_replay_fast_forwards — the interval-replay engine was dead when it was captured; refusing it as a bar", file=sys.stderr)
+        return 1
+
+    if baseline.get("epoch_replay_ensemble_fast_forwards", 0) <= 0:
+        print("perf_gate: measured baseline reports zero epoch_replay_ensemble_fast_forwards — the multi-warp ensemble replay path was dead when it was captured; refusing it as a bar", file=sys.stderr)
         return 1
 
     if compared == 0:

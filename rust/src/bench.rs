@@ -27,10 +27,13 @@
 //!   warm; the warm pass must simulate nothing (scan tails included) and
 //!   reproduce the cold frontier byte-for-byte;
 //! * **replay hot loop** — the interval steady-state replay engine's
-//!   deterministic trigger (a memory-quiescent ALU loop run by a solo
-//!   warp; every suite workload loads inside its loops, so replay never
-//!   fires on the other families), replay-on vs dense, gated on the
-//!   stats being bit-identical modulo the two replay diagnostics.
+//!   deterministic trigger (a memory-quiescent ALU loop; every suite
+//!   workload loads inside its loops, so replay never fires on the other
+//!   families), in two sub-families: a solo-warp loop
+//!   (`replay_hot_loop`) and a two-warp ensemble loop
+//!   (`replay_hot_loop_mw`, the multi-warp fast-forward path). Each is
+//!   measured replay-on vs dense, gated on the stats being bit-identical
+//!   modulo the seven replay diagnostics.
 //!
 //! Every comparison first asserts the variants' outputs are bit-identical
 //! on the measured points — a speedup over a diverging simulator (or a
@@ -179,6 +182,14 @@ pub struct BenchReport {
     /// gate refuses a measured baseline claiming otherwise.
     pub epoch_replay_fast_forwards: u64,
     pub epoch_replay_cycles_saved: u64,
+    /// Ensemble (multi-warp) subset of the replay diagnostics above, from
+    /// the `replay_hot_loop_mw` equivalence-gate run: fast-forwards whose
+    /// recorded cell covered more than one live warp. Nonzero values
+    /// prove the ensemble generalization was live, not just the solo
+    /// path; the perf gate refuses a measured baseline claiming
+    /// otherwise.
+    pub epoch_replay_ensemble_fast_forwards: u64,
+    pub epoch_replay_ensemble_cycles_saved: u64,
 }
 
 impl BenchReport {
@@ -203,6 +214,16 @@ impl BenchReport {
     pub fn replay_speedup(&self) -> Option<f64> {
         let on = self.entry("replay_hot_loop", "reference", 1)?;
         let dense = self.entry("replay_hot_loop_dense", "reference", 1)?;
+        Some(dense.wall_seconds / on.wall_seconds.max(1e-12))
+    }
+
+    /// Wall-time speedup of the multi-warp (ensemble) replay hot loop
+    /// over its dense twin — the headline of the ensemble
+    /// generalization: whole-SM joint steady states fast-forwarded
+    /// instead of re-stepped warp by warp.
+    pub fn replay_mw_speedup(&self) -> Option<f64> {
+        let on = self.entry("replay_hot_loop_mw", "reference", 1)?;
+        let dense = self.entry("replay_hot_loop_mw_dense", "reference", 1)?;
         Some(dense.wall_seconds / on.wall_seconds.max(1e-12))
     }
 
@@ -260,10 +281,15 @@ impl BenchReport {
     /// v4 adds the replay family (`replay_hot_loop` /
     /// `replay_hot_loop_dense` entries, `replay_speedup_over_dense`) and
     /// the top-level replay-engine liveness counters.
+    ///
+    /// v5 adds the multi-warp ensemble replay family
+    /// (`replay_hot_loop_mw` / `replay_hot_loop_mw_dense` entries,
+    /// `replay_mw_speedup_over_dense`) and the
+    /// `epoch_replay_ensemble_*` liveness counters.
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v4\",");
+        let _ = writeln!(out, "  \"schema\": \"ltrf-bench-sim/v5\",");
         let _ = writeln!(out, "  \"provenance\": \"measured\",");
         let _ = writeln!(
             out,
@@ -295,11 +321,24 @@ impl BenchReport {
             "  \"epoch_replay_cycles_saved\": {},",
             self.epoch_replay_cycles_saved
         );
+        let _ = writeln!(
+            out,
+            "  \"epoch_replay_ensemble_fast_forwards\": {},",
+            self.epoch_replay_ensemble_fast_forwards
+        );
+        let _ = writeln!(
+            out,
+            "  \"epoch_replay_ensemble_cycles_saved\": {},",
+            self.epoch_replay_ensemble_cycles_saved
+        );
         if let Some(s) = self.fig14_speedup() {
             let _ = writeln!(out, "  \"fig14_speedup_parallel_over_reference\": {:.4},", s);
         }
         if let Some(s) = self.replay_speedup() {
             let _ = writeln!(out, "  \"replay_speedup_over_dense\": {:.4},", s);
+        }
+        if let Some(s) = self.replay_mw_speedup() {
+            let _ = writeln!(out, "  \"replay_mw_speedup_over_dense\": {:.4},", s);
         }
         if let Some(s) = self.compile_warm_speedup() {
             let _ = writeln!(out, "  \"compile_warm_speedup\": {:.4},", s);
@@ -518,6 +557,8 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
         report.epoch_wheel_rollovers += st.event_wheel_rollovers;
         report.epoch_replay_fast_forwards += st.replay_fast_forwards;
         report.epoch_replay_cycles_saved += st.replay_cycles_saved;
+        report.epoch_replay_ensemble_fast_forwards += st.replay_ensemble_fast_forwards;
+        report.epoch_replay_ensemble_cycles_saved += st.replay_ensemble_cycles_saved;
     }
     for &(backend, threads) in &backend_variants(opts) {
         if backend == SimBackend::Reference {
@@ -554,11 +595,12 @@ fn measure_family(report: &mut BenchReport, name: &str, points: &[Point], opts: 
     }
 }
 
-/// The replay family's kernel + config: a memory-quiescent ALU loop run
-/// by a solo warp (`warps_per_sm: 1` clamps residency), the interval
-/// replay engine's deterministic trigger. `trip` scales the steady state
+/// The replay family's kernel + config: a memory-quiescent ALU loop, the
+/// interval replay engine's deterministic trigger. `warps_per_sm` clamps
+/// residency: 1 exercises the solo fast-forward path, >1 the ensemble
+/// (joint multi-warp steady state) path. `trip` scales the steady state
 /// the engine gets to fast-forward.
-fn replay_points(replay: bool, trip: u32) -> Vec<Point> {
+fn replay_points(replay: bool, trip: u32, warps_per_sm: usize) -> Vec<Point> {
     let src = format!(
         "
 .kernel replay_hot
@@ -577,7 +619,7 @@ L1:
     );
     let kernel = crate::ir::parser::parse(&src).expect("replay bench kernel parses");
     let cfg = SimConfig {
-        warps_per_sm: 1,
+        warps_per_sm,
         replay,
         ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
     };
@@ -586,51 +628,70 @@ L1:
 }
 
 /// Measure the replay family: the same hot loop with the interval replay
-/// engine on (`replay_hot_loop`) and off (`replay_hot_loop_dense`),
-/// reference backend — the replay engine is a *serial* hot-loop
-/// optimization, so thread scaling is the other families' story. Gated
-/// on the two runs being bit-identical modulo the two replay diagnostics
-/// (the in-bench form of the replay-equivalence oracle), and on the
-/// engine actually fast-forwarding — a "speedup" from an engine that
-/// never fired would be measurement noise.
+/// engine on and off, reference backend — the replay engine is a
+/// *serial* hot-loop optimization, so thread scaling is the other
+/// families' story. Two sub-families: solo (`replay_hot_loop`, one
+/// resident warp) and ensemble (`replay_hot_loop_mw`, two resident warps
+/// whose joint steady state is fast-forwarded as one cell). Each is
+/// gated on the on/dense runs being bit-identical modulo the seven
+/// replay diagnostics (the in-bench form of the replay-equivalence
+/// oracle), and on the engine actually fast-forwarding — a "speedup"
+/// from an engine that never fired would be measurement noise.
 fn measure_replay_family(report: &mut BenchReport, opts: &BenchOptions) {
     let trip: u32 = if opts.quick { 50_000 } else { 200_000 };
-    let on_pts = replay_points(true, trip);
-    let off_pts = replay_points(false, trip);
-    // Equivalence + liveness gate (untimed).
-    let (_, _, on_stats) = run_once(&on_pts, SimBackend::Reference, 1);
-    let (_, _, off_stats) = run_once(&off_pts, SimBackend::Reference, 1);
-    assert!(
-        on_stats[0].replay_fast_forwards > 0,
-        "replay must fire on its own bench kernel"
-    );
-    assert_eq!(off_stats[0].replay_fast_forwards, 0, "dense run must not book replay work");
-    if let Some(diff) =
-        crate::scenario::oracles::replay_masked_diff(&on_stats[0], &off_stats[0])
-    {
-        panic!("bench refuses to time a diverging replay engine: {diff}");
-    }
-    report.epoch_replay_fast_forwards += on_stats[0].replay_fast_forwards;
-    report.epoch_replay_cycles_saved += on_stats[0].replay_cycles_saved;
-    // Timed rows.
     let iters = opts.iters.max(1);
-    for (name, pts) in [("replay_hot_loop", &on_pts), ("replay_hot_loop_dense", &off_pts)] {
-        let mut cycles = 0;
-        let mut insts = 0;
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            let (c, i, _) = run_once(pts, SimBackend::Reference, 1);
-            cycles = c;
-            insts = i;
+    for (on_name, dense_name, warps) in [
+        ("replay_hot_loop", "replay_hot_loop_dense", 1usize),
+        ("replay_hot_loop_mw", "replay_hot_loop_mw_dense", 2),
+    ] {
+        let on_pts = replay_points(true, trip, warps);
+        let off_pts = replay_points(false, trip, warps);
+        // Equivalence + liveness gate (untimed).
+        let (_, _, on_stats) = run_once(&on_pts, SimBackend::Reference, 1);
+        let (_, _, off_stats) = run_once(&off_pts, SimBackend::Reference, 1);
+        assert!(
+            on_stats[0].replay_fast_forwards > 0,
+            "replay must fire on its own bench kernel ({on_name})"
+        );
+        if warps > 1 {
+            assert!(
+                on_stats[0].replay_ensemble_fast_forwards > 0,
+                "the multi-warp family must fast-forward ensemble cells, not fall back to solo"
+            );
         }
-        report.entries.push(BenchEntry {
-            name: name.to_string(),
-            backend: SimBackend::Reference.name(),
-            sim_threads: 1,
-            wall_seconds: t0.elapsed().as_secs_f64() / iters as f64,
-            simulated_cycles: cycles,
-            instructions: insts,
-        });
+        assert_eq!(
+            (off_stats[0].replay_fast_forwards, off_stats[0].replay_ensemble_fast_forwards),
+            (0, 0),
+            "dense run must not book replay work ({dense_name})"
+        );
+        if let Some(diff) =
+            crate::scenario::oracles::replay_masked_diff(&on_stats[0], &off_stats[0])
+        {
+            panic!("bench refuses to time a diverging replay engine ({on_name}): {diff}");
+        }
+        report.epoch_replay_fast_forwards += on_stats[0].replay_fast_forwards;
+        report.epoch_replay_cycles_saved += on_stats[0].replay_cycles_saved;
+        report.epoch_replay_ensemble_fast_forwards += on_stats[0].replay_ensemble_fast_forwards;
+        report.epoch_replay_ensemble_cycles_saved += on_stats[0].replay_ensemble_cycles_saved;
+        // Timed rows.
+        for (name, pts) in [(on_name, &on_pts), (dense_name, &off_pts)] {
+            let mut cycles = 0;
+            let mut insts = 0;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let (c, i, _) = run_once(pts, SimBackend::Reference, 1);
+                cycles = c;
+                insts = i;
+            }
+            report.entries.push(BenchEntry {
+                name: name.to_string(),
+                backend: SimBackend::Reference.name(),
+                sim_threads: 1,
+                wall_seconds: t0.elapsed().as_secs_f64() / iters as f64,
+                simulated_cycles: cycles,
+                instructions: insts,
+            });
+        }
     }
 }
 
@@ -915,6 +976,8 @@ mod tests {
             epoch_wheel_rollovers: 9,
             epoch_replay_fast_forwards: 23,
             epoch_replay_cycles_saved: 4600,
+            epoch_replay_ensemble_fast_forwards: 11,
+            epoch_replay_ensemble_cycles_saved: 2200,
             ..Default::default()
         };
         r.entries.push(BenchEntry {
@@ -948,6 +1011,22 @@ mod tests {
             wall_seconds: 1.0,
             simulated_cycles: 4000,
             instructions: 2000,
+        });
+        r.entries.push(BenchEntry {
+            name: "replay_hot_loop_mw".into(),
+            backend: "reference",
+            sim_threads: 1,
+            wall_seconds: 0.5,
+            simulated_cycles: 8000,
+            instructions: 4000,
+        });
+        r.entries.push(BenchEntry {
+            name: "replay_hot_loop_mw_dense".into(),
+            backend: "reference",
+            sim_threads: 1,
+            wall_seconds: 2.0,
+            simulated_cycles: 8000,
+            instructions: 4000,
         });
         r.compile_entries.push(CompileBenchEntry {
             name: "compile_throughput".into(),
@@ -987,20 +1066,25 @@ mod tests {
         assert!((speedup - 2.0).abs() < 1e-9);
         let rspeed = r.replay_speedup().expect("both replay entries present");
         assert!((rspeed - 5.0).abs() < 1e-9);
+        let mwspeed = r.replay_mw_speedup().expect("both mw replay entries present");
+        assert!((mwspeed - 4.0).abs() < 1e-9);
         let cspeed = r.compile_warm_speedup().expect("both compile entries present");
         assert!((cspeed - 4.0).abs() < 1e-9);
         let fspeed = r.frontier_warm_speedup().expect("both frontier entries present");
         assert!((fspeed - 8.0).abs() < 1e-9);
         let json = r.to_json();
-        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v4\""));
+        assert!(json.contains("\"schema\": \"ltrf-bench-sim/v5\""));
         assert!(json.contains("\"provenance\": \"measured\""));
         assert!(json.contains("\"host\": {\"os\": "));
         assert!(json.contains("\"epoch_commit_phases_skipped\": 17"));
         assert!(json.contains("\"epoch_wheel_rollovers\": 9"));
         assert!(json.contains("\"epoch_replay_fast_forwards\": 23"));
         assert!(json.contains("\"epoch_replay_cycles_saved\": 4600"));
+        assert!(json.contains("\"epoch_replay_ensemble_fast_forwards\": 11"));
+        assert!(json.contains("\"epoch_replay_ensemble_cycles_saved\": 2200"));
         assert!(json.contains("\"fig14_speedup_parallel_over_reference\": 2.0000"));
         assert!(json.contains("\"replay_speedup_over_dense\": 5.0000"));
+        assert!(json.contains("\"replay_mw_speedup_over_dense\": 4.0000"));
         assert!(json.contains("\"compile_warm_speedup\": 4.0000"));
         assert!(json.contains("\"cycles_per_second\": 500.0"));
         assert!(json.contains("\"mode\": \"warm\""));
@@ -1070,20 +1154,29 @@ mod tests {
 
     #[test]
     fn replay_family_fires_equivalence_gated_and_fast() {
-        // The replay family must (a) actually trip the replay engine,
-        // (b) pass its own masked equivalence gate (it panics otherwise),
-        // and (c) produce both trajectory rows — the measured-baseline
-        // liveness the perf gate keys on.
+        // The replay family must (a) actually trip the replay engine on
+        // both the solo and the multi-warp ensemble sub-family,
+        // (b) pass its own masked equivalence gates (it panics
+        // otherwise), and (c) produce all four trajectory rows — the
+        // measured-baseline liveness the perf gate keys on.
         let mut r = BenchReport { quick: true, sim_threads: 1, ..Default::default() };
         let opts = BenchOptions { quick: true, sim_threads: 1, iters: 1 };
         measure_replay_family(&mut r, &opts);
         assert!(r.epoch_replay_fast_forwards > 0, "replay engine never fired");
         assert!(r.epoch_replay_cycles_saved > 0, "fast-forwards claimed no cycles");
-        let on = r.entry("replay_hot_loop", "reference", 1).expect("replay-on row");
-        let dense = r.entry("replay_hot_loop_dense", "reference", 1).expect("dense row");
-        assert_eq!(on.simulated_cycles, dense.simulated_cycles, "same simulated interval");
-        assert_eq!(on.instructions, dense.instructions, "same warp-instruction work");
+        assert!(r.epoch_replay_ensemble_fast_forwards > 0, "ensemble replay never fired");
+        assert!(r.epoch_replay_ensemble_cycles_saved > 0, "ensemble cells claimed no cycles");
+        for (on_name, dense_name) in [
+            ("replay_hot_loop", "replay_hot_loop_dense"),
+            ("replay_hot_loop_mw", "replay_hot_loop_mw_dense"),
+        ] {
+            let on = r.entry(on_name, "reference", 1).expect("replay-on row");
+            let dense = r.entry(dense_name, "reference", 1).expect("dense row");
+            assert_eq!(on.simulated_cycles, dense.simulated_cycles, "same simulated interval");
+            assert_eq!(on.instructions, dense.instructions, "same warp-instruction work");
+        }
         assert!(r.replay_speedup().is_some());
+        assert!(r.replay_mw_speedup().is_some());
     }
 
     #[test]

@@ -799,11 +799,21 @@ impl Engine {
         let mut wheel_rollovers = 0u64;
         let mut replay_ffs = 0u64;
         let mut replay_saved = 0u64;
+        let mut ens_ffs = 0u64;
+        let mut ens_saved = 0u64;
+        let mut drops_mem = 0u64;
+        let mut drops_div = 0u64;
+        let mut drops_rot = 0u64;
         for st in self.results.map.values() {
             epoch_skipped += st.commit_phases_skipped;
             wheel_rollovers += st.event_wheel_rollovers;
             replay_ffs += st.replay_fast_forwards;
             replay_saved += st.replay_cycles_saved;
+            ens_ffs += st.replay_ensemble_fast_forwards;
+            ens_saved += st.replay_ensemble_cycles_saved;
+            drops_mem += st.replay_cell_drops_mem;
+            drops_div += st.replay_cell_drops_divergence;
+            drops_rot += st.replay_cell_drops_rotation;
         }
         // The disk-store segment is the CI warm-smoke telemetry: a warm
         // re-sweep must report >0 disk hits and 0 points simulated.
@@ -812,7 +822,7 @@ impl Engine {
             None => "disk store off".to_string(),
         };
         format!(
-            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {}), replay fast-forwards {} (cycles saved {}), {}",
+            "engine: {} point lookups -> {} unique points simulated, compile cache {} hits / {} unique compiles, analysis cache {} hits / {} misses ({:.0}% hit rate), design points {}/{} registered, epoch commit phases skipped {} (wheel rollovers {}), replay fast-forwards {} (cycles saved {}), ensemble fast-forwards {} (cycles saved {}), replay cell drops mem/divergence/rotation {}/{}/{}, {}",
             self.lookups,
             self.sims_run,
             report.compile_hits,
@@ -826,6 +836,11 @@ impl Engine {
             wheel_rollovers,
             replay_ffs,
             replay_saved,
+            ens_ffs,
+            ens_saved,
+            drops_mem,
+            drops_div,
+            drops_rot,
             store_part,
         )
     }

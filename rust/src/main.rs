@@ -517,6 +517,12 @@ fn bench_cmd(rest: &[String]) {
             report.epoch_replay_fast_forwards, report.epoch_replay_cycles_saved
         );
     }
+    if let Some(s) = report.replay_mw_speedup() {
+        println!(
+            "replay hot loop (multi-warp): ensemble replay is {s:.2}x dense wall time (ensemble fast-forwards {}, cycles saved {})",
+            report.epoch_replay_ensemble_fast_forwards, report.epoch_replay_ensemble_cycles_saved
+        );
+    }
     if let Some(s) = report.compile_warm_speedup() {
         println!("compile matrix: warm analysis cache is {s:.2}x cold wall time");
     }
@@ -786,6 +792,14 @@ fn run_cmd(rest: &[String]) {
         st.replay_fast_forwards,
         st.replay_cycles_saved
     );
+    println!(
+        "  replay engine: ensemble fast-forwards {} (cycles saved {})  cell drops mem/divergence/rotation {}/{}/{}",
+        st.replay_ensemble_fast_forwards,
+        st.replay_ensemble_cycles_saved,
+        st.replay_cell_drops_mem,
+        st.replay_cell_drops_divergence,
+        st.replay_cell_drops_rotation
+    );
 }
 
 fn trace_cmd(rest: &[String]) {
@@ -812,9 +826,14 @@ fn trace_cmd(rest: &[String]) {
         .unwrap_or(ltrf::sim::HierarchyKind::Ltrf { plus: true });
     let factor: f64 = opt_or(&p, "--latency", 6.3);
     let max: u64 = opt_or(&p, "--cycles", 200);
-    let cfg = ltrf::sim::SimConfig::with_hierarchy(hierarchy)
-        .with_latency_factor(factor)
-        .normalize_capacity();
+    let cfg = ltrf::sim::SimConfig {
+        // A cycle-by-cycle trace wants dense stepping; replay would
+        // fast-forward steady-state windows out of the printout.
+        replay: false,
+        ..ltrf::sim::SimConfig::with_hierarchy(hierarchy)
+            .with_latency_factor(factor)
+            .normalize_capacity()
+    };
     let kernel = ltrf::workloads::gen::build(spec);
     let ck = ltrf::compiler::compile(&kernel, ltrf::sim::gpu::compile_options(&cfg, true));
     let resident = cfg.resident_warps(ck.kernel.num_regs);
@@ -826,7 +845,7 @@ fn trace_cmd(rest: &[String]) {
     );
     let mut now = 0u64;
     while now < max && !sm.done() {
-        let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared));
+        let hint = sm.step(now, &mut ltrf::sim::sm::MemPort::Inline(&mut shared), u64::MAX);
         let line: String = (0..resident.min(32))
             .map(|w| match sm.warp_state(w) {
                 ltrf::sim::warp::WarpState::Active => 'A',

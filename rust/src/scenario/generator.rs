@@ -37,10 +37,18 @@ pub enum Shape {
     BarrierSfuMix,
     /// The original property-test random CFG, at depth 3.
     RandomCfg,
+    /// Short memory prologue, then a long pure-ALU loop: once every
+    /// resident warp's prologue misses drain, the SM issues from a
+    /// memory-quiescent joint steady state — the class the ensemble
+    /// replay engine records. The multi-warp semantics come from the
+    /// oracle matrix (every shape runs at 16 and 4 warps/SM); this shape
+    /// guarantees the fuzz corpus exercises replay's recorded path, not
+    /// just its drop paths.
+    MultiWarpSteady,
 }
 
 impl Shape {
-    pub const ALL: [Shape; 8] = [
+    pub const ALL: [Shape; 9] = [
         Shape::OneInterval,
         Shape::ManyIntervals,
         Shape::DeepNest,
@@ -49,6 +57,7 @@ impl Shape {
         Shape::PressureRamp,
         Shape::BarrierSfuMix,
         Shape::RandomCfg,
+        Shape::MultiWarpSteady,
     ];
 
     pub fn name(self) -> &'static str {
@@ -61,6 +70,7 @@ impl Shape {
             Shape::PressureRamp => "pressure-ramp",
             Shape::BarrierSfuMix => "barrier-sfu-mix",
             Shape::RandomCfg => "random-cfg",
+            Shape::MultiWarpSteady => "multi-warp-steady",
         }
     }
 }
@@ -96,6 +106,7 @@ pub fn build_shape(shape: Shape, rng: &mut Xoshiro256) -> Kernel {
             };
             random_kernel_with(rng, &cfg)
         }
+        Shape::MultiWarpSteady => multi_warp_steady(rng),
     };
     debug_assert_eq!(k.validate(), Ok(()));
     k
@@ -343,6 +354,40 @@ fn barrier_sfu_mix(rng: &mut Xoshiro256) -> Kernel {
     b.finish()
 }
 
+fn multi_warp_steady(rng: &mut Xoshiro256) -> Kernel {
+    let mut b = KernelBuilder::new("fz_mw_steady");
+    b.mov_imm(0, 0x8000);
+    // Memory prologue: a few strided loads warm the hierarchy. The loop
+    // body that follows is pure ALU on a small register window, so after
+    // the prologue misses drain the SM's joint warp state revisits the
+    // back edge in a fixed rotation — the ensemble replay engine's
+    // recorded class. Loads inside the loop would put every window in
+    // the drop-for-memory class instead.
+    for j in 0..rng.range(2, 4) {
+        b.ld_global(4 + j as Reg, 0, (j as i64) * 128);
+    }
+    let ctr: Reg = 252;
+    let trip = rng.range(150, 400) as i64;
+    let top = b.fresh_label("mw");
+    b.mov_imm(ctr, 0);
+    b.bind(top);
+    for _ in 0..rng.range(3, 6) {
+        let dst = rng.range(4, 11) as Reg;
+        let a = rng.range(4, 11) as Reg;
+        match rng.below(3) {
+            0 => b.iadd_imm(dst, a, rng.below(64) as i64),
+            1 => b.alu(Op::Xor, dst, a, rng.range(4, 11) as Reg),
+            _ => b.alu_imm(Op::IMul, dst, a, 2654435761),
+        }
+    }
+    b.iadd_imm(ctr, ctr, 1);
+    b.setp_imm(Cmp::Lt, 0, ctr, trip);
+    b.bra_if(0, true, top);
+    b.st_global(0, 0, 5);
+    b.exit();
+    b.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +432,27 @@ mod tests {
             ck.intervals.intervals.len() >= 24,
             "expected a degenerate interval count, got {}",
             ck.intervals.intervals.len()
+        );
+    }
+
+    /// The multi-warp-steady shape must do what its doc says: reach the
+    /// ensemble replay engine's *recorded* class (not just its drop
+    /// paths) when more than one warp is resident.
+    #[test]
+    fn multi_warp_steady_reaches_ensemble_recorded_class() {
+        use crate::sim::{gpu, SimConfig};
+        let mut rng = Xoshiro256::seeded(9);
+        let k = build_shape(Shape::MultiWarpSteady, &mut rng);
+        let cfg = SimConfig { warps_per_sm: 2, ..SimConfig::default() };
+        let ck = crate::compiler::compile(&k, gpu::compile_options(&cfg, false));
+        let st = gpu::run(&ck, &cfg);
+        assert_eq!(st.warps_finished, 2);
+        assert!(
+            st.replay_ensemble_fast_forwards > 0,
+            "expected ensemble fast-forwards, got drops mem={} div={} rot={}",
+            st.replay_cell_drops_mem,
+            st.replay_cell_drops_divergence,
+            st.replay_cell_drops_rotation
         );
     }
 

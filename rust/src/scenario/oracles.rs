@@ -58,12 +58,12 @@ pub enum OracleKind {
     /// `Reference` on every matrix point (field-for-field), including
     /// multi-SM points with the threaded step phase at 1 and 4 workers.
     BackendEquivalence,
-    /// Interval steady-state replay is an invisible optimization: a
+    /// Ensemble steady-state replay is an invisible optimization: a
     /// replay-enabled run produces bit-identical `Stats` to a dense
     /// (`replay: false`) run on every matrix point — field-for-field via
-    /// the snapshot schema, masking only the two replay diagnostics,
-    /// which are *defined* to differ — including multi-SM points at 1
-    /// and 4 step threads.
+    /// the snapshot schema, masking only the seven replay diagnostics,
+    /// which are *defined* to differ — including multi-warp and multi-SM
+    /// points at 1 and 4 step threads.
     ReplayEquivalence,
     /// MRF latency changes timing only: architectural work (instructions,
     /// finished warps) is bit-identical across latency factors.
@@ -444,15 +444,24 @@ fn oracle_conservation(k: &Kernel, cs: &mut CheckStats) -> Result<(), String> {
     Ok(())
 }
 
-/// The multi-SM add-on points for the backend-equivalence oracle: 2 SMs
-/// sharing the LLC/DRAM so the canonical commit order actually carries
-/// cross-SM ordering, on the cheapest and the most latency-stressed
-/// designs. Kept small — each point costs ~2 single-SM sims.
+/// The multi-SM add-on points for the backend- and replay-equivalence
+/// oracles: 2 SMs sharing the LLC/DRAM so the canonical commit order
+/// actually carries cross-SM ordering, on the cheapest and the most
+/// latency-stressed designs. The `mw` pair caps residency at 4 warps —
+/// few enough to fit the active pool, so kernels with steady loops reach
+/// the ensemble replay engine's multi-warp recorded class (16 resident
+/// warps overflow the 8-slot pool and never pass its cheap gate). Kept
+/// small — each point costs ~2 single-SM sims.
 fn multi_sm_points() -> Vec<(&'static str, DesignUnderTest, f64)> {
     let reg = |n: &str| crate::coordinator::designs::by_name(n).unwrap().dut();
-    let mut pts = vec![("BL@1.0", reg("BL"), 1.0), ("LTRF@6.3", reg("LTRF"), 6.3)];
-    for p in &mut pts {
-        p.1.warps_per_sm = 16;
+    let mut pts = vec![
+        ("BL@1.0", reg("BL"), 1.0),
+        ("LTRF@6.3", reg("LTRF"), 6.3),
+        ("BL@1.0 mw", reg("BL"), 1.0),
+        ("LTRF@6.3 mw", reg("LTRF"), 6.3),
+    ];
+    for (i, p) in pts.iter_mut().enumerate() {
+        p.1.warps_per_sm = if i >= 2 { 4 } else { 16 };
         p.1.num_sms = 2;
     }
     pts
@@ -515,14 +524,22 @@ fn oracle_backend_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), Str
     Ok(())
 }
 
-/// The counters the replay-equivalence oracle masks. The two replay
+/// The counters the replay-equivalence oracle masks. The seven replay
 /// diagnostics are *defined* to differ between a replay-on and a dense
-/// run (they count the optimization's own work); every other field in
-/// the snapshot schema must be bit-identical. Public so the integration
-/// suite can prove a deliberately stale replay cell trips the masked
-/// comparison (the teeth behind this masking choice).
-pub const REPLAY_DIAGNOSTICS: [&'static str; 2] =
-    ["replay_fast_forwards", "replay_cycles_saved"];
+/// run (they count the optimization's own work — fast-forwards taken,
+/// cycles claimed, and candidate windows dropped per cause); every other
+/// field in the snapshot schema must be bit-identical. Public so the
+/// integration suite can prove a deliberately stale replay cell trips
+/// the masked comparison (the teeth behind this masking choice).
+pub const REPLAY_DIAGNOSTICS: [&'static str; 7] = [
+    "replay_fast_forwards",
+    "replay_cycles_saved",
+    "replay_ensemble_fast_forwards",
+    "replay_ensemble_cycles_saved",
+    "replay_cell_drops_mem",
+    "replay_cell_drops_divergence",
+    "replay_cell_drops_rotation",
+];
 
 /// Field-for-field diff of two `Stats` with the replay diagnostics
 /// masked; `None` means equivalent.
@@ -553,18 +570,23 @@ fn oracle_replay_equivalence(k: &Kernel, cs: &mut CheckStats) -> Result<(), Stri
         let (on, _, _) = run_kernel_point(k, &dut, factor, CfgTweaks::NONE, Some(CYCLE_CAP));
         let (off, _, _) = run_kernel_point(k, &dut, factor, dense_tweaks, Some(CYCLE_CAP));
         cs.sims += 2;
-        if off.replay_fast_forwards != 0 || off.replay_cycles_saved != 0 {
-            return Err(format!(
-                "{name}: dense run booked replay work — `replay: Some(false)` not applied"
-            ));
+        for &(field, v) in super::snapshot::stat_fields(&off).iter() {
+            if REPLAY_DIAGNOSTICS.contains(&field) && v != 0 {
+                return Err(format!(
+                    "{name}: dense run booked replay work ({field} = {v}) — \
+                     `replay: Some(false)` not applied"
+                ));
+            }
         }
         if let Some(diff) = replay_masked_diff(&on, &off) {
             return Err(format!("{name}: replay-on diverges from dense: {diff}"));
         }
     }
-    // Multi-SM at 1 and 4 step threads: solo mode arms only once the
-    // second-to-last SM finishes, so the dense comparison here covers the
-    // drivers' arming points and the elided-epoch folding in `finish`.
+    // Multi-SM at 1 and 4 step threads: replay is armed on every SM, so
+    // the dense comparison here covers the drivers' quiet-horizon
+    // computation, the elided-poll compensation sweep, and the folding in
+    // `finish` — including the `mw` points whose residency is low enough
+    // for multi-warp ensemble cells to record and fast-forward.
     for (name, dut, factor) in multi_sm_points() {
         let (on, _, ck, cfg) = sim_point(k, &dut, factor);
         cs.sims += 1;

@@ -194,12 +194,15 @@ pub struct SimConfig {
     /// returns, before the warp re-enters the active pool (§3.2). Ablation
     /// knob; disabling it serializes refetch with pool occupancy.
     pub early_refetch: bool,
-    /// Interval steady-state replay: when a warp is the sole active warp
-    /// on its SM with no pending writebacks/misses and no wheel event in
-    /// range, fast-forward repeated loop iterations from a recorded
-    /// replay cell instead of dense stepping (see `sim::sm`). Stats are
-    /// bit-identical either way except the two `replay_*` diagnostic
-    /// counters — enforced by the replay-equivalence oracle.
+    /// Interval steady-state replay: fingerprint the joint state of all
+    /// live warps on an SM at back-edge-aligned epochs and, after two
+    /// identical memory-quiescent periods, fast-forward whole SM-local
+    /// steady states from the recorded ensemble cell instead of dense
+    /// stepping (see `sim::sm`). Legal on any SM whose window issues no
+    /// LLC/DRAM-visible memory traffic and fits under the driver's quiet
+    /// horizon (see `sim::gpu`). Stats are bit-identical either way
+    /// except the seven `replay_*` diagnostic counters — enforced by the
+    /// replay-equivalence oracle.
     pub replay: bool,
     /// Safety valve for runaway simulations.
     pub max_cycles: u64,

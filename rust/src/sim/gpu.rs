@@ -40,16 +40,30 @@
 //! per-epoch shared-op counts), so it stays bit-identical across
 //! backends and thread counts.
 //!
-//! Solo-mode replay arming: SMs interact only through the shared
-//! LLC/DRAM, so once exactly one SM remains live its epoch cadence is
-//! fully self-determined. Every driver flips that survivor into solo
-//! mode ([`SmSim::set_solo`], a monotone latch) at the same epoch
-//! boundary — the first epoch after the second-to-last SM finished —
-//! which enables its interval steady-state replay engine. Each epoch a
-//! fast-forward elides would have been a clean epoch (pure in-SM work,
-//! no shared-level op), so [`finish`] folds the per-SM elided-poll
-//! counts into `commit_phases_skipped`, keeping that counter invariant
-//! across backends, thread counts, *and* the replay on/off toggle.
+//! Ensemble replay across SMs: the interval steady-state replay engine
+//! (see `sm.rs`) is armed unconditionally — any SM may fast-forward a
+//! memory-quiescent steady-state window, not just a solo survivor. Two
+//! driver-side obligations keep that invisible to the rest of the
+//! machine. First, each epoch the driver hands every stepped SM a
+//! *quiet horizon* — the minimum of the other live SMs' previous-epoch
+//! hints — and the engine only commits a fast-forward whose window ends
+//! at or before it, so no elided epoch is one in which another SM would
+//! have acted (two SMs can never fast-forward in the same epoch: each
+//! being due means its hint bounds the other's horizon at `now`).
+//! Second, every elided epoch would have booked one driver-skip
+//! `stall_no_ready_warp` on each other live SM — they were all idle
+//! past the window, which is exactly what the horizon proves — so after
+//! each step phase the driver drains [`SmSim::take_epoch_elided`] and
+//! credits the count to the others via [`SmSim::add_skipped_polls`].
+//! All three drivers skip idle SMs the same way (the reference driver
+//! follows hints too — the provably-equivalent transformation noted in
+//! the step loop) and compute horizons from the same previous-epoch
+//! hints, so every replay decision is backend- and thread-invariant.
+//! Each epoch a fast-forward elides would also have been a clean epoch
+//! (pure in-SM work, no shared-level op), so [`finish`] folds the
+//! per-SM elided-poll counts into `commit_phases_skipped`, keeping that
+//! counter invariant across backends, thread counts, *and* the replay
+//! on/off toggle.
 
 use super::config::{SimBackend, SimConfig};
 use super::memsys::SharedMem;
@@ -104,52 +118,109 @@ fn finish(
     total
 }
 
-/// The reference backend: serial lockstep stepping with inline shared
-/// memory, with global skip-ahead when no SM can make progress.
+/// Min and second-min (with the argmin) of the live SMs' previous-epoch
+/// hints. SM `i`'s replay quiet horizon — the earliest cycle any *other*
+/// live SM may act — is `min2` when `i` is the argmin and `min1`
+/// otherwise (`u64::MAX` when no other SM is live). Ties are benign:
+/// with two live SMs both due at `h`, each sees a horizon of `h`, which
+/// correctly refuses any window extending past it.
+fn quiet_horizons(hints: &[u64], dones: &[bool]) -> (u64, u64, Option<usize>) {
+    let mut min1 = u64::MAX;
+    let mut min2 = u64::MAX;
+    let mut arg = None;
+    for (i, (&h, &d)) in hints.iter().zip(dones).enumerate() {
+        if d {
+            continue;
+        }
+        if h < min1 {
+            min2 = min1;
+            min1 = h;
+            arg = Some(i);
+        } else if h < min2 {
+            min2 = h;
+        }
+    }
+    (min1, min2, arg)
+}
+
+/// After a step phase, credit the driver-skips that fast-forwarded
+/// epochs elided: each elided epoch would have polled every other
+/// still-live SM and found it idle (guaranteed by the quiet horizon), so
+/// each would have booked one `stall_no_ready_warp` driver-skip there.
+/// At most one SM fast-forwards per epoch (module doc), so the nested
+/// sweep is O(n) in practice.
+fn credit_elided_polls(sms: &mut [SmSim], dones: &[bool]) {
+    for i in 0..sms.len() {
+        let e = sms[i].take_epoch_elided();
+        if e > 0 {
+            for (j, sm) in sms.iter_mut().enumerate() {
+                if j != i && !dones[j] {
+                    sm.add_skipped_polls(e);
+                }
+            }
+        }
+    }
+}
+
+/// The reference backend: serial stepping with inline shared memory,
+/// with global skip-ahead when no SM can make progress. Like the
+/// two-phase drivers it follows per-SM hints — an SM whose previous
+/// hint lies beyond `now` is not stepped, only credited the one
+/// `stall_no_ready_warp` a poll would have booked (the provably
+/// equivalent transformation described in the module doc). Hint-skipping
+/// here is what makes each SM's poll cadence — and therefore every
+/// replay recording — identical across all three drivers.
 fn run_reference(ck: &CompiledKernel, cfg: &SimConfig) -> Stats {
     let mut shared = SharedMem::new(cfg.mem);
     let mut sms = new_sms(ck, cfg);
+    let n = sms.len();
+    let mut hints = vec![0u64; n];
+    let mut dones = vec![false; n];
 
     let mut now: u64 = 0;
     let mut capped = false;
     let mut commit_skipped: u64 = 0;
-    let mut solo_armed = false;
     loop {
-        if !solo_armed {
-            let mut live = 0usize;
-            let mut last_live = 0usize;
-            for (i, sm) in sms.iter().enumerate() {
-                if !sm.done() {
-                    live += 1;
-                    last_live = i;
-                }
-            }
-            if live == 1 {
-                sms[last_live].set_solo();
-                solo_armed = true;
-            }
-        }
-        let mut next = u64::MAX;
-        let mut all_done = true;
+        // Replay quiet horizons come from the previous epoch's hints,
+        // snapshotted before any SM steps so the values are independent
+        // of step order (and of which backend is running).
+        let (min1, min2, arg) = quiet_horizons(&hints, &dones);
         let mut any_shared = false;
-        for sm in &mut sms {
-            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
-            any_shared |= sm.shared_ops_this_step() > 0;
-            next = next.min(hint);
-            all_done &= sm.done();
+        for i in 0..n {
+            if dones[i] {
+                continue;
+            }
+            if hints[i] > now {
+                sms[i].note_skipped_poll();
+                continue;
+            }
+            let quiet = if arg == Some(i) { min2 } else { min1 };
+            hints[i] = sms[i].step(now, &mut MemPort::Inline(&mut shared), quiet);
+            any_shared |= sms[i].shared_ops_this_step() > 0;
+            dones[i] = sms[i].done();
         }
+        credit_elided_polls(&mut sms, &dones);
         // No commit phase here, but the epoch classification must match
         // the two-phase drivers', so the counter is backend-invariant.
+        // (Skipped and done SMs perform no shared ops, so the hint-skip
+        // conversion leaves the classification unchanged.)
         if !any_shared {
             commit_skipped += 1;
         }
-        if all_done {
+        if dones.iter().all(|&d| d) {
             break;
         }
         if now >= cfg.max_cycles {
             capped = true;
             break;
         }
+        let next = hints
+            .iter()
+            .zip(&dones)
+            .filter(|&(_, &d)| !d)
+            .map(|(&h, _)| h)
+            .min()
+            .unwrap_or(u64::MAX);
         now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
     }
     finish(&sms, &shared, now, capped, commit_skipped)
@@ -192,26 +263,11 @@ pub fn run_two_phase(ck: &CompiledKernel, cfg: &SimConfig, order: CommitOrder) -
     let mut now: u64 = 0;
     let mut capped = false;
     let mut commit_skipped: u64 = 0;
-    let mut solo_armed = false;
     let mut dirty: Vec<usize> = Vec::with_capacity(n);
     loop {
-        // Same top-of-epoch solo check as the reference driver (`dones`
-        // holds exactly the done statuses a direct `sm.done()` sweep
-        // would see here, since done SMs are never stepped again).
-        if !solo_armed {
-            let mut live = 0usize;
-            let mut last_live = 0usize;
-            for (i, &d) in dones.iter().enumerate() {
-                if !d {
-                    live += 1;
-                    last_live = i;
-                }
-            }
-            if live == 1 {
-                sms[last_live].set_solo();
-                solo_armed = true;
-            }
-        }
+        // Replay quiet horizons from the previous epoch's hints (same
+        // snapshot point as the other drivers — before any SM steps).
+        let (min1, min2, arg) = quiet_horizons(&hints, &dones);
         // Phase 1: step every due SM (SM-local work only), tracking which
         // SMs recorded shared-level ops. Ascending index keeps the dirty
         // list in canonical `sm_id` order.
@@ -224,15 +280,17 @@ pub fn run_two_phase(ck: &CompiledKernel, cfg: &SimConfig, order: CommitOrder) -
                 // Provably equivalent to stepping an idle SM: the hint
                 // promises no event and no issuable warp before it, so a
                 // reference step here would only bump the idle counter.
-                sms[i].stats.stall_no_ready_warp += 1;
+                sms[i].note_skipped_poll();
                 continue;
             }
-            hints[i] = sms[i].step(now, &mut MemPort::Deferred);
+            let quiet = if arg == Some(i) { min2 } else { min1 };
+            hints[i] = sms[i].step(now, &mut MemPort::Deferred, quiet);
             dones[i] = sms[i].done();
             if sms[i].has_pending_commit() {
                 dirty.push(i);
             }
         }
+        credit_elided_polls(&mut sms, &dones);
         // Phase 2: deterministic serial commit — dirty SMs only; a clean
         // epoch advances the clock without a commit phase.
         if dirty.is_empty() {
@@ -288,6 +346,15 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
     let hints: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
     let dones: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
     let dirty: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    // Per-epoch replay bookkeeping: epochs elided by an SM's fast-forward
+    // this epoch (drained by the main thread's compensation sweep), and
+    // the quiet-horizon triple the main thread publishes before each S1 —
+    // seeded to match `quiet_horizons` over the initial hints (all zero,
+    // all live), so epoch 0 sees the same horizons as the serial drivers.
+    let elided: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let h_min1 = AtomicU64::new(0);
+    let h_min2 = AtomicU64::new(if n > 1 { 0 } else { u64::MAX });
+    let h_arg = AtomicUsize::new(0);
     // Workers + the committing main thread.
     let barrier = SpinBarrier::new(threads + 1);
     let now = AtomicU64::new(0);
@@ -304,6 +371,10 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
             let hints = &hints;
             let dones = &dones;
             let dirty = &dirty;
+            let elided = &elided;
+            let h_min1 = &h_min1;
+            let h_min2 = &h_min2;
+            let h_arg = &h_arg;
             let barrier = &barrier;
             let now = &now;
             let stop = &stop;
@@ -324,15 +395,28 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
                     }
                     let mut sm = sms[i].lock().unwrap();
                     if hints[i].load(Ordering::SeqCst) > t {
-                        sm.stats.stall_no_ready_warp += 1;
+                        sm.note_skipped_poll();
                     } else {
-                        let h = sm.step(t, &mut MemPort::Deferred);
+                        // Quiet-horizon triple published by the main
+                        // thread before this S1 (happens-before via the
+                        // barrier), identical to the serial drivers'
+                        // top-of-epoch `quiet_horizons` snapshot.
+                        let quiet = if h_arg.load(Ordering::SeqCst) == i {
+                            h_min2.load(Ordering::SeqCst)
+                        } else {
+                            h_min1.load(Ordering::SeqCst)
+                        };
+                        let h = sm.step(t, &mut MemPort::Deferred, quiet);
                         hints[i].store(h, Ordering::SeqCst);
                         if sm.done() {
                             dones[i].store(true, Ordering::SeqCst);
                         }
                         if sm.has_pending_commit() {
                             dirty[i].store(true, Ordering::SeqCst);
+                        }
+                        let e = sm.take_epoch_elided();
+                        if e > 0 {
+                            elided[i].store(e, Ordering::SeqCst);
                         }
                     }
                 }
@@ -345,7 +429,6 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
         // before the S2 barrier, so the clock sweep needs no SM locks; a
         // clean epoch takes none at all.
         let mut commit_skipped: u64 = 0;
-        let mut solo_armed = false;
         loop {
             barrier.wait(); // S1: release workers into the step phase
             barrier.wait(); // S2: all SMs stepped, workers idle at next S1
@@ -359,26 +442,42 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
             if !any_dirty {
                 commit_skipped += 1;
             }
+            // Replay compensation sweep (same point as the serial
+            // drivers': after the step phase, against post-step done
+            // flags). Workers are parked at S1, so the locks are
+            // uncontended; the common case is an all-zero sweep.
+            for i in 0..n {
+                let e = elided[i].swap(0, Ordering::SeqCst);
+                if e > 0 {
+                    for (j, sm) in sms.iter().enumerate() {
+                        if j != i && !dones[j].load(Ordering::SeqCst) {
+                            sm.lock().unwrap().add_skipped_polls(e);
+                        }
+                    }
+                }
+            }
+            // Clock sweep; also recompute the quiet-horizon triple for
+            // the next epoch (end-of-epoch here = the serial drivers'
+            // top-of-next-epoch `quiet_horizons` call — `hints`/`dones`
+            // are frozen in between).
             let mut all_done = true;
             let mut next = u64::MAX;
-            let mut live = 0usize;
-            let mut last_live = 0usize;
+            let mut min1 = u64::MAX;
+            let mut min2 = u64::MAX;
+            let mut arg = usize::MAX;
             for i in 0..n {
                 if !dones[i].load(Ordering::SeqCst) {
                     all_done = false;
-                    next = next.min(hints[i].load(Ordering::SeqCst));
-                    live += 1;
-                    last_live = i;
+                    let h = hints[i].load(Ordering::SeqCst);
+                    next = next.min(h);
+                    if h < min1 {
+                        min2 = min1;
+                        min1 = h;
+                        arg = i;
+                    } else if h < min2 {
+                        min2 = h;
+                    }
                 }
-            }
-            if !solo_armed && live == 1 {
-                // End-of-epoch here = top-of-next-epoch in the serial
-                // drivers: the survivor goes solo starting from the first
-                // epoch after the second-to-last SM finished, so the
-                // arming epoch is identical across backends. Workers are
-                // parked at S1, so the lock is uncontended.
-                sms[last_live].lock().unwrap().set_solo();
-                solo_armed = true;
             }
             let t = now.load(Ordering::SeqCst);
             if all_done || t >= cfg.max_cycles {
@@ -388,6 +487,9 @@ fn run_two_phase_threaded(ck: &CompiledKernel, cfg: &SimConfig, threads: usize) 
                 barrier.wait(); // release workers so they observe `stop`
                 break;
             }
+            h_min1.store(min1, Ordering::SeqCst);
+            h_min2.store(min2, Ordering::SeqCst);
+            h_arg.store(arg, Ordering::SeqCst);
             let new_now = if next == u64::MAX { t + 1 } else { next.max(t + 1) };
             now.store(new_now, Ordering::SeqCst);
             claim.store(0, Ordering::SeqCst);
@@ -546,14 +648,10 @@ mod tests {
         }
     }
 
-    #[test]
-    fn replay_counters_nonzero_and_invariant_at_driver_level() {
-        // A memory-quiescent loop run by a single resident warp on a
-        // single SM: the drivers arm solo mode at epoch 0 and the replay
-        // engine fast-forwards the steady state. (Suite workloads load
-        // inside their loops, so this hand-written kernel is the
-        // deterministic driver-level trigger — mirroring sm.rs's.)
-        let src = r#"
+    /// Pure-ALU steady-state loop — the deterministic replay trigger at
+    /// driver level (suite workloads load inside their loops, which keeps
+    /// them out of the recorded class by design — mirroring sm.rs's).
+    const ALU_SRC: &str = r#"
 .kernel a
   mov r0, #0
   mov r1, #7
@@ -567,9 +665,27 @@ L1:
   st.global [r0], r4
   exit
 "#;
-        let k = crate::ir::parser::parse(src).unwrap();
+
+    /// Zero the seven replay diagnostics so a replay-on run can be
+    /// compared field-for-field against its dense twin.
+    fn mask_replay_diagnostics(st: &mut Stats) {
+        st.replay_fast_forwards = 0;
+        st.replay_cycles_saved = 0;
+        st.replay_ensemble_fast_forwards = 0;
+        st.replay_ensemble_cycles_saved = 0;
+        st.replay_cell_drops_mem = 0;
+        st.replay_cell_drops_divergence = 0;
+        st.replay_cell_drops_rotation = 0;
+    }
+
+    #[test]
+    fn replay_counters_nonzero_and_invariant_at_driver_level() {
+        // A memory-quiescent loop run by a single resident warp on a
+        // single SM: the replay engine fast-forwards the steady state
+        // from the first recorded window.
+        let k = crate::ir::parser::parse(ALU_SRC).unwrap();
         let cfg = SimConfig {
-            warps_per_sm: 1, // clamp to one resident warp → solo from cycle 0
+            warps_per_sm: 1, // clamp to one resident warp
             ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
         };
         let ck = compile(&k, compile_options(&cfg, false));
@@ -578,15 +694,148 @@ L1:
         assert!(reference.replay_cycles_saved > 0, "fast-forwards must claim cycles");
         let par = run(&ck, &SimConfig { backend: SimBackend::Parallel, ..cfg });
         assert_eq!(reference, par, "replay must stay backend-invariant");
-        // Dense stepping agrees on every counter except the two replay
+        // Dense stepping agrees on every counter except the replay
         // diagnostics — including `commit_phases_skipped`, which `finish`
         // keeps replay-invariant by folding in the elided epochs.
         let mut dense = run(&ck, &SimConfig { replay: false, ..cfg });
         assert_eq!(dense.replay_fast_forwards, 0);
         assert_eq!(dense.replay_cycles_saved, 0);
-        dense.replay_fast_forwards = reference.replay_fast_forwards;
-        dense.replay_cycles_saved = reference.replay_cycles_saved;
-        assert_eq!(reference, dense, "replay on/off diverged at driver level");
+        let mut masked = reference.clone();
+        mask_replay_diagnostics(&mut masked);
+        mask_replay_diagnostics(&mut dense);
+        assert_eq!(masked, dense, "replay on/off diverged at driver level");
+    }
+
+    #[test]
+    fn ensemble_replay_fires_multi_warp_at_driver_level() {
+        // Two resident warps in the same ALU loop: the joint steady state
+        // is what the ensemble engine records, so the ensemble counters
+        // must move (and match the total — every cell here is multi-warp).
+        let k = crate::ir::parser::parse(ALU_SRC).unwrap();
+        let cfg = SimConfig {
+            warps_per_sm: 2,
+            ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
+        };
+        let ck = compile(&k, compile_options(&cfg, false));
+        let reference = run(&ck, &cfg);
+        assert!(
+            reference.replay_ensemble_fast_forwards > 0,
+            "two-warp ALU loop must ensemble fast-forward"
+        );
+        assert!(reference.replay_ensemble_cycles_saved > 0);
+        assert_eq!(
+            reference.replay_fast_forwards, reference.replay_ensemble_fast_forwards,
+            "with both warps live for the whole run, every cell is an ensemble cell"
+        );
+        for threads in [1usize, 4] {
+            let cfg = SimConfig { backend: SimBackend::Parallel, sim_threads: threads, ..cfg };
+            assert_eq!(reference, run(&ck, &cfg), "threads={threads}");
+        }
+        let mut dense = run(&ck, &SimConfig { replay: false, ..cfg });
+        assert_eq!(dense.replay_ensemble_fast_forwards, 0);
+        let mut masked = reference.clone();
+        mask_replay_diagnostics(&mut masked);
+        mask_replay_diagnostics(&mut dense);
+        assert_eq!(masked, dense, "ensemble replay on/off diverged at driver level");
+    }
+
+    #[test]
+    fn multi_sm_ensemble_replay_fires_with_live_peers() {
+        // Two SMs, two warps each, same kernel: a strided-load warm-up
+        // (every warp touches the same literal-addressed lines, so SM 0
+        // misses to DRAM while SM 1 hits the lines SM 0 just filled in
+        // the shared LLC — a deterministic desynchronization) followed by
+        // a long pure-ALU loop. While one SM still sleeps on warm-up
+        // misses, the other sits in its ALU steady state with a quiet
+        // horizon wide enough to fast-forward — the multi-SM case the old
+        // solo gate forbade. (Once the faster SM finishes outright, the
+        // slower one fast-forwards under an infinite horizon, so the
+        // liveness assertion does not hinge on the exact overlap.)
+        let src = r#"
+.kernel m
+  mov r0, #65536
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r0, r0, #128
+  add r1, r1, #1
+  setp.lt p0, r1, #16
+  @p0 bra L1
+  mov r1, #0
+L2:
+  add r3, r2, r1
+  add r4, r3, r2
+  add r5, r4, r3
+  add r1, r1, #1
+  setp.lt p0, r1, #600
+  @p0 bra L2
+  st.global [r0], r5
+  exit
+"#;
+        let k = crate::ir::parser::parse(src).unwrap();
+        let cfg = SimConfig {
+            num_sms: 2,
+            warps_per_sm: 2,
+            ..SimConfig::with_hierarchy(HierarchyKind::Baseline)
+        };
+        let ck = compile(&k, compile_options(&cfg, false));
+        let reference = run(&ck, &cfg);
+        assert!(
+            reference.replay_ensemble_fast_forwards > 0,
+            "multi-SM ensemble steady state must fast-forward"
+        );
+        assert!(
+            reference.replay_cell_drops_mem > 0,
+            "the load loop must be blacklisted via the mem drop cause"
+        );
+        // The quiet horizon + elided-poll compensation must keep replay
+        // decisions and every counter thread- and backend-invariant.
+        for threads in [1usize, 4] {
+            let cfg = SimConfig { backend: SimBackend::Parallel, sim_threads: threads, ..cfg };
+            assert_eq!(reference, run(&ck, &cfg), "threads={threads}");
+        }
+        let mut dense = run(&ck, &SimConfig { replay: false, ..cfg });
+        assert_eq!(dense.replay_fast_forwards, 0);
+        assert_eq!(dense.replay_ensemble_fast_forwards, 0);
+        let mut masked = reference.clone();
+        mask_replay_diagnostics(&mut masked);
+        mask_replay_diagnostics(&mut dense);
+        assert_eq!(masked, dense, "multi-SM replay diverged from dense stepping");
+    }
+
+    #[test]
+    fn multi_sm_replay_stays_silent_on_memory_windows() {
+        // Regression for the LLC/DRAM gate the ensemble engine keeps: a
+        // loop that loads every trip is never recordable, on any SM, so
+        // dropping the solo-SM gate must not let memory windows replay.
+        let src = r#"
+.kernel s
+  mov r0, #65536
+  mov r1, #0
+L1:
+  ld.global r2, [r0]
+  add r3, r2, r1
+  add r0, r0, #128
+  add r1, r1, #1
+  setp.lt p0, r1, #32
+  @p0 bra L1
+  st.global [r0], r3
+  exit
+"#;
+        let k = crate::ir::parser::parse(src).unwrap();
+        let cfg = SimConfig {
+            num_sms: 2,
+            warps_per_sm: 4,
+            ..SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: false })
+        };
+        assert!(cfg.replay, "replay is on by default");
+        let ck = compile(&k, compile_options(&cfg, false));
+        let st = run(&ck, &cfg);
+        assert_eq!(st.replay_fast_forwards, 0, "memory windows must never fast-forward");
+        assert_eq!(st.replay_ensemble_fast_forwards, 0);
+        assert_eq!(st.replay_cycles_saved, 0);
+        assert!(st.replay_cell_drops_mem > 0, "the mem drop cause must book the refusals");
+        assert!(st.warps_finished > 0);
     }
 
     #[test]

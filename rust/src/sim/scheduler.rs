@@ -71,6 +71,27 @@ impl TwoLevelScheduler {
         }
     }
 
+    /// Deterministic snapshot of the rotation state: active-pool
+    /// membership in rotation order plus the round-robin cursor. The
+    /// ensemble replay engine folds this into its joint fingerprint — a
+    /// steady-state window is only replayable if the pool returns to the
+    /// *same phase*, otherwise the next period would interleave issues
+    /// differently and the recorded per-warp deltas would be wrong.
+    pub fn rotation(&self) -> (Vec<usize>, usize) {
+        (self.active.clone(), self.rr)
+    }
+
+    /// Restore a snapshot taken by [`TwoLevelScheduler::rotation`].
+    /// Used by the replay engine's dense-fallback path to rewind the
+    /// cursor after a speculative probe; membership must describe warps
+    /// consistent with the SM's current hot state.
+    pub fn set_rotation(&mut self, snap: (Vec<usize>, usize)) {
+        debug_assert!(snap.0.len() <= self.capacity);
+        debug_assert!(snap.1 == 0 || snap.1 < snap.0.len().max(1));
+        self.active = snap.0;
+        self.rr = snap.1;
+    }
+
     /// Exact minimum `next_issue` across `Active`-state pool warps
     /// (`u64::MAX` when none) — the SM's idle-hint rescan, reading only
     /// the packed hot arrays. Callers cache the result as a monotone
@@ -223,6 +244,24 @@ mod tests {
         assert_eq!(s.min_next_issue(&hot), 40);
         s.deactivate(0);
         assert_eq!(s.min_next_issue(&hot), u64::MAX);
+    }
+
+    #[test]
+    fn rotation_roundtrips_and_detects_phase() {
+        let mut s = TwoLevelScheduler::new(4);
+        for w in 0..3 {
+            s.activate(w);
+        }
+        let entry = s.rotation();
+        s.issued(0); // cursor moves: different phase
+        assert_ne!(s.rotation(), entry);
+        s.issued(1);
+        s.issued(2); // full period: cursor wrapped back to index 0
+        assert_eq!(s.rotation(), entry, "a full round-robin period restores the phase");
+        s.issued(0);
+        s.set_rotation(entry.clone());
+        assert_eq!(s.rotation(), entry);
+        assert_eq!(s.issue_order().collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 
     #[test]

@@ -22,12 +22,19 @@
 //!   *higher* than the true next action, which is the soundness side the
 //!   skip-ahead drivers rely on (pinned by the hint-soundness property
 //!   test);
-//! * when a single warp on the only live SM iterates a memory-quiescent
-//!   backward-branching block, the interval steady-state [`ReplayEngine`]
-//!   records one dense iteration and fast-forwards every following one in
-//!   O(#issues) instead of stepping it cycle by cycle (toggleable via
+//! * when the warps resident on an SM iterate a memory-quiescent
+//!   backward-branching region, the interval steady-state [`ReplayEngine`]
+//!   fingerprints the *joint* ensemble state (every live warp plus the
+//!   scheduler's rotation phase) at loop-head boundaries, records one
+//!   dense period, and fast-forwards every following one in O(#issues)
+//!   instead of stepping it cycle by cycle (toggleable via
 //!   `SimConfig::replay`; bit-invariant on every counter except its own
-//!   two diagnostics, which the replay-equivalence oracle pins).
+//!   replay diagnostics, which the replay-equivalence oracle pins).
+//!   Replay is legal on any SM — not just the last live one — because a
+//!   recorded window admits no shared-level memory work (the clean-SM
+//!   commit-batching argument: a clean SM cannot perturb global state)
+//!   and a fast-forward only commits when the whole window fits under
+//!   the driver-supplied quiet horizon (no other SM acts inside it).
 
 use super::config::SimConfig;
 use super::hierarchy::{EntryAction, RegHierarchy};
@@ -87,36 +94,80 @@ pub enum MemOp {
 }
 
 // ---------------------------------------------------------------------
-// Interval steady-state replay (the serial hot-loop fast path).
+// Interval steady-state replay (the ensemble hot-loop fast path).
 //
-// Once the run has drained to a single live warp on a single live SM,
-// every iteration of a backward-branching block whose body touches no
-// global/shared memory is a pure function of SM-local timing state. The
-// engine fingerprints the state at a loop-head boundary, records one
-// dense iteration (per-issue times, stats delta, bank/crossbar end
-// timelines), and — when two consecutive boundaries carry the identical
-// fingerprint, i.e. the loop reached its timing steady state — arms a
-// replay cell that fast-forwards each subsequent iteration in O(#issues)
-// instead of stepping every cycle. The quiescence class is conservative:
-// any memory issue, prefetch, warp-lifecycle change, or out-of-band
-// dense issue drops the recording/cell and the SM falls back to dense
-// stepping, so replay can change nothing observable except
-// `Stats::replay_fast_forwards` / `Stats::replay_cycles_saved`.
+// When every live warp resident on an SM iterates a memory-quiescent
+// backward-branching region, each period of the joint schedule is a pure
+// function of SM-local timing state. The engine fingerprints the *whole
+// ensemble* — every unfinished warp's position and timing state plus the
+// scheduler's rotation phase — at loop-head boundaries anchored on the
+// rotation leader, records one dense period (per-issue times tagged by
+// warp, stats delta, bank/crossbar end timelines), and — when two
+// consecutive boundaries carry the identical joint fingerprint, i.e. the
+// ensemble reached its timing steady state — arms a replay cell that
+// fast-forwards each subsequent period in O(#issues) instead of
+// stepping every cycle.
+//
+// Multi-SM legality: a recorded window admits no shared-level memory
+// work, so the SM stays "clean" for the whole window (the dirty-SM
+// commit-batching argument of the two-phase core: a clean SM cannot
+// perturb global state). The one cross-SM observable left is the *epoch
+// set*: a fast-forward elides the idle polls inside the window, and
+// every other live SM would have booked one `stall_no_ready_warp`
+// driver skip per elided epoch. Drivers therefore (a) pass a quiet
+// horizon — the earliest cycle any other live SM may act — and the
+// engine only commits a fast-forward whose window ends at or before it,
+// and (b) drain [`SmSim::take_epoch_elided`] each epoch and credit the
+// skipped polls to every other live SM via
+// [`SmSim::add_skipped_polls`], which keeps every counter bit-invariant
+// against dense stepping.
+//
+// The quiescence class is conservative: any memory issue, prefetch,
+// warp-lifecycle change, out-of-band dense issue, or foreign driver
+// skip inside a window drops the recording/cell — booked per cause in
+// `replay_cell_drops_{mem,divergence,rotation}` — and the SM falls back
+// to dense stepping, so replay can change nothing observable except its
+// own diagnostic counters.
 
-/// Entry-state fingerprint of the sole live warp at a replay boundary.
-/// All times are relative to the boundary cycle and captured after the
-/// event drain, so every recorded time is strictly positive. The warp's
-/// `ExecState` (registers/predicates) is deliberately absent: it changes
-/// every iteration and is instead verified per-replay by the clone-walk
-/// in [`SmSim::try_replay`].
+/// Per-warp component of the ensemble fingerprint: the warp's position
+/// in the kernel plus its timing state, all times relative to the
+/// boundary cycle. The warp's `ExecState` (registers/predicates) is
+/// deliberately absent: it changes every period and is instead verified
+/// per-replay by the clone-walk in [`SmSim::try_replay`].
 #[derive(Clone, Debug, PartialEq)]
-struct ReplayFp {
+struct WarpFp {
+    wid: usize,
     block: usize,
+    idx: usize,
+    /// Issue throttle rel to the boundary (0 = ready at or before it;
+    /// "ready since earlier" and "ready now" are behaviorally identical
+    /// at every poll from the boundary on, so both normalize to 0).
+    next_issue: u64,
     /// Scoreboard of in-flight writers.
     pending: RegSet,
-    collectors_free: usize,
     /// In-flight writer list: (register, completion rel to boundary).
     inflight: Vec<(u16, u64)>,
+    /// Full LTRF/CARF warp-control-block state (residency, liveness,
+    /// dirty bits, allocator queue, current interval).
+    wcb: WarpControlBlock,
+    /// Full RFC cache state (FIFO contents + dirty bits).
+    rfc: RfcState,
+}
+
+/// Joint entry-state fingerprint of the whole ensemble at a replay
+/// boundary, captured after the event drain (every recorded event time
+/// is strictly positive).
+#[derive(Clone, Debug, PartialEq)]
+struct ReplayFp {
+    /// Every unfinished warp, ascending wid. At a boundary all of them
+    /// are `Active` members of the scheduler pool.
+    warps: Vec<WarpFp>,
+    /// Scheduler rotation: pool membership in rotation order plus the
+    /// round-robin cursor. A steady period must return the pool to the
+    /// same *phase*, or the next period would interleave issues
+    /// differently and the recorded per-warp deltas would be wrong.
+    rotation: (Vec<usize>, usize),
+    collectors_free: usize,
     /// Pending wheel events: (due rel to boundary, wid, kind), sorted.
     wheel: Vec<(u64, usize, EventKind)>,
     /// Bank read/write-port busy timelines rel to the boundary.
@@ -126,17 +177,13 @@ struct ReplayFp {
     rfc_write: Vec<u64>,
     /// Refill-crossbar occupancy rel to the boundary.
     xbar: u64,
-    /// Full LTRF/CARF warp-control-block state (residency, liveness,
-    /// dirty bits, allocator queue, current interval).
-    wcb: WarpControlBlock,
-    /// Full RFC cache state (FIFO contents + dirty bits).
-    rfc: RfcState,
 }
 
-/// One issue recorded during the replayed iteration (times rel to the
-/// iteration's entry boundary).
+/// One issue recorded during the replayed period (times rel to the
+/// period's entry boundary), tagged with the issuing warp.
 #[derive(Clone, Copy, Debug)]
 struct ReplaySlot {
+    wid: u32,
     block: u32,
     idx: u32,
     rel_issue: u64,
@@ -145,24 +192,28 @@ struct ReplaySlot {
     def: Option<(u16, u64)>,
 }
 
-/// An in-progress recording of one dense loop iteration.
+/// An in-progress recording of one dense ensemble period.
 struct Recording {
     f0: ReplayFp,
+    /// The rotation leader's loop-head block: the per-cause drop
+    /// booking anchor and the static mem-blacklist key.
+    anchor: usize,
     entry: u64,
     stats_base: Stats,
     /// (accesses, conflict_cycles) bases of the MRF / RF$ bank arrays
     /// (these live outside `Stats`, so the cell carries their deltas).
     mrf_base: (u64, u64),
     rfc_base: (u64, u64),
-    /// Polls spent on this iteration so far (the entry poll included).
+    /// Polls spent on this period so far (the entry poll included).
     polls: u64,
     slots: Vec<ReplaySlot>,
     issued_any: bool,
 }
 
-/// A proven-steady iteration: everything needed to fast-forward one loop
-/// trip without stepping it.
+/// A proven-steady ensemble period: everything needed to fast-forward
+/// one joint trip of all live warps without stepping it.
 struct ReplayCell {
+    /// The rotation leader's loop-head block (staleness-check anchor).
     block: usize,
     /// The steady entry fingerprint (debug-assert anchor; the release
     /// path relies on the steady-state induction instead — see
@@ -170,11 +221,17 @@ struct ReplayCell {
     f0: ReplayFp,
     delta_cycle: u64,
     polls: u64,
-    /// Stats booked by one dense iteration (`event_wheel_rollovers`
+    /// Stats booked by one dense period (`event_wheel_rollovers`
     /// zeroed: rollovers keep being booked live by the replay drains,
     /// and the wheel's partition invariance makes the totals exact).
     dstats: Stats,
     slots: Vec<ReplaySlot>,
+    /// Per-warp end state: (wid, block, idx, next_issue rel to the exit
+    /// boundary). Steady state ⇒ identical to the entry fingerprint.
+    warp_ends: Vec<(usize, u32, u32, u64)>,
+    /// More than one warp participates: the fast-forward books the
+    /// `replay_ensemble_*` diagnostics on top of the base pair.
+    ensemble: bool,
     /// Sparse non-zero bank-timeline end state, rel to the exit boundary
     /// (steady state ⇒ identical to the entry timelines).
     mrf_read_end: Vec<(u16, u64)>,
@@ -182,7 +239,7 @@ struct ReplayCell {
     rfc_read_end: Vec<(u16, u64)>,
     rfc_write_end: Vec<(u16, u64)>,
     xbar_end: u64,
-    /// Bank-array (accesses, conflict_cycles) deltas of one iteration.
+    /// Bank-array (accesses, conflict_cycles) deltas of one period.
     mrf_d: (u64, u64),
     rfc_d: (u64, u64),
     /// Test hook: this cell was deliberately corrupted (see
@@ -196,26 +253,57 @@ enum ReplayState {
     Armed(Box<ReplayCell>),
 }
 
+/// Why a recording or armed cell was dropped. Each cause books its own
+/// `replay_cell_drops_*` diagnostic, so replay coverage is observable
+/// instead of inferred from the fast-forward count alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DropCause {
+    /// A disqualifying memory issue (global load/store, shared-memory
+    /// access, or a miss-driven deactivation): the window touched
+    /// L1/MSHR/LLC state the fingerprint does not cover. Also
+    /// blacklists the anchor block — the memory instruction is static,
+    /// so re-recording the same loop head would abort every period and
+    /// pay the fingerprint cost for nothing.
+    Mem,
+    /// The joint fingerprint failed to reach (or hold) a steady state:
+    /// warm-up periods still converging, warp-lifecycle changes,
+    /// prefetches, a dense issue slipping under an armed cell, an
+    /// externally perturbed window (foreign driver skip), or a
+    /// clone-walk exiting the loop.
+    Divergence,
+    /// The fingerprint matched except for the scheduler rotation: every
+    /// timing component returned but the round-robin phase did not, so
+    /// replaying would interleave the next period's issues differently.
+    Rotation,
+}
+
 /// Replay machinery hanging off one SM.
 struct ReplayEngine {
     state: ReplayState,
-    /// Set by the driver once this SM is the only one still stepping.
-    /// Replay is gated on solo because a fast-forward changes the global
-    /// epoch set, which is observable as soon as any *other* SM books
-    /// per-epoch state.
-    solo: bool,
-    /// Cached id of the single unfinished warp.
-    sole_wid: Option<usize>,
     /// Fast-forward horizon: polls strictly before this cycle are no-ops
     /// (only reachable from drivers that poll past a returned hint).
     ff_until: u64,
-    /// Idle polls elided by fast-forwards. The drivers fold this into
-    /// `commit_phases_skipped`: every elided epoch was provably
-    /// commit-free (the quiescence class admits no shared-level work,
-    /// and done SMs book nothing).
+    /// Cumulative idle polls elided by fast-forwards. The drivers fold
+    /// this into `commit_phases_skipped` at the end of a run: every
+    /// elided epoch was provably commit-free (the quiescence class
+    /// admits no shared-level work, and the quiet horizon proves no
+    /// other SM acted inside the window).
     elided_polls: u64,
-    /// Reusable clone target for the per-replay exec walk.
-    scratch_exec: Option<ExecState>,
+    /// Per-epoch elided-poll delta, drained by the driver after each
+    /// step phase ([`SmSim::take_epoch_elided`]) to credit the other
+    /// live SMs' skip stalls — the compensation that keeps multi-SM
+    /// replay stats-invariant.
+    epoch_elided: u64,
+    /// A driver skipped a poll of this SM since the last boundary: the
+    /// current window is externally perturbed (its dense stats delta
+    /// includes driver-booked skip stalls a replayed window would not
+    /// re-book), so any in-flight recording must restart.
+    foreign_skip: bool,
+    /// Reusable per-warp clone targets for the replay exec walk,
+    /// indexed by wid.
+    scratch: Vec<Option<ExecState>>,
+    /// Anchor blocks statically disqualified by a mem-cause drop.
+    mem_blocked: Vec<bool>,
     /// Test hook: corrupt every cell built from now on.
     poison: bool,
 }
@@ -224,20 +312,13 @@ impl ReplayEngine {
     fn new() -> Self {
         ReplayEngine {
             state: ReplayState::Idle,
-            solo: false,
-            sole_wid: None,
             ff_until: 0,
             elided_polls: 0,
-            scratch_exec: None,
+            epoch_elided: 0,
+            foreign_skip: false,
+            scratch: Vec::new(),
+            mem_blocked: Vec::new(),
             poison: false,
-        }
-    }
-
-    /// The quiescence class was violated: drop any recording or armed
-    /// cell unconditionally.
-    fn abort(&mut self) {
-        if !matches!(self.state, ReplayState::Idle) {
-            self.state = ReplayState::Idle;
         }
     }
 }
@@ -275,7 +356,7 @@ pub struct SmSim<'a> {
     /// inline `SharedMem` touch or one arena entry. Drives the drivers'
     /// dirty-SM commit batching and `commit_phases_skipped`.
     shared_ops: u32,
-    /// Interval steady-state replay engine (solo-tail fast path).
+    /// Interval steady-state replay engine (ensemble fast path).
     replay: ReplayEngine,
 }
 
@@ -468,7 +549,13 @@ impl<'a> SmSim<'a> {
     /// before the next step. The returned hint stays sound either way: an
     /// instruction that records a request counts as issued, so the step
     /// returns `now + 1` and never needs the (not-yet-known) reply times.
-    pub fn step(&mut self, now: u64, port: &mut MemPort) -> u64 {
+    ///
+    /// `quiet_until` is the replay quiet horizon: the earliest cycle at
+    /// which any *other* live SM may act (single-SM harnesses pass
+    /// `u64::MAX`). A replay fast-forward only commits when its whole
+    /// window ends at or before the horizon, so the elided epochs are
+    /// provably unobservable to the rest of the machine.
+    pub fn step(&mut self, now: u64, port: &mut MemPort, quiet_until: u64) -> u64 {
         self.shared_ops = 0;
         if now < self.replay.ff_until {
             // A driver polling every cycle (instead of following the
@@ -481,8 +568,8 @@ impl<'a> SmSim<'a> {
         }
         self.drain_events(now);
         self.fill_pool(now);
-        if self.cfg.replay && self.replay.solo {
-            if let Some(hint) = self.replay_poll(now) {
+        if self.cfg.replay {
+            if let Some(hint) = self.replay_poll(now, quiet_until) {
                 return hint;
             }
         }
@@ -627,7 +714,7 @@ impl<'a> SmSim<'a> {
             ) {
                 EntryAction::Proceed => {}
                 EntryAction::Prefetch { done_at } => {
-                    self.replay.abort();
+                    self.abort_replay(DropCause::Divergence);
                     self.hot.state[wid] = WarpState::Prefetching { done_at };
                     self.stats.prefetch_stall_cycles += done_at - now;
                     self.push_event(done_at, wid, EventKind::PrefetchDone);
@@ -643,7 +730,7 @@ impl<'a> SmSim<'a> {
             if self.hot.miss_pending[wid].contains(blocking) {
                 // Blocked on an outstanding L1 miss: the two-level
                 // scheduler swaps this warp out (§3.2).
-                self.replay.abort();
+                self.abort_replay(DropCause::Mem);
                 self.deactivate_on_miss(wid, blocking, now);
             } else if let Some(t) = self.warps[wid].writer_done(blocking) {
                 // In-order: nothing can issue before the blocking writer
@@ -682,7 +769,7 @@ impl<'a> SmSim<'a> {
 
         // Execute + complete.
         if self.warps[wid].exec.finished {
-            self.replay.abort();
+            self.abort_replay(DropCause::Divergence);
             self.hot.state[wid] = WarpState::Finished;
             self.sched.deactivate(wid);
             self.finished += 1;
@@ -695,7 +782,7 @@ impl<'a> SmSim<'a> {
             ExecUnit::MemGlobal if is_load => {
                 // Global memory leaves the replayable quiescence class
                 // (L1/MSHR/LLC state is not fingerprinted).
-                self.replay.abort();
+                self.abort_replay(DropCause::Mem);
                 let addr = info.mem_addr.unwrap_or(0);
                 match port {
                     MemPort::Inline(shared) => match self.access_global(addr, ready, shared) {
@@ -731,7 +818,7 @@ impl<'a> SmSim<'a> {
             ExecUnit::MemGlobal => {
                 // Store: posted write; consumes memory bandwidth but the
                 // warp does not wait (and never deactivates).
-                self.replay.abort();
+                self.abort_replay(DropCause::Mem);
                 let addr = info.mem_addr.unwrap_or(0);
                 match port {
                     MemPort::Inline(shared) => {
@@ -751,7 +838,7 @@ impl<'a> SmSim<'a> {
                 ready + 1
             }
             ExecUnit::MemShared => {
-                self.replay.abort();
+                self.abort_replay(DropCause::Mem);
                 self.mem.access_shared(ready)
             }
             ExecUnit::Sfu => ready + self.cfg.sfu_cycles as u64,
@@ -767,7 +854,7 @@ impl<'a> SmSim<'a> {
             self.push_event(t_w, wid, EventKind::Writeback(d));
             def_rec = Some((d, t_w));
         }
-        self.note_issue(info.block, info.idx, now, ready, def_rec);
+        self.note_issue(wid, info.block, info.idx, now, ready, def_rec);
         true
     }
 
@@ -784,20 +871,44 @@ impl<'a> SmSim<'a> {
     // Interval steady-state replay
     // -----------------------------------------------------------------
 
-    /// Arm the replay engine: the driver promises this SM is the only one
-    /// still stepping (monotone for the rest of the run). All drivers
-    /// check at the same point of the epoch loop, so the arming epoch —
-    /// and therefore every replay decision — is backend-invariant.
-    pub fn set_solo(&mut self) {
-        self.replay.solo = true;
-    }
-
-    /// Idle polls elided by replay fast-forwards. The drivers fold this
-    /// into `commit_phases_skipped` at the end of a run: every elided
-    /// epoch was provably commit-free (the quiescence class admits no
-    /// shared-level memory work, and done SMs book nothing).
+    /// Cumulative idle polls elided by replay fast-forwards. The drivers
+    /// fold this into `commit_phases_skipped` at the end of a run: every
+    /// elided epoch was provably commit-free (the quiescence class
+    /// admits no shared-level memory work, and the quiet horizon proves
+    /// no other SM acted inside the window).
     pub fn elided_polls(&self) -> u64 {
         self.replay.elided_polls
+    }
+
+    /// Drain the elided-poll count of the current epoch's fast-forward
+    /// (0 when none fired). The drivers call this after each step phase
+    /// and credit the count to every other live SM via
+    /// [`SmSim::add_skipped_polls`]: in a dense run each elided epoch
+    /// would have booked exactly one driver-skip stall on each of them.
+    pub fn take_epoch_elided(&mut self) -> u64 {
+        std::mem::take(&mut self.replay.epoch_elided)
+    }
+
+    /// The driver skipped this SM's poll this epoch (its hint lies in
+    /// the future while another SM forces a global epoch). Books the
+    /// `stall_no_ready_warp` the skipped poll would have booked, and
+    /// marks any in-flight recording window as externally perturbed —
+    /// its dense stats delta now includes a driver-booked stall that a
+    /// replayed window would not re-book, so it must restart.
+    pub fn note_skipped_poll(&mut self) {
+        self.stats.stall_no_ready_warp += 1;
+        self.replay.foreign_skip = true;
+    }
+
+    /// Credit `n` driver-skip stalls for epochs elided by *another*
+    /// SM's replay fast-forward this epoch (the compensation leg of
+    /// [`SmSim::take_epoch_elided`]).
+    pub fn add_skipped_polls(&mut self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.stats.stall_no_ready_warp += n;
+        self.replay.foreign_skip = true;
     }
 
     /// Test hook: corrupt every replay cell built from now on — a stale
@@ -809,42 +920,89 @@ impl<'a> SmSim<'a> {
         self.replay.poison = true;
     }
 
-    /// Replay boundary processing: runs once per poll while this SM is
-    /// solo, after the event drain and pool fill, before the issue loop.
-    /// Returns a skip-ahead hint when an iteration was fast-forwarded
+    /// The quiescence class was violated: drop any recording or armed
+    /// cell and book the per-cause diagnostic.
+    fn abort_replay(&mut self, cause: DropCause) {
+        let anchor = match std::mem::replace(&mut self.replay.state, ReplayState::Idle) {
+            ReplayState::Idle => return,
+            ReplayState::Recording(rec) => rec.anchor,
+            ReplayState::Armed(cell) => cell.block,
+        };
+        self.book_drop(cause, anchor);
+    }
+
+    fn book_drop(&mut self, cause: DropCause, anchor: usize) {
+        match cause {
+            DropCause::Mem => {
+                self.stats.replay_cell_drops_mem += 1;
+                // The disqualifying memory instruction is static:
+                // recording this loop head again would abort every
+                // period, so stop paying the fingerprint for it.
+                if self.replay.mem_blocked.len() <= anchor {
+                    self.replay.mem_blocked.resize(anchor + 1, false);
+                }
+                self.replay.mem_blocked[anchor] = true;
+            }
+            DropCause::Divergence => self.stats.replay_cell_drops_divergence += 1,
+            DropCause::Rotation => self.stats.replay_cell_drops_rotation += 1,
+        }
+    }
+
+    fn block_mem_blacklisted(&self, block: usize) -> bool {
+        self.replay.mem_blocked.get(block).copied().unwrap_or(false)
+    }
+
+    /// Fingerprint-mismatch classifier: everything-but-the-cursor equal
+    /// means the ensemble's timing state returned but the round-robin
+    /// phase did not.
+    fn mismatch_cause(f0: &ReplayFp, f1: &ReplayFp) -> DropCause {
+        let timing_equal = f0.warps == f1.warps
+            && f0.collectors_free == f1.collectors_free
+            && f0.wheel == f1.wheel
+            && f0.mrf_read == f1.mrf_read
+            && f0.mrf_write == f1.mrf_write
+            && f0.rfc_read == f1.rfc_read
+            && f0.rfc_write == f1.rfc_write
+            && f0.xbar == f1.xbar;
+        if timing_equal && f0.rotation != f1.rotation {
+            DropCause::Rotation
+        } else {
+            DropCause::Divergence
+        }
+    }
+
+    /// Replay boundary processing: runs once per poll when replay is
+    /// enabled, after the event drain and pool fill, before the issue
+    /// loop. Returns a skip-ahead hint when a period was fast-forwarded
     /// (the caller then skips the dense issue loop entirely).
-    fn replay_poll(&mut self, now: u64) -> Option<u64> {
-        // Exactly one unfinished warp, with its id cached.
-        if self.finished + 1 != self.warps.len() {
+    fn replay_poll(&mut self, now: u64, quiet_until: u64) -> Option<u64> {
+        // Ensemble quiescent shape, cheapest rejects first: every
+        // unfinished warp is an `Active` pool member with no
+        // outstanding miss, no uncommitted deferred ops, and the
+        // rotation leader sits at a block head with no timing debt
+        // (`next_issue == now` makes the fast-forward exit
+        // `next_issue = entry + Δ` correct by construction). Anything
+        // else is a mid-period poll.
+        let live = self.warps.len() - self.finished;
+        if live == 0 || self.sched.active().len() != live {
             return None;
         }
-        let wid = match self.replay.sole_wid {
-            Some(w) if self.hot.state[w] != WarpState::Finished => w,
-            _ => {
-                let w =
-                    (0..self.warps.len()).find(|&w| self.hot.state[w] != WarpState::Finished)?;
-                self.replay.sole_wid = Some(w);
-                w
-            }
-        };
-        // A boundary is a poll where the warp is at a block head with no
-        // timing debt: issuable exactly now (`next_issue == now` makes
-        // the fast-forward exit `next_issue = entry + Δ` correct by
-        // construction), nothing miss-pending, no uncommitted deferred
-        // ops. Anything else is a mid-iteration poll.
-        let exec = &self.warps[wid].exec;
-        let boundary = !exec.finished
-            && exec.idx == 0
-            && self.hot.next_issue[wid] == now
-            && self.hot.issuable(wid, now)
-            && self.hot.miss_pending[wid].is_empty()
-            && self.mem_reqs.is_empty();
-        let block = exec.block;
+        let lead = self.sched.issue_order().next()?;
+        let lexec = &self.warps[lead].exec;
+        let boundary = !lexec.finished
+            && lexec.idx == 0
+            && self.hot.next_issue[lead] == now
+            && self.hot.issuable(lead, now)
+            && self.mem_reqs.is_empty()
+            && self.sched.active().iter().all(|&w| {
+                self.hot.state[w] == WarpState::Active && self.hot.miss_pending[w].is_empty()
+            });
+        let block = lexec.block;
 
         match std::mem::replace(&mut self.replay.state, ReplayState::Idle) {
             ReplayState::Idle => {
-                if boundary {
-                    self.start_recording(wid, now);
+                if boundary && !self.block_mem_blacklisted(block) {
+                    self.start_recording(now, block);
                 }
                 None
             }
@@ -854,30 +1012,54 @@ impl<'a> SmSim<'a> {
                     self.replay.state = ReplayState::Recording(rec);
                     return None;
                 }
-                let f1 = self.fingerprint(wid, now);
-                if rec.issued_any && f1 == rec.f0 {
-                    // Two consecutive boundaries with identical state:
-                    // the loop is timing-steady. Arm the cell and treat
-                    // this very boundary as the first replay opportunity.
-                    let cell = self.build_cell(*rec, f1, now);
-                    self.replay.state = ReplayState::Armed(Box::new(cell));
-                    return self.try_replay(wid, now);
+                if self.replay.foreign_skip {
+                    // The window saw a driver skip of this SM: its
+                    // dense delta includes externally booked stalls.
+                    // Restart clean from this boundary.
+                    if rec.issued_any {
+                        self.book_drop(DropCause::Divergence, rec.anchor);
+                    }
+                    if !self.block_mem_blacklisted(block) {
+                        self.start_recording(now, block);
+                    }
+                    return None;
                 }
-                // Warm-up (state still converging), an idle span, or a
-                // different block: restart from this boundary, reusing
-                // the fingerprint just computed.
-                self.start_recording_with(now, f1);
+                let f1 = self.fingerprint(now);
+                if rec.issued_any && f1 == rec.f0 {
+                    // Two consecutive boundaries with identical joint
+                    // state: the ensemble is timing-steady. Arm the
+                    // cell and treat this very boundary as the first
+                    // replay opportunity.
+                    let cell = self.build_cell(*rec, f1, now, block);
+                    self.replay.state = ReplayState::Armed(Box::new(cell));
+                    return self.try_replay(now, quiet_until);
+                }
+                if rec.issued_any && rec.anchor == block {
+                    // Same loop head, different joint state: a warm-up
+                    // period still converging or a genuine divergence.
+                    // Either way the candidate window is discarded;
+                    // classify so rotation-phase misses are observable.
+                    self.book_drop(Self::mismatch_cause(&rec.f0, &f1), block);
+                }
+                // Restart from this boundary, reusing the fingerprint
+                // just computed.
+                if self.block_mem_blacklisted(block) {
+                    return None;
+                }
+                self.start_recording_with(now, f1, block);
                 None
             }
             ReplayState::Armed(cell) => {
                 if boundary {
                     if block == cell.block {
                         self.replay.state = ReplayState::Armed(cell);
-                        return self.try_replay(wid, now);
+                        return self.try_replay(now, quiet_until);
                     }
                     // A different loop: the cell is stale — drop it and
                     // record the new block instead.
-                    self.start_recording(wid, now);
+                    if !self.block_mem_blacklisted(block) {
+                        self.start_recording(now, block);
+                    }
                     return None;
                 }
                 self.replay.state = ReplayState::Armed(cell);
@@ -886,44 +1068,58 @@ impl<'a> SmSim<'a> {
         }
     }
 
-    /// Capture the entry-state fingerprint at a boundary (all times rel
-    /// to `now`; the drain already ran, so every pending time is > now).
-    fn fingerprint(&self, wid: usize, now: u64) -> ReplayFp {
-        let w = &self.warps[wid];
+    /// Capture the joint entry-state fingerprint at a boundary (all
+    /// times rel to `now`; the drain already ran, so every pending
+    /// event time is > now). At a boundary every unfinished warp is
+    /// `Active`, so the sweep covers exactly the scheduler pool.
+    fn fingerprint(&self, now: u64) -> ReplayFp {
         let mut wheel = Vec::new();
         self.events.collect_pending(&mut wheel);
         for ev in &mut wheel {
             debug_assert!(ev.0 > now, "boundary fingerprint saw a due event");
             ev.0 -= now;
         }
+        let mut warps = Vec::with_capacity(self.warps.len() - self.finished);
+        for (wid, w) in self.warps.iter().enumerate() {
+            if self.hot.state[wid] == WarpState::Finished {
+                continue;
+            }
+            warps.push(WarpFp {
+                wid,
+                block: w.exec.block,
+                idx: w.exec.idx,
+                next_issue: self.hot.next_issue[wid].saturating_sub(now),
+                pending: self.hot.pending[wid],
+                inflight: w.inflight.iter().map(|&(r, t)| (r, t.saturating_sub(now))).collect(),
+                wcb: w.wcb.clone(),
+                rfc: w.rfc.clone(),
+            });
+        }
         ReplayFp {
-            block: w.exec.block,
-            pending: self.hot.pending[wid],
+            warps,
+            rotation: self.sched.rotation(),
             collectors_free: self.collectors_free,
-            inflight: w.inflight.iter().map(|&(r, t)| (r, t.saturating_sub(now))).collect(),
             wheel,
             mrf_read: self.hier.res.mrf.read_times_rel(now),
             mrf_write: self.hier.res.mrf.write_times_rel(now),
             rfc_read: self.hier.res.rf_cache.read_times_rel(now),
             rfc_write: self.hier.res.rf_cache.write_times_rel(now),
             xbar: self.hier.res.xbar.slot_rel(now),
-            wcb: w.wcb.clone(),
-            rfc: w.rfc.clone(),
         }
-        // The scheduler's rotation state is deliberately absent: with a
-        // single active warp, `issue_order` is invariant under it.
     }
 
-    fn start_recording(&mut self, wid: usize, now: u64) {
-        let f0 = self.fingerprint(wid, now);
-        self.start_recording_with(now, f0);
+    fn start_recording(&mut self, now: u64, anchor: usize) {
+        let f0 = self.fingerprint(now);
+        self.start_recording_with(now, f0, anchor);
     }
 
-    fn start_recording_with(&mut self, now: u64, f0: ReplayFp) {
+    fn start_recording_with(&mut self, now: u64, f0: ReplayFp, anchor: usize) {
+        self.replay.foreign_skip = false;
         let mrf = &self.hier.res.mrf;
         let rfc = &self.hier.res.rf_cache;
         self.replay.state = ReplayState::Recording(Box::new(Recording {
             f0,
+            anchor,
             entry: now,
             stats_base: self.stats.clone(),
             mrf_base: (mrf.accesses, mrf.conflict_cycles),
@@ -936,7 +1132,7 @@ impl<'a> SmSim<'a> {
 
     /// Freeze a completed recording (entry fingerprint `f1 == f0` just
     /// proved) into an armed replay cell.
-    fn build_cell(&mut self, rec: Recording, f1: ReplayFp, now: u64) -> ReplayCell {
+    fn build_cell(&mut self, rec: Recording, f1: ReplayFp, now: u64, block: usize) -> ReplayCell {
         let mut dstats = self.stats.delta(&rec.stats_base);
         // Rollovers are booked live by the replay-path drains (the wheel
         // counts them partition-invariantly), not from the cell.
@@ -946,12 +1142,16 @@ impl<'a> SmSim<'a> {
         };
         let mrf = &self.hier.res.mrf;
         let rfc = &self.hier.res.rf_cache;
+        let warp_ends: Vec<(usize, u32, u32, u64)> =
+            f1.warps.iter().map(|w| (w.wid, w.block as u32, w.idx as u32, w.next_issue)).collect();
         let mut cell = ReplayCell {
-            block: f1.block,
+            block,
             delta_cycle: now - rec.entry,
             polls: rec.polls,
             dstats,
             slots: rec.slots,
+            ensemble: warp_ends.len() > 1,
+            warp_ends,
             mrf_read_end: sparse(&f1.mrf_read),
             mrf_write_end: sparse(&f1.mrf_write),
             rfc_read_end: sparse(&f1.rfc_read),
@@ -967,7 +1167,7 @@ impl<'a> SmSim<'a> {
             // counter skew; the debug-assert below skips poisoned cells
             // so release and debug builds diverge identically.
             cell.poisoned = true;
-            cell.f0.pending.insert(0);
+            cell.f0.warps[0].pending.insert(0);
             cell.dstats.instructions += 1;
         }
         cell
@@ -976,38 +1176,66 @@ impl<'a> SmSim<'a> {
     /// Attempt one fast-forward from an armed boundary. On success the
     /// SM state advances to the exit boundary `now + Δ` and the cell
     /// re-arms; on any mismatch the state is already Idle and the caller
-    /// falls back to dense stepping (the warp untouched).
+    /// falls back to dense stepping (every warp untouched).
     ///
     /// Release-mode soundness rests on an induction, not a re-check of
-    /// the fingerprint: a cell is built at a boundary whose state equals
-    /// `f0`, every successful replay reproduces the recorded dense end
-    /// state (hence `f0` again, relative to the new boundary), and any
-    /// dense issue while armed drops the cell (`note_issue`) — so every
-    /// boundary that reaches this function carries state `f0`. The
-    /// clone-walk below is the one per-replay check that genuinely
-    /// varies: the register-dependent control path must retrace the
-    /// recorded issue sequence and land back at the loop head (the final
-    /// trip's predicate flip fails it, exiting the loop densely).
-    fn try_replay(&mut self, wid: usize, now: u64) -> Option<u64> {
+    /// the fingerprint: a cell is built at a boundary whose joint state
+    /// equals `f0`, every successful replay reproduces the recorded
+    /// dense end state (hence `f0` again, relative to the new
+    /// boundary), and any dense issue while armed drops the cell
+    /// (`note_issue`) — so every boundary that reaches this function
+    /// carries state `f0`. Two per-replay checks genuinely vary and run
+    /// every time: the cheap rotation guard (membership + cursor, which
+    /// also catches pool changes like a warp activating since arming)
+    /// and the clone-walk — every participating warp's
+    /// register-dependent control path must retrace the recorded issue
+    /// sequence and land back at its entry position (the final trip's
+    /// predicate flip fails it, exiting the loop densely).
+    fn try_replay(&mut self, now: u64, quiet_until: u64) -> Option<u64> {
         let ReplayState::Armed(cell) =
             std::mem::replace(&mut self.replay.state, ReplayState::Idle)
         else {
             unreachable!("try_replay outside Armed");
         };
-        debug_assert_eq!(self.hot.next_issue[wid], now, "replay boundary with timing debt");
+        let e2 = now + cell.delta_cycle;
+        if e2 > quiet_until {
+            // Another live SM acts inside the window: eliding these
+            // epochs would be globally observable. Stay armed and step
+            // the period densely — the dense issue that follows retires
+            // the cell via `note_issue` (a divergence drop), and
+            // detection restarts at the next quiet stretch.
+            self.replay.state = ReplayState::Armed(cell);
+            return None;
+        }
+        if self.sched.rotation() != cell.f0.rotation {
+            self.book_drop(DropCause::Rotation, cell.block);
+            return None;
+        }
         #[cfg(debug_assertions)]
         if !cell.poisoned {
             assert!(
-                self.fingerprint(wid, now) == cell.f0,
+                self.fingerprint(now) == cell.f0,
                 "replay entry fingerprint drifted from the recorded cell"
             );
         }
-        let mut scratch =
-            self.replay.scratch_exec.take().unwrap_or_else(|| self.warps[wid].exec.clone());
-        scratch.clone_from(&self.warps[wid].exec);
+        // Clone-walk every participating warp through its recorded
+        // issue sequence, in global issue order. All-or-nothing: the SM
+        // state is untouched until every warp both retraces its slots
+        // and lands back at its recorded entry position.
+        if self.replay.scratch.len() < self.warps.len() {
+            self.replay.scratch.resize_with(self.warps.len(), || None);
+        }
+        let mut scratch = std::mem::take(&mut self.replay.scratch);
+        for &(wid, ..) in &cell.warp_ends {
+            match &mut scratch[wid] {
+                Some(s) => s.clone_from(&self.warps[wid].exec),
+                slot @ None => *slot = Some(self.warps[wid].exec.clone()),
+            }
+        }
         let mut ok = true;
         for slot in &cell.slots {
-            match scratch.step(&self.ck.kernel) {
+            let s = scratch[slot.wid as usize].as_mut().expect("slot warp has scratch");
+            match s.step(&self.ck.kernel) {
                 Some(info)
                     if info.block == slot.block as usize && info.idx == slot.idx as usize => {}
                 _ => {
@@ -1015,23 +1243,38 @@ impl<'a> SmSim<'a> {
                     break;
                 }
             }
-            if scratch.finished {
+            if s.finished {
                 ok = false;
                 break;
             }
         }
-        ok = ok && !scratch.finished && scratch.block == cell.block && scratch.idx == 0;
+        if ok {
+            for &(wid, b, i, _) in &cell.warp_ends {
+                let s = scratch[wid].as_ref().expect("end warp has scratch");
+                if s.finished || s.block != b as usize || s.idx != i as usize {
+                    ok = false;
+                    break;
+                }
+            }
+        }
         if !ok {
-            self.replay.scratch_exec = Some(scratch);
+            // Some warp leaves the recorded control path — typically
+            // the final trip's predicate flip. Retire the cell and exit
+            // the loop densely.
+            self.replay.scratch = scratch;
+            self.book_drop(DropCause::Divergence, cell.block);
             return None;
         }
-        // Commit: swap the walked exec in, then re-enact the recorded
-        // iteration's timing side effects.
-        std::mem::swap(&mut self.warps[wid].exec, &mut scratch);
-        self.replay.scratch_exec = Some(scratch);
+        // Commit: swap the walked execs in, then re-enact the recorded
+        // period's timing side effects.
+        for &(wid, ..) in &cell.warp_ends {
+            let s = scratch[wid].as_mut().expect("walked warp has scratch");
+            std::mem::swap(&mut self.warps[wid].exec, s);
+        }
+        self.replay.scratch = scratch;
 
-        let e2 = now + cell.delta_cycle;
         for slot in &cell.slots {
+            let wid = slot.wid as usize;
             // Drain strictly in dense order before re-enacting each
             // issue: an event due before this issue (e.g. the writeback
             // of the same destination register, under WAW) must clear
@@ -1044,6 +1287,7 @@ impl<'a> SmSim<'a> {
                 self.warps[wid].inflight.push((d, now + rel_w));
                 self.push_event(now + rel_w, wid, EventKind::Writeback(d));
             }
+            self.warps[wid].issued += 1;
         }
         for &(b, r) in &cell.mrf_read_end {
             self.hier.res.mrf.set_read_time(b as usize, e2 + r);
@@ -1065,9 +1309,19 @@ impl<'a> SmSim<'a> {
         self.stats.apply_delta(&cell.dstats);
         self.stats.replay_fast_forwards += 1;
         self.stats.replay_cycles_saved += cell.delta_cycle;
+        if cell.ensemble {
+            self.stats.replay_ensemble_fast_forwards += 1;
+            self.stats.replay_ensemble_cycles_saved += cell.delta_cycle;
+        }
         self.replay.elided_polls += cell.polls.saturating_sub(1);
-        self.warps[wid].issued += cell.slots.len() as u64;
-        self.hot.next_issue[wid] = e2;
+        self.replay.epoch_elided += cell.polls.saturating_sub(1);
+        for &(wid, _, _, ni_rel) in &cell.warp_ends {
+            // `ni_rel == 0` covers both "ready exactly at the boundary"
+            // and "ready since earlier": `e2` is ≤ every future poll
+            // time, so issuability and clamped idle hints are identical
+            // either way.
+            self.hot.next_issue[wid] = e2 + ni_rel;
+        }
         self.issue_min = self.issue_min.min(e2);
         self.replay.ff_until = e2;
         self.replay.state = ReplayState::Armed(cell);
@@ -1076,28 +1330,31 @@ impl<'a> SmSim<'a> {
 
     /// Record a completed dense issue into an active recording — and
     /// drop an armed cell if a dense issue slips in under it (the
-    /// steady-state induction only holds while none intervenes).
+    /// steady-state induction only holds while none intervenes; this is
+    /// also how a cell refused by the quiet horizon retires).
     fn note_issue(
         &mut self,
+        wid: usize,
         block: usize,
         idx: usize,
         now: u64,
         ready: u64,
         def: Option<(u16, u64)>,
     ) {
-        match &mut self.replay.state {
-            ReplayState::Recording(rec) => {
-                rec.issued_any = true;
-                rec.slots.push(ReplaySlot {
-                    block: block as u32,
-                    idx: idx as u32,
-                    rel_issue: now - rec.entry,
-                    rel_ready: ready - rec.entry,
-                    def: def.map(|(d, t)| (d, t - rec.entry)),
-                });
-            }
-            ReplayState::Armed(_) => self.replay.state = ReplayState::Idle,
-            ReplayState::Idle => {}
+        if matches!(self.replay.state, ReplayState::Armed(_)) {
+            self.abort_replay(DropCause::Divergence);
+            return;
+        }
+        if let ReplayState::Recording(rec) = &mut self.replay.state {
+            rec.issued_any = true;
+            rec.slots.push(ReplaySlot {
+                wid: wid as u32,
+                block: block as u32,
+                idx: idx as u32,
+                rel_issue: now - rec.entry,
+                rel_ready: ready - rec.entry,
+                def: def.map(|(d, t)| (d, t - rec.entry)),
+            });
         }
     }
 }
@@ -1136,7 +1393,7 @@ L1:
         let mut sm = SmSim::new(&cfg, &ck, 8, 0);
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared), u64::MAX);
             now = hint.max(now + 1).min(1_000_000);
         }
         let mut st = sm.stats.clone();
@@ -1156,7 +1413,7 @@ L1:
         let mut sm = SmSim::new(&cfg, &ck, 8, 0);
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut MemPort::Deferred);
+            let hint = sm.step(now, &mut MemPort::Deferred, u64::MAX);
             sm.commit_mem(&mut shared);
             now = hint.max(now + 1).min(1_000_000);
         }
@@ -1267,11 +1524,11 @@ L1:
         );
     }
 
-    /// A memory-quiescent loop: every iteration is pure ALU work, so a
-    /// solo warp reaches the replay engine's steady state. (The suite's
-    /// generated workloads all load inside their loops, which keeps
-    /// replay out of the recorded class there by design — this kernel is
-    /// the deterministic trigger.)
+    /// A memory-quiescent loop: every iteration is pure ALU work, so
+    /// the resident warps reach the replay engine's joint steady state.
+    /// (The suite's generated workloads all load inside their loops,
+    /// which keeps replay out of the recorded class there by design —
+    /// this kernel is the deterministic trigger.)
     const ALU_KSRC: &str = r#"
 .kernel a
   mov r0, #0
@@ -1287,20 +1544,19 @@ L1:
   exit
 "#;
 
-    fn run_alu(kind: HierarchyKind, replay: bool, poison: bool) -> Stats {
+    fn run_alu(kind: HierarchyKind, warps: usize, replay: bool, poison: bool) -> Stats {
         let k = parser::parse(ALU_KSRC).unwrap();
         let opts = CompileOptions { mode: kind.subgraph_mode(), ..CompileOptions::ltrf(16) };
         let ck = compile(&k, opts);
         let cfg = SimConfig { replay, ..SimConfig::with_hierarchy(kind) };
         let mut shared = SharedMem::new(cfg.mem);
-        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
-        sm.set_solo();
+        let mut sm = SmSim::new(&cfg, &ck, warps, 0);
         if poison {
             sm.poison_replay_cells_for_test();
         }
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared), u64::MAX);
             now = hint.max(now + 1).min(1_000_000);
         }
         let mut st = sm.stats.clone();
@@ -1308,62 +1564,114 @@ L1:
         st
     }
 
-    /// The replay engine must actually fire on a solo pure-ALU loop —
-    /// for every registered policy — and claim the cycles it skipped.
+    /// Zero out every replay diagnostic so two runs can be compared on
+    /// the architectural counters alone (the SM-level mirror of the
+    /// replay-equivalence oracle's mask).
+    fn mask_replay_diagnostics(st: &mut Stats) {
+        st.replay_fast_forwards = 0;
+        st.replay_cycles_saved = 0;
+        st.replay_ensemble_fast_forwards = 0;
+        st.replay_ensemble_cycles_saved = 0;
+        st.replay_cell_drops_mem = 0;
+        st.replay_cell_drops_divergence = 0;
+        st.replay_cell_drops_rotation = 0;
+    }
+
+    /// The replay engine must still fire on a solo pure-ALU loop — for
+    /// every registered policy — and claim the cycles it skipped (the
+    /// PR-9 base case, now with no solo gate to arm).
     #[test]
     fn replay_fast_forwards_solo_alu_loop() {
         for kind in HierarchyKind::ALL {
-            let st = run_alu(kind, true, false);
+            let st = run_alu(kind, 1, true, false);
             assert!(st.replay_fast_forwards > 0, "{} never fast-forwarded", kind.name());
             assert!(st.replay_cycles_saved > 0, "{} saved no cycles", kind.name());
+            assert_eq!(st.replay_ensemble_fast_forwards, 0, "{} solo is not ensemble", kind.name());
             assert_eq!(st.warps_finished, 1, "{}", kind.name());
         }
     }
 
+    /// Two warps in lockstep on the same pure-ALU loop must reach a
+    /// joint steady state and fast-forward it as an *ensemble* cell —
+    /// for every registered policy.
+    #[test]
+    fn replay_fast_forwards_multi_warp_alu_loop() {
+        for kind in HierarchyKind::ALL {
+            let st = run_alu(kind, 2, true, false);
+            assert!(
+                st.replay_ensemble_fast_forwards > 0,
+                "{} never ensemble-fast-forwarded",
+                kind.name()
+            );
+            assert!(st.replay_ensemble_cycles_saved > 0, "{} saved no cycles", kind.name());
+            assert_eq!(
+                st.replay_fast_forwards, st.replay_ensemble_fast_forwards,
+                "{}: every fast-forward here covers the whole 2-warp ensemble",
+                kind.name()
+            );
+            assert_eq!(st.warps_finished, 2, "{}", kind.name());
+        }
+    }
+
     /// Replay-on and replay-off runs must agree on every counter except
-    /// the two replay diagnostics — the SM-level core of the
-    /// replay-equivalence oracle.
+    /// the replay diagnostics — the SM-level core of the
+    /// replay-equivalence oracle — at solo and ensemble warp counts.
     #[test]
     fn replay_is_stats_invariant_modulo_diagnostics() {
         for kind in HierarchyKind::ALL {
-            let on = run_alu(kind, true, false);
-            let mut off = run_alu(kind, false, false);
-            assert_eq!(off.replay_fast_forwards, 0, "{}", kind.name());
-            assert_eq!(off.replay_cycles_saved, 0, "{}", kind.name());
-            off.replay_fast_forwards = on.replay_fast_forwards;
-            off.replay_cycles_saved = on.replay_cycles_saved;
-            assert_eq!(on, off, "{} diverged under replay", kind.name());
+            for warps in [1usize, 2, 4, 8] {
+                let mut on = run_alu(kind, warps, true, false);
+                let mut off = run_alu(kind, warps, false, false);
+                assert_eq!(off.replay_fast_forwards, 0, "{} w{}", kind.name(), warps);
+                assert_eq!(off.replay_cell_drops_mem, 0, "{} w{}", kind.name(), warps);
+                mask_replay_diagnostics(&mut on);
+                mask_replay_diagnostics(&mut off);
+                assert_eq!(on, off, "{} w{} diverged under replay", kind.name(), warps);
+            }
         }
     }
 
-    /// Replay must stay silent when the SM is not flagged solo, even on
-    /// a perfectly replayable kernel (the multi-SM gating contract).
+    /// A window that issues global-memory traffic must never replay:
+    /// the mem-cause drop counter books it and the fast-forward count
+    /// stays zero (the ensemble engine keeps the LLC/DRAM gate).
     #[test]
-    fn replay_requires_solo_flag() {
-        let k = parser::parse(ALU_KSRC).unwrap();
+    fn replay_stays_silent_on_memory_loops() {
+        let k = parser::parse(KSRC).unwrap();
         let ck = compile(&k, CompileOptions::ltrf(16));
-        let cfg = SimConfig::with_hierarchy(HierarchyKind::Baseline);
+        let cfg = SimConfig::with_hierarchy(HierarchyKind::Ltrf { plus: false });
+        assert!(cfg.replay, "replay is on by default");
         let mut shared = SharedMem::new(cfg.mem);
-        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
+        let mut sm = SmSim::new(&cfg, &ck, 8, 0);
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared), u64::MAX);
             now = hint.max(now + 1).min(1_000_000);
         }
-        assert_eq!(sm.stats.replay_fast_forwards, 0);
+        assert_eq!(sm.stats.replay_fast_forwards, 0, "a load-per-trip loop must not replay");
+        assert_eq!(sm.stats.replay_ensemble_fast_forwards, 0);
+        assert!(
+            sm.stats.replay_cell_drops_mem > 0,
+            "the disqualifying loads must be visible as mem-cause drops"
+        );
     }
 
-    /// A deliberately corrupted (stale-fingerprint) replay cell must make
-    /// the run diverge from dense stepping on an oracle-visible counter —
-    /// the teeth behind the replay-equivalence oracle's masking choice.
+    /// A deliberately corrupted (stale-fingerprint) ensemble replay cell
+    /// must make the run diverge from dense stepping on an
+    /// oracle-visible counter — the teeth behind the replay-equivalence
+    /// oracle's masking choice — at both solo and ensemble warp counts.
     #[test]
     fn poisoned_replay_cell_diverges_from_dense() {
-        let poisoned = run_alu(HierarchyKind::Baseline, true, true);
-        let dense = run_alu(HierarchyKind::Baseline, false, false);
-        assert!(poisoned.replay_fast_forwards > 0, "poisoned run must still fast-forward");
-        assert_ne!(
-            poisoned.instructions, dense.instructions,
-            "a stale cell must skew an oracle-visible counter"
-        );
+        for warps in [1usize, 2] {
+            let poisoned = run_alu(HierarchyKind::Baseline, warps, true, true);
+            let dense = run_alu(HierarchyKind::Baseline, warps, false, false);
+            assert!(
+                poisoned.replay_fast_forwards > 0,
+                "w{warps}: poisoned run must still fast-forward"
+            );
+            assert_ne!(
+                poisoned.instructions, dense.instructions,
+                "w{warps}: a stale cell must skew an oracle-visible counter"
+            );
+        }
     }
 }

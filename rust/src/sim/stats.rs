@@ -82,6 +82,33 @@ pub struct Stats {
     /// Simulated cycles covered by fast-forwarded iterations (the cycles
     /// dense stepping would have walked one by one).
     pub replay_cycles_saved: u64,
+
+    // --- ensemble replay diagnostics (multi-warp / multi-SM; see `sim::sm`) ---
+    /// Fast-forwards served by an *ensemble* cell (more than one live warp
+    /// in the recorded window). Solo windows keep booking
+    /// `replay_fast_forwards` only; ensemble windows book both, so the
+    /// legacy counter stays a total. Like the PR-9 pair, these are replay
+    /// diagnostics: masked by `REPLAY_DIAGNOSTICS` in the equivalence
+    /// oracle, and the only counters allowed to differ replay-on vs off.
+    pub replay_ensemble_fast_forwards: u64,
+    /// Simulated cycles covered by ensemble fast-forwards (subset of
+    /// `replay_cycles_saved`).
+    pub replay_ensemble_cycles_saved: u64,
+    /// Candidate replay windows dropped because the window issued (or
+    /// held pending) shared-level memory traffic, which would be visible
+    /// across SMs and so disqualifies SM-local replay.
+    pub replay_cell_drops_mem: u64,
+    /// Candidate replay windows dropped because the joint warp-state
+    /// fingerprint diverged between two successive boundary visits (the
+    /// loop had not reached a steady state yet), the window was perturbed
+    /// externally (a driver-skip credited mid-recording), or an armed
+    /// cell retired by issuing densely (e.g. after quiet-horizon
+    /// refusals, a prefetch, or a warp finishing).
+    pub replay_cell_drops_divergence: u64,
+    /// Candidate replay windows dropped because the scheduler's rotation
+    /// state (active-pool order + round-robin cursor) did not return to
+    /// its entry phase, so the next period would interleave differently.
+    pub replay_cell_drops_rotation: u64,
 }
 
 impl Stats {
@@ -172,6 +199,11 @@ impl Stats {
         self.event_wheel_rollovers += o.event_wheel_rollovers;
         self.replay_fast_forwards += o.replay_fast_forwards;
         self.replay_cycles_saved += o.replay_cycles_saved;
+        self.replay_ensemble_fast_forwards += o.replay_ensemble_fast_forwards;
+        self.replay_ensemble_cycles_saved += o.replay_ensemble_cycles_saved;
+        self.replay_cell_drops_mem += o.replay_cell_drops_mem;
+        self.replay_cell_drops_divergence += o.replay_cell_drops_divergence;
+        self.replay_cell_drops_rotation += o.replay_cell_drops_rotation;
     }
 }
 
@@ -179,7 +211,9 @@ impl Stats {
 /// declaration order. Exhaustive destructuring makes adding a field
 /// without extending this list a compile error, keeping
 /// [`Stats::delta`]/[`Stats::apply_delta`] total over the struct.
-fn delta_fields(s: &mut Stats) -> [&mut u64; 28] {
+/// `pub(crate)` so `scenario::snapshot` can cross-check that its
+/// `stat_fields` schema covers every merged counter (and no more).
+pub(crate) fn delta_fields(s: &mut Stats) -> [&mut u64; 33] {
     let Stats {
         cycles,
         instructions,
@@ -209,6 +243,11 @@ fn delta_fields(s: &mut Stats) -> [&mut u64; 28] {
         event_wheel_rollovers,
         replay_fast_forwards,
         replay_cycles_saved,
+        replay_ensemble_fast_forwards,
+        replay_ensemble_cycles_saved,
+        replay_cell_drops_mem,
+        replay_cell_drops_divergence,
+        replay_cell_drops_rotation,
     } = s;
     [
         cycles,
@@ -239,11 +278,16 @@ fn delta_fields(s: &mut Stats) -> [&mut u64; 28] {
         event_wheel_rollovers,
         replay_fast_forwards,
         replay_cycles_saved,
+        replay_ensemble_fast_forwards,
+        replay_ensemble_cycles_saved,
+        replay_cell_drops_mem,
+        replay_cell_drops_divergence,
+        replay_cell_drops_rotation,
     ]
 }
 
 /// Counter values in the same order as [`delta_fields`].
-fn field_values(s: &Stats) -> [u64; 28] {
+pub(crate) fn field_values(s: &Stats) -> [u64; 33] {
     let mut c = s.clone();
     delta_fields(&mut c).map(|f| *f)
 }
@@ -356,6 +400,51 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.replay_fast_forwards, 5);
         assert_eq!(a.replay_cycles_saved, 350);
+    }
+
+    #[test]
+    fn merge_sums_ensemble_replay_and_drop_counters() {
+        let mut a = Stats {
+            replay_ensemble_fast_forwards: 1,
+            replay_ensemble_cycles_saved: 40,
+            replay_cell_drops_mem: 2,
+            replay_cell_drops_divergence: 3,
+            replay_cell_drops_rotation: 4,
+            ..Default::default()
+        };
+        let b = Stats {
+            replay_ensemble_fast_forwards: 5,
+            replay_ensemble_cycles_saved: 60,
+            replay_cell_drops_mem: 6,
+            replay_cell_drops_divergence: 7,
+            replay_cell_drops_rotation: 8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.replay_ensemble_fast_forwards, 6);
+        assert_eq!(a.replay_ensemble_cycles_saved, 100);
+        assert_eq!(a.replay_cell_drops_mem, 8);
+        assert_eq!(a.replay_cell_drops_divergence, 10);
+        assert_eq!(a.replay_cell_drops_rotation, 12);
+    }
+
+    #[test]
+    fn merge_touches_every_delta_field() {
+        // Structural guard: merging a Stats whose every counter is
+        // nonzero must change every field (cycles via max-of, the rest
+        // via summation). A counter added to the struct but forgotten in
+        // `merge` would survive as zero and fail here.
+        let mut probe = Stats::default();
+        for (i, f) in delta_fields(&mut probe).into_iter().enumerate() {
+            *f = (i + 1) as u64;
+        }
+        let mut merged = Stats::default();
+        merged.merge(&probe);
+        assert_eq!(
+            field_values(&merged),
+            field_values(&probe),
+            "merge must fold every counter field"
+        );
     }
 
     #[test]

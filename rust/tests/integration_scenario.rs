@@ -26,7 +26,7 @@ fn suite_kernels_roundtrip_through_parser() {
     }
 }
 
-/// The same round-trip over 200 fuzzer seeds (covers every shape 25x).
+/// The same round-trip over 200 fuzzer seeds (covers every shape 22x).
 #[test]
 fn fuzzer_seeds_roundtrip_through_parser() {
     for seed in 0..200u64 {
@@ -48,7 +48,7 @@ fn fuzzer_seeds_roundtrip_through_parser() {
 fn fuzz_run_is_green_over_all_shapes() {
     let opts = FuzzOptions {
         seed_start: 0,
-        seed_end: 16,
+        seed_end: 18,
         jobs: 0,
         corpus_dir: PathBuf::from("/nonexistent/ltrf-it-corpus"),
         write_repros: false,
@@ -56,13 +56,13 @@ fn fuzz_run_is_green_over_all_shapes() {
     };
     let report = ltrf::scenario::run_fuzz(&opts);
     assert!(report.ok(), "oracle failures: {:#?}", report.failures);
-    assert_eq!(report.seeds_run, 16);
-    // Every shape appears twice in 16 rotating seeds.
+    assert_eq!(report.seeds_run, 18);
+    // Every shape appears twice in 18 rotating seeds (9 shapes).
     for (name, count) in &report.shape_counts {
         assert_eq!(*count, 2, "shape {name}");
     }
-    assert!(report.sims >= 16 * 10, "matrix sims ran ({})", report.sims);
-    assert_eq!(report.checks, 16 * oracles::OracleKind::ALL.len() as u64, "all oracles checked");
+    assert!(report.sims >= 18 * 10, "matrix sims ran ({})", report.sims);
+    assert_eq!(report.checks, 18 * oracles::OracleKind::ALL.len() as u64, "all oracles checked");
 }
 
 /// The committed corpus seeds replay cleanly (parse + oracles).
@@ -147,7 +147,7 @@ fn pass_equivalence_oracle_green_on_committed_corpus() {
 /// Every committed corpus kernel passes the replay-equivalence oracle:
 /// a replay-enabled run is bit-identical to a dense (`replay: false`)
 /// run field-for-field across the design × latency matrix, masking only
-/// the two replay diagnostics (CI additionally runs this over the fuzz
+/// the seven replay diagnostics (CI additionally runs this over the fuzz
 /// seeds via `fuzz`).
 #[test]
 fn replay_equivalence_oracle_green_on_committed_corpus() {
@@ -166,17 +166,18 @@ fn replay_equivalence_oracle_green_on_committed_corpus() {
 /// The replay-equivalence oracle's masked comparison has teeth: a
 /// deliberately stale (poisoned-fingerprint) replay cell skews a
 /// *masked-visible* counter, so `replay_masked_diff` flags the run
-/// against its dense twin. This is the integration-level proof that the
-/// oracle's masking choice (exactly the two replay diagnostics, nothing
-/// else) cannot hide a real replay soundness bug.
+/// against its dense twin. Checked for both a solo-warp cell and a
+/// two-warp ensemble cell. This is the integration-level proof that the
+/// oracle's masking choice (exactly the seven replay diagnostics,
+/// nothing else) cannot hide a real replay soundness bug.
 #[test]
 fn stale_replay_cell_trips_masked_oracle_comparison() {
     use ltrf::sim::memsys::SharedMem;
     use ltrf::sim::sm::{MemPort, SmSim};
     use ltrf::sim::{HierarchyKind, SimConfig};
-    // The deterministic replay trigger: a memory-quiescent loop run by a
-    // solo warp (suite workloads load inside their loops, so they never
-    // enter the replay engine's recorded class).
+    // The deterministic replay trigger: a memory-quiescent loop (suite
+    // workloads load inside their loops, so they never enter the replay
+    // engine's recorded class).
     let src = "
 .kernel a
   mov r0, #0
@@ -192,42 +193,58 @@ L1:
   exit
 ";
     let k = parser::parse(src).expect("ALU loop parses");
-    let run = |replay: bool, poison: bool| {
+    let run = |warps: usize, replay: bool, poison: bool| {
         let cfg = SimConfig { replay, ..SimConfig::with_hierarchy(HierarchyKind::Baseline) };
         let ck = compile(&k, CompileOptions::ltrf(16));
         let mut shared = SharedMem::new(cfg.mem);
-        let mut sm = SmSim::new(&cfg, &ck, 1, 0);
-        sm.set_solo();
+        let mut sm = SmSim::new(&cfg, &ck, warps, 0);
         if poison {
             sm.poison_replay_cells_for_test();
         }
         let mut now = 0;
         while !sm.done() && now < 1_000_000 {
-            let hint = sm.step(now, &mut MemPort::Inline(&mut shared));
+            let hint = sm.step(now, &mut MemPort::Inline(&mut shared), u64::MAX);
             now = hint.max(now + 1).min(1_000_000);
         }
         let mut st = sm.stats.clone();
         st.cycles = now;
         st
     };
-    let dense = run(false, false);
-    // Sound replay: masked comparison sees no difference.
-    let sound = run(true, false);
-    assert!(sound.replay_fast_forwards > 0, "replay must fire for the test to mean anything");
-    assert_eq!(
-        oracles::replay_masked_diff(&sound, &dense),
-        None,
-        "sound replay must be invisible to the masked comparison"
-    );
-    // Stale cell: the masked comparison must flag it.
-    let stale = run(true, true);
-    assert!(stale.replay_fast_forwards > 0, "poisoned cells must still replay");
-    let diff = oracles::replay_masked_diff(&stale, &dense);
-    assert!(diff.is_some(), "a stale replay cell must trip the masked oracle comparison");
-    assert!(
-        diff.as_deref().unwrap_or("").contains("instructions"),
-        "the poison skews the instruction counter: {diff:?}"
-    );
+    for warps in [1usize, 2] {
+        let dense = run(warps, false, false);
+        // Sound replay: masked comparison sees no difference.
+        let sound = run(warps, true, false);
+        assert!(
+            sound.replay_fast_forwards > 0,
+            "warps={warps}: replay must fire for the test to mean anything"
+        );
+        if warps > 1 {
+            assert!(
+                sound.replay_ensemble_fast_forwards > 0,
+                "multi-warp runs must take the ensemble path"
+            );
+        }
+        assert_eq!(
+            oracles::replay_masked_diff(&sound, &dense),
+            None,
+            "warps={warps}: sound replay must be invisible to the masked comparison"
+        );
+        // Stale cell: the masked comparison must flag it.
+        let stale = run(warps, true, true);
+        assert!(
+            stale.replay_fast_forwards > 0,
+            "warps={warps}: poisoned cells must still replay"
+        );
+        let diff = oracles::replay_masked_diff(&stale, &dense);
+        assert!(
+            diff.is_some(),
+            "warps={warps}: a stale replay cell must trip the masked oracle comparison"
+        );
+        assert!(
+            diff.as_deref().unwrap_or("").contains("instructions"),
+            "the poison skews the instruction counter: {diff:?}"
+        );
+    }
 }
 
 /// The golden-snapshot matrix (full workload suite × design × latency in
